@@ -1,0 +1,43 @@
+//! Cluster-simulation walkthrough: regenerate Tables 1–3 and show the
+//! per-stage time/memory decomposition that explains them.
+//!
+//! ```bash
+//! cargo run --release --example cluster_sim
+//! ```
+
+use fp8_flow_moe::cluster::memory::AcMode;
+use fp8_flow_moe::cluster::model_cfg::DEEPSEEK_V3;
+use fp8_flow_moe::cluster::sim::simulate;
+use fp8_flow_moe::coordinator::reports;
+use fp8_flow_moe::moe::layer::Recipe;
+
+fn main() {
+    print!("{}", reports::table1());
+    println!();
+    print!("{}", reports::table2());
+    println!();
+    print!("{}", reports::table3());
+
+    println!("\n== per-stage decomposition (AC=full; per microbatch per stage, ms) ==");
+    println!(
+        "{:<14} {:>4} {:>10} {:>10} {:>10} {:>10}",
+        "method", "EP", "gemm", "a2a", "move", "casts"
+    );
+    for recipe in [Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow] {
+        for ep in [8usize, 16, 32] {
+            let r = simulate(&DEEPSEEK_V3, ep, 256 / ep, recipe, AcMode::Full);
+            println!(
+                "{:<14} {:>4} {:>10.2} {:>10.2} {:>10.2} {:>10.3}",
+                format!("{recipe:?}"),
+                ep,
+                r.t_gemm * 1e3,
+                r.t_comm * 1e3,
+                r.t_move * 1e3,
+                r.t_cast * 1e3,
+            );
+        }
+    }
+    println!("\ntakeaway: at EP32 the all-to-all dominates; FP8-Flow wins on");
+    println!("comm bytes + fused movement + near-zero casts, exactly the");
+    println!("mechanism §4.3 describes (\"scaling amplifies FP8-Flow's gains\").");
+}

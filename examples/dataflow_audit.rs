@@ -1,0 +1,28 @@
+//! Fig. 2 audit: print all four MoE dataflow variants node-by-node with
+//! the cast accounting (12 → 2) and the BF16-island check.
+//!
+//! ```bash
+//! cargo run --release --example dataflow_audit
+//! ```
+
+use fp8_flow_moe::dataflow::{build, Variant};
+
+fn main() {
+    for v in Variant::all() {
+        let g = build(v);
+        print!("{}", g.render());
+        let islands: Vec<String> = g
+            .bf16_islands()
+            .into_iter()
+            .filter(|n| !n.backward)
+            .map(|n| n.name.clone())
+            .collect();
+        println!("forward BF16 islands on the expert path: {islands:?}\n");
+    }
+    println!("== headline ==");
+    println!(
+        "explicit casts: deepseek-v3 {} -> fp8-flow-moe {}   (paper: 12 -> 2)",
+        build(Variant::DeepSeekV3).explicit_casts(),
+        build(Variant::Fp8Flow).explicit_casts()
+    );
+}

@@ -1,0 +1,74 @@
+//! Serve a single MoE layer through the full AOT path: load the
+//! `moe_fwd_<recipe>_<cfg>` executables, run batched requests, compare the
+//! three recipes' outputs and latency — the runtime-side twin of the
+//! native `moe::layer` (which the integration tests cross-check).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example moe_forward -- --cfg tiny --batches 8
+//! ```
+
+use anyhow::Result;
+use fp8_flow_moe::runtime::{literal, Runtime};
+use fp8_flow_moe::util::cli::Args;
+use fp8_flow_moe::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let cfg = args.get_or("cfg", "tiny");
+    let batches = args.usize_or("batches", 8);
+
+    let rt = Runtime::open(Runtime::default_dir())?;
+    let mut rng = Rng::seed_from(5);
+
+    // shared random weights/inputs across recipes (identical literals)
+    let spec = rt
+        .manifest
+        .get(&format!("moe_fwd_bf16_{cfg}"))
+        .expect("run `make artifacts` first")
+        .clone();
+    let inputs: Vec<xla::Literal> = spec
+        .inputs
+        .iter()
+        .map(|t| {
+            let n: usize = t.shape.iter().product();
+            let data: Vec<f32> = (0..n).map(|_| rng.normal() * 0.5).collect();
+            literal::f32_literal(&t.shape, &data).unwrap()
+        })
+        .collect();
+
+    let mut outputs: Vec<(String, Vec<f32>, f64)> = Vec::new();
+    for recipe in ["bf16", "blockwise", "fp8flow"] {
+        let exe = rt.load(&format!("moe_fwd_{recipe}_{cfg}"))?;
+        // warmup
+        let out = exe.run(&inputs)?;
+        let t0 = std::time::Instant::now();
+        for _ in 0..batches {
+            let _ = exe.run(&inputs)?;
+        }
+        let per_batch = t0.elapsed().as_secs_f64() / batches as f64;
+        let y = literal::to_f32_vec(&out[0])?;
+        println!(
+            "{recipe:<10} {} tokens/layer: {:.2} ms/batch  |y|={:.3}",
+            spec.inputs[0].shape[0],
+            per_batch * 1e3,
+            y.iter().map(|v| (v * v) as f64).sum::<f64>().sqrt()
+        );
+        outputs.push((recipe.to_string(), y, per_batch));
+    }
+
+    // recipe agreement report
+    let base = &outputs[0].1;
+    let den: f64 = base.iter().map(|v| (*v as f64).powi(2)).sum::<f64>().sqrt();
+    println!("\nrelative distance to bf16 output:");
+    for (name, y, _) in &outputs[1..] {
+        let num: f64 = base
+            .iter()
+            .zip(y)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        println!("  {name:<10} rel = {:.4}", num / den.max(1e-12));
+    }
+    println!("\nmoe_forward OK");
+    Ok(())
+}

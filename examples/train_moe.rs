@@ -1,0 +1,90 @@
+//! **End-to-end driver (Fig. 6)**: train the MoE transformer LM under the
+//! BF16 and FP8-Flow recipes from identical init/data, log both loss
+//! curves, and report convergence parity — the full three-layer stack in
+//! one run (Rust loop → PJRT executable → JAX graph → software-FP8
+//! numerics).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example train_moe -- \
+//!     --cfg small --steps 300 --seed 42
+//! ```
+//!
+//! Scaled per DESIGN.md §Hardware-Adaptation: the paper trains a 16 B model
+//! for 200 B tokens on 256 H100s; this testbed trains the `small` config
+//! (≈7 M params) for a few hundred steps on a synthetic Markov corpus. The
+//! claim under test is the same: the FP8-Flow loss curve is
+//! indistinguishable from BF16.
+
+use anyhow::Result;
+use fp8_flow_moe::coordinator::write_run_json;
+use fp8_flow_moe::runtime::Runtime;
+use fp8_flow_moe::train::{Corpus, Trainer};
+use fp8_flow_moe::util::cli::Args;
+use fp8_flow_moe::util::json::Json;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let cfg = args.get_or("cfg", "tiny");
+    let steps = args.usize_or("steps", if cfg == "tiny" { 120 } else { 300 });
+    let seed = args.u64_or("seed", 42);
+    let noise = args.usize_or("noise", 10);
+    let vocab = if cfg == "tiny" { 64 } else { 256 };
+
+    let rt = Runtime::open(Runtime::default_dir())?;
+    let mut outcomes = Vec::new();
+    for recipe in ["bf16", "fp8flow"] {
+        println!("=== {recipe} / {cfg}: {steps} steps (seed {seed}) ===");
+        // identical init seed + identical corpus stream per recipe
+        let mut trainer = Trainer::new(&rt, &cfg, recipe, seed as u32)?;
+        let mut corpus = Corpus::new(vocab, seed, noise);
+        let out = trainer.run(&mut corpus, steps, (steps / 10).max(1))?;
+        println!(
+            "{recipe}: loss {:.4} -> tail-mean {:.4}  ({:.0} tokens/s)\n",
+            out.losses[0],
+            out.tail_mean(20),
+            out.tokens_per_s
+        );
+        outcomes.push(out);
+    }
+
+    let (bf16, flow) = (&outcomes[0], &outcomes[1]);
+    // convergence-parity statistics (what Fig. 6 shows visually)
+    let tail_gap = (flow.tail_mean(20) - bf16.tail_mean(20)).abs();
+    let max_gap = bf16
+        .losses
+        .iter()
+        .zip(&flow.losses)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    let learned = bf16.losses[0] - bf16.tail_mean(20) as f32;
+
+    println!("== Fig. 6 reproduction summary ==");
+    println!("loss drop (bf16):        {learned:.4}");
+    println!("tail-mean gap bf16↔fp8:  {tail_gap:.4}");
+    println!("max pointwise gap:       {max_gap:.4}");
+    // tail agreement is the substantive statistic; the pointwise gate gets
+    // an absolute floor for short horizons where per-step loss noise
+    // (~0.05 nats at this batch size) exceeds 25% of the learned drop
+    let verdict = tail_gap < 0.05 && (max_gap as f64) < (0.25 * learned as f64).max(0.1);
+    println!("convergence parity:      {}", if verdict { "PASS" } else { "CHECK" });
+
+    // loss-curve table (plottable)
+    println!("\nstep, bf16, fp8flow");
+    let stride = (steps / 30).max(1);
+    for i in (0..steps).step_by(stride) {
+        println!("{}, {:.4}, {:.4}", i + 1, bf16.losses[i], flow.losses[i]);
+    }
+
+    let doc = Json::obj()
+        .set("cfg", cfg.as_str())
+        .set("steps", steps)
+        .set("seed", seed)
+        .set("bf16", bf16.to_json())
+        .set("fp8flow", flow.to_json())
+        .set("tail_gap", tail_gap as f64)
+        .set("max_gap", max_gap as f64)
+        .set("parity_pass", verdict);
+    let path = write_run_json(&format!("fig6_{cfg}_s{seed}"), &doc)?;
+    println!("\nwrote {path:?}");
+    Ok(())
+}

@@ -1,0 +1,156 @@
+"""AOT lowering — the single build-time Python entry point.
+
+Lowers every L2 computation to **HLO text** (never serialized protos: jax
+≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+text parser reassigns ids — see /opt/xla-example/README.md) and writes a
+manifest the Rust artifact registry reads.
+
+Usage: ``python -m compile.aot --out ../artifacts`` (idempotent; the
+Makefile guards freshness).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref, swiglu as k_swiglu, transpose as k_transpose, quantize as k_quantize
+
+# Kernel microbench shapes — scaled-down analogues of the paper's Fig. 1/5
+# shapes (paper: M ∈ {24576, 32768}, N ∈ {2048, 5120, 7168} on H100; CPU
+# testbed uses smaller M at the same aspect ratios, DESIGN.md §Hardware-
+# Adaptation).
+KERNEL_SHAPES = [(1024, 2048), (2048, 2048), (2048, 5120)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return {"float32": "f32", "int32": "s32", "uint8": "u8", "uint32": "u32"}[str(dt)]
+
+
+def lower_and_save(outdir, name, fn, specs, manifest):
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(outdir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    out_avals = jax.tree.leaves(lowered.out_info)
+    manifest[name] = {
+        "file": f"{name}.hlo.txt",
+        "inputs": [{"shape": list(s.shape), "dtype": _dtype_name(s.dtype)} for s in jax.tree.leaves(specs)],
+        "outputs": [{"shape": list(o.shape), "dtype": _dtype_name(o.dtype)} for o in out_avals],
+    }
+    print(f"  wrote {name}: {len(text) / 1024:.0f} KiB, "
+          f"{len(manifest[name]['inputs'])} in / {len(manifest[name]['outputs'])} out")
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def u8(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint8)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def train_specs(cfg: model.Config):
+    shapes, _ = model.param_structure(cfg)
+    params = [f32(*s) for s in shapes]
+    return tuple(params * 3) + (i32(), i32(cfg.batch, cfg.seq))
+
+
+def moe_fwd_specs(cfg: model.Config):
+    d, h, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return (f32(cfg.tokens, d), f32(d, e), f32(e, d, h), f32(e, d, h), f32(e, h, d))
+
+
+def emit_model_artifacts(outdir, manifest):
+    for cfg_name, cfg, recipes in (
+        ("tiny", model.TINY, model.RECIPES),
+        ("small", model.SMALL, ("bf16", "fp8flow", "blockwise")),
+    ):
+        for recipe in recipes:
+            lower_and_save(
+                outdir, f"train_step_{recipe}_{cfg_name}",
+                model.flat_train_step(cfg, recipe), train_specs(cfg), manifest,
+            )
+        lower_and_save(outdir, f"init_{cfg_name}", model.flat_init(cfg), (jax.ShapeDtypeStruct((), jnp.uint32),), manifest)
+        for recipe in recipes:
+            lower_and_save(
+                outdir, f"moe_fwd_{recipe}_{cfg_name}",
+                model.flat_moe_fwd(cfg, recipe), moe_fwd_specs(cfg), manifest,
+            )
+
+
+def emit_kernel_artifacts(outdir, manifest):
+    """Per-kernel executables (Pallas lowered in-graph) for the runtime
+    integration tests and the HLO-level Fig. 1/5 benches."""
+    for (m, n) in KERNEL_SHAPES:
+        nt = n // 128
+        lower_and_save(
+            outdir, f"k_direct_transpose_{m}x{n}",
+            lambda c, e: k_transpose.direct_transpose(c, e),
+            (u8(m, n), i32(m, nt)), manifest,
+        )
+        lower_and_save(
+            outdir, f"k_naive_transpose_{m}x{n}",
+            lambda c, s: k_transpose.naive_transpose(c, s),
+            (u8(m, n), f32(m, nt)), manifest,
+        )
+        lower_and_save(
+            outdir, f"k_quantize_{m}x{n}",
+            lambda x: k_quantize.quantize_rowwise(x, "po2"),
+            (f32(m, n),), manifest,
+        )
+        lower_and_save(
+            outdir, f"k_swiglu_quant_{m}x{n}",
+            lambda g, u: k_swiglu.swiglu_quant(g, u, "po2"),
+            (f32(m, n), f32(m, n)), manifest,
+        )
+        lower_and_save(
+            outdir, f"k_swiglu_{m}x{n}",
+            lambda g, u: k_swiglu.swiglu(g, u),
+            (f32(m, n), f32(m, n)), manifest,
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on artifact groups: model|kernels")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest: dict = {}
+    manifest_path = os.path.join(args.out, "manifest.json")
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    if args.only in (None, "model"):
+        print("== model artifacts ==")
+        emit_model_artifacts(args.out, manifest)
+    if args.only in (None, "kernels"):
+        print("== kernel artifacts ==")
+        emit_kernel_artifacts(args.out, manifest)
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"manifest: {manifest_path} ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+"""Software FP8 E4M3 codec as jnp bit ops — the numeric-format core shared
+by every L1 kernel and the L2 recipes.
+
+Two interchangeable implementations:
+
+* the *native* path uses jnp's ``float8_e4m3fn`` dtype (convert/bitcast) —
+  fastest, and what the lowered HLO uses internally;
+* the *bitop* path implements the same semantics with integer ops only —
+  the executable specification, bit-exact against both ml_dtypes and the
+  Rust codec (``rust/src/fp8/e4m3.rs``); it is also the form used where a
+  kernel must manipulate *encodings* (the scaling-aware transpose).
+
+All functions are shape-polymorphic and jit/pallas-safe.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+E4M3_MAX = 448.0
+E4M3_NAN = 0x7F
+TILE = 128
+
+
+# ---------------------------------------------------------------------------
+# native path (convert through the f8e4m3fn dtype)
+# ---------------------------------------------------------------------------
+
+def encode_native(x: jax.Array) -> jax.Array:
+    """f32 → u8 E4M3 codes via the dtype cast.
+
+    WARNING: only for tests on the build-time jax runtime. Older XLA
+    runtimes (the 0.5.1 CPU backend the Rust layer embeds) lower this
+    convert through an f16 intermediate — a double rounding that flips
+    ~0.4% of codes at tie points. Kernels that feed AOT artifacts MUST use
+    :func:`encode_bitop`, whose integer-only rounding is runtime-independent
+    (and bit-exact vs ml_dtypes and the Rust codec)."""
+    f8 = x.astype(jnp.float8_e4m3fn)
+    return jax.lax.bitcast_convert_type(f8, jnp.uint8)
+
+
+
+def decode_native(c: jax.Array) -> jax.Array:
+    """u8 E4M3 codes → f32 via the dtype cast."""
+    f8 = jax.lax.bitcast_convert_type(c.astype(jnp.uint8), jnp.float8_e4m3fn)
+    return f8.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# bit-op path (integer ops only; executable specification)
+# ---------------------------------------------------------------------------
+
+def _exp2i_decode(e: jax.Array) -> jax.Array:
+    """Exact 2^e by f32 exponent-field assembly (decode helper)."""
+    bits = ((jnp.clip(e, -126, 127) + 127) << 23).astype(jnp.uint32)
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def decode_bitop(c: jax.Array) -> jax.Array:
+    """u8 E4M3 codes → f32 with integer ops + one exp2 (no f8 dtype)."""
+    c = c.astype(jnp.int32)
+    sign = jnp.where(c & 0x80 != 0, -1.0, 1.0).astype(jnp.float32)
+    e = (c >> 3) & 0xF
+    m = (c & 0x7).astype(jnp.float32)
+    is_nan = (c & 0x7F) == 0x7F
+    sub = (m / 8.0) * jnp.float32(2.0**-6)
+    norm = (1.0 + m / 8.0) * _exp2i_decode(e - 7)
+    v = sign * jnp.where(e == 0, sub, norm)
+    return jnp.where(is_nan, jnp.float32(jnp.nan), v)
+
+
+def encode_bitop(x: jax.Array) -> jax.Array:
+    """f32 → u8 E4M3 with integer ops (RNE; overflow→NaN; ml_dtypes parity)."""
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32).astype(jnp.int32)
+    sign = ((bits >> 24) & 0x80).astype(jnp.int32)
+    abs_bits = bits & 0x7FFFFFFF
+    f32_exp = abs_bits >> 23
+    f32_man = abs_bits & 0x7FFFFF
+    ue = f32_exp - 127
+
+    # normal-range candidate: RNE 23→3 mantissa bits
+    m3 = f32_man >> 20
+    low = f32_man & 0xFFFFF
+    half = 0x80000
+    round_up = (low > half) | ((low == half) & (m3 & 1 == 1))
+    m3 = m3 + round_up.astype(jnp.int32)
+    carry = m3 == 8
+    m3 = jnp.where(carry, 0, m3)
+    ue_n = ue + carry.astype(jnp.int32)
+    overflow = (ue_n > 8) | ((ue_n == 8) & (m3 == 7))
+    code_norm = sign | ((ue_n + 7) << 3) | m3
+
+    # subnormal range (|x| < 2^-6): RNE onto the 2^-9 grid; x*512 exact
+    ax = jax.lax.bitcast_convert_type(abs_bits.astype(jnp.uint32), jnp.float32)
+    q = jnp.round(ax * 512.0).astype(jnp.int32)  # jnp.round is RNE
+    code_sub = sign | q
+
+    is_nan = jnp.isnan(x)
+    is_inf = jnp.isinf(x)
+    is_zero = abs_bits == 0
+    f32_subnormal = f32_exp == 0
+
+    code = jnp.where(ue >= -6, code_norm, code_sub)
+    code = jnp.where(overflow & (ue >= -6), sign | E4M3_NAN, code)
+    code = jnp.where(is_zero | f32_subnormal, sign, code)
+    code = jnp.where(is_nan | is_inf, sign | E4M3_NAN, code)
+    return code.astype(jnp.uint8)
+
+
+def scale_down_code(c: jax.Array, k: jax.Array) -> jax.Array:
+    """Multiply E4M3 codes by 2^-k (k ≥ 0, integer) exactly in code space.
+
+    The inner operation of the scaling-aware direct transpose (Alg. 1):
+    exponent-field subtraction while the value stays normal, RNE mantissa
+    shift once it crosses into the subnormal grid. Bit-exact against
+    ``rust/src/fp8/e4m3.rs::scale_down_code``.
+    """
+    c = c.astype(jnp.int32)
+    k = jnp.broadcast_to(jnp.asarray(k, jnp.int32), c.shape)
+    sign = c & 0x80
+    e = (c >> 3) & 0xF
+    m = c & 0x7
+    is_nan = (c & 0x7F) == 0x7F
+
+    stays_normal = e > k
+    code_norm = sign | ((e - k) << 3) | m
+
+    # subnormal landing: value in units of 2^-9 then RNE-shift right
+    q0 = jnp.where(e == 0, m, 8 + m)
+    shift = jnp.where(e == 0, k, k - (e - 1))
+    shift = jnp.clip(shift, 0, 8)  # q0 ≤ 15 ⇒ shift ≥ 5 already yields 0
+    floor = q0 >> shift
+    rem = q0 & ((1 << shift) - 1)
+    half = 1 << jnp.maximum(shift - 1, 0)  # guarded: only used when shift > 0
+    has_shift = shift > 0
+    round_up = has_shift & ((rem > half) | ((rem == half) & (floor & 1 == 1)))
+    q = floor + round_up.astype(jnp.int32)
+    code_sub = sign | q
+
+    out = jnp.where(stays_normal, code_norm, code_sub)
+    out = jnp.where((k == 0) | is_nan, c, out)
+    return out.astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# scales
+# ---------------------------------------------------------------------------
+
+def ceil_log2(s: jax.Array) -> jax.Array:
+    """Exact ``ceil(log2(s))`` for positive normal f32, from the bits
+    (no libm rounding risk — parity with ``rust/src/fp8/ue8m0.rs``)."""
+    bits = jax.lax.bitcast_convert_type(s.astype(jnp.float32), jnp.uint32).astype(jnp.int32)
+    exp = ((bits >> 23) & 0xFF) - 127
+    man = bits & 0x7FFFFF
+    return jnp.where(man == 0, exp, exp + 1)
+
+
+def exp2i(e: jax.Array) -> jax.Array:
+    """Exact ``2^e`` for integer ``e`` ∈ [-126, 127], by assembling the f32
+    exponent field directly. ``jnp.exp2`` must NOT be used for scales: some
+    runtimes (e.g. XLA 0.5.1's CPU backend) evaluate it via libm with
+    off-by-one-ulp results (0.24999998 for 2^-2), which silently corrupts
+    the quantization grid."""
+    e = jnp.clip(jnp.asarray(e, jnp.int32), -126, 127)
+    bits = ((e + 127) << 23).astype(jnp.uint32)
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def tile_scale_po2(amax: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Power-of-two tile scale (UE8M0 recipe): s = 2^ceil(log2(amax/448)).
+
+    Returns ``(scale_f32, exponent_i32)``; zero tiles get scale 1 (exp 0).
+    """
+    q = amax / jnp.float32(E4M3_MAX)
+    e = ceil_log2(jnp.maximum(q, jnp.float32(1e-38)))
+    e = jnp.where(amax > 0, e, 0)
+    return exp2i(e), e
+
+
+def tile_scale_float(amax: jax.Array) -> jax.Array:
+    """Float tile scale: s = amax/448 exactly; zero tiles get 1."""
+    return jnp.where(amax > 0, amax / jnp.float32(E4M3_MAX), jnp.float32(1.0))
+
+
+# runtime-independent canonical encoder (see encode_native warning)
+encode = encode_bitop

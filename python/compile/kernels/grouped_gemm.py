@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: **grouped FP8 GEMM** with DeepGEMM-style fine-grained
+scaling — the expert-computation workhorse (§3.2).
+
+Each expert's tokens are a padded ``[C, K]`` FP8 buffer (capacity C,
+row-wise 1×128 scales); weights are stored transposed-quantized ``[N, K]``
+(the layout the scaling-aware transpose produces), so both operands stream
+K-major. Per 128-wide k-tile the MXU-shaped partial product is rescaled by
+the outer product of the two operands' tile scales and accumulated in f32
+(exactly DeepGEMM's per-tile scaling, adapted from warp-tiles to
+BlockSpecs — DESIGN.md §Hardware-Adaptation).
+
+Grid: ``(experts, C/128, N/128)``; each program keeps a ``[128, K]`` strip
+of both operands plus the f32 accumulator in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import fp8_codec as codec
+
+TILE = codec.TILE
+BM = 128
+BN = 128
+
+
+def _grouped_gemm_kernel(a_ref, sa_ref, b_ref, sb_ref, out_ref, *, kt: int):
+    acc = jnp.zeros(out_ref.shape, jnp.float32)
+    for t in range(kt):
+        a = codec.decode_native(a_ref[0, :, t * TILE:(t + 1) * TILE])
+        b = codec.decode_native(b_ref[0, :, t * TILE:(t + 1) * TILE])
+        partial = jax.lax.dot_general(
+            a, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc = acc + partial[None] * (sa_ref[0, :, t][:, None] * sb_ref[0, :, t][None, :])
+    out_ref[...] = acc
+
+
+@jax.jit
+def grouped_fp8_matmul(a_codes, a_scales, b_codes, b_scales):
+    """Grouped ``A @ Bᵀ`` over FP8 operands.
+
+    ``a_codes``: u8 ``[E, C, K]`` (+ scales f32 ``[E, C, K/128]``);
+    ``b_codes``: u8 ``[E, N, K]`` (+ scales f32 ``[E, N, K/128]``).
+    Returns f32 ``[E, C, N]``. Matches ``ref.grouped_fp8_matmul`` to f32
+    accumulation-order tolerance.
+    """
+    e, c, k = a_codes.shape
+    e2, n, k2 = b_codes.shape
+    assert e == e2 and k == k2 and c % BM == 0 and n % BN == 0 and k % TILE == 0
+    kt = k // TILE
+    return pl.pallas_call(
+        functools.partial(_grouped_gemm_kernel, kt=kt),
+        grid=(e, c // BM, n // BN),
+        in_specs=[
+            pl.BlockSpec((1, BM, k), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, BM, kt), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, BN, k), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, BN, kt), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BM, BN), lambda g, i, j: (g, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, c, n), jnp.float32),
+        interpret=True,
+    )(a_codes, a_scales, b_codes, b_scales)

@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: per-tile row-wise FP8 quantization (Eq. 2–3).
+
+Tiling (TPU thinking, adapted from the paper's CUDA kernels — see DESIGN.md
+§Hardware-Adaptation): the grid walks (row-block, 128-col tile); each
+program holds a ``(BM, 128)`` block in VMEM, computes the per-row amax over
+its 128-wide tile (the scale tile of Eq. 2), derives the po2/float scale,
+and writes FP8 codes + scales in one pass — one HBM read, two writes, no
+intermediate buffer.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU performance is analysed statically (DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import fp8_codec as codec
+
+TILE = codec.TILE
+BM = 128  # row-block: 128×128 VMEM blocks = MXU-native tile
+
+
+def _quantize_kernel(x_ref, codes_ref, scales_ref, sexp_ref, *, mode: str):
+    x = x_ref[...].astype(jnp.float32)  # (BM, TILE)
+    amax = jnp.max(jnp.abs(x), axis=-1)  # (BM,)
+    if mode == "po2":
+        scale, sexp = codec.tile_scale_po2(amax)
+    else:
+        scale = codec.tile_scale_float(amax)
+        sexp = jnp.zeros_like(scale, dtype=jnp.int32)
+    codes_ref[...] = codec.encode(x / scale[:, None])
+    scales_ref[...] = scale[:, None]
+    sexp_ref[...] = sexp[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def quantize_rowwise(x, mode: str = "po2"):
+    """Pallas row-wise per-tile quantizer.
+
+    ``x``: f32/bf16 ``[M, N]`` with ``M % 128 == 0`` and ``N % 128 == 0``.
+    Returns ``(codes u8 [M, N], scales f32 [M, N/128], sexp i32 [M, N/128])``
+    — bitwise-identical to ``ref.quantize_rowwise``.
+    """
+    m, n = x.shape
+    assert m % BM == 0 and n % TILE == 0, f"shape {x.shape} must be 128-aligned"
+    grid = (m // BM, n // TILE)
+    return pl.pallas_call(
+        functools.partial(_quantize_kernel, mode=mode),
+        grid=grid,
+        in_specs=[pl.BlockSpec((BM, TILE), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((BM, TILE), lambda i, j: (i, j)),
+            pl.BlockSpec((BM, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((BM, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.uint8),
+            jax.ShapeDtypeStruct((m, n // TILE), jnp.float32),
+            jax.ShapeDtypeStruct((m, n // TILE), jnp.int32),
+        ],
+        interpret=True,
+    )(x)
+
+
+def _dequantize_kernel(codes_ref, scales_ref, out_ref):
+    out_ref[...] = codec.decode_native(codes_ref[...]) * scales_ref[...]
+
+
+@jax.jit
+def dequantize_rowwise(codes, scales):
+    """Pallas dequantizer: ``D(·)`` — codes × per-tile scales."""
+    m, n = codes.shape
+    assert m % BM == 0 and n % TILE == 0
+    grid = (m // BM, n // TILE)
+    return pl.pallas_call(
+        _dequantize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, TILE), lambda i, j: (i, j)),
+            pl.BlockSpec((BM, 1), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, TILE), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(codes, scales)

@@ -1,0 +1,185 @@
+"""Pure-jnp oracles for every L1 kernel — the correctness reference the
+pytest suite checks each Pallas kernel against (and the functional spec the
+Rust native kernels mirror).
+
+Conventions (same as ``rust/src/fp8``):
+
+* a quantized tensor is a triple ``(codes u8 [R, C], scales f32 [R, C/128],
+  sexp i32 [R, C/128])`` — row-wise 1×128 tiles (Eq. 2);
+* the column-wise layout of ``X`` is represented as the row-wise layout of
+  ``Xᵀ``;
+* shapes fed to the tiled kernels are multiples of 128 (the MoE pipeline
+  pads, §3.3.1); these jnp oracles additionally accept ragged shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import fp8_codec as codec
+
+TILE = codec.TILE
+
+
+# ---------------------------------------------------------------------------
+# quantization (Eq. 2–3)
+# ---------------------------------------------------------------------------
+
+def quantize_rowwise(x, mode: str = "po2"):
+    """Row-wise per-tile quantization. Returns (codes, scales, sexp)."""
+    r, c = x.shape
+    pad = (-c) % TILE
+    xp = jnp.pad(x, ((0, 0), (0, pad)))
+    tiles = xp.reshape(r, -1, TILE)
+    amax = jnp.max(jnp.abs(tiles), axis=-1)
+    if mode == "po2":
+        scales, sexp = codec.tile_scale_po2(amax)
+    elif mode == "float":
+        scales = codec.tile_scale_float(amax)
+        sexp = jnp.zeros_like(scales, dtype=jnp.int32)
+    else:
+        raise ValueError(f"unknown scale mode {mode!r}")
+    q = codec.encode(tiles / scales[..., None])
+    codes = q.reshape(r, -1)[:, :c]
+    return codes, scales, sexp
+
+
+def quantize_colwise(x, mode: str = "po2"):
+    """Column-wise quantization of X ≡ row-wise quantization of Xᵀ."""
+    return quantize_rowwise(x.T, mode)
+
+
+def dequantize_rowwise(codes, scales):
+    """D(·): decode codes and apply per-tile scales."""
+    r, c = codes.shape
+    pad = (-c) % TILE
+    cp = jnp.pad(codes, ((0, 0), (0, pad)))
+    vals = codec.decode_native(cp).reshape(r, -1, TILE) * scales[..., None]
+    return vals.reshape(r, -1)[:, :c]
+
+
+# ---------------------------------------------------------------------------
+# transpose strategies (§3.1)
+# ---------------------------------------------------------------------------
+
+def naive_transpose(codes, scales, mode: str = "po2"):
+    """Strategy 1 of Fig. 1: dequantize → transpose → requantize.
+
+    Introduces the double quantization error (two roundings)."""
+    return quantize_rowwise(dequantize_rowwise(codes, scales).T, mode)
+
+
+def direct_transpose(codes, sexp):
+    """Strategy 2 (ours / Alg. 1): scaling-aware direct transpose.
+
+    Po2 scales only. For each 128×128 block, align scales to the block max
+    and shift payload exponents; no dequantize/requantize rounding."""
+    m, n = codes.shape
+    assert m % TILE == 0 and n % TILE == 0, "direct transpose expects 128-aligned shapes"
+    bm, bn = m // TILE, n // TILE
+    # blocks[i_blk, j_blk, i_in, j_in]
+    blocks = codes.reshape(bm, TILE, bn, TILE).transpose(0, 2, 1, 3)
+    se = sexp.reshape(bm, TILE, bn).transpose(0, 2, 1)  # [bm, bn, 128 rows]
+    emax = jnp.max(se, axis=-1)  # [bm, bn]
+    k = (emax[..., None] - se).astype(jnp.int32)  # [bm, bn, 128 rows]
+    shifted = codec.scale_down_code(blocks, k[..., None])
+    out_blocks = shifted.transpose(0, 1, 3, 2)  # transpose within block
+    # reassemble: output [n, m]; out block (j_blk, i_blk)
+    out = out_blocks.transpose(1, 2, 0, 3).reshape(n, m)
+    out_sexp = jnp.repeat(emax.T, TILE, axis=0)  # [n, bm]
+    out_scales = codec.exp2i(out_sexp)
+    return out, out_scales, out_sexp
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU (+ fused quantization, §3.3.2)
+# ---------------------------------------------------------------------------
+
+def swiglu(gate, up):
+    """SwiGLU: silu(gate) ⊙ up (the nonlinearity between fc1 and fc2)."""
+    return jax.nn.silu(gate) * up
+
+
+def swiglu_bwd(gate, up, dy):
+    """Gradients of swiglu wrt (gate, up)."""
+    sig = jax.nn.sigmoid(gate)
+    silu = gate * sig
+    dsilu = sig * (1.0 + gate * (1.0 - sig))
+    return dy * up * dsilu, dy * silu
+
+
+def swiglu_quant(gate, up, mode: str = "po2"):
+    """Fused SwiGLU + row-wise quantization (one pass; the fused kernel's
+    contract: bitwise-identical to quantize_rowwise(swiglu(...)))."""
+    return quantize_rowwise(swiglu(gate, up), mode)
+
+
+# ---------------------------------------------------------------------------
+# permute / padding (§3.3.1)
+# ---------------------------------------------------------------------------
+
+def permute_pad_plan(expert_of, n_experts: int, capacity: int):
+    """Row plan for the fused permute+pad: for each destination row of the
+    [n_experts*capacity, H] buffer, the source token index or -1 (padding).
+
+    Tokens beyond an expert's capacity are dropped (standard MoE capacity
+    semantics); the plan is computed once per batch by the router."""
+    t = expert_of.shape[0]
+    order = jnp.argsort(expert_of, stable=True)
+    sorted_e = expert_of[order]
+    # rank of each token within its expert group
+    rank = jnp.arange(t) - jnp.searchsorted(sorted_e, sorted_e, side="left")
+    dest = sorted_e[jnp.arange(t)] * capacity + rank
+    valid = rank < capacity
+    plan = jnp.full(n_experts * capacity, -1, dtype=jnp.int32)
+    plan = plan.at[jnp.where(valid, dest, n_experts * capacity)].set(
+        order.astype(jnp.int32), mode="drop"
+    )
+    return plan
+
+
+def permute_pad(x, plan):
+    """Apply a permute+pad plan: out[d] = x[plan[d]] or 0 where plan[d]<0.
+
+    Works on f32 activations and u8 codes alike (padding rows are zeros —
+    exact in both domains)."""
+    gathered = jnp.take(x, jnp.clip(plan, 0, x.shape[0] - 1), axis=0)
+    return jnp.where((plan >= 0)[:, None], gathered, jnp.zeros_like(gathered))
+
+
+def unpermute_unpad(y, plan, n_tokens: int):
+    """Inverse of permute_pad: scatter rows back to token order (dropped
+    tokens receive zeros)."""
+    out = jnp.zeros((n_tokens, y.shape[1]), y.dtype)
+    src = jnp.where(plan >= 0, plan, n_tokens)
+    return out.at[src].add(y, mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# grouped GEMM over FP8 operands (DeepGEMM-style fine-grained scaling)
+# ---------------------------------------------------------------------------
+
+def fp8_matmul(a_codes, a_scales, b_codes, b_scales):
+    """``A @ Bᵀ`` with per-tile scaled FP8 operands, f32 accumulation.
+
+    ``a``: row-wise [M, K] (scales [M, K/128]); ``b``: row-wise of Bᵀ
+    [N, K] (scales [N, K/128]) — the layout the direct transpose produces.
+    Per k-tile the partial product is scaled by the outer product of the
+    tile scales (DeepGEMM's fine-grained scaling), accumulated in f32.
+    """
+    m, kk = a_codes.shape
+    n, kk2 = b_codes.shape
+    assert kk == kk2 and kk % TILE == 0
+    kt = kk // TILE
+    af = codec.decode_native(a_codes).reshape(m, kt, TILE)
+    bf = codec.decode_native(b_codes).reshape(n, kt, TILE)
+    # partial[m, n, k_tile]
+    partial = jnp.einsum("mkt,nkt->mnk", af, bf, preferred_element_type=jnp.float32)
+    scaled = partial * a_scales[:, None, :] * b_scales[None, :, :]
+    return jnp.sum(scaled, axis=-1)
+
+
+def grouped_fp8_matmul(a_codes, a_scales, b_codes, b_scales):
+    """Batched-over-experts fp8_matmul: a [E, C, K], b [E, N, K]."""
+    return jax.vmap(fp8_matmul)(a_codes, a_scales, b_codes, b_scales)

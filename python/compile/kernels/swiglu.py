@@ -1,0 +1,155 @@
+"""L1 Pallas kernel: **fused SwiGLU + FP8 quantization** (§3.3.2).
+
+The paper's observation: after the first grouped GEMM, the activation must
+be quantized before the second FP8 GEMM. Executing SwiGLU and quantization
+as separate kernels costs an extra HBM round-trip of the BF16 activation —
+the fusion computes ``silu(gate) ⊙ up`` in VMEM and emits FP8 payload +
+per-tile scales directly, with latency ≈ the standalone SwiGLU (Fig. 5).
+
+Backward fusion (``swiglu_bwd_quant``) likewise fuses the SwiGLU gradient
+with the row-wise quantization of ``d_gate``/``d_up`` for the Wgrad path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import fp8_codec as codec
+
+TILE = codec.TILE
+BM = 128
+
+
+def _swiglu_kernel(gate_ref, up_ref, out_ref):
+    g = gate_ref[...].astype(jnp.float32)
+    u = up_ref[...].astype(jnp.float32)
+    out_ref[...] = g * jax.nn.sigmoid(g) * u
+
+
+@jax.jit
+def swiglu(gate, up):
+    """Unfused SwiGLU (the Fig. 5 baseline): silu(gate) ⊙ up."""
+    m, n = gate.shape
+    assert m % BM == 0 and n % TILE == 0
+    return pl.pallas_call(
+        _swiglu_kernel,
+        grid=(m // BM, n // TILE),
+        in_specs=[
+            pl.BlockSpec((BM, TILE), lambda i, j: (i, j)),
+            pl.BlockSpec((BM, TILE), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, TILE), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(gate, up)
+
+
+def _swiglu_quant_kernel(gate_ref, up_ref, codes_ref, scales_ref, sexp_ref, *, mode):
+    g = gate_ref[...].astype(jnp.float32)
+    u = up_ref[...].astype(jnp.float32)
+    y = g * jax.nn.sigmoid(g) * u  # stays in VMEM — never hits HBM
+    amax = jnp.max(jnp.abs(y), axis=-1)
+    if mode == "po2":
+        scale, sexp = codec.tile_scale_po2(amax)
+    else:
+        scale = codec.tile_scale_float(amax)
+        sexp = jnp.zeros_like(scale, dtype=jnp.int32)
+    codes_ref[...] = codec.encode(y / scale[:, None])
+    scales_ref[...] = scale[:, None]
+    sexp_ref[...] = sexp[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def swiglu_quant(gate, up, mode: str = "po2"):
+    """Fused SwiGLU + row-wise FP8 quantization.
+
+    Contract: bitwise-identical to ``quantize(swiglu(gate, up))`` but with
+    a single HBM pass. Returns ``(codes, scales, sexp)``.
+    """
+    m, n = gate.shape
+    assert m % BM == 0 and n % TILE == 0
+    return pl.pallas_call(
+        functools.partial(_swiglu_quant_kernel, mode=mode),
+        grid=(m // BM, n // TILE),
+        in_specs=[
+            pl.BlockSpec((BM, TILE), lambda i, j: (i, j)),
+            pl.BlockSpec((BM, TILE), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BM, TILE), lambda i, j: (i, j)),
+            pl.BlockSpec((BM, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((BM, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.uint8),
+            jax.ShapeDtypeStruct((m, n // TILE), jnp.float32),
+            jax.ShapeDtypeStruct((m, n // TILE), jnp.int32),
+        ],
+        interpret=True,
+    )(gate, up)
+
+
+def _swiglu_bwd_quant_kernel(
+    gate_ref, up_ref, dy_ref,
+    dg_codes_ref, dg_scales_ref, dg_sexp_ref,
+    du_codes_ref, du_scales_ref, du_sexp_ref,
+):
+    g = gate_ref[...].astype(jnp.float32)
+    u = up_ref[...].astype(jnp.float32)
+    dy = dy_ref[...].astype(jnp.float32)
+    sig = jax.nn.sigmoid(g)
+    silu = g * sig
+    dsilu = sig * (1.0 + g * (1.0 - sig))
+    dg = dy * u * dsilu
+    du = dy * silu
+    for val, cref, sref, eref in (
+        (dg, dg_codes_ref, dg_scales_ref, dg_sexp_ref),
+        (du, du_codes_ref, du_scales_ref, du_sexp_ref),
+    ):
+        amax = jnp.max(jnp.abs(val), axis=-1)
+        scale, sexp = codec.tile_scale_po2(amax)
+        cref[...] = codec.encode(val / scale[:, None])
+        sref[...] = scale[:, None]
+        eref[...] = sexp[:, None]
+
+
+@jax.jit
+def swiglu_bwd_quant(gate, up, dy):
+    """Fused SwiGLU backward + FP8 quantization of both input gradients.
+
+    Returns ``((dg_codes, dg_scales, dg_sexp), (du_codes, du_scales,
+    du_sexp))`` — the FP8 operands the Dgrad grouped GEMM consumes.
+    """
+    m, n = gate.shape
+    assert m % BM == 0 and n % TILE == 0
+    out = pl.pallas_call(
+        _swiglu_bwd_quant_kernel,
+        grid=(m // BM, n // TILE),
+        in_specs=[
+            pl.BlockSpec((BM, TILE), lambda i, j: (i, j)),
+            pl.BlockSpec((BM, TILE), lambda i, j: (i, j)),
+            pl.BlockSpec((BM, TILE), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BM, TILE), lambda i, j: (i, j)),
+            pl.BlockSpec((BM, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((BM, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((BM, TILE), lambda i, j: (i, j)),
+            pl.BlockSpec((BM, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((BM, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.uint8),
+            jax.ShapeDtypeStruct((m, n // TILE), jnp.float32),
+            jax.ShapeDtypeStruct((m, n // TILE), jnp.int32),
+            jax.ShapeDtypeStruct((m, n), jnp.uint8),
+            jax.ShapeDtypeStruct((m, n // TILE), jnp.float32),
+            jax.ShapeDtypeStruct((m, n // TILE), jnp.int32),
+        ],
+        interpret=True,
+    )(gate, up, dy)
+    return tuple(out[:3]), tuple(out[3:])

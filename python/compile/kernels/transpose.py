@@ -1,0 +1,128 @@
+"""L1 Pallas kernel: the **scaling-aware direct FP8 transpose** (Alg. 1).
+
+Strategy (per 128×128 block, one grid program each):
+
+1. read the block's 128 row-scale exponents (VMEM-resident, 512 B);
+2. ``emax = max(sexp)`` — the block's aligned scale `S_max` (align *up* so
+   payloads only shrink → no overflow, the paper's argument);
+3. shift every payload code's exponent field by ``k = emax − sexp[row]``
+   (``scale_down_code`` — pure integer ops on the u8 encodings, RNE only if
+   a value crosses into the subnormal grid);
+4. write the transposed block and the broadcast scale.
+
+No dequantize, no requantize, no float math on the payload — this is what
+makes it 2–3× faster than the naive path (Fig. 1) and bitwise lossless.
+
+The naive baseline (dequant → transpose → requant) is also provided for the
+Fig. 1 comparison.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import fp8_codec as codec
+
+TILE = codec.TILE
+
+
+def _direct_transpose_kernel(codes_ref, sexp_ref, out_ref, oscale_ref, osexp_ref):
+    block = codes_ref[...]  # (TILE, TILE) u8 — rows of X
+    se = sexp_ref[...][:, 0]  # (TILE,) i32 — row-scale exponents
+    emax = jnp.max(se)
+    k = emax - se  # (TILE,)
+    shifted = codec.scale_down_code(block, k[:, None])
+    out_ref[...] = shifted.T
+    oscale_ref[...] = jnp.full_like(oscale_ref, codec.exp2i(emax))
+    osexp_ref[...] = jnp.full_like(osexp_ref, emax)
+
+
+@jax.jit
+def direct_transpose(codes, sexp):
+    """Pallas scaling-aware transpose.
+
+    Input: row-wise quantized ``X``: codes u8 ``[M, N]``, sexp i32
+    ``[M, N/128]`` (po2 recipe). Output: row-wise quantized ``Xᵀ``:
+    ``(codes u8 [N, M], scales f32 [N, M/128], sexp i32 [N, M/128])`` —
+    bitwise-identical to ``ref.direct_transpose``.
+    """
+    m, n = codes.shape
+    assert m % TILE == 0 and n % TILE == 0
+    grid = (n // TILE, m // TILE)  # one program per OUTPUT 128×128 block
+    return pl.pallas_call(
+        _direct_transpose_kernel,
+        grid=grid,
+        in_specs=[
+            # output block (bj, bi) consumes input block (bi, bj)
+            pl.BlockSpec((TILE, TILE), lambda bj, bi: (bi, bj)),
+            pl.BlockSpec((TILE, 1), lambda bj, bi: (bi, bj)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE, TILE), lambda bj, bi: (bj, bi)),
+            pl.BlockSpec((TILE, 1), lambda bj, bi: (bj, bi)),
+            pl.BlockSpec((TILE, 1), lambda bj, bi: (bj, bi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, m), jnp.uint8),
+            jax.ShapeDtypeStruct((n, m // TILE), jnp.float32),
+            jax.ShapeDtypeStruct((n, m // TILE), jnp.int32),
+        ],
+        interpret=True,
+    )(codes, sexp)
+
+
+# ---------------------------------------------------------------------------
+# naive baseline (Fig. 1 strategy 1) as Pallas kernels: dequantize kernel →
+# XLA transpose → requantize kernel. Three HBM round-trips + two roundings.
+# ---------------------------------------------------------------------------
+
+def _dequant_kernel(codes_ref, scales_ref, out_ref):
+    out_ref[...] = codec.decode_native(codes_ref[...]) * scales_ref[...]
+
+
+def _requant_kernel(x_ref, codes_ref, scales_ref, sexp_ref):
+    x = x_ref[...]
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale, sexp = codec.tile_scale_po2(amax)
+    codes_ref[...] = codec.encode(x / scale[:, None])
+    scales_ref[...] = scale[:, None]
+    sexp_ref[...] = sexp[:, None]
+
+
+@jax.jit
+def naive_transpose(codes, scales):
+    """Fig. 1 strategy 1: dequantize → transpose → requantize (po2 scales)."""
+    m, n = codes.shape
+    assert m % TILE == 0 and n % TILE == 0
+    dq = pl.pallas_call(
+        _dequant_kernel,
+        grid=(m // TILE, n // TILE),
+        in_specs=[
+            pl.BlockSpec((TILE, TILE), lambda i, j: (i, j)),
+            pl.BlockSpec((TILE, 1), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE, TILE), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(codes, scales)
+    dq_t = dq.T
+    return pl.pallas_call(
+        _requant_kernel,
+        grid=(n // TILE, m // TILE),
+        in_specs=[pl.BlockSpec((TILE, TILE), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((TILE, TILE), lambda i, j: (i, j)),
+            pl.BlockSpec((TILE, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((TILE, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, m), jnp.uint8),
+            jax.ShapeDtypeStruct((n, m // TILE), jnp.float32),
+            jax.ShapeDtypeStruct((n, m // TILE), jnp.int32),
+        ],
+        interpret=True,
+    )(dq_t)

@@ -1,0 +1,369 @@
+"""L2 — the MoE transformer model, its three precision recipes, and the
+training step. Authored in JAX, calling the L1 kernels; lowered once by
+``aot.py`` to HLO text and driven from Rust thereafter.
+
+Recipes (the paper's Fig. 2 variants, §3.2):
+
+* ``bf16``      — baseline: no quantization anywhere.
+* ``blockwise`` — TE-style: FP8 confined to the grouped GEMMs, **float**
+  per-tile scales, Q/DQ at every GEMM boundary; the Wgrad operand is
+  re-quantized column-wise from the dequantized activation (the naive
+  dequantize→transpose→requantize path → **double quantization error**).
+* ``fp8flow``   — the paper's recipe: **po2** scales, quantize once at the
+  MoE entry, scaling-aware direct transpose for the Wgrad operand, fused
+  SwiGLU+quant; FP8 persists across the expert path except the two BF16
+  islands (fc1-out→activation and fc2-dgrad→combine).
+
+Quantization is *emulated* (quantize–dequantize around each GEMM) so that
+the numerics are exactly those of FP8 execution while the GEMM itself runs
+in f32 on the CPU PJRT backend — the standard methodology for precision
+studies (paper §2.2 "simulated FP8 GPT-3 training").
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+
+TILE = 128
+
+RECIPES = ("bf16", "blockwise", "fp8flow")
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+class Config(NamedTuple):
+    """Model/config hyperparameters (static at lowering time)."""
+
+    vocab: int = 256
+    d_model: int = 256
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 384          # per-expert hidden (SwiGLU)
+    n_experts: int = 4
+    top_k: int = 2
+    capacity: int = 256      # per-expert token capacity (128-aligned)
+    seq: int = 128
+    batch: int = 8
+    lr: float = 3e-3
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    wd: float = 0.01
+
+    @property
+    def tokens(self) -> int:
+        return self.seq * self.batch
+
+
+TINY = Config(vocab=64, d_model=128, n_layers=1, n_heads=2, d_ff=128,
+              n_experts=2, top_k=1, capacity=128, seq=32, batch=4)
+SMALL = Config()
+
+
+# ---------------------------------------------------------------------------
+# FP8 emulation helpers (value-space; exact per-recipe semantics)
+# ---------------------------------------------------------------------------
+
+def _qdq_row(x, mode):
+    """quantize→dequantize row-wise (tiles along the last axis)."""
+    c, s, _ = ref.quantize_rowwise(x, mode)
+    return ref.dequantize_rowwise(c, s)
+
+
+def _qdq_wgrad_operand(x, recipe):
+    """The Wgrad-side operand of an activation `x` quantized row-wise over
+    its last dim, now needed column-wise (transposed layout) — THE place
+    the two recipes diverge (§3.1):
+
+    * blockwise: dequantize → transpose → requantize with float scales
+      (double quantization error);
+    * fp8flow: scaling-aware direct transpose of the po2 codes (exact).
+    """
+    if recipe == "blockwise":
+        xq = _qdq_row(x, "float")  # what the fwd GEMM actually consumed
+        return _qdq_row(xq.T, "float")  # second, inconsistent quantization
+    elif recipe == "fp8flow":
+        c, s, e = ref.quantize_rowwise(x, "po2")
+        tc, ts, _ = ref.direct_transpose(c, e)
+        return ref.dequantize_rowwise(tc, ts)
+    raise ValueError(recipe)
+
+
+def _mode(recipe):
+    return "float" if recipe == "blockwise" else "po2"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def fp8_linear(x, w, recipe):
+    """``x @ w`` with recipe-faithful FP8 numerics in all three GEMMs
+    (Fprop/Dgrad/Wgrad). ``x: [m, k]``, ``w: [k, n]``.
+
+    All quantization is 1×128-tiled along the GEMM contraction dim, as the
+    grouped kernels require (row-wise activations, transposed-quantized
+    weights)."""
+    if recipe == "bf16":
+        return x @ w
+    m = _mode(recipe)
+    xq = _qdq_row(x, m)              # row-wise over k
+    wq = _qdq_row(w.T, m).T          # weight transposed-quantized over k
+    return xq @ wq
+
+
+def _fp8_linear_fwd(x, w, recipe):
+    return fp8_linear(x, w, recipe), (x, w)
+
+
+def _fp8_linear_bwd(recipe, res, dy):
+    x, w = res
+    if recipe == "bf16":
+        return dy @ w.T, x.T @ dy
+    m = _mode(recipe)
+    # Dgrad: dx = dy @ wᵀ — dy row-wise over n, w quantized over n.
+    dyq = _qdq_row(dy, m)
+    wq_n = _qdq_row(w, m)            # tiles along n (wᵀ transposed-quantized)
+    dx = dyq @ wq_n.T
+    # Wgrad: dw = xᵀ @ dy — xᵀ needs column-wise x (the transpose story);
+    # dy needs column-wise quantization over m.
+    xt = _qdq_wgrad_operand(x, recipe)           # [k, m] value-space
+    dy_c = _qdq_wgrad_operand(dy, recipe)        # [n, m]
+    dw = xt @ dy_c.T
+    return dx, dw
+
+
+fp8_linear.defvjp(_fp8_linear_fwd, _fp8_linear_bwd)
+
+
+# ---------------------------------------------------------------------------
+# model components
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, g):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6) * g
+
+
+def attention(x, wqkv, wo, n_heads):
+    """Plain causal multi-head attention (f32 — the paper quantizes only
+    the MoE path; attention stays in the AMP domain)."""
+    t, d = x.shape
+    qkv = x @ wqkv  # [t, 3d]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    hd = d // n_heads
+    q = q.reshape(t, n_heads, hd).transpose(1, 0, 2)
+    k = k.reshape(t, n_heads, hd).transpose(1, 0, 2)
+    v = v.reshape(t, n_heads, hd).transpose(1, 0, 2)
+    att = (q @ k.transpose(0, 2, 1)) / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask[None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    y = (att @ v).transpose(1, 0, 2).reshape(t, d)
+    return y @ wo
+
+
+def _topk_by_argmax(probs, k):
+    """Iterative-argmax top-k (k ≤ 2 here). ``jax.lax.top_k`` lowers to an
+    HLO `topk(..., largest=true)` attribute the 0.5.1 parser rejects; the
+    argmax form lowers to plain reduces."""
+    vals, idxs = [], []
+    p = probs
+    for _ in range(k):
+        i = jnp.argmax(p, axis=-1)
+        vals.append(jnp.take_along_axis(p, i[:, None], axis=-1)[:, 0])
+        idxs.append(i.astype(jnp.int32))
+        p = p - jax.nn.one_hot(i, p.shape[-1], dtype=p.dtype) * jnp.float32(1e9)
+    return jnp.stack(vals, -1), jnp.stack(idxs, -1)
+
+
+def router(x, wr, top_k):
+    """Top-k softmax router. Returns (expert indices [t, k], gates [t, k],
+    aux load-balancing loss)."""
+    logits = x @ wr  # [t, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = _topk_by_argmax(probs, top_k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    # Switch-style aux loss: E · Σ_e f_e · p_e
+    e = wr.shape[1]
+    me = jnp.mean(jax.nn.one_hot(idx[:, 0], e), axis=0)
+    pe = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(me * pe)
+    return idx, gates, aux
+
+
+def moe_ffn(x, params, cfg: Config, recipe: str):
+    """The full MoE layer (§3.2 stages): route → dispatch(permute+pad) →
+    grouped fc1 → SwiGLU → grouped fc2 → unpermute → combine.
+
+    In the fp8flow recipe the dispatch buffer is conceptually FP8 (the
+    dispatch all-to-all moves codes+scales — half the bytes, accounted in
+    the cluster sim); numerically we emulate by quantizing at MoE entry.
+    """
+    t, d = x.shape
+    e, k, cap = cfg.n_experts, cfg.top_k, cfg.capacity
+    idx, gates, aux = router(x, params["router"], k)
+
+    # entry quantization (the fp8flow recipe's single entry cast):
+    if recipe == "fp8flow":
+        x_in = _qdq_row(x, "po2")
+    elif recipe == "blockwise":
+        x_in = x  # blockwise dispatches in BF16, quantizes inside GEMMs
+    else:
+        x_in = x
+
+    y = jnp.zeros_like(x)
+    for kk in range(k):
+        plan = ref.permute_pad_plan(idx[:, kk], e, cap)  # [e*cap]
+        xg = ref.permute_pad(x_in, plan).reshape(e, cap, d)
+
+        def expert_ffn(xe, w1, w3, w2):
+            gate = fp8_linear(xe, w1, recipe)  # fc1 gate  [cap, h]
+            up = fp8_linear(xe, w3, recipe)    # fc1 up    [cap, h]
+            act = ref.swiglu(gate, up)         # BF16 island #1
+            return fp8_linear(act, w2, recipe)  # fc2      [cap, d]
+
+        ye = jax.vmap(expert_ffn)(xg, params["w1"], params["w3"], params["w2"])
+        yk = ref.unpermute_unpad(ye.reshape(e * cap, d), plan, t)
+        y = y + gates[:, kk:kk + 1] * yk
+    return y, aux
+
+
+def block(x, p, cfg: Config, recipe: str):
+    h = x + attention(rms_norm(x, p["ln1"]), p["wqkv"], p["wo"], cfg.n_heads)
+    ff, aux = moe_ffn(rms_norm(h, p["ln2"]), p, cfg, recipe)
+    return h + ff, aux
+
+
+def forward(params, tokens, cfg: Config, recipe: str):
+    """Next-token LM loss over a [batch, seq] token batch."""
+
+    def single(seq_tokens):
+        x = params["embed"][seq_tokens]  # [seq, d]
+        aux_total = 0.0
+        for li in range(cfg.n_layers):
+            x, aux = block(x, params["layers"][li], cfg, recipe)
+            aux_total = aux_total + aux
+        x = rms_norm(x, params["ln_f"])
+        logits = x @ params["embed"].T  # tied head
+        return logits, aux_total
+
+    logits, aux = jax.vmap(single)(tokens)  # [b, seq, vocab]
+    tgt = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1).mean()
+    return nll + 0.01 * aux.mean()
+
+
+# ---------------------------------------------------------------------------
+# parameters & optimizer (AdamW, f32 master weights)
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: Config, key):
+    """Initialize f32 master weights (shared across recipes so convergence
+    runs start from identical states)."""
+    keys = iter(jax.random.split(key, 64))
+    d, h, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+
+    def dense(k, *shape, scale=None):
+        scale = scale or (1.0 / jnp.sqrt(shape[0]))
+        return (jax.random.normal(k, shape, jnp.float32) * scale)
+
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append({
+            "ln1": jnp.ones(d), "ln2": jnp.ones(d),
+            "wqkv": dense(next(keys), d, 3 * d),
+            "wo": dense(next(keys), d, d),
+            "router": dense(next(keys), d, e),
+            "w1": jax.vmap(lambda k: dense(k, d, h))(jax.random.split(next(keys), e)),
+            "w3": jax.vmap(lambda k: dense(k, d, h))(jax.random.split(next(keys), e)),
+            "w2": jax.vmap(lambda k: dense(k, h, d))(jax.random.split(next(keys), e)),
+        })
+    return {
+        "embed": dense(next(keys), cfg.vocab, d, scale=0.02),
+        "ln_f": jnp.ones(d),
+        "layers": layers,
+    }
+
+
+def adamw_update(p, g, m, v, step, cfg: Config):
+    m2 = cfg.beta1 * m + (1 - cfg.beta1) * g
+    v2 = cfg.beta2 * v + (1 - cfg.beta2) * g * g
+    mhat = m2 / (1 - cfg.beta1 ** step)
+    vhat = v2 / (1 - cfg.beta2 ** step)
+    p2 = p - cfg.lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.wd * p)
+    return p2, m2, v2
+
+
+def train_step(params, opt_m, opt_v, step, tokens, cfg: Config, recipe: str):
+    """One optimization step; returns (flat params', flat m', flat v',
+    loss) — flat leaf lists in ``param_structure`` order."""
+    loss, grads = jax.value_and_grad(forward)(params, tokens, cfg, recipe)
+    stepf = step.astype(jnp.float32)
+    p2, m2, v2 = [], [], []
+    for p, g, m, v in zip(
+        jax.tree.leaves(params), jax.tree.leaves(grads),
+        jax.tree.leaves(opt_m), jax.tree.leaves(opt_v),
+    ):
+        np_, nm, nv = adamw_update(p, g, m, v, stepf, cfg)
+        p2.append(np_)
+        m2.append(nm)
+        v2.append(nv)
+    return p2, m2, v2, loss
+
+
+# ---------------------------------------------------------------------------
+# flat (HLO-boundary) wrappers — Rust drives these
+# ---------------------------------------------------------------------------
+
+def param_structure(cfg: Config):
+    """The canonical flattening order of the parameter pytree."""
+    shapes = init_params(cfg, jax.random.PRNGKey(0))
+    leaves, treedef = jax.tree.flatten(shapes)
+    return [l.shape for l in leaves], treedef
+
+
+def flat_train_step(cfg: Config, recipe: str):
+    """Returns f(flat_params…, flat_m…, flat_v…, step_i32, tokens_i32) →
+    (flat_params'…, flat_m'…, flat_v'…, loss) for AOT lowering."""
+    _, treedef = param_structure(cfg)
+
+    def fn(*args):
+        n = treedef.num_leaves
+        params = jax.tree.unflatten(treedef, args[:n])
+        m = jax.tree.unflatten(treedef, args[n:2 * n])
+        v = jax.tree.unflatten(treedef, args[2 * n:3 * n])
+        step, tokens = args[3 * n], args[3 * n + 1]
+        p2, m2, v2, loss = train_step(params, m, v, step, tokens, cfg, recipe)
+        return tuple(p2) + tuple(m2) + tuple(v2) + (loss,)
+
+    return fn
+
+
+def flat_init(cfg: Config):
+    """f(seed_u32) → flat params + zeros m + zeros v, for AOT lowering."""
+
+    def fn(seed):
+        params = init_params(cfg, jax.random.PRNGKey(seed))
+        leaves = jax.tree.leaves(params)
+        zeros = [jnp.zeros_like(l) for l in leaves]
+        return tuple(leaves) + tuple(zeros) + tuple(zeros)
+
+    return fn
+
+
+def flat_moe_fwd(cfg: Config, recipe: str):
+    """Single-MoE-layer forward f(x [tokens, d], router, w1, w3, w2) → y —
+    the runtime microbench / integration-test artifact."""
+
+    def fn(x, wr, w1, w3, w2):
+        params = {"router": wr, "w1": w1, "w3": w3, "w2": w2}
+        y, _aux = moe_ffn(x, params, cfg, recipe)
+        return (y,)
+
+    return fn

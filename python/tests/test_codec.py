@@ -1,0 +1,114 @@
+"""Codec parity: bitop codec ≡ native f8e4m3fn dtype ≡ ml_dtypes semantics.
+
+These are the numeric-format ground truth for the whole repo: the Rust
+codec's unit tests pin the same values (`rust/src/fp8/e4m3.rs`), and
+`test_rust_parity.py` checks Rust↔Python agreement through artifacts.
+"""
+
+import ml_dtypes
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fp8_codec as codec
+
+
+def all_codes():
+    return np.arange(256, dtype=np.uint8)
+
+
+class TestDecode:
+    def test_bitop_matches_mldtypes_all_codes(self):
+        c = all_codes()
+        ours = np.asarray(codec.decode_bitop(jnp.asarray(c)))
+        ref = c.view(ml_dtypes.float8_e4m3fn).astype(np.float32)
+        np.testing.assert_array_equal(np.isnan(ours), np.isnan(ref))
+        m = ~np.isnan(ref)
+        np.testing.assert_array_equal(ours[m], ref[m])
+
+    def test_native_matches_bitop_all_codes(self):
+        c = jnp.asarray(all_codes())
+        a = np.asarray(codec.decode_native(c))
+        b = np.asarray(codec.decode_bitop(c))
+        m = ~np.isnan(a)
+        np.testing.assert_array_equal(np.isnan(a), np.isnan(b))
+        np.testing.assert_array_equal(a[m], b[m])
+
+
+class TestEncode:
+    @pytest.mark.parametrize(
+        "x,code",
+        [
+            (448.0, 0x7E), (449.0, 0x7E), (464.0, 0x7E), (465.0, 0x7F),
+            (np.inf, 0x7F), (-449.0, 0xFE), (-1000.0, 0xFF),
+            (0.0, 0x00), (-0.0, 0x80), (2.0**-6, 0x08), (2.0**-9, 0x01),
+            (2.0**-10, 0x00), (1.0, 0x38), (1.0625, 0x38), (1.1875, 0x3A),
+            (216.0, 0x76), (0.0029296875, 0x02),
+        ],
+    )
+    def test_known_values(self, x, code):
+        assert int(codec.encode_bitop(jnp.float32(x))) == code
+        assert int(codec.encode_native(jnp.float32(x))) == code
+
+    def test_roundtrip_all_codes(self):
+        c = all_codes()
+        finite = c[(c & 0x7F) != 0x7F]
+        vals = codec.decode_bitop(jnp.asarray(finite))
+        back = np.asarray(codec.encode_bitop(vals))
+        np.testing.assert_array_equal(back, finite)
+
+    @settings(deadline=None, max_examples=300)
+    @given(st.floats(-500, 500, allow_nan=False, width=32))
+    def test_bitop_matches_mldtypes(self, x):
+        ours = int(codec.encode_bitop(jnp.float32(x)))
+        ref = int(np.float32(x).astype(ml_dtypes.float8_e4m3fn).view(np.uint8))
+        assert ours == ref, f"x={x}: ours={ours:#04x} ref={ref:#04x}"
+
+    @settings(deadline=None, max_examples=200)
+    @given(st.floats(-0.0078125, 0.0078125, allow_nan=False, width=32))
+    def test_bitop_matches_mldtypes_subnormal_region(self, x):
+        ours = int(codec.encode_bitop(jnp.float32(x)))
+        ref = int(np.float32(x).astype(ml_dtypes.float8_e4m3fn).view(np.uint8))
+        assert ours == ref
+
+    def test_batch_native_vs_bitop(self):
+        rng = np.random.default_rng(0)
+        x = (rng.standard_normal(4096) * np.exp2(rng.uniform(-12, 9, 4096))).astype(np.float32)
+        a = np.asarray(codec.encode_native(jnp.asarray(x)))
+        b = np.asarray(codec.encode_bitop(jnp.asarray(x)))
+        np.testing.assert_array_equal(a, b)
+
+
+class TestScaleDownCode:
+    def test_exhaustive_vs_decode_multiply_encode(self):
+        c = all_codes()
+        for k in range(17):
+            fast = np.asarray(codec.scale_down_code(jnp.asarray(c), jnp.int32(k)))
+            vals = codec.decode_bitop(jnp.asarray(c)) * np.float32(2.0 ** -k)
+            slow = np.asarray(codec.encode_bitop(vals))
+            nan = (c & 0x7F) == 0x7F
+            np.testing.assert_array_equal(fast[~nan], slow[~nan], err_msg=f"k={k}")
+            assert ((fast[nan] & 0x7F) == 0x7F).all()
+
+    def test_k_zero_identity(self):
+        c = jnp.asarray(all_codes())
+        np.testing.assert_array_equal(np.asarray(codec.scale_down_code(c, 0)), all_codes())
+
+
+class TestCeilLog2:
+    @pytest.mark.parametrize("e", range(-30, 30))
+    def test_exact_powers(self, e):
+        assert int(codec.ceil_log2(jnp.float32(2.0**e))) == e
+
+    @pytest.mark.parametrize("s,e", [(1.5, 1), (3.0, 2), (0.75, 0), (0.51, 0), (0.5, -1)])
+    def test_between_powers(self, s, e):
+        assert int(codec.ceil_log2(jnp.float32(s))) == e
+
+    @settings(deadline=None, max_examples=200)
+    @given(st.integers(-99, 99), st.floats(1.0, 1.984375, allow_nan=False, width=32))
+    def test_bound_property(self, e2, mant):
+        s = float(np.float32(mant) * np.float32(2.0) ** e2)
+        e = int(codec.ceil_log2(jnp.float32(s)))
+        assert 2.0 ** e >= s * (1 - 1e-6)
+        assert 2.0 ** (e - 1) < s * (1 + 1e-6)

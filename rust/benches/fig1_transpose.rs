@@ -1,0 +1,37 @@
+//! **Fig. 1** — latency of the two row→column FP8 conversion strategies:
+//! naive dequantize→transpose→requantize vs the scaling-aware direct
+//! transpose. Paper: direct is 2–3× faster across all tensor shapes.
+//!
+//! Shapes are the paper's aspect ratios scaled to the CPU testbed
+//! (DESIGN.md §Hardware-Adaptation); the claim under test is the *factor*.
+
+use fp8_flow_moe::fp8::tile::quantize_rowwise;
+use fp8_flow_moe::fp8::transpose::{direct_transpose, naive_transpose};
+use fp8_flow_moe::fp8::{Fp8Format, ScaleMode};
+use fp8_flow_moe::util::bench::{print_speedup, print_table, Bencher};
+use fp8_flow_moe::util::mat::Mat;
+use fp8_flow_moe::util::rng::Rng;
+use std::hint::black_box;
+
+fn main() {
+    let b = Bencher::default();
+    let shapes = [(1024usize, 2048usize), (2048, 2048), (2048, 5120), (4096, 2048)];
+    let mut rows = Vec::new();
+    println!("Fig. 1 — direct vs naive FP8 transpose (paper: 2-3x)");
+    for (m, n) in shapes {
+        let mut rng = Rng::seed_from(1);
+        let x = Mat::rand_log_uniform(m, n, -6.0, 6.0, &mut rng);
+        let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        let bytes = (m * n) as u64;
+        let naive = b.run_bytes(&format!("naive {m}x{n}"), bytes, || {
+            black_box(naive_transpose(black_box(&q)));
+        });
+        let direct = b.run_bytes(&format!("direct {m}x{n}"), bytes, || {
+            black_box(direct_transpose(black_box(&q)));
+        });
+        print_speedup(&format!("{m}x{n}"), &naive, &direct);
+        rows.push(naive);
+        rows.push(direct);
+    }
+    print_table("fig1_transpose", &rows);
+}

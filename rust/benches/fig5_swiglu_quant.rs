@@ -1,0 +1,42 @@
+//! **Fig. 5** — fused SwiGLU+quantization vs standalone SwiGLU (and vs the
+//! unfused SwiGLU→quantize pair). Paper: the fused kernel's latency is
+//! nearly identical to the standalone SwiGLU while already emitting FP8
+//! payload+scales — i.e. the quantization becomes free.
+
+use fp8_flow_moe::fp8::{Fp8Format, ScaleMode};
+use fp8_flow_moe::moe::swiglu::{swiglu, swiglu_quant, swiglu_then_quant};
+use fp8_flow_moe::util::bench::{print_table, Bencher};
+use fp8_flow_moe::util::mat::Mat;
+use fp8_flow_moe::util::rng::Rng;
+use std::hint::black_box;
+
+fn main() {
+    let b = Bencher::default();
+    let shapes = [(2048usize, 1408usize), (4096, 2048), (8192, 2048)];
+    let mut rows = Vec::new();
+    println!("Fig. 5 — fused swiglu+quant vs standalone swiglu (paper: ~equal)");
+    for (m, n) in shapes {
+        let mut rng = Rng::seed_from(5);
+        let gate = Mat::randn(m, n, 1.0, &mut rng);
+        let up = Mat::randn(m, n, 1.0, &mut rng);
+        let bytes = (m * n * 8) as u64;
+        let alone = b.run_bytes(&format!("swiglu-only {m}x{n}"), bytes, || {
+            black_box(swiglu(black_box(&gate), black_box(&up)));
+        });
+        let fused = b.run_bytes(&format!("fused swiglu+quant {m}x{n}"), bytes, || {
+            black_box(swiglu_quant(black_box(&gate), black_box(&up), Fp8Format::E4M3, ScaleMode::Po2));
+        });
+        let unfused = b.run_bytes(&format!("swiglu->quant 2pass {m}x{n}"), bytes, || {
+            black_box(swiglu_then_quant(black_box(&gate), black_box(&up), Fp8Format::E4M3, ScaleMode::Po2));
+        });
+        let overhead = fused.median.as_secs_f64() / alone.median.as_secs_f64();
+        let vs_unfused = unfused.median.as_secs_f64() / fused.median.as_secs_f64();
+        println!(
+            "SPEEDUP {m}x{n}: fused/standalone = {overhead:.2}x (paper ~1.0x), unfused/fused = {vs_unfused:.2}x"
+        );
+        rows.push(alone);
+        rows.push(fused);
+        rows.push(unfused);
+    }
+    print_table("fig5_swiglu_quant", &rows);
+}

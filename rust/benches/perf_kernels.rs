@@ -1,0 +1,68 @@
+//! Hot-path kernel microbenchmarks (§Perf): throughput of the native
+//! quantizer, codec, direct transpose and FP8 GEMM, with a `memcpy`
+//! roofline reference for the movement kernels. This is the bench the
+//! EXPERIMENTS.md §Perf iteration log quotes.
+
+use fp8_flow_moe::fp8::tile::quantize_rowwise;
+use fp8_flow_moe::fp8::transpose::direct_transpose;
+use fp8_flow_moe::fp8::{e4m3, Fp8Format, ScaleMode};
+use fp8_flow_moe::moe::gemm::fp8_matmul;
+use fp8_flow_moe::util::bench::{print_table, Bencher};
+use fp8_flow_moe::util::mat::Mat;
+use fp8_flow_moe::util::rng::Rng;
+use std::hint::black_box;
+
+fn main() {
+    let b = Bencher::default();
+    let mut rows = Vec::new();
+    let (m, n) = (2048usize, 2048usize);
+    let mut rng = Rng::seed_from(9);
+    let x = Mat::rand_log_uniform(m, n, -6.0, 6.0, &mut rng);
+
+    // memcpy roofline reference (same bytes as the u8 transpose)
+    let src = vec![7u8; m * n];
+    let mut dst = vec![0u8; m * n];
+    rows.push(b.run_bytes("memcpy u8 (roofline ref)", (m * n) as u64, || {
+        dst.copy_from_slice(black_box(&src));
+        black_box(&dst);
+    }));
+
+    // codec throughput
+    let codes: Vec<u8> = (0..m * n).map(|i| (i % 255) as u8).collect();
+    rows.push(b.run_bytes("decode LUT", (m * n) as u64, || {
+        let s: f32 = codes.iter().map(|&c| e4m3::DECODE_LUT[c as usize]).sum();
+        black_box(s);
+    }));
+    rows.push(b.run_bytes("encode RNE", (m * n * 4) as u64, || {
+        let mut acc = 0u32;
+        for &v in &x.data {
+            acc = acc.wrapping_add(e4m3::encode(v) as u32);
+        }
+        black_box(acc);
+    }));
+
+    // quantizer (read f32, write u8+scales)
+    rows.push(b.run_bytes("quantize_rowwise po2", (m * n * 5) as u64, || {
+        black_box(quantize_rowwise(black_box(&x), Fp8Format::E4M3, ScaleMode::Po2));
+    }));
+
+    // direct transpose (u8 in, u8 out)
+    let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+    rows.push(b.run_bytes("direct_transpose", (2 * m * n) as u64, || {
+        black_box(direct_transpose(black_box(&q)));
+    }));
+
+    // fp8 GEMM (compute-bound)
+    let w = quantize_rowwise(&Mat::randn(256, n, 1.0, &mut rng), Fp8Format::E4M3, ScaleMode::Po2);
+    let gemm = b.run(&format!("fp8_matmul {m}x{n}x256"), || {
+        black_box(fp8_matmul(black_box(&q), black_box(&w)));
+    });
+    let flops = 2.0 * (m * n * 256) as f64;
+    println!(
+        "fp8_matmul: {:.2} GFLOP/s",
+        flops / gemm.median.as_secs_f64() / 1e9
+    );
+    rows.push(gemm);
+
+    print_table("perf_kernels", &rows);
+}

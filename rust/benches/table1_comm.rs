@@ -1,0 +1,26 @@
+//! **Table 1** — communication performance with Q/DQ accounting on the
+//! DeepEP-style all-to-all cost model, side-by-side with the paper's
+//! measured numbers (shape fidelity: speedup bands and the erosion
+//! pattern, not absolute ms).
+
+use fp8_flow_moe::coordinator::reports;
+
+fn main() {
+    print!("{}", reports::table1());
+    println!();
+    println!("shape checks (paper's findings):");
+    use fp8_flow_moe::cluster::comm::{table1_row, TABLE1_CONFIGS};
+    let mut comm_ok = 0;
+    let mut erosion_ok = 0;
+    for &(m, n, ep) in &TABLE1_CONFIGS {
+        let r = table1_row(m, n, ep);
+        if r.speedup_comm > 1.0 && r.speedup_comm < 2.0 {
+            comm_ok += 1;
+        }
+        if r.speedup_all < r.speedup_comm {
+            erosion_ok += 1;
+        }
+    }
+    println!("  FP8 comm speedup in (1.0, 2.0): {comm_ok}/9 rows");
+    println!("  Q/DQ erodes the gain:           {erosion_ok}/9 rows");
+}

@@ -1,0 +1,25 @@
+//! **Table 2** — end-to-end 671B throughput/memory under AC=full for
+//! EP ∈ {8,16,32} across the three recipes (simulated cluster;
+//! paper values printed alongside).
+
+use fp8_flow_moe::cluster::memory::AcMode;
+use fp8_flow_moe::cluster::model_cfg::DEEPSEEK_V3;
+use fp8_flow_moe::cluster::sim::simulate;
+use fp8_flow_moe::coordinator::reports;
+use fp8_flow_moe::moe::layer::Recipe;
+
+fn main() {
+    print!("{}", reports::table2());
+    println!();
+    println!("relative gains (FP8-Flow vs baselines; paper: +6/8/16% vs BF16, +3/8/21% vs Blockwise):");
+    for ep in [8usize, 16, 32] {
+        let b = simulate(&DEEPSEEK_V3, ep, 256 / ep, Recipe::Bf16, AcMode::Full).tgs;
+        let w = simulate(&DEEPSEEK_V3, ep, 256 / ep, Recipe::Blockwise, AcMode::Full).tgs;
+        let f = simulate(&DEEPSEEK_V3, ep, 256 / ep, Recipe::Fp8Flow, AcMode::Full).tgs;
+        println!(
+            "  EP{ep:<3} vs BF16: {:+.1}%   vs Blockwise: {:+.1}%",
+            (f / b - 1.0) * 100.0,
+            (f / w - 1.0) * 100.0
+        );
+    }
+}

@@ -1,0 +1,183 @@
+//! DeepEP-style all-to-all cost model with explicit Q/DQ accounting —
+//! the Table 1 generator.
+//!
+//! The paper's two findings this model reproduces structurally:
+//! 1. FP8 halves payload but ships a scale sidecar in extra buffers with
+//!    extra synchronizations, capping the comm speedup near 1.6–1.7×;
+//! 2. quantize/dequantize kernels cost a near-constant ~0.08–0.13 ms
+//!    regardless of payload (launch + sync dominated at these sizes), so
+//!    for small messages they erase the FP8 gain (ALL speedup → 1.0×).
+
+use crate::cluster::topology::Layout;
+
+/// Wire precision of the all-to-all payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Wire {
+    Bf16,
+    Fp8,
+}
+
+/// One Table 1 measurement row.
+#[derive(Clone, Copy, Debug)]
+pub struct CommRow {
+    pub m: usize,
+    pub n: usize,
+    pub ep: usize,
+    pub bf16_ms: f64,
+    pub quant_ms: f64,
+    pub dequant_ms: f64,
+    pub fp8_comm_ms: f64,
+    pub fp8_all_ms: f64,
+    pub speedup_comm: f64,
+    pub speedup_all: f64,
+}
+
+/// All-to-all latency for an `[m, n]` token buffer at the given wire
+/// precision (seconds).
+pub fn a2a_latency(l: &Layout, m: usize, n: usize, wire: Wire) -> f64 {
+    let payload = match wire {
+        Wire::Bf16 => (m * n * 2) as f64,
+        // FP8 payload + f32 scale per 128 elements
+        Wire::Fp8 => (m * n) as f64 * (1.0 + 4.0 / 128.0),
+    };
+    // FP8 ships payload and scales as separate buffers with their own
+    // synchronization round: double the α term (§3.3.2's "doubles the
+    // number of data buffers and synchronizations").
+    let alpha = match wire {
+        Wire::Bf16 => l.a2a_alpha(),
+        Wire::Fp8 => 2.0 * l.a2a_alpha(),
+    };
+    alpha + payload / l.a2a_bandwidth()
+}
+
+/// Quantization kernel latency for an `[m, n]` buffer (seconds): a fixed
+/// launch/sync floor plus a (small) memory-bound term — near-constant at
+/// Table 1 sizes, exactly the paper's observation.
+pub fn quant_latency(l: &Layout, m: usize, n: usize) -> f64 {
+    // each rank quantizes its LOCAL shard of the buffer (m/ep rows):
+    // launch+sync dominates, hence the near-constant cost in Table 1
+    let bytes = ((m / l.ep) * n * 3) as f64; // read bf16 + write fp8(+scales)
+    18.0 * l.hw.launch_overhead + bytes / l.hw.hbm_bw
+}
+
+/// Dequantization kernel latency (symmetric).
+pub fn dequant_latency(l: &Layout, m: usize, n: usize) -> f64 {
+    let bytes = ((m / l.ep) * n * 3) as f64;
+    17.0 * l.hw.launch_overhead + bytes / l.hw.hbm_bw
+}
+
+/// Produce one Table 1 row for `(m, n, ep)`.
+pub fn table1_row(m: usize, n: usize, ep: usize) -> CommRow {
+    let l = Layout::new(ep, 256 / ep);
+    let bf16 = a2a_latency(&l, m, n, Wire::Bf16);
+    let q = quant_latency(&l, m, n);
+    let d = dequant_latency(&l, m, n);
+    let fp8 = a2a_latency(&l, m, n, Wire::Fp8);
+    let all = q + fp8 + d;
+    CommRow {
+        m,
+        n,
+        ep,
+        bf16_ms: bf16 * 1e3,
+        quant_ms: q * 1e3,
+        dequant_ms: d * 1e3,
+        fp8_comm_ms: fp8 * 1e3,
+        fp8_all_ms: all * 1e3,
+        speedup_comm: bf16 / fp8,
+        speedup_all: bf16 / all,
+    }
+}
+
+/// The paper's nine Table 1 configurations.
+pub const TABLE1_CONFIGS: [(usize, usize, usize); 9] = [
+    (24576, 2048, 8),
+    (24576, 5120, 8),
+    (32768, 7168, 8),
+    (24576, 2048, 16),
+    (24576, 5120, 16),
+    (32768, 7168, 16),
+    (24576, 2048, 32),
+    (24576, 5120, 32),
+    (32768, 7168, 32),
+];
+
+/// Paper-reported Table 1 values `(bf16, q, dq, comm, all, s_comm, s_all)`
+/// for side-by-side reporting in the bench.
+pub const TABLE1_PAPER: [(f64, f64, f64, f64, f64, f64, f64); 9] = [
+    (0.537, 0.127, 0.084, 0.325, 0.535, 1.65, 1.00),
+    (0.785, 0.087, 0.089, 0.526, 0.703, 1.49, 1.12),
+    (1.276, 0.086, 0.089, 0.905, 1.080, 1.41, 1.18),
+    (1.224, 0.091, 0.083, 1.176, 1.350, 1.04, 0.91),
+    (2.213, 0.082, 0.082, 1.400, 1.564, 1.58, 1.42),
+    (2.934, 0.084, 0.092, 1.847, 2.023, 1.59, 1.45),
+    (3.005, 0.094, 0.083, 2.740, 2.918, 1.10, 1.03),
+    (5.003, 0.082, 0.081, 2.868, 3.031, 1.74, 1.65),
+    (7.327, 0.082, 0.082, 4.319, 4.483, 1.70, 1.63),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp8_comm_always_faster_than_bf16() {
+        for &(m, n, ep) in &TABLE1_CONFIGS {
+            let r = table1_row(m, n, ep);
+            assert!(r.speedup_comm > 1.0, "({m},{n},{ep}): {:?}", r.speedup_comm);
+            assert!(r.speedup_comm < 2.0, "payload halving caps the gain");
+        }
+    }
+
+    #[test]
+    fn qdq_erodes_the_gain() {
+        for &(m, n, ep) in &TABLE1_CONFIGS {
+            let r = table1_row(m, n, ep);
+            assert!(r.speedup_all < r.speedup_comm, "({m},{n},{ep})");
+        }
+    }
+
+    #[test]
+    fn qdq_is_near_constant_while_comm_scales() {
+        let small = table1_row(24576, 2048, 16);
+        let large = table1_row(32768, 7168, 16);
+        // comm grows with the payload (4.7× more bytes; α damps the ratio —
+        // the paper's own EP16 column grows only 1.6×)...
+        assert!(large.fp8_comm_ms / small.fp8_comm_ms > 2.0);
+        // ...while q/dq grows far slower (launch-dominated)
+        assert!(large.quant_ms / small.quant_ms < 2.0);
+    }
+
+    #[test]
+    fn erosion_worst_for_small_messages() {
+        let small = table1_row(24576, 2048, 8);
+        let large = table1_row(32768, 7168, 8);
+        let erosion_small = small.speedup_comm - small.speedup_all;
+        let erosion_large = large.speedup_comm - large.speedup_all;
+        assert!(
+            erosion_small > erosion_large,
+            "small {erosion_small} vs large {erosion_large}"
+        );
+    }
+
+    #[test]
+    fn comm_grows_with_ep() {
+        for n in [2048usize, 5120] {
+            let t8 = table1_row(24576, n, 8).bf16_ms;
+            let t16 = table1_row(24576, n, 16).bf16_ms;
+            let t32 = table1_row(24576, n, 32).bf16_ms;
+            assert!(t8 < t16 && t16 < t32, "n={n}: {t8} {t16} {t32}");
+        }
+    }
+
+    #[test]
+    fn same_order_as_paper() {
+        // within ~3× of the paper's absolute numbers everywhere (shape
+        // fidelity target; exact ms are testbed-specific)
+        for (i, &(m, n, ep)) in TABLE1_CONFIGS.iter().enumerate() {
+            let r = table1_row(m, n, ep);
+            let p = TABLE1_PAPER[i];
+            let ratio = r.bf16_ms / p.0;
+            assert!((0.33..3.0).contains(&ratio), "({m},{n},{ep}) bf16 {} vs paper {}", r.bf16_ms, p.0);
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Model shape configurations for the three DeepSeek reference models the
+//! paper benchmarks against (§3.3, §4).
+
+/// Transformer/MoE shape parameters (decoder-only, MoE FFN).
+#[derive(Clone, Copy, Debug)]
+pub struct ModelCfg {
+    pub name: &'static str,
+    pub n_layers: usize,
+    /// Layers with MoE FFN (the rest are dense).
+    pub n_moe_layers: usize,
+    pub d_model: usize,
+    /// Per-expert FFN hidden size.
+    pub moe_ffn: usize,
+    /// Dense-FFN hidden (first layers / shared).
+    pub dense_ffn: usize,
+    pub n_experts: usize,
+    pub n_shared_experts: usize,
+    pub top_k: usize,
+    /// Total parameter count (for memory accounting), in billions.
+    pub params_b: f64,
+    /// Active parameters per token, in billions.
+    pub active_params_b: f64,
+}
+
+/// DeepSeek-V2-Lite (the 16 B convergence model of §4.1).
+pub const DEEPSEEK_V2_LITE: ModelCfg = ModelCfg {
+    name: "deepseek-v2-lite",
+    n_layers: 27,
+    n_moe_layers: 26,
+    d_model: 2048,
+    moe_ffn: 1408,
+    dense_ffn: 10944,
+    n_experts: 64,
+    n_shared_experts: 2,
+    top_k: 6,
+    params_b: 15.7,
+    active_params_b: 2.4,
+};
+
+/// DeepSeek-V2 (236 B).
+pub const DEEPSEEK_V2: ModelCfg = ModelCfg {
+    name: "deepseek-v2",
+    n_layers: 60,
+    n_moe_layers: 59,
+    d_model: 5120,
+    moe_ffn: 1536,
+    dense_ffn: 12288,
+    n_experts: 160,
+    n_shared_experts: 2,
+    top_k: 6,
+    params_b: 236.0,
+    active_params_b: 21.0,
+};
+
+/// DeepSeek-V3 (671 B — the Tables 2–3 model).
+pub const DEEPSEEK_V3: ModelCfg = ModelCfg {
+    name: "deepseek-v3",
+    n_layers: 61,
+    n_moe_layers: 58,
+    d_model: 7168,
+    moe_ffn: 2048,
+    dense_ffn: 18432,
+    n_experts: 256,
+    n_shared_experts: 1,
+    top_k: 8,
+    params_b: 671.0,
+    active_params_b: 37.0,
+};
+
+impl ModelCfg {
+    /// Parameters of one expert (gate+up+down SwiGLU projections).
+    pub fn expert_params(&self) -> usize {
+        3 * self.d_model * self.moe_ffn
+    }
+
+    /// Dense (non-expert) parameters per layer: attention (MLA approximated
+    /// as 4 d²) + norms + router.
+    pub fn dense_params_per_layer(&self) -> usize {
+        4 * self.d_model * self.d_model + 2 * self.d_model + self.d_model * self.n_experts
+    }
+
+    /// Total MoE-expert parameters.
+    pub fn total_expert_params(&self) -> f64 {
+        (self.n_moe_layers * (self.n_experts + self.n_shared_experts)) as f64
+            * self.expert_params() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v3_param_count_order_of_magnitude() {
+        // experts dominate: n_moe_layers × 257 × 3·7168·2048 ≈ 656 B
+        let total = DEEPSEEK_V3.total_expert_params()
+            + (DEEPSEEK_V3.n_layers * DEEPSEEK_V3.dense_params_per_layer()) as f64;
+        let b = total / 1e9;
+        assert!(
+            (b - DEEPSEEK_V3.params_b).abs() / DEEPSEEK_V3.params_b < 0.15,
+            "derived {b}B vs reported {}B",
+            DEEPSEEK_V3.params_b
+        );
+    }
+
+    #[test]
+    fn lite_is_smallest() {
+        assert!(DEEPSEEK_V2_LITE.params_b < DEEPSEEK_V2.params_b);
+        assert!(DEEPSEEK_V2.params_b < DEEPSEEK_V3.params_b);
+    }
+}

@@ -1,0 +1,54 @@
+//! 1F1B pipeline schedule timing (§4.2: experiments use Megatron's
+//! 1F1B-overlap-compatible configuration, without comm overlap).
+//!
+//! Classic 1F1B: steady state interleaves one forward and one backward per
+//! stage; total step time ≈ (n_micro + pp − 1) slots where a slot is the
+//! per-stage fwd+bwd time of one microbatch, plus the warmup/drain bubble.
+
+/// Pipeline timing summary (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineTime {
+    /// fwd+bwd time of one microbatch on one stage.
+    pub slot: f64,
+    /// total step wallclock.
+    pub step: f64,
+    /// bubble fraction (idle / total).
+    pub bubble_frac: f64,
+}
+
+/// Compute 1F1B step time given per-stage per-microbatch fwd and bwd times.
+pub fn one_f_one_b(fwd: f64, bwd: f64, pp: usize, n_micro: usize) -> PipelineTime {
+    assert!(pp >= 1 && n_micro >= 1);
+    let slot = fwd + bwd;
+    // steady-state occupancy: n_micro slots, plus (pp-1) warmup+drain
+    let step = slot * (n_micro as f64 + (pp as f64 - 1.0));
+    let busy = slot * n_micro as f64;
+    PipelineTime { slot, step, bubble_frac: 1.0 - busy / step }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_pipeline_no_bubble() {
+        let t = one_f_one_b(1.0, 2.0, 1, 16);
+        assert_eq!(t.step, 48.0);
+        assert_eq!(t.bubble_frac, 0.0);
+    }
+
+    #[test]
+    fn bubble_shrinks_with_more_microbatches() {
+        let few = one_f_one_b(1.0, 2.0, 8, 8);
+        let many = one_f_one_b(1.0, 2.0, 8, 64);
+        assert!(many.bubble_frac < few.bubble_frac);
+        assert!((few.bubble_frac - 7.0 / 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deeper_pipeline_larger_bubble() {
+        let shallow = one_f_one_b(1.0, 2.0, 8, 64);
+        let deep = one_f_one_b(1.0, 2.0, 32, 64);
+        assert!(deep.bubble_frac > shallow.bubble_frac);
+    }
+}

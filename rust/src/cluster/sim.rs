@@ -1,0 +1,322 @@
+//! End-to-end training-step simulator — the Tables 2–3 generator.
+//!
+//! Costs one DeepSeek-V3 pipeline stage per microbatch from first
+//! principles (GEMM FLOPs at the recipe's precision, HBM passes for every
+//! data-movement/cast kernel taken from the recipe's *dataflow graph*,
+//! DeepEP-style all-to-all from [`crate::cluster::comm`]), then rolls up
+//! through the 1F1B schedule and the memory model.
+//!
+//! Everything recipe-specific is derived from the same [`Variant`] graphs
+//! the dataflow tests pin down — the simulator cannot silently diverge
+//! from the audited cast accounting.
+
+use crate::cluster::comm::{a2a_latency, Wire};
+use crate::cluster::memory::{
+    inflight_microbatches, layers_per_stage, memory_report, AcMode, MemReport, Workload,
+    DEFAULT_WORKLOAD,
+};
+use crate::cluster::model_cfg::ModelCfg;
+use crate::cluster::topology::Layout;
+use crate::dataflow::{build, OpKind, Variant};
+use crate::moe::layer::Recipe;
+
+/// Result of one simulated configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SimResult {
+    pub ep: usize,
+    pub pp: usize,
+    /// tokens / GPU / second.
+    pub tgs: f64,
+    pub mem_gb: f64,
+    pub oom: bool,
+    pub step_s: f64,
+    pub bubble_frac: f64,
+    /// per-microbatch stage decomposition (s)
+    pub t_gemm: f64,
+    pub t_comm: f64,
+    pub t_move: f64,
+    pub t_cast: f64,
+}
+
+fn variant_of(recipe: Recipe) -> Variant {
+    match recipe {
+        Recipe::Bf16 => Variant::Bf16,
+        Recipe::Blockwise => Variant::TeBlockwise,
+        Recipe::Fp8Flow => Variant::Fp8Flow,
+    }
+}
+
+/// Per-microbatch, per-stage cost decomposition (seconds).
+struct StageCost {
+    gemm_fwd: f64,
+    gemm_bwd: f64,
+    comm_fwd: f64,
+    comm_bwd: f64,
+    move_fwd: f64,
+    move_bwd: f64,
+    cast_fwd: f64,
+    cast_bwd: f64,
+}
+
+fn hbm_pass(l: &Layout, bytes: f64) -> f64 {
+    12.0 * l.hw.launch_overhead + bytes / l.hw.hbm_bw
+}
+
+fn stage_cost(m: &ModelCfg, l: &Layout, w: &Workload, recipe: Recipe) -> StageCost {
+    let hw = &l.hw;
+    let layers = layers_per_stage(m, l) as f64;
+    let tokens = (w.seq * w.micro_batch) as f64;
+    let te = tokens * m.top_k as f64; // expanded (dispatched) tokens
+    let d = m.d_model as f64;
+    let h = m.moe_ffn as f64;
+    let g = build(variant_of(recipe));
+
+    // ---- GEMM compute ----
+    let expert_flops_fwd = 2.0 * te * (3.0 * d * h); // fc1(gate+up)+fc2
+    let dense_flops_fwd = 2.0 * tokens * m.dense_params_per_layer() as f64;
+    let (moe_peak, moe_eff) = match recipe {
+        Recipe::Bf16 => (hw.bf16_flops, hw.gemm_efficiency),
+        // TE-style blockwise FP8 grouped GEMM realizes only a ~1.1×
+        // speedup over BF16 at MoE shapes: per-GEMM quantize syncs and
+        // fragmented launches waste most of the 2× tensor-core peak —
+        // this is the paper's own headline negative result ("naive FP8
+        // kernel replacement yields only a 3% gain").
+        Recipe::Blockwise => (hw.bf16_flops * 1.1, hw.gemm_efficiency),
+        // DeepGEMM-class persistent kernels with fine-grained scaling
+        // realize ~1.6× of BF16 (2× peak · 0.8 scaling/epilogue cost).
+        Recipe::Fp8Flow => (hw.fp8_flops, hw.gemm_efficiency * 0.8),
+    };
+    let gemm_fwd = layers
+        * (expert_flops_fwd / (moe_peak * moe_eff)
+            + dense_flops_fwd / (hw.bf16_flops * hw.gemm_efficiency));
+    let gemm_bwd = 2.0 * gemm_fwd; // dgrad + wgrad
+
+    // ---- all-to-all (dispatch + combine, from the graph's wire types) ----
+    let a2a = |node_fp8: bool| -> f64 {
+        let wire = if node_fp8 { Wire::Fp8 } else { Wire::Bf16 };
+        a2a_latency(l, te as usize, m.d_model, wire)
+    };
+    let mut comm_fwd = 0.0;
+    let mut comm_bwd = 0.0;
+    for n in &g.nodes {
+        if n.op == OpKind::AllToAll {
+            let t = a2a(n.out_dtype == crate::dataflow::Dtype::Fp8);
+            if n.backward {
+                comm_bwd += layers * t;
+            } else {
+                comm_fwd += layers * t;
+            }
+        }
+    }
+
+    // ---- data movement (permute/pad family) ----
+    let elt = |fp8: bool| if fp8 { 1.03 } else { 2.0 };
+    let mut move_fwd = 0.0;
+    let mut move_bwd = 0.0;
+    for n in &g.nodes {
+        let bytes = match n.op {
+            OpKind::Permute | OpKind::Pad | OpKind::Unpermute | OpKind::Unpad => {
+                // unfused: each op is a full read+write pass
+                2.0 * te * d * elt(n.out_dtype == crate::dataflow::Dtype::Fp8)
+            }
+            OpKind::FusedPermutePad | OpKind::FusedUnpermuteUnpad => {
+                2.0 * te * d * elt(n.out_dtype == crate::dataflow::Dtype::Fp8)
+            }
+            OpKind::SwiGlu | OpKind::FusedSwiGluQuant => 2.0 * te * h * 2.0 + te * h * 2.0,
+            OpKind::SwiGluBwd | OpKind::FusedSwiGluBwdQuant => 3.0 * te * h * 2.0 + 2.0 * te * h * 2.0,
+            OpKind::DirectTranspose => 2.0 * te * h * 1.03, // u8 in, u8 out
+            OpKind::NaiveTransposeRequant => {
+                // dequant pass + transpose pass + requant pass, bf16 middle
+                2.0 * (te * h * 1.0 + te * h * 2.0) + 2.0 * te * h * 2.0
+            }
+            _ => 0.0,
+        };
+        if bytes > 0.0 {
+            let t = layers * hbm_pass(l, bytes);
+            if n.backward {
+                move_bwd += t;
+            } else {
+                move_fwd += t;
+            }
+        }
+    }
+
+    // ---- explicit cast kernels ----
+    let mut cast_fwd = 0.0;
+    let mut cast_bwd = 0.0;
+    for n in &g.nodes {
+        if n.op.is_explicit_cast() {
+            // a cast reads + writes roughly a [te, d] tensor
+            let bytes = te * d * 3.0;
+            let t = layers * hbm_pass(l, bytes);
+            if n.backward {
+                cast_bwd += t;
+            } else {
+                cast_fwd += t;
+            }
+        }
+    }
+
+    StageCost { gemm_fwd, gemm_bwd, comm_fwd, comm_bwd, move_fwd, move_bwd, cast_fwd, cast_bwd }
+}
+
+/// Simulate one (recipe, EP×PP, AC) configuration of Tables 2–3.
+pub fn simulate(m: &ModelCfg, ep: usize, pp: usize, recipe: Recipe, ac: AcMode) -> SimResult {
+    let l = Layout::new(ep, pp);
+    let w = DEFAULT_WORKLOAD;
+    let c = stage_cost(m, &l, &w, recipe);
+
+    let fwd = c.gemm_fwd + c.comm_fwd + c.move_fwd + c.cast_fwd;
+    let mut bwd = c.gemm_bwd + c.comm_bwd + c.move_bwd + c.cast_bwd;
+    if ac == AcMode::Full {
+        // full recompute replays the forward (compute + movement + casts +
+        // the re-dispatch all-to-all) before the backward of each layer
+        bwd += fwd;
+    }
+    let pt = crate::cluster::schedule::one_f_one_b(fwd, bwd, pp, w.n_micro);
+    let mem: MemReport = memory_report(m, &l, &w, recipe, ac);
+    let oom = mem.oom(&l);
+
+    // Each EP rank runs its own token stream (the EP group doubles as the
+    // data-parallel group): EP parallel pipelines of depth PP.
+    let global_tokens = (w.seq * w.micro_batch * w.n_micro) as f64 * l.ep as f64;
+    let tgs = if oom { 0.0 } else { global_tokens / (pt.step * l.n_gpus() as f64) };
+    SimResult {
+        ep,
+        pp,
+        tgs,
+        mem_gb: mem.total_gb(),
+        oom,
+        step_s: pt.step,
+        bubble_frac: pt.bubble_frac,
+        t_gemm: c.gemm_fwd + c.gemm_bwd,
+        t_comm: c.comm_fwd + c.comm_bwd,
+        t_move: c.move_fwd + c.move_bwd,
+        t_cast: c.cast_fwd + c.cast_bwd,
+    }
+}
+
+pub use crate::cluster::memory::AcMode as AcModeReexport;
+
+/// The paper's Tables 2–3 values for side-by-side reporting:
+/// (recipe, ep, tgs, mem_gb) — `None` = OOM.
+pub const TABLE2_PAPER: [(&str, usize, f64, f64); 9] = [
+    ("bf16", 8, 1109.0, 39.0),
+    ("bf16", 16, 939.0, 36.0),
+    ("bf16", 32, 671.0, 43.0),
+    ("blockwise", 8, 1146.0, 37.0),
+    ("blockwise", 16, 938.0, 41.0),
+    ("blockwise", 32, 644.0, 51.0),
+    ("fp8flow", 8, 1176.0, 37.0),
+    ("fp8flow", 16, 1012.0, 39.0),
+    ("fp8flow", 32, 779.0, 49.0),
+];
+
+pub const TABLE3_PAPER: [(&str, usize, Option<(f64, f64)>); 9] = [
+    ("bf16", 8, Some((1178.0, 64.0))),
+    ("bf16", 16, Some((1055.0, 71.0))),
+    ("bf16", 32, None),
+    ("blockwise", 8, Some((1178.0, 73.0))),
+    ("blockwise", 16, Some((1031.0, 77.0))),
+    ("blockwise", 32, None),
+    ("fp8flow", 8, Some((1193.0, 56.0))),
+    ("fp8flow", 16, Some((1111.0, 66.0))),
+    ("fp8flow", 32, Some((912.0, 75.0))),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::model_cfg::DEEPSEEK_V3;
+
+    fn run(recipe: Recipe, ep: usize, ac: AcMode) -> SimResult {
+        simulate(&DEEPSEEK_V3, ep, 256 / ep, recipe, ac)
+    }
+
+    #[test]
+    fn fp8flow_wins_everywhere_table2() {
+        for ep in [8, 16, 32] {
+            let bf16 = run(Recipe::Bf16, ep, AcMode::Full);
+            let block = run(Recipe::Blockwise, ep, AcMode::Full);
+            let flow = run(Recipe::Fp8Flow, ep, AcMode::Full);
+            assert!(flow.tgs > bf16.tgs, "EP{ep}: flow {} vs bf16 {}", flow.tgs, bf16.tgs);
+            assert!(flow.tgs > block.tgs, "EP{ep}: flow {} vs blockwise {}", flow.tgs, block.tgs);
+        }
+    }
+
+    #[test]
+    fn gap_over_blockwise_widens_with_ep() {
+        // paper: +3% (EP8) → +8% (EP16) → +21% (EP32)
+        let gain = |ep| {
+            let b = run(Recipe::Blockwise, ep, AcMode::Full).tgs;
+            let f = run(Recipe::Fp8Flow, ep, AcMode::Full).tgs;
+            f / b
+        };
+        let (g8, g16, g32) = (gain(8), gain(16), gain(32));
+        assert!(g8 < g16 && g16 < g32, "gains should widen: {g8:.3} {g16:.3} {g32:.3}");
+        assert!(g8 > 1.0 && g32 > 1.10, "EP32 gain should be large: {g32:.3}");
+    }
+
+    #[test]
+    fn blockwise_loses_to_bf16_at_high_ep() {
+        // the paper's sign flip: naive FP8 kernel replacement is SLOWER
+        // than BF16 at EP32 (644 vs 671 TGS) — cast overhead + BF16 comm
+        let bf16 = run(Recipe::Bf16, 32, AcMode::Full);
+        let block = run(Recipe::Blockwise, 32, AcMode::Full);
+        assert!(
+            block.tgs < bf16.tgs * 1.02,
+            "blockwise {} should not beat bf16 {} at EP32",
+            block.tgs,
+            bf16.tgs
+        );
+    }
+
+    #[test]
+    fn table3_oom_pattern() {
+        assert!(run(Recipe::Bf16, 32, AcMode::SelMoeExpert).oom);
+        assert!(run(Recipe::Blockwise, 32, AcMode::SelMoeExpert).oom);
+        let flow = run(Recipe::Fp8Flow, 32, AcMode::SelMoeExpert);
+        assert!(!flow.oom);
+        assert!(flow.tgs > 0.0);
+    }
+
+    #[test]
+    fn ac_sel_is_faster_but_heavier() {
+        for r in [Recipe::Bf16, Recipe::Fp8Flow] {
+            let full = run(r, 8, AcMode::Full);
+            let sel = run(r, 8, AcMode::SelMoeExpert);
+            assert!(sel.tgs > full.tgs, "{r:?}: sel {} vs full {}", sel.tgs, full.tgs);
+            assert!(sel.mem_gb > full.mem_gb);
+        }
+    }
+
+    #[test]
+    fn absolute_tgs_same_order_as_paper() {
+        // calibration sanity: within 2.5× of the paper's BF16 EP8 number
+        let bf16 = run(Recipe::Bf16, 8, AcMode::Full);
+        assert!(
+            (443.0..2772.0).contains(&bf16.tgs),
+            "BF16 EP8 TGS {} too far from paper's 1109",
+            bf16.tgs
+        );
+    }
+
+    #[test]
+    fn tgs_decreases_with_ep() {
+        for r in [Recipe::Bf16, Recipe::Fp8Flow] {
+            let t8 = run(r, 8, AcMode::Full).tgs;
+            let t16 = run(r, 16, AcMode::Full).tgs;
+            let t32 = run(r, 32, AcMode::Full).tgs;
+            assert!(t8 > t16 && t16 > t32, "{r:?}: {t8} {t16} {t32}");
+        }
+    }
+
+    #[test]
+    fn cast_time_ordering_matches_cast_counts() {
+        let bf16 = run(Recipe::Bf16, 16, AcMode::Full);
+        let block = run(Recipe::Blockwise, 16, AcMode::Full);
+        let flow = run(Recipe::Fp8Flow, 16, AcMode::Full);
+        assert_eq!(bf16.t_cast, 0.0);
+        assert!(flow.t_cast < block.t_cast);
+    }
+}

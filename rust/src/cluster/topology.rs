@@ -1,0 +1,127 @@
+//! Cluster topology: nodes × GPUs, EP/PP process groups, link bandwidths.
+//!
+//! Mirrors the paper's testbed: 32 nodes × 8 H100-class GPUs (80 GB),
+//! NVLink intra-node, RDMA inter-node, EP×PP = 256.
+
+/// Hardware parameters of the simulated cluster.
+#[derive(Clone, Copy, Debug)]
+pub struct Hardware {
+    pub gpus_per_node: usize,
+    pub n_nodes: usize,
+    /// HBM capacity per GPU (bytes).
+    pub hbm_bytes: u64,
+    /// Dense BF16 peak (FLOP/s) per GPU.
+    pub bf16_flops: f64,
+    /// FP8 peak = 2× BF16 on Hopper tensor cores.
+    pub fp8_flops: f64,
+    /// HBM bandwidth (B/s).
+    pub hbm_bw: f64,
+    /// NVLink per-GPU bandwidth (B/s), intra-node all-to-all.
+    pub nvlink_bw: f64,
+    /// RDMA per-GPU bandwidth (B/s), inter-node all-to-all.
+    pub rdma_bw: f64,
+    /// Kernel launch + sync overhead (s).
+    pub launch_overhead: f64,
+    /// All-to-all base latency intra-node (s).
+    pub a2a_alpha_intra: f64,
+    /// All-to-all base latency inter-node (s).
+    pub a2a_alpha_inter: f64,
+    /// Achievable fraction of peak for big GEMMs.
+    pub gemm_efficiency: f64,
+}
+
+/// H100-class defaults (survive calibration: see EXPERIMENTS.md Table 1/2).
+pub const H100_CLUSTER: Hardware = Hardware {
+    gpus_per_node: 8,
+    n_nodes: 32,
+    hbm_bytes: 80 * (1 << 30),
+    bf16_flops: 990e12,
+    fp8_flops: 1980e12,
+    hbm_bw: 3.35e12,
+    nvlink_bw: 300e9,
+    rdma_bw: 45e9,
+    launch_overhead: 4e-6,
+    a2a_alpha_intra: 25e-6,
+    a2a_alpha_inter: 180e-6,
+    gemm_efficiency: 0.55,
+};
+
+/// An EP×PP parallel layout over the cluster.
+#[derive(Clone, Copy, Debug)]
+pub struct Layout {
+    pub ep: usize,
+    pub pp: usize,
+    pub hw: Hardware,
+}
+
+impl Layout {
+    pub fn new(ep: usize, pp: usize) -> Layout {
+        Layout { ep, pp, hw: H100_CLUSTER }
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.ep * self.pp
+    }
+
+    /// Fraction of an EP group's peers reachable intra-node.
+    pub fn intra_fraction(&self) -> f64 {
+        if self.ep <= self.hw.gpus_per_node {
+            1.0
+        } else {
+            self.hw.gpus_per_node as f64 / self.ep as f64
+        }
+    }
+
+    /// Effective per-GPU all-to-all bandwidth for this EP degree: the
+    /// blend of NVLink (intra) and RDMA (inter) paths, degraded mildly by
+    /// group size (incast/contention).
+    pub fn a2a_bandwidth(&self) -> f64 {
+        let fi = self.intra_fraction();
+        let blend = fi * self.hw.nvlink_bw + (1.0 - fi) * self.hw.rdma_bw;
+        // contention factor: larger groups lose efficiency
+        let groups = (self.ep as f64 / self.hw.gpus_per_node as f64).max(1.0);
+        blend / groups.powf(0.35)
+    }
+
+    /// Base all-to-all latency for this EP degree.
+    pub fn a2a_alpha(&self) -> f64 {
+        if self.ep <= self.hw.gpus_per_node {
+            self.hw.a2a_alpha_intra
+        } else {
+            self.hw.a2a_alpha_inter
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_layouts() {
+        for (ep, pp) in [(8, 32), (16, 16), (32, 8)] {
+            let l = Layout::new(ep, pp);
+            assert_eq!(l.n_gpus(), 256);
+        }
+    }
+
+    #[test]
+    fn bandwidth_decreases_with_ep() {
+        let b8 = Layout::new(8, 32).a2a_bandwidth();
+        let b16 = Layout::new(16, 16).a2a_bandwidth();
+        let b32 = Layout::new(32, 8).a2a_bandwidth();
+        assert!(b8 > b16 && b16 > b32, "{b8} {b16} {b32}");
+    }
+
+    #[test]
+    fn intra_node_is_full_nvlink() {
+        let l = Layout::new(8, 32);
+        assert_eq!(l.intra_fraction(), 1.0);
+        assert_eq!(l.a2a_alpha(), H100_CLUSTER.a2a_alpha_intra);
+    }
+
+    #[test]
+    fn fp8_is_double_bf16_peak() {
+        assert_eq!(H100_CLUSTER.fp8_flops, 2.0 * H100_CLUSTER.bf16_flops);
+    }
+}

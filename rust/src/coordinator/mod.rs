@@ -1,0 +1,41 @@
+//! Coordinator — the L3 leader: experiment drivers behind the CLI, and
+//! run-metrics plumbing.
+//!
+//! The paper's contribution lives at L1/L2 (numeric format + dataflow), so
+//! per the architecture spec L3 is a *driver*: process lifecycle, the
+//! experiment loop, metrics and reporting. The heavier L3 subsystems live
+//! in their own modules ([`crate::cluster`], [`crate::train`],
+//! [`crate::moe`]); this module wires them to the binary.
+
+pub mod reports;
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// Write a JSON document under `runs/` (created on demand), returning the
+/// path. All experiment outputs funnel through here so EXPERIMENTS.md can
+/// cite stable file names.
+pub fn write_run_json(name: &str, doc: &Json) -> Result<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("runs");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, doc.render())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_and_readback() {
+        let doc = Json::obj().set("hello", 1.0f64);
+        let p = write_run_json("test_write_run", &doc).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(s, r#"{"hello":1}"#);
+        std::fs::remove_file(p).unwrap();
+    }
+}

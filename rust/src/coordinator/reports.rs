@@ -1,0 +1,113 @@
+//! Table renderers for the simulated experiments (Tables 1–3) — shared by
+//! the CLI, the examples and the bench binaries so every surface prints
+//! identical rows.
+
+use crate::cluster::comm::{table1_row, TABLE1_CONFIGS, TABLE1_PAPER};
+use crate::cluster::memory::AcMode;
+use crate::cluster::model_cfg::DEEPSEEK_V3;
+use crate::cluster::sim::{simulate, SimResult};
+use crate::moe::layer::Recipe;
+
+/// Render Table 1 (communication performance with speedup), ours next to
+/// the paper's measurements.
+pub fn table1() -> String {
+    let mut s = String::new();
+    s.push_str("== Table 1: FP8 all-to-all with Q/DQ accounting (sim vs paper) ==\n");
+    s.push_str(&format!(
+        "{:<20} {:>9} {:>11} {:>9} {:>9} {:>7} {:>7} | {:>7} {:>7}\n",
+        "(M,N,EP)", "BF16 ms", "Q/D ms", "COMM ms", "ALL ms", "S.comm", "S.all", "paperSc", "paperSa"
+    ));
+    for (i, &(m, n, ep)) in TABLE1_CONFIGS.iter().enumerate() {
+        let r = table1_row(m, n, ep);
+        let p = TABLE1_PAPER[i];
+        s.push_str(&format!(
+            "ROW ({m},{n},{ep}){:>pad$} {:>9.3} {:>5.3}/{:<5.3} {:>9.3} {:>9.3} {:>6.2}x {:>6.2}x | {:>6.2}x {:>6.2}x\n",
+            "",
+            r.bf16_ms,
+            r.quant_ms,
+            r.dequant_ms,
+            r.fp8_comm_ms,
+            r.fp8_all_ms,
+            r.speedup_comm,
+            r.speedup_all,
+            p.5,
+            p.6,
+            pad = 20usize.saturating_sub(format!("({m},{n},{ep})").len() + 4),
+        ));
+    }
+    s
+}
+
+fn recipe_name(r: Recipe) -> &'static str {
+    match r {
+        Recipe::Bf16 => "BF16",
+        Recipe::Blockwise => "Blockwise",
+        Recipe::Fp8Flow => "FP8-Flow-MoE",
+    }
+}
+
+fn table23(ac: AcMode, title: &str, paper: &[(&str, usize, Option<(f64, f64)>)]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("== {title} (sim vs paper) ==\n"));
+    s.push_str(&format!(
+        "{:<14} {:>4} {:>9} {:>8} {:>10} {:>9} {:>10} {:>8}\n",
+        "method", "EP", "TGS", "Mem GB", "bubble", "paperTGS", "paperMem", "status"
+    ));
+    for (ri, recipe) in [Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow].iter().enumerate() {
+        for (ei, ep) in [8usize, 16, 32].iter().enumerate() {
+            let r: SimResult = simulate(&DEEPSEEK_V3, *ep, 256 / ep, *recipe, ac);
+            let p = paper[ri * 3 + ei].2;
+            let (ptgs, pmem) = match p {
+                Some((t, m)) => (format!("{t:.0}"), format!("{m:.0}")),
+                None => ("OOM".into(), "OOM".into()),
+            };
+            s.push_str(&format!(
+                "ROW {:<10} {:>4} {:>9} {:>8.1} {:>9.1}% {:>9} {:>10} {:>8}\n",
+                recipe_name(*recipe),
+                ep,
+                if r.oom { "OOM".to_string() } else { format!("{:.0}", r.tgs) },
+                r.mem_gb,
+                r.bubble_frac * 100.0,
+                ptgs,
+                pmem,
+                if r.oom { "OOM" } else { "ok" },
+            ));
+        }
+    }
+    s
+}
+
+/// Render Table 2 (AC=full).
+pub fn table2() -> String {
+    let paper: Vec<(&str, usize, Option<(f64, f64)>)> = crate::cluster::sim::TABLE2_PAPER
+        .iter()
+        .map(|&(r, ep, tgs, mem)| (r, ep, Some((tgs, mem))))
+        .collect();
+    table23(AcMode::Full, "Table 2: throughput/memory, AC=full", &paper)
+}
+
+/// Render Table 3 (AC=sel (+MoE expert)).
+pub fn table3() -> String {
+    table23(
+        AcMode::SelMoeExpert,
+        "Table 3: throughput/memory, AC=sel (+MoE expert)",
+        &crate::cluster::sim::TABLE3_PAPER,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_render() {
+        let t1 = table1();
+        assert_eq!(t1.matches("ROW").count(), 9);
+        let t2 = table2();
+        assert_eq!(t2.matches("ROW").count(), 9);
+        assert!(!t2.contains(" OOM")); // AC=full: no OOM cell
+        let t3 = table3();
+        assert_eq!(t3.matches("ROW").count(), 9);
+        assert!(t3.contains("OOM")); // AC=sel: baselines OOM at EP32
+    }
+}

@@ -1,0 +1,242 @@
+//! Typed op-graph substrate for the Fig. 2 dataflow variants.
+
+use std::collections::BTreeMap;
+
+/// Tensor element type on a dataflow edge.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    /// FP8 payload (+ scale sidecar).
+    Fp8,
+    /// BF16 working precision.
+    Bf16,
+    /// FP32 (master weights / accumulators).
+    F32,
+}
+
+/// Pipeline stage of the MoE layer (§3.2 decomposition).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Stage {
+    Router,
+    Dispatch,
+    Permute,
+    Fc1,
+    Activation,
+    Fc2,
+    Unperm,
+    Combine,
+}
+
+/// Operator kinds. `Quantize`/`Dequantize`/`Cast` are the *explicit* cast
+/// kernels the paper counts; fused ops carry their quantization inside a
+/// compute kernel (not an explicit cast launch).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    Quantize,
+    Dequantize,
+    /// bf16↔f32 boundary cast.
+    Cast,
+    AllToAll,
+    Permute,
+    Pad,
+    FusedPermutePad,
+    Unpermute,
+    Unpad,
+    FusedUnpermuteUnpad,
+    GroupedGemm,
+    SwiGlu,
+    FusedSwiGluQuant,
+    SwiGluBwd,
+    FusedSwiGluBwdQuant,
+    /// dequantize→transpose→requantize (the naive Wgrad operand prep).
+    NaiveTransposeRequant,
+    /// the paper's scaling-aware direct transpose (code-space, no Q/DQ).
+    DirectTranspose,
+    Scale,
+    Add,
+}
+
+impl OpKind {
+    /// Is this an explicit cast kernel (the paper's counted ops)?
+    pub fn is_explicit_cast(self) -> bool {
+        matches!(self, OpKind::Quantize | OpKind::Dequantize | OpKind::Cast)
+    }
+
+    /// Q/DQ launches hidden inside this op (the naive transpose performs
+    /// one dequantize and one requantize internally).
+    pub fn internal_qdq(self) -> usize {
+        match self {
+            OpKind::NaiveTransposeRequant => 2,
+            _ => 0,
+        }
+    }
+}
+
+/// One node of the dataflow graph.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: usize,
+    pub name: String,
+    pub op: OpKind,
+    pub stage: Stage,
+    pub backward: bool,
+    pub out_dtype: Dtype,
+    pub inputs: Vec<usize>,
+}
+
+/// A dataflow graph for one MoE layer fwd+bwd.
+#[derive(Clone, Debug, Default)]
+pub struct DataflowGraph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+}
+
+impl DataflowGraph {
+    pub fn new(name: &str) -> Self {
+        DataflowGraph { name: name.to_string(), nodes: Vec::new() }
+    }
+
+    /// Add a node; returns its id.
+    pub fn add(
+        &mut self,
+        name: &str,
+        op: OpKind,
+        stage: Stage,
+        backward: bool,
+        out_dtype: Dtype,
+        inputs: &[usize],
+    ) -> usize {
+        let id = self.nodes.len();
+        for &i in inputs {
+            assert!(i < id, "forward reference in dataflow graph");
+        }
+        self.nodes.push(Node {
+            id,
+            name: name.to_string(),
+            op,
+            stage,
+            backward,
+            out_dtype,
+            inputs: inputs.to_vec(),
+        });
+        id
+    }
+
+    /// Count of *explicit* cast kernel launches (the Fig. 2 number).
+    pub fn explicit_casts(&self) -> usize {
+        self.nodes.iter().filter(|n| n.op.is_explicit_cast()).count()
+    }
+
+    /// Total quantization events including those hidden inside naive
+    /// transposes (what the double-quantization analysis counts).
+    pub fn total_qdq_events(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| {
+                n.op.internal_qdq()
+                    + usize::from(matches!(n.op, OpKind::Quantize | OpKind::Dequantize))
+            })
+            .sum()
+    }
+
+    /// Number of kernel launches (every node is one kernel; fusion is the
+    /// whole point — fused variants have fewer nodes for the same math).
+    pub fn kernel_launches(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Ids of nodes whose output is BF16/F32 on the expert path
+    /// (Fc1→Activation→Fc2), i.e. the "BF16 islands" of §3.2.
+    pub fn bf16_islands(&self) -> Vec<&Node> {
+        self.nodes
+            .iter()
+            .filter(|n| {
+                matches!(n.stage, Stage::Fc1 | Stage::Activation | Stage::Fc2)
+                    && n.out_dtype != Dtype::Fp8
+                    && !n.op.is_explicit_cast()
+            })
+            .collect()
+    }
+
+    /// Per-stage node histogram (used by reports and the cluster sim).
+    pub fn stage_histogram(&self) -> BTreeMap<Stage, usize> {
+        let mut h = BTreeMap::new();
+        for n in &self.nodes {
+            *h.entry(n.stage).or_insert(0) += 1;
+        }
+        h
+    }
+
+    /// Structural validation: edges resolve, at least one node per
+    /// mandatory stage, single terminal output per direction.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nodes.is_empty() {
+            return Err("empty graph".into());
+        }
+        for s in [Stage::Dispatch, Stage::Fc1, Stage::Activation, Stage::Fc2, Stage::Combine] {
+            if !self.nodes.iter().any(|n| n.stage == s) {
+                return Err(format!("missing stage {s:?}"));
+            }
+        }
+        // every non-root node consumes something
+        for n in &self.nodes {
+            if n.id > 0 && n.inputs.is_empty() && !n.name.contains("input") {
+                return Err(format!("orphan node {}", n.name));
+            }
+        }
+        Ok(())
+    }
+
+    /// Render as a readable audit listing (used by `examples/dataflow_audit`).
+    pub fn render(&self) -> String {
+        let mut s = format!("== dataflow: {} ==\n", self.name);
+        for n in &self.nodes {
+            s.push_str(&format!(
+                "{:>3} {:<5} {:<10} {:<26} -> {:<5} {}\n",
+                n.id,
+                if n.backward { "bwd" } else { "fwd" },
+                format!("{:?}", n.stage),
+                n.name,
+                format!("{:?}", n.out_dtype),
+                if n.op.is_explicit_cast() { "  [CAST]" } else { "" },
+            ));
+        }
+        s.push_str(&format!(
+            "explicit casts: {}   total q/dq events: {}   kernel launches: {}\n",
+            self.explicit_casts(),
+            self.total_qdq_events(),
+            self.kernel_launches()
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_count() {
+        let mut g = DataflowGraph::new("test");
+        let x = g.add("input", OpKind::Add, Stage::Router, false, Dtype::Bf16, &[]);
+        let q = g.add("quant", OpKind::Quantize, Stage::Dispatch, false, Dtype::Fp8, &[x]);
+        let d = g.add("dequant", OpKind::Dequantize, Stage::Dispatch, false, Dtype::Bf16, &[q]);
+        let n = g.add("naive-T", OpKind::NaiveTransposeRequant, Stage::Fc1, true, Dtype::Fp8, &[d]);
+        let _ = n;
+        assert_eq!(g.explicit_casts(), 2);
+        assert_eq!(g.total_qdq_events(), 4); // 2 explicit + 2 inside naive-T
+    }
+
+    #[test]
+    #[should_panic(expected = "forward reference")]
+    fn rejects_forward_edges() {
+        let mut g = DataflowGraph::new("bad");
+        g.add("n", OpKind::Add, Stage::Router, false, Dtype::F32, &[3]);
+    }
+
+    #[test]
+    fn validate_flags_missing_stages() {
+        let mut g = DataflowGraph::new("incomplete");
+        g.add("input", OpKind::Add, Stage::Router, false, Dtype::Bf16, &[]);
+        assert!(g.validate().is_err());
+    }
+}

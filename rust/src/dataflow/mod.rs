@@ -1,0 +1,15 @@
+//! Dataflow graphs of one MoE layer (forward + backward) for the four
+//! variants of Fig. 2, with measured cast accounting.
+//!
+//! This module makes the paper's "12 casts → 2 casts" claim *checkable*:
+//! each variant is built as an explicit typed op graph; tests count the
+//! quantize/dequantize/cast nodes and verify the dtype discipline (e.g.
+//! the fp8-flow variant has FP8 on every expert-path edge except the two
+//! BF16 islands of §3.2). The cluster simulator reuses these graphs to
+//! cost kernel launches and memory traffic per recipe.
+
+pub mod graph;
+pub mod variants;
+
+pub use graph::{DataflowGraph, Dtype, OpKind, Stage};
+pub use variants::{build, Variant};

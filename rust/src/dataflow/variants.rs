@@ -1,0 +1,299 @@
+//! The four Fig. 2 dataflow variants, reconstructed node-by-node from the
+//! paper (§3.2 and Fig. 2a–d). The cast counts the tests pin down:
+//!
+//! | variant          | explicit casts (fwd+bwd) | wgrad operand prep    |
+//! |------------------|--------------------------|-----------------------|
+//! | `Bf16`           | 0                        | plain transpose       |
+//! | `TeBlockwise`    | 4 (+4 hidden in naive-T) | dequant→T→requant     |
+//! | `DeepSeekV3`     | 12 (+4 hidden)           | dequant→T→requant     |
+//! | `Fp8Flow` (ours) | 2                        | **direct transpose**  |
+//!
+//! DeepSeek-V3's twelve explicit casts: per direction, a Q/DQ pair around
+//! each all-to-all (dispatch and combine) plus one producer-side quantize
+//! per grouped GEMM input — §3.3.2's "around three such pairs" per pass.
+
+use crate::dataflow::graph::{DataflowGraph, Dtype, OpKind, Stage};
+
+/// Which Fig. 2 variant to build.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    Bf16,
+    TeBlockwise,
+    DeepSeekV3,
+    Fp8Flow,
+}
+
+impl Variant {
+    pub fn all() -> [Variant; 4] {
+        [Variant::Bf16, Variant::TeBlockwise, Variant::DeepSeekV3, Variant::Fp8Flow]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Bf16 => "bf16",
+            Variant::TeBlockwise => "te-blockwise",
+            Variant::DeepSeekV3 => "deepseek-v3",
+            Variant::Fp8Flow => "fp8-flow-moe",
+        }
+    }
+}
+
+/// Build the fwd+bwd dataflow graph of one MoE layer for `v`.
+pub fn build(v: Variant) -> DataflowGraph {
+    match v {
+        Variant::Bf16 => build_bf16(),
+        Variant::TeBlockwise => build_blockwise(),
+        Variant::DeepSeekV3 => build_deepseek(),
+        Variant::Fp8Flow => build_fp8flow(),
+    }
+}
+
+fn build_bf16() -> DataflowGraph {
+    use Dtype::*;
+    use OpKind::*;
+    use Stage::*;
+    let mut g = DataflowGraph::new("bf16");
+    // forward
+    let x = g.add("input", Add, Router, false, Bf16, &[]);
+    let disp = g.add("dispatch-a2a", AllToAll, Dispatch, false, Bf16, &[x]);
+    let perm = g.add("permute", OpKind::Permute, Stage::Permute, false, Bf16, &[disp]);
+    let pad = g.add("pad", Pad, Stage::Permute, false, Bf16, &[perm]);
+    let fc1 = g.add("fc1-grouped-gemm", GroupedGemm, Fc1, false, Bf16, &[pad]);
+    let act = g.add("swiglu", SwiGlu, Activation, false, Bf16, &[fc1]);
+    let fc2 = g.add("fc2-grouped-gemm", GroupedGemm, Fc2, false, Bf16, &[act]);
+    let unperm = g.add("unpermute", Unpermute, Unperm, false, Bf16, &[fc2]);
+    let unpad = g.add("unpad", Unpad, Unperm, false, Bf16, &[unperm]);
+    let comb = g.add("combine-a2a", AllToAll, Combine, false, Bf16, &[unpad]);
+    let _y = g.add("gate-scale-add", Scale, Combine, false, Bf16, &[comb]);
+    // backward
+    let dy = g.add("dy-input", Add, Combine, true, Bf16, &[]);
+    let cb = g.add("combine-bwd-a2a", AllToAll, Combine, true, Bf16, &[dy]);
+    let rp = g.add("re-pad", Pad, Stage::Permute, true, Bf16, &[cb]);
+    let dg2 = g.add("fc2-dgrad", GroupedGemm, Fc2, true, Bf16, &[rp]);
+    let at = g.add("act-T", DirectTranspose, Fc2, true, Bf16, &[dg2]);
+    let _wg2 = g.add("fc2-wgrad", GroupedGemm, Fc2, true, F32, &[rp, at]);
+    let sb = g.add("swiglu-bwd", SwiGluBwd, Activation, true, Bf16, &[dg2]);
+    let dg1 = g.add("fc1-dgrad", GroupedGemm, Fc1, true, Bf16, &[sb]);
+    let xt = g.add("x-T", DirectTranspose, Fc1, true, Bf16, &[dg1]);
+    let _wg1 = g.add("fc1-wgrad", GroupedGemm, Fc1, true, F32, &[sb, xt]);
+    let up = g.add("unpermute-bwd", Unpermute, Stage::Permute, true, Bf16, &[dg1]);
+    let _dx = g.add("dispatch-bwd-a2a", AllToAll, Dispatch, true, Bf16, &[up]);
+    g
+}
+
+fn build_blockwise() -> DataflowGraph {
+    use Dtype::*;
+    use OpKind::*;
+    use Stage::*;
+    let mut g = DataflowGraph::new("te-blockwise");
+    // forward — comm & data movement all BF16; FP8 strictly inside GEMMs
+    let x = g.add("input", Add, Router, false, Bf16, &[]);
+    let disp = g.add("dispatch-a2a", AllToAll, Dispatch, false, Bf16, &[x]);
+    let perm = g.add("permute", OpKind::Permute, Stage::Permute, false, Bf16, &[disp]);
+    let pad = g.add("pad", Pad, Stage::Permute, false, Bf16, &[perm]);
+    let q1 = g.add("Q(x) fc1-in", Quantize, Fc1, false, Fp8, &[pad]);
+    let fc1 = g.add("fc1-grouped-gemm", GroupedGemm, Fc1, false, Bf16, &[q1]);
+    let act = g.add("swiglu", SwiGlu, Activation, false, Bf16, &[fc1]);
+    let q2 = g.add("Q(act) fc2-in", Quantize, Fc2, false, Fp8, &[act]);
+    let fc2 = g.add("fc2-grouped-gemm", GroupedGemm, Fc2, false, Bf16, &[q2]);
+    let unperm = g.add("unpermute", Unpermute, Unperm, false, Bf16, &[fc2]);
+    let unpad = g.add("unpad", Unpad, Unperm, false, Bf16, &[unperm]);
+    let comb = g.add("combine-a2a", AllToAll, Combine, false, Bf16, &[unpad]);
+    let _y = g.add("gate-scale-add", Scale, Combine, false, Bf16, &[comb]);
+    // backward
+    let dy = g.add("dy-input", Add, Combine, true, Bf16, &[]);
+    let cb = g.add("combine-bwd-a2a", AllToAll, Combine, true, Bf16, &[dy]);
+    let rp = g.add("re-pad", Pad, Stage::Permute, true, Bf16, &[cb]);
+    let q3 = g.add("Q(dy) fc2-grads", Quantize, Fc2, true, Fp8, &[rp]);
+    let dg2 = g.add("fc2-dgrad", GroupedGemm, Fc2, true, Bf16, &[q3]);
+    let at = g.add("act naive-T", NaiveTransposeRequant, Fc2, true, Fp8, &[q2]);
+    let _wg2 = g.add("fc2-wgrad", GroupedGemm, Fc2, true, F32, &[q3, at]);
+    let sb = g.add("swiglu-bwd", SwiGluBwd, Activation, true, Bf16, &[dg2]);
+    let q4 = g.add("Q(dact) fc1-grads", Quantize, Fc1, true, Fp8, &[sb]);
+    let dg1 = g.add("fc1-dgrad", GroupedGemm, Fc1, true, Bf16, &[q4]);
+    let xt = g.add("x naive-T", NaiveTransposeRequant, Fc1, true, Fp8, &[q1]);
+    let _wg1 = g.add("fc1-wgrad", GroupedGemm, Fc1, true, F32, &[q4, xt]);
+    let up = g.add("unpermute-bwd", Unpermute, Stage::Permute, true, Bf16, &[dg1]);
+    let _dx = g.add("dispatch-bwd-a2a", AllToAll, Dispatch, true, Bf16, &[up]);
+    g
+}
+
+fn build_deepseek() -> DataflowGraph {
+    use Dtype::*;
+    use OpKind::*;
+    use Stage::*;
+    let mut g = DataflowGraph::new("deepseek-v3");
+    // forward — FP8 comm via DeepEP: Q before / DQ after each all-to-all
+    let x = g.add("input", Add, Router, false, Bf16, &[]);
+    let q1 = g.add("Q(x) pre-dispatch", Quantize, Dispatch, false, Fp8, &[x]);
+    let disp = g.add("dispatch-a2a (fp8)", AllToAll, Dispatch, false, Fp8, &[q1]);
+    let d1 = g.add("DQ post-dispatch", Dequantize, Dispatch, false, Bf16, &[disp]);
+    let perm = g.add("permute", OpKind::Permute, Stage::Permute, false, Bf16, &[d1]);
+    let pad = g.add("pad", Pad, Stage::Permute, false, Bf16, &[perm]);
+    let q2 = g.add("Q(x) fc1-in", Quantize, Fc1, false, Fp8, &[pad]);
+    let fc1 = g.add("fc1-grouped-gemm", GroupedGemm, Fc1, false, Bf16, &[q2]);
+    let act = g.add("swiglu", SwiGlu, Activation, false, Bf16, &[fc1]);
+    let q3 = g.add("Q(act) fc2-in", Quantize, Fc2, false, Fp8, &[act]);
+    let fc2 = g.add("fc2-grouped-gemm", GroupedGemm, Fc2, false, Bf16, &[q3]);
+    let unperm = g.add("unpermute", Unpermute, Unperm, false, Bf16, &[fc2]);
+    let unpad = g.add("unpad", Unpad, Unperm, false, Bf16, &[unperm]);
+    let q4 = g.add("Q(y) pre-combine", Quantize, Combine, false, Fp8, &[unpad]);
+    let comb = g.add("combine-a2a (fp8)", AllToAll, Combine, false, Fp8, &[q4]);
+    let d2 = g.add("DQ post-combine", Dequantize, Combine, false, Bf16, &[comb]);
+    let _y = g.add("gate-scale-add", Scale, Combine, false, Bf16, &[d2]);
+    // backward — mirrored Q/DQ around both all-to-alls
+    let dy = g.add("dy-input", Add, Combine, true, Bf16, &[]);
+    let q5 = g.add("Q(dy) pre-combine-bwd", Quantize, Combine, true, Fp8, &[dy]);
+    let cb = g.add("combine-bwd-a2a (fp8)", AllToAll, Combine, true, Fp8, &[q5]);
+    let d3 = g.add("DQ post-combine-bwd", Dequantize, Combine, true, Bf16, &[cb]);
+    let rp = g.add("re-pad", Pad, Stage::Permute, true, Bf16, &[d3]);
+    let q6 = g.add("Q(dy) fc2-grads", Quantize, Fc2, true, Fp8, &[rp]);
+    let dg2 = g.add("fc2-dgrad", GroupedGemm, Fc2, true, Bf16, &[q6]);
+    let at = g.add("act naive-T", NaiveTransposeRequant, Fc2, true, Fp8, &[q3]);
+    let _wg2 = g.add("fc2-wgrad", GroupedGemm, Fc2, true, F32, &[q6, at]);
+    let sb = g.add("swiglu-bwd", SwiGluBwd, Activation, true, Bf16, &[dg2]);
+    let q7 = g.add("Q(dact) fc1-grads", Quantize, Fc1, true, Fp8, &[sb]);
+    let dg1 = g.add("fc1-dgrad", GroupedGemm, Fc1, true, Bf16, &[q7]);
+    let xt = g.add("x naive-T", NaiveTransposeRequant, Fc1, true, Fp8, &[q2]);
+    let _wg1 = g.add("fc1-wgrad", GroupedGemm, Fc1, true, F32, &[q7, xt]);
+    let up = g.add("unpermute-bwd", Unpermute, Stage::Permute, true, Bf16, &[dg1]);
+    let q8 = g.add("Q(dx) pre-dispatch-bwd", Quantize, Dispatch, true, Fp8, &[up]);
+    let db = g.add("dispatch-bwd-a2a (fp8)", AllToAll, Dispatch, true, Fp8, &[q8]);
+    let _d4 = g.add("DQ post-dispatch-bwd", Dequantize, Dispatch, true, Bf16, &[db]);
+    g
+}
+
+fn build_fp8flow() -> DataflowGraph {
+    use Dtype::*;
+    use OpKind::*;
+    use Stage::*;
+    let mut g = DataflowGraph::new("fp8-flow-moe");
+    // forward — ONE explicit cast at the MoE entry; FP8 persists
+    let x = g.add("input", Add, Router, false, Bf16, &[]);
+    let q1 = g.add("Q(x) entry", Quantize, Dispatch, false, Fp8, &[x]);
+    let disp = g.add("dispatch-a2a (fp8)", AllToAll, Dispatch, false, Fp8, &[q1]);
+    let perm = g.add("fused-permute-pad (fp8)", FusedPermutePad, Stage::Permute, false, Fp8, &[disp]);
+    // fc1 consumes FP8 directly; output is the first BF16 island (§3.2:
+    // reductions after the GEMM are overflow-prone in FP8)
+    let fc1 = g.add("fc1-grouped-gemm", GroupedGemm, Fc1, false, Bf16, &[perm]);
+    // fused SwiGLU+quant: BF16 island ends inside the compute kernel
+    let act = g.add("fused-swiglu-quant", FusedSwiGluQuant, Activation, false, Fp8, &[fc1]);
+    let fc2 = g.add("fc2-grouped-gemm", GroupedGemm, Fc2, false, Bf16, &[act]);
+    let unperm = g.add("fused-unpermute-unpad", FusedUnpermuteUnpad, Unperm, false, Bf16, &[fc2]);
+    let comb = g.add("combine-a2a", AllToAll, Combine, false, Bf16, &[unperm]);
+    let _y = g.add("gate-scale-add", Scale, Combine, false, Bf16, &[comb]);
+    // backward — ONE explicit cast at the backward entry (island #2 is
+    // between fc2-dgrad and combine-bwd)
+    let dy = g.add("dy-input", Add, Combine, true, Bf16, &[]);
+    let q2 = g.add("Q(dy) bwd-entry", Quantize, Combine, true, Fp8, &[dy]);
+    let cb = g.add("combine-bwd-a2a (fp8)", AllToAll, Combine, true, Fp8, &[q2]);
+    let rp = g.add("fused-re-pad (fp8)", FusedPermutePad, Stage::Permute, true, Fp8, &[cb]);
+    let dg2 = g.add("fc2-dgrad", GroupedGemm, Fc2, true, Bf16, &[rp]);
+    // wgrad operands via the scaling-aware DIRECT transpose — zero Q/DQ
+    let at = g.add("act direct-T", DirectTranspose, Fc2, true, Fp8, &[act]);
+    let dyt = g.add("dy direct-T", DirectTranspose, Fc2, true, Fp8, &[rp]);
+    let _wg2 = g.add("fc2-wgrad", GroupedGemm, Fc2, true, F32, &[dyt, at]);
+    // fused SwiGLU-bwd+quant: consumes BF16 dgrad, emits FP8 grads
+    let sb = g.add("fused-swiglu-bwd-quant", FusedSwiGluBwdQuant, Activation, true, Fp8, &[dg2]);
+    let dg1 = g.add("fc1-dgrad", GroupedGemm, Fc1, true, Fp8, &[sb]);
+    let xt = g.add("x direct-T", DirectTranspose, Fc1, true, Fp8, &[perm]);
+    let sbt = g.add("dact direct-T", DirectTranspose, Fc1, true, Fp8, &[sb]);
+    let _wg1 = g.add("fc1-wgrad", GroupedGemm, Fc1, true, F32, &[sbt, xt]);
+    let up = g.add("fused-unpermute-bwd (fp8)", FusedUnpermuteUnpad, Stage::Permute, true, Fp8, &[dg1]);
+    let _dx = g.add("dispatch-bwd-a2a (fp8)", AllToAll, Dispatch, true, Fp8, &[up]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_variants_validate() {
+        for v in Variant::all() {
+            build(v).validate().unwrap_or_else(|e| panic!("{}: {e}", v.name()));
+        }
+    }
+
+    #[test]
+    fn cast_counts_match_paper() {
+        // The paper's headline accounting: 12 explicit casts (DeepSeek-V3
+        // style) reduced to 2 (FP8-Flow).
+        assert_eq!(build(Variant::Bf16).explicit_casts(), 0);
+        assert_eq!(build(Variant::TeBlockwise).explicit_casts(), 4);
+        assert_eq!(build(Variant::DeepSeekV3).explicit_casts(), 12);
+        assert_eq!(build(Variant::Fp8Flow).explicit_casts(), 2);
+    }
+
+    #[test]
+    fn qdq_events_include_naive_transposes() {
+        // blockwise/deepseek hide 2 q/dq in each of the two naive wgrad
+        // transposes (the double-quantization site)
+        assert_eq!(build(Variant::TeBlockwise).total_qdq_events(), 4 + 4);
+        assert_eq!(build(Variant::DeepSeekV3).total_qdq_events(), 12 + 4);
+        assert_eq!(build(Variant::Fp8Flow).total_qdq_events(), 2);
+    }
+
+    #[test]
+    fn fp8flow_has_exactly_two_bf16_islands_forward() {
+        let g = build(Variant::Fp8Flow);
+        let islands: Vec<_> = g
+            .bf16_islands()
+            .into_iter()
+            .filter(|n| !n.backward)
+            .map(|n| n.name.clone())
+            .collect();
+        // fwd islands: fc1 output (pre-activation) and fc2 output
+        // (pre-combine reduction) — §3.2's two exceptions
+        assert_eq!(islands, vec!["fc1-grouped-gemm", "fc2-grouped-gemm"]);
+    }
+
+    #[test]
+    fn fp8flow_uses_direct_transpose_everywhere() {
+        let g = build(Variant::Fp8Flow);
+        let naive = g.nodes.iter().filter(|n| n.op == OpKind::NaiveTransposeRequant).count();
+        let direct = g.nodes.iter().filter(|n| n.op == OpKind::DirectTranspose).count();
+        assert_eq!(naive, 0);
+        assert!(direct >= 3, "wgrad operands + dy all via direct transpose");
+    }
+
+    #[test]
+    fn fp8flow_fuses_data_movement() {
+        let g = build(Variant::Fp8Flow);
+        let fused = g
+            .nodes
+            .iter()
+            .filter(|n| {
+                matches!(
+                    n.op,
+                    OpKind::FusedPermutePad
+                        | OpKind::FusedUnpermuteUnpad
+                        | OpKind::FusedSwiGluQuant
+                        | OpKind::FusedSwiGluBwdQuant
+                )
+            })
+            .count();
+        assert!(fused >= 5);
+        // and fewer kernel launches than deepseek for the same math
+        assert!(g.kernel_launches() < build(Variant::DeepSeekV3).kernel_launches());
+    }
+
+    #[test]
+    fn fp8_dispatch_volume() {
+        // dispatch a2a runs in FP8 for deepseek & fp8flow, BF16 otherwise
+        for (v, fp8) in [
+            (Variant::Bf16, false),
+            (Variant::TeBlockwise, false),
+            (Variant::DeepSeekV3, true),
+            (Variant::Fp8Flow, true),
+        ] {
+            let g = build(v);
+            let disp = g
+                .nodes
+                .iter()
+                .find(|n| n.op == OpKind::AllToAll && n.stage == Stage::Dispatch && !n.backward)
+                .unwrap();
+            assert_eq!(disp.out_dtype == Dtype::Fp8, fp8, "{}", v.name());
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Bit-exact software codec for OCP **FP8 E5M2** (`float8_e5m2` semantics).
+//!
+//! Layout: `S EEEEE MM`, exponent bias 15 — a miniature IEEE-754 float:
+//!
+//! * normals: `(-1)^S · 2^(E-15) · (1 + M/4)`, `E ∈ 1..=30`
+//! * subnormals (`E = 0`): `(-1)^S · 2^-14 · (M/4)` — grid unit `2^-16`
+//! * `E = 31`: ±Inf (`M = 0`) and NaNs (`M ≠ 0`)
+//! * max finite: `S.11110.11` = ±57344
+//! * conversion from f32: RNE; finite values that round above 57344 → ±Inf.
+
+/// Exponent bias.
+pub const BIAS: i32 = 15;
+/// Smallest positive subnormal = 2^-16.
+pub const MIN_SUBNORMAL: f32 = 1.52587890625e-5;
+/// Smallest positive normal = 2^-14.
+pub const MIN_NORMAL: f32 = 6.103515625e-5;
+/// Largest finite magnitude.
+pub const MAX_FINITE: f32 = 57344.0;
+/// Positive infinity code.
+pub const INF_CODE: u8 = 0x7C;
+/// Canonical quiet NaN code.
+pub const NAN_CODE: u8 = 0x7E;
+
+#[inline]
+pub const fn is_nan(c: u8) -> bool {
+    (c & 0x7C == 0x7C) && (c & 0x03 != 0)
+}
+
+#[inline]
+pub const fn is_inf(c: u8) -> bool {
+    c & 0x7F == 0x7C
+}
+
+/// Decode a single E5M2 code to f32 (exact).
+pub fn decode(c: u8) -> f32 {
+    let sign = if c & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let e = ((c >> 2) & 0x1F) as i32;
+    let m = (c & 0x03) as i32;
+    if e == 31 {
+        return if m == 0 { sign * f32::INFINITY } else { f32::NAN };
+    }
+    if e == 0 {
+        sign * (m as f32 / 4.0) * (-14.0f32).exp2()
+    } else {
+        sign * (1.0 + m as f32 / 4.0) * ((e - BIAS) as f32).exp2()
+    }
+}
+
+/// Encode an f32 to E5M2 with round-to-nearest-even.
+pub fn encode(x: f32) -> u8 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 24) & 0x80) as u8;
+    if x.is_nan() {
+        return sign | NAN_CODE;
+    }
+    if x.is_infinite() {
+        return sign | INF_CODE;
+    }
+    let abs_bits = bits & 0x7FFF_FFFF;
+    if abs_bits == 0 {
+        return sign;
+    }
+    let f32_exp = (abs_bits >> 23) as i32;
+    let f32_man = abs_bits & 0x7F_FFFF;
+    if f32_exp == 0 {
+        return sign; // f32 subnormal < 2^-126 ≪ 2^-16 grid
+    }
+    let ue = f32_exp - 127;
+
+    if ue >= -14 {
+        // Round 23-bit mantissa to 2 bits, RNE.
+        let mut m2 = f32_man >> 21;
+        let low = f32_man & 0x1F_FFFF;
+        const HALF: u32 = 0x10_0000;
+        if low > HALF || (low == HALF && (m2 & 1) == 1) {
+            m2 += 1;
+        }
+        let mut ue = ue;
+        if m2 == 4 {
+            m2 = 0;
+            ue += 1;
+        }
+        if ue > 15 {
+            return sign | INF_CODE; // overflow → ±Inf (IEEE-like)
+        }
+        let e_field = (ue + BIAS) as u8; // 1..=30
+        sign | (e_field << 2) | m2 as u8
+    } else {
+        // Subnormal: RNE onto the 2^-16 grid; x·2^16 is exact in f32.
+        let q = (f32::from_bits(abs_bits) * 65536.0).round_ties_even() as u32;
+        sign | q as u8 // q ≤ 4 rolls into first normal (2^-14) — code 0x04
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_values() {
+        assert_eq!(encode(57344.0), 0x7B);
+        assert_eq!(encode(1.0), 0x3C);
+        assert_eq!(encode(f32::INFINITY), INF_CODE);
+        assert_eq!(encode(-f32::INFINITY), 0xFC);
+        assert!(is_nan(encode(f32::NAN)));
+        assert_eq!(encode(0.0), 0x00);
+        assert_eq!(encode(-0.0), 0x80);
+        assert_eq!(encode(MIN_NORMAL), 0x04);
+        assert_eq!(encode(MIN_SUBNORMAL), 0x01);
+        // overflow: midpoint between 57344 and would-be 65536 is 61440
+        assert_eq!(encode(61440.0), 0x7C); // tie rounds to even (m=0 → next exp → Inf)
+        assert_eq!(encode(61439.0), 0x7B);
+        assert_eq!(encode(70000.0), INF_CODE);
+    }
+
+    #[test]
+    fn roundtrip_all_finite_codes() {
+        for c in 0..=255u8 {
+            if is_nan(c) {
+                assert!(decode(c).is_nan());
+                continue;
+            }
+            assert_eq!(encode(decode(c)), c, "code {c:#04x} value {}", decode(c));
+        }
+    }
+
+    #[test]
+    fn wider_range_than_e4m3() {
+        // E5M2 represents magnitudes E4M3 cannot.
+        assert!(decode(encode(1000.0)).is_finite());
+        assert!((decode(encode(1000.0)) - 1024.0).abs() < 1.0);
+        assert!(decode(encode(3.0e-5)) > 0.0);
+    }
+
+    #[test]
+    fn sign_symmetry() {
+        let mut x = 1e-4f32;
+        while x < 57344.0 {
+            assert_eq!(encode(-x), encode(x) | 0x80);
+            x *= 1.07;
+        }
+    }
+
+    #[test]
+    fn rne_ties() {
+        // 1.125 is the midpoint between 1.0 (m=0) and 1.25 (m=1) → even (1.0)
+        assert_eq!(decode(encode(1.125)), 1.0);
+        // 1.375 is the midpoint between 1.25 (m=1) and 1.5 (m=2) → even (1.5)
+        assert_eq!(decode(encode(1.375)), 1.5);
+    }
+}

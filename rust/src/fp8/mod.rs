@@ -1,0 +1,73 @@
+//! Software FP8 numeric substrate — the paper's numeric-format layer,
+//! implemented bit-exactly (parity-tested against JAX/ml_dtypes, see
+//! `python/tests/test_codec_parity.py`).
+//!
+//! Contents map directly onto §3.1 of the paper:
+//!
+//! * [`e4m3`] / [`e5m2`] — the FP8 codecs (OCP FP8, `float8_e4m3fn` /
+//!   `float8_e5m2` semantics: RNE, E4M3 overflow→NaN, subnormals).
+//! * [`ue8m0`] — power-of-two scale format used by the po2 recipe.
+//! * [`tile`] — the 1×128-tile quantizer (Eq. 2–3), row- and column-wise,
+//!   with float-scale and power-of-two-scale recipes.
+//! * [`tensor`] — [`tensor::Fp8Tensor`]: payload + per-tile scales + layout.
+//! * [`transpose`] — naive dequantize→transpose→requantize vs the paper's
+//!   **scaling-aware direct transpose** (Alg. 1).
+//! * [`error`] — the double-quantization-error metric (Eq. 1).
+
+pub mod e4m3;
+pub mod e5m2;
+pub mod error;
+pub mod tensor;
+pub mod tile;
+pub mod transpose;
+pub mod ue8m0;
+
+/// FP8 payload formats supported by the substrate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fp8Format {
+    /// OCP E4M3 (finite-only; max 448; NaN = S.1111.111). The paper's
+    /// activation/weight format.
+    E4M3,
+    /// OCP E5M2 (IEEE-like; has ±Inf; max finite 57344). Wider range,
+    /// coarser mantissa; conventional gradient format.
+    E5M2,
+}
+
+impl Fp8Format {
+    /// Largest finite representable magnitude (Eq. 2 denominator for E4M3).
+    pub fn max_finite(self) -> f32 {
+        match self {
+            Fp8Format::E4M3 => 448.0,
+            Fp8Format::E5M2 => 57344.0,
+        }
+    }
+
+    pub fn encode(self, x: f32) -> u8 {
+        match self {
+            Fp8Format::E4M3 => e4m3::encode(x),
+            Fp8Format::E5M2 => e5m2::encode(x),
+        }
+    }
+
+    pub fn decode(self, c: u8) -> f32 {
+        match self {
+            Fp8Format::E4M3 => e4m3::decode(c),
+            Fp8Format::E5M2 => e5m2::decode(c),
+        }
+    }
+}
+
+/// Scaling-factor recipe (the paper's pivotal design axis, §3.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleMode {
+    /// `s = amax / fmax` exactly (finest use of the FP8 grid; transpose
+    /// requires requantization → double quantization error).
+    Float,
+    /// `s = 2^ceil(log2(amax / fmax))` (UE8M0-compatible; enables the
+    /// lossless scaling-aware direct transpose of Alg. 1).
+    Po2,
+}
+
+/// Tile length used by every per-tile quantizer in the paper (128
+/// contiguous elements per scaling factor, Eq. 2).
+pub const TILE: usize = 128;

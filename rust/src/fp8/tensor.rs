@@ -1,0 +1,165 @@
+//! [`Fp8Tensor`] — a quantized 2-D tensor: FP8 payload plus per-tile
+//! scaling factors (1×128 tiles, Eq. 2), in either of the two layouts the
+//! MoE dataflow needs:
+//!
+//! * **row-wise** — scales over contiguous 128-element segments of each row
+//!   (consumed by `Fprop`/`Dgrad` grouped GEMMs);
+//! * **column-wise** — scales over 128-element segments of each column
+//!   (consumed by `Wgrad`).
+//!
+//! Payload is always stored row-major for the tensor's logical shape.
+
+use crate::fp8::{Fp8Format, ScaleMode, TILE};
+use crate::util::mat::Mat;
+
+/// Which way the 1×128 scale tiles run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TileLayout {
+    /// One scale per (row, 128-column segment): shape `[rows, tiles_per_row]`.
+    RowWise,
+    /// One scale per (128-row segment, column): shape `[row_blocks, cols]`.
+    ColWise,
+}
+
+/// A quantized 2-D FP8 tensor (payload + scales).
+#[derive(Clone, Debug)]
+pub struct Fp8Tensor {
+    pub rows: usize,
+    pub cols: usize,
+    pub fmt: Fp8Format,
+    pub mode: ScaleMode,
+    pub layout: TileLayout,
+    /// Row-major FP8 codes, `rows * cols`.
+    pub data: Vec<u8>,
+    /// Per-tile scales (see [`TileLayout`] for shape).
+    pub scales: Vec<f32>,
+    /// Per-tile scale exponents (`scales[i] == 2^sexp[i]`); populated only
+    /// for [`ScaleMode::Po2`].
+    pub sexp: Vec<i32>,
+}
+
+pub(crate) fn n_tiles(len: usize) -> usize {
+    len.div_ceil(TILE)
+}
+
+impl Fp8Tensor {
+    /// Number of scale entries implied by shape and layout.
+    pub fn n_scales(&self) -> usize {
+        match self.layout {
+            TileLayout::RowWise => self.rows * n_tiles(self.cols),
+            TileLayout::ColWise => n_tiles(self.rows) * self.cols,
+        }
+    }
+
+    /// Scale applied to element `(i, j)`.
+    #[inline]
+    pub fn scale_at(&self, i: usize, j: usize) -> f32 {
+        match self.layout {
+            TileLayout::RowWise => self.scales[i * n_tiles(self.cols) + j / TILE],
+            TileLayout::ColWise => self.scales[(i / TILE) * self.cols + j],
+        }
+    }
+
+    /// Scale exponent for element `(i, j)` (Po2 mode only).
+    #[inline]
+    pub fn sexp_at(&self, i: usize, j: usize) -> i32 {
+        debug_assert_eq!(self.mode, ScaleMode::Po2);
+        match self.layout {
+            TileLayout::RowWise => self.sexp[i * n_tiles(self.cols) + j / TILE],
+            TileLayout::ColWise => self.sexp[(i / TILE) * self.cols + j],
+        }
+    }
+
+    #[inline]
+    pub fn code_at(&self, i: usize, j: usize) -> u8 {
+        self.data[i * self.cols + j]
+    }
+
+    /// Dequantize element `(i, j)`.
+    #[inline]
+    pub fn value_at(&self, i: usize, j: usize) -> f32 {
+        self.fmt.decode(self.code_at(i, j)) * self.scale_at(i, j)
+    }
+
+    /// Dequantize the whole tensor — `D(·)` of the paper.
+    pub fn dequantize(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        match self.layout {
+            TileLayout::RowWise => {
+                let tpr = n_tiles(self.cols);
+                for i in 0..self.rows {
+                    for t in 0..tpr {
+                        let s = self.scales[i * tpr + t];
+                        let j0 = t * TILE;
+                        let j1 = (j0 + TILE).min(self.cols);
+                        for j in j0..j1 {
+                            out.data[i * self.cols + j] =
+                                self.fmt.decode(self.data[i * self.cols + j]) * s;
+                        }
+                    }
+                }
+            }
+            TileLayout::ColWise => {
+                for i in 0..self.rows {
+                    let sb = (i / TILE) * self.cols;
+                    for j in 0..self.cols {
+                        out.data[i * self.cols + j] =
+                            self.fmt.decode(self.data[i * self.cols + j]) * self.scales[sb + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Payload bytes + scale bytes (memory accounting for the cluster sim;
+    /// scales are 4 B in Float mode, 1 B (UE8M0) in Po2 mode).
+    pub fn nbytes(&self) -> usize {
+        let scale_bytes = match self.mode {
+            ScaleMode::Float => 4,
+            ScaleMode::Po2 => 1,
+        };
+        self.data.len() + self.n_scales() * scale_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp8::tile::{quantize_colwise, quantize_rowwise};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn scale_indexing_rowwise() {
+        let mut rng = Rng::seed_from(1);
+        let x = Mat::randn(4, 300, 1.0, &mut rng); // ragged: 300 = 2*128 + 44
+        let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        assert_eq!(q.n_scales(), 4 * 3);
+        assert_eq!(q.scales.len(), 12);
+        assert_eq!(q.sexp.len(), 12);
+        // elements in the same tile share a scale
+        assert_eq!(q.scale_at(2, 0), q.scale_at(2, 127));
+        assert_eq!(q.scale_at(2, 128), q.scale_at(2, 255));
+        assert_eq!(q.scale_at(2, 256), q.scale_at(2, 299));
+    }
+
+    #[test]
+    fn scale_indexing_colwise() {
+        let mut rng = Rng::seed_from(2);
+        let x = Mat::randn(300, 4, 1.0, &mut rng);
+        let q = quantize_colwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        assert_eq!(q.n_scales(), 3 * 4);
+        assert_eq!(q.scale_at(0, 2), q.scale_at(127, 2));
+        assert_eq!(q.scale_at(128, 2), q.scale_at(255, 2));
+    }
+
+    #[test]
+    fn nbytes_accounting() {
+        let mut rng = Rng::seed_from(3);
+        let x = Mat::randn(128, 256, 1.0, &mut rng);
+        let qf = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Float);
+        let qp = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        assert_eq!(qf.nbytes(), 128 * 256 + 128 * 2 * 4);
+        assert_eq!(qp.nbytes(), 128 * 256 + 128 * 2);
+    }
+}

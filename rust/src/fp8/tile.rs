@@ -1,0 +1,279 @@
+//! The per-tile quantizer (Eq. 2–3): one scaling factor per 128 contiguous
+//! elements, `s = amax / fmax` (Float recipe) or `s = 2^ceil(log2(amax /
+//! fmax))` (Po2 recipe, UE8M0-compatible — the recipe that makes the
+//! scaling-aware transpose lossless).
+
+use crate::fp8::tensor::{n_tiles, Fp8Tensor, TileLayout};
+use crate::fp8::{ue8m0, Fp8Format, ScaleMode, TILE};
+use crate::util::mat::Mat;
+
+/// Scale for one tile given its absolute maximum.
+///
+/// Returns `(scale, exponent)`; exponent is meaningful only in Po2 mode.
+/// A zero tile gets scale 1 so payload stays exactly zero.
+#[inline]
+pub fn tile_scale(amax: f32, fmt: Fp8Format, mode: ScaleMode) -> (f32, i32) {
+    debug_assert!(amax >= 0.0);
+    if amax == 0.0 {
+        return (1.0, 0);
+    }
+    match mode {
+        ScaleMode::Float => (amax / fmt.max_finite(), 0),
+        ScaleMode::Po2 => {
+            let e = ue8m0::ceil_log2(amax / fmt.max_finite());
+            ((e as f32).exp2(), e)
+        }
+    }
+}
+
+#[inline]
+fn amax(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+}
+
+/// `Q_row(X)` — row-wise per-tile quantization (Eq. 2–3).
+pub fn quantize_rowwise(x: &Mat, fmt: Fp8Format, mode: ScaleMode) -> Fp8Tensor {
+    let tpr = n_tiles(x.cols);
+    let mut data = vec![0u8; x.rows * x.cols];
+    let mut scales = Vec::with_capacity(x.rows * tpr);
+    let mut sexp = Vec::with_capacity(x.rows * tpr);
+    for i in 0..x.rows {
+        let row = x.row(i);
+        for t in 0..tpr {
+            let j0 = t * TILE;
+            let j1 = (j0 + TILE).min(x.cols);
+            let (s, e) = tile_scale(amax(&row[j0..j1]), fmt, mode);
+            let inv = 1.0 / s;
+            match fmt {
+                // hot path: branch-free fused multiply+encode
+                Fp8Format::E4M3 => crate::fp8::e4m3::encode_scaled_slice(
+                    &row[j0..j1],
+                    inv,
+                    &mut data[i * x.cols + j0..i * x.cols + j1],
+                ),
+                _ => {
+                    for j in j0..j1 {
+                        data[i * x.cols + j] = fmt.encode(row[j] * inv);
+                    }
+                }
+            }
+            scales.push(s);
+            sexp.push(e);
+        }
+    }
+    if mode == ScaleMode::Float {
+        sexp.clear();
+    }
+    Fp8Tensor {
+        rows: x.rows,
+        cols: x.cols,
+        fmt,
+        mode,
+        layout: TileLayout::RowWise,
+        data,
+        scales,
+        sexp,
+    }
+}
+
+/// `Q_col(X)` — column-wise per-tile quantization (tiles run down columns).
+pub fn quantize_colwise(x: &Mat, fmt: Fp8Format, mode: ScaleMode) -> Fp8Tensor {
+    let rb = n_tiles(x.rows);
+    let mut data = vec![0u8; x.rows * x.cols];
+    let mut scales = vec![0.0f32; rb * x.cols];
+    let mut sexp = vec![0i32; rb * x.cols];
+    for b in 0..rb {
+        let i0 = b * TILE;
+        let i1 = (i0 + TILE).min(x.rows);
+        for j in 0..x.cols {
+            let mut m = 0.0f32;
+            for i in i0..i1 {
+                m = m.max(x.at(i, j).abs());
+            }
+            let (s, e) = tile_scale(m, fmt, mode);
+            scales[b * x.cols + j] = s;
+            sexp[b * x.cols + j] = e;
+            let inv = 1.0 / s;
+            for i in i0..i1 {
+                data[i * x.cols + j] = fmt.encode(x.at(i, j) * inv);
+            }
+        }
+    }
+    if mode == ScaleMode::Float {
+        sexp.clear();
+    }
+    Fp8Tensor {
+        rows: x.rows,
+        cols: x.cols,
+        fmt,
+        mode,
+        layout: TileLayout::ColWise,
+        data,
+        scales,
+        sexp,
+    }
+}
+
+/// Quantize a flat vector as a single logical row (1-D convenience).
+pub fn quantize_vec(xs: &[f32], fmt: Fp8Format, mode: ScaleMode) -> Fp8Tensor {
+    quantize_rowwise(&Mat::from_vec(1, xs.len(), xs.to_vec()), fmt, mode)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp8::e4m3;
+    use crate::util::prop::props;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn payload_within_range_po2() {
+        let mut rng = Rng::seed_from(10);
+        let x = Mat::rand_log_uniform(8, 256, -12.0, 9.0, &mut rng);
+        let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        for &c in &q.data {
+            assert!(!e4m3::is_nan(c), "quantized payload must be finite");
+        }
+    }
+
+    #[test]
+    fn payload_within_range_float() {
+        let mut rng = Rng::seed_from(11);
+        let x = Mat::rand_log_uniform(8, 256, -12.0, 9.0, &mut rng);
+        let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Float);
+        for &c in &q.data {
+            assert!(!e4m3::is_nan(c));
+        }
+    }
+
+    #[test]
+    fn float_scale_uses_full_grid() {
+        // With Float scales the tile amax maps exactly to ±448.
+        let mut xs = vec![0.25f32; 128];
+        xs[7] = 3.7;
+        let q = quantize_vec(&xs, Fp8Format::E4M3, ScaleMode::Float);
+        assert_eq!(q.data[7], e4m3::encode(448.0));
+    }
+
+    #[test]
+    fn po2_scale_is_power_of_two() {
+        let mut rng = Rng::seed_from(12);
+        let x = Mat::randn(4, 256, 1.0, &mut rng);
+        let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        for (k, &s) in q.scales.iter().enumerate() {
+            assert_eq!(s, (q.sexp[k] as f32).exp2());
+            assert_eq!(s.to_bits() & 0x7F_FFFF, 0, "scale {s} not a power of two");
+        }
+    }
+
+    #[test]
+    fn zero_tile_stays_zero() {
+        let x = Mat::zeros(2, 256);
+        for mode in [ScaleMode::Float, ScaleMode::Po2] {
+            let q = quantize_rowwise(&x, Fp8Format::E4M3, mode);
+            assert!(q.data.iter().all(|&c| c == 0));
+            assert!(q.scales.iter().all(|&s| s == 1.0));
+            assert_eq!(q.dequantize(), x);
+        }
+    }
+
+    #[test]
+    fn quantization_error_bounded() {
+        // One quantization step: |x − D(Q(x))| ≤ max(|x|/16, half subnormal
+        // ULP at the tile scale). 3 mantissa bits → half-ULP ≤ 1/16 relative
+        // for normal payloads; the absolute floor covers subnormal payloads.
+        props("quant rel err bound", 64, |g| {
+            let n = 128 * g.usize_in(1, 3);
+            let xs = g.vec_of(n, |g| g.f32_normal() * 4.0);
+            for mode in [ScaleMode::Float, ScaleMode::Po2] {
+                let q = quantize_vec(&xs, Fp8Format::E4M3, mode);
+                let d = q.dequantize();
+                for (j, (a, b)) in xs.iter().zip(&d.data).enumerate() {
+                    let s_tile = q.scale_at(0, j);
+                    let tol = (a.abs() / 16.0).max(0.5 * e4m3::MIN_SUBNORMAL * s_tile);
+                    assert!(
+                        (a - b).abs() <= tol * (1.0 + 1e-5),
+                        "mode={mode:?} j={j} a={a} b={b} tol={tol}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn row_col_agree_on_transpose() {
+        // Q_col(X) must equal Q_row(Xᵀ) transposed — the layout duality the
+        // whole transpose story relies on.
+        let mut rng = Rng::seed_from(13);
+        let x = Mat::rand_log_uniform(256, 256, -6.0, 6.0, &mut rng);
+        let qc = quantize_colwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        let qr_t = quantize_rowwise(&x.transpose(), Fp8Format::E4M3, ScaleMode::Po2);
+        for i in 0..x.rows {
+            for j in 0..x.cols {
+                assert_eq!(qc.code_at(i, j), qr_t.code_at(j, i));
+                assert_eq!(qc.scale_at(i, j), qr_t.scale_at(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn idempotence_eq5_to_8() {
+        // Q_row(D(Q_row(x))) == Q_row(x): requantizing along the SAME
+        // layout with deterministic rounding is exact (paper Eq. 5–8).
+        props("row-quant idempotent", 48, |g| {
+            let n = 128 * g.usize_in(1, 4);
+            let xs = g.vec_of(n, |g| g.f32_wide());
+            // NaN-free input (quantizer contract)
+            let xs: Vec<f32> = xs.into_iter().map(|x| if x.is_finite() { x } else { 0.0 }).collect();
+            // Po2 recipe: scales are exact powers of two, so dequantization
+            // is exact (c·2^e) and requantization is a *bitwise* fixed
+            // point — the property the scaling-aware transpose relies on.
+            {
+                let q1 = quantize_vec(&xs, Fp8Format::E4M3, ScaleMode::Po2);
+                let d1 = q1.dequantize();
+                let q2 = quantize_vec(&d1.data, Fp8Format::E4M3, ScaleMode::Po2);
+                let d2 = q2.dequantize();
+                for (a, b) in d1.data.iter().zip(&d2.data) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "po2 value drifted: {a} -> {b}");
+                }
+                if q1.scales == q2.scales {
+                    assert_eq!(q1.data, q2.data, "po2 payload changed under requantization");
+                }
+            }
+            // Float recipe: the recomputed scale may drift by an ulp or two
+            // (448·s round-trips through f32 division), so the guarantee is
+            // payload stability + tightly-bounded value drift.
+            {
+                let q1 = quantize_vec(&xs, Fp8Format::E4M3, ScaleMode::Float);
+                let d1 = q1.dequantize();
+                let q2 = quantize_vec(&d1.data, Fp8Format::E4M3, ScaleMode::Float);
+                assert_eq!(q1.data, q2.data, "float payload changed under requantization");
+                for (a, b) in q1.scales.iter().zip(&q2.scales) {
+                    let rel = ((a - b) / a.abs().max(1e-38)).abs();
+                    assert!(rel <= 4.0 * f32::EPSILON, "float scale drifted: {a} -> {b}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn ragged_tail_tile() {
+        let mut rng = Rng::seed_from(14);
+        let x = Mat::randn(3, 200, 1.0, &mut rng); // 128 + 72
+        let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        let d = q.dequantize();
+        assert!(d.rel_err(&x) < 0.05);
+    }
+
+    #[test]
+    fn e5m2_roundtrip_reasonable() {
+        let mut rng = Rng::seed_from(15);
+        let x = Mat::randn(4, 256, 1.0, &mut rng);
+        let q = quantize_rowwise(&x, Fp8Format::E5M2, ScaleMode::Po2);
+        let d = q.dequantize();
+        // 2 mantissa bits → coarser than E4M3 but bounded
+        assert!(d.rel_err(&x) < 0.12, "rel={}", d.rel_err(&x));
+        let q3 = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        assert!(q3.dequantize().rel_err(&x) < d.rel_err(&x));
+    }
+}

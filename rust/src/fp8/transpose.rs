@@ -1,0 +1,481 @@
+//! Row-wise → column-wise FP8 layout conversion — the paper's core numeric
+//! contribution (§3.1, Alg. 1).
+//!
+//! Two strategies are implemented, exactly as compared in Fig. 1:
+//!
+//! 1. [`naive_transpose`] — dequantize → transpose → requantize. Two
+//!    independent quantizations with different scaling factors ⇒ the
+//!    **double quantization error** of Eq. 1.
+//! 2. [`direct_transpose`] — the **scaling-aware transpose**: with scales
+//!    constrained to powers of two, align each 128×128 block's scales to
+//!    the block maximum and move every payload between the two scaling
+//!    domains by *exponent manipulation alone* (Eq. 10–17 /
+//!    [`crate::fp8::e4m3::scale_down_code`]). No dequantization, no
+//!    requantization, no second rounding.
+//!
+//! Conventions: input is a row-wise tensor for `X [M,N]`; the output is a
+//! row-wise tensor for `Xᵀ [N,M]` — which *is* the column-wise quantization
+//! layout of `X` (see `tile::tests::row_col_agree_on_transpose`).
+
+use crate::fp8::tensor::{n_tiles, Fp8Tensor, TileLayout};
+use crate::fp8::tile::quantize_rowwise;
+use crate::fp8::{e4m3, Fp8Format, ScaleMode, TILE};
+
+/// Per-`k` scale-down lookup tables: `lut[k][c] = scale_down_code(c, k)`.
+/// Built once per 128×128 block (k ≤ 15 distinct values, 256 B each).
+struct ScaleDownLuts {
+    tables: Vec<(u32, [u8; 256])>,
+}
+
+impl ScaleDownLuts {
+    fn for_ks(ks: &[u32]) -> ScaleDownLuts {
+        let mut tables: Vec<(u32, [u8; 256])> = Vec::new();
+        for &k in ks {
+            if tables.iter().any(|(tk, _)| *tk == k) {
+                continue;
+            }
+            let mut t = [0u8; 256];
+            for c in 0..=255u8 {
+                t[c as usize] = e4m3::scale_down_code(c, k);
+            }
+            tables.push((k, t));
+        }
+        ScaleDownLuts { tables }
+    }
+
+    #[inline]
+    fn get(&self, k: u32) -> &[u8; 256] {
+        &self.tables.iter().find(|(tk, _)| *tk == k).unwrap().1
+    }
+}
+
+/// Naive conversion (Fig. 1 strategy 1): `Q_col(D(Q_row(X)))`, i.e.
+/// dequantize, transpose, requantize with fresh data-dependent scales.
+pub fn naive_transpose(t: &Fp8Tensor) -> Fp8Tensor {
+    assert_eq!(t.layout, TileLayout::RowWise, "naive_transpose expects a row-wise input");
+    let dq = t.dequantize();
+    quantize_rowwise(&dq.transpose(), t.fmt, t.mode)
+}
+
+/// The paper's **Direct Transpose** (Alg. 1), power-of-two scales required.
+///
+/// For each 128×128 block:
+/// * `S_max = max_i S_i` over the block's 128 row scales (po2 ⇒ the max of
+///   the exponents);
+/// * all 128 output (column) scales of the block are set to `S_max` —
+///   aligning *up* so payload magnitudes only shrink (no overflow);
+/// * every payload code moves from scale `2^T` to `2^(T+k)` by
+///   `scale_down_code(c, k)` — exponent-field subtraction while the value
+///   stays normal, RNE mantissa shift if it crosses into subnormals (the
+///   paper assumes no underflow; we handle it exactly rather than UB).
+pub fn direct_transpose(t: &Fp8Tensor) -> Fp8Tensor {
+    assert_eq!(t.layout, TileLayout::RowWise, "direct_transpose expects a row-wise input");
+    assert_eq!(t.mode, ScaleMode::Po2, "direct transpose requires power-of-two scales (Alg. 1)");
+    assert_eq!(t.fmt, Fp8Format::E4M3, "direct transpose is specified for E4M3 payloads");
+    let (m, n) = (t.rows, t.cols);
+    let tpr_in = n_tiles(n); // input scale tiles per row
+    let tpr_out = n_tiles(m); // output scale tiles per row (of Xᵀ)
+    let mut data = vec![0u8; n * m];
+    let mut scales = vec![0.0f32; n * tpr_out];
+    let mut sexp = vec![0i32; n * tpr_out];
+
+    for bi in 0..tpr_out {
+        // block rows of X: i ∈ [i0, i1)
+        let i0 = bi * TILE;
+        let i1 = (i0 + TILE).min(m);
+        for bj in 0..tpr_in {
+            // block cols of X: j ∈ [j0, j1)
+            let j0 = bj * TILE;
+            let j1 = (j0 + TILE).min(n);
+            // S_max over the block's row scales (exponent max — po2).
+            let mut emax = i32::MIN;
+            for i in i0..i1 {
+                emax = emax.max(t.sexp[i * tpr_in + bj]);
+            }
+            // Output scales: rows j of Xᵀ, tile bi.
+            let smax = (emax as f32).exp2();
+            for j in j0..j1 {
+                scales[j * tpr_out + bi] = smax;
+                sexp[j * tpr_out + bi] = emax;
+            }
+            // Payload: out[j, i] = scale_down(in[i, j], emax − e_i).
+            //
+            // §Perf: per-k 256-entry code LUTs turn the inner loop into a
+            // byte gather, and 16×16 sub-blocking keeps both the source
+            // rows and the strided destination columns cache-resident
+            // (before/after in EXPERIMENTS.md §Perf).
+            let mut k_of_row = [0u32; TILE];
+            let mut all_zero = true;
+            for i in i0..i1 {
+                let k = (emax - t.sexp[i * tpr_in + bj]) as u32;
+                k_of_row[i - i0] = k;
+                all_zero &= k == 0;
+            }
+            let luts = if all_zero { None } else { Some(ScaleDownLuts::for_ks(&k_of_row[..i1 - i0])) };
+            // hoist the per-row LUT refs out of the element loops
+            let row_luts: Vec<&[u8; 256]> = match &luts {
+                Some(l) => (i0..i1).map(|i| l.get(k_of_row[i - i0])).collect(),
+                None => Vec::new(),
+            };
+            const SB: usize = 16; // sub-block edge
+            let mut si = i0;
+            while si < i1 {
+                let sie = (si + SB).min(i1);
+                let mut sj = j0;
+                while sj < j1 {
+                    let sje = (sj + SB).min(j1);
+                    // contiguous source reads, strided writes; the 16×16
+                    // sub-block keeps the touched destination lines in L1
+                    // (measured faster than the write-contiguous order —
+                    // see EXPERIMENTS.md §Perf iteration log)
+                    match &luts {
+                        None => {
+                            for i in si..sie {
+                                let src = &t.data[i * n + sj..i * n + sje];
+                                for (o, &c) in src.iter().enumerate() {
+                                    data[(sj + o) * m + i] = c;
+                                }
+                            }
+                        }
+                        Some(_) => {
+                            for i in si..sie {
+                                let lut = row_luts[i - i0];
+                                let src = &t.data[i * n + sj..i * n + sje];
+                                for (o, &c) in src.iter().enumerate() {
+                                    data[(sj + o) * m + i] = lut[c as usize];
+                                }
+                            }
+                        }
+                    }
+                    sj = sje;
+                }
+                si = sie;
+            }
+        }
+    }
+    Fp8Tensor {
+        rows: n,
+        cols: m,
+        fmt: t.fmt,
+        mode: t.mode,
+        layout: TileLayout::RowWise,
+        data,
+        scales,
+        sexp,
+    }
+}
+
+/// Float-scale variant of the direct transpose (ablation): aligns each
+/// block to its max *float* scale and requantizes each payload once
+/// (`encode(decode(c)·s/S_max)`). Avoids the second *data-dependent* scale
+/// computation of the naive path but — without the po2 constraint — must
+/// still round once, so it is NOT lossless. Quantifies how much of the
+/// paper's benefit comes specifically from po2 scales.
+pub fn direct_transpose_float(t: &Fp8Tensor) -> Fp8Tensor {
+    assert_eq!(t.layout, TileLayout::RowWise);
+    let (m, n) = (t.rows, t.cols);
+    let tpr_in = n_tiles(n);
+    let tpr_out = n_tiles(m);
+    let mut data = vec![0u8; n * m];
+    let mut scales = vec![0.0f32; n * tpr_out];
+    for bi in 0..tpr_out {
+        let i0 = bi * TILE;
+        let i1 = (i0 + TILE).min(m);
+        for bj in 0..tpr_in {
+            let j0 = bj * TILE;
+            let j1 = (j0 + TILE).min(n);
+            let mut smax = 0.0f32;
+            for i in i0..i1 {
+                smax = smax.max(t.scales[i * tpr_in + bj]);
+            }
+            let smax = if smax == 0.0 { 1.0 } else { smax };
+            for j in j0..j1 {
+                scales[j * tpr_out + bi] = smax;
+            }
+            for i in i0..i1 {
+                let ratio = t.scales[i * tpr_in + bj] / smax;
+                for j in j0..j1 {
+                    let c = t.data[i * n + j];
+                    data[j * m + i] = t.fmt.encode(t.fmt.decode(c) * ratio);
+                }
+            }
+        }
+    }
+    Fp8Tensor {
+        rows: n,
+        cols: m,
+        fmt: t.fmt,
+        mode: ScaleMode::Float,
+        layout: TileLayout::RowWise,
+        data,
+        scales,
+        sexp: Vec::new(),
+    }
+}
+
+/// Plain payload transpose *without* any scale handling — the buggy
+/// "just transpose the bytes" strategy. Kept as a test foil: it produces
+/// wrong values whenever scales differ across a block, demonstrating why
+/// the transpose must be scaling-aware at all.
+pub fn unaware_transpose(t: &Fp8Tensor) -> Fp8Tensor {
+    assert_eq!(t.layout, TileLayout::RowWise);
+    let (m, n) = (t.rows, t.cols);
+    let tpr_in = n_tiles(n);
+    let tpr_out = n_tiles(m);
+    let mut data = vec![0u8; n * m];
+    for i in 0..m {
+        for j in 0..n {
+            data[j * m + i] = t.data[i * n + j];
+        }
+    }
+    // Take each block's FIRST row scale — arbitrary and generally wrong.
+    let mut scales = vec![0.0f32; n * tpr_out];
+    let mut sexp = vec![0i32; n * tpr_out];
+    for bi in 0..tpr_out {
+        let i0 = bi * TILE;
+        for bj in 0..tpr_in {
+            let j0 = bj * TILE;
+            let j1 = (j0 + TILE).min(n);
+            for j in j0..j1 {
+                scales[j * tpr_out + bi] = t.scales[i0 * tpr_in + bj];
+                if !t.sexp.is_empty() {
+                    sexp[j * tpr_out + bi] = t.sexp[i0 * tpr_in + bj];
+                }
+            }
+        }
+    }
+    Fp8Tensor {
+        rows: n,
+        cols: m,
+        fmt: t.fmt,
+        mode: t.mode,
+        layout: TileLayout::RowWise,
+        data,
+        scales,
+        sexp,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp8::tile::{quantize_colwise, quantize_rowwise};
+    use crate::util::mat::Mat;
+    use crate::util::prop::props;
+    use crate::util::rng::Rng;
+
+    fn sample(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Rng::seed_from(seed);
+        // Several binades of spread per tile so row scales genuinely differ.
+        Mat::rand_log_uniform(rows, cols, -6.0, 6.0, &mut rng)
+    }
+
+    #[test]
+    fn direct_shapes_and_layout() {
+        let x = sample(256, 384, 1);
+        let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        let t = direct_transpose(&q);
+        assert_eq!((t.rows, t.cols), (384, 256));
+        assert_eq!(t.layout, TileLayout::RowWise);
+        assert_eq!(t.n_scales(), 384 * 2);
+    }
+
+    #[test]
+    fn direct_is_lossless_when_no_underflow() {
+        // Eq. 10–17: for elements that stay normal after the exponent
+        // shift, D(direct_T(Q_row(X))) == D(Q_row(X))ᵀ EXACTLY (bitwise).
+        let x = sample(256, 256, 2);
+        let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        let dq = q.dequantize(); // one-rounding reference
+        let t = direct_transpose(&q);
+        let dt = t.dequantize();
+        let mut exact = 0usize;
+        let mut bounded = 0usize;
+        for i in 0..q.rows {
+            for j in 0..q.cols {
+                let a = dq.at(i, j);
+                let b = dt.at(j, i);
+                if a.to_bits() == b.to_bits() {
+                    exact += 1;
+                } else {
+                    // underflow into subnormal grid: |err| ≤ half grid unit
+                    // at the aligned scale
+                    let smax = t.scale_at(j, i);
+                    assert!(
+                        (a - b).abs() <= 0.5 * e4m3::MIN_SUBNORMAL * smax,
+                        "({i},{j}): a={a} b={b} smax={smax}"
+                    );
+                    bounded += 1;
+                }
+            }
+        }
+        // The overwhelming majority must be bit-exact.
+        assert!(exact * 10 >= (exact + bounded) * 9, "exact={exact} bounded={bounded}");
+    }
+
+    #[test]
+    fn direct_exact_when_scales_uniform() {
+        // If all row scales in each block agree, k=0 everywhere: the direct
+        // transpose is a pure relayout — bitwise exact, zero exceptions.
+        let mut rng = Rng::seed_from(3);
+        let x = Mat::randn(256, 256, 1.0, &mut rng).map(|v| v.clamp(-3.9, 3.9));
+        // Force uniform scales by planting the same amax in every tile.
+        let mut x = x;
+        for i in 0..x.rows {
+            for t in 0..2 {
+                *x.at_mut(i, t * 128) = 3.99;
+            }
+        }
+        let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        let t = direct_transpose(&q);
+        let dq = q.dequantize();
+        let dt = t.dequantize();
+        for i in 0..q.rows {
+            for j in 0..q.cols {
+                assert_eq!(dq.at(i, j).to_bits(), dt.at(j, i).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn naive_has_double_quant_error_with_float_scales() {
+        // The incumbent recipes (TE blockwise / DeepSeek-V3) use FLOAT
+        // per-tile scales: requantizing along the other dimension re-rounds
+        // onto an incommensurate grid — the double quantization error
+        // (Eq. 9: "the two rounding operators cannot be combined").
+        let x = sample(384, 384, 4);
+        let qf = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Float);
+        let ref_f = qf.dequantize().transpose();
+        let naive_float_err = naive_transpose(&qf).dequantize().rel_err(&ref_f);
+        assert!(
+            naive_float_err > 1e-3,
+            "float-scale naive path should show double-quant error, got {naive_float_err}"
+        );
+        // The paper's recipe (po2 scales + direct transpose) is exact.
+        let qp = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        let ref_p = qp.dequantize().transpose();
+        let direct_err = direct_transpose(&qp).dequantize().rel_err(&ref_p);
+        assert!(
+            direct_err < naive_float_err / 50.0,
+            "direct={direct_err} float-naive={naive_float_err}"
+        );
+    }
+
+    #[test]
+    fn po2_grids_nest_so_even_naive_is_value_exact() {
+        // The po2 constraint alone already removes the *numerical* error:
+        // requantizing po2-quantized values onto another po2 grid is an
+        // exact exponent shift (the grids nest), up to the same bounded
+        // subnormal underflow as the direct path. What the direct transpose
+        // removes on top is the dequantize→requantize COMPUTE and the
+        // extra casts (Fig. 1 is a latency comparison) — this test pins
+        // down that reading of the paper.
+        let x = sample(384, 384, 44);
+        let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        let dq_t = q.dequantize().transpose();
+        let naive_err = naive_transpose(&q).dequantize().rel_err(&dq_t);
+        assert!(naive_err < 1e-3, "po2 naive should be near-exact, got {naive_err}");
+    }
+
+    #[test]
+    fn double_transpose_roundtrips() {
+        // direct_T(direct_T(Q)) represents the same values as Q: scales may
+        // coarsen (block-max alignment) but values survive bit-for-bit up
+        // to the bounded-underflow exception.
+        let x = sample(256, 256, 5);
+        let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        let tt = direct_transpose(&direct_transpose(&q));
+        let a = q.dequantize();
+        let b = tt.dequantize();
+        assert!(b.rel_err(&a) < 1e-3, "rel={}", b.rel_err(&a));
+    }
+
+    #[test]
+    fn matches_colwise_quantization_values() {
+        // The output layout is the column-wise layout: compare against
+        // Q_col computed from the one-rounding reference D(Q_row(X)).
+        let x = sample(256, 128, 6);
+        let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        let t = direct_transpose(&q);
+        let qc = quantize_colwise(&q.dequantize(), Fp8Format::E4M3, ScaleMode::Po2);
+        // Values agree within the subnormal-underflow bound (Q_col re-rounds
+        // per-column; direct aligns per-block — both represent D(Q_row(X))
+        // and may only disagree at the subnormal grid).
+        let dt = t.dequantize();
+        let dc = qc.dequantize();
+        for i in 0..x.rows {
+            for j in 0..x.cols {
+                let a = dt.at(j, i);
+                let b = dc.at(i, j);
+                let tol = 0.5 * e4m3::MIN_SUBNORMAL * t.scale_at(j, i).max(qc.scale_at(i, j));
+                assert!((a - b).abs() <= tol, "({i},{j}): {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn unaware_transpose_is_wrong() {
+        // The foil: ignoring scales corrupts values whenever block scales
+        // are non-uniform — this is why "scaling-aware" is in the name.
+        let x = sample(256, 256, 7);
+        let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        let dq_t = q.dequantize().transpose();
+        let err = unaware_transpose(&q).dequantize().rel_err(&dq_t);
+        assert!(err > 0.05, "unaware transpose should be badly wrong, got {err}");
+    }
+
+    #[test]
+    fn float_direct_variant_rounds_once_like_naive() {
+        // Ablation invariant: without the po2 constraint the "direct"
+        // transpose still has to round once (it trades the naive path's
+        // fresh per-tile scales for coarser block-max-aligned ones), so its
+        // error is of the same order as the naive path — nonzero, within
+        // 1.5×. This quantifies that the po2 constraint, not the fusion,
+        // is what eliminates the numerical error.
+        let x = sample(384, 256, 8);
+        let qf = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Float);
+        let dq_t = qf.dequantize().transpose();
+        let naive_err = naive_transpose(&qf).dequantize().rel_err(&dq_t);
+        let float_direct_err = direct_transpose_float(&qf).dequantize().rel_err(&dq_t);
+        assert!(float_direct_err > 1e-4);
+        assert!(
+            float_direct_err <= naive_err * 1.5 && float_direct_err >= naive_err / 1.5,
+            "float-direct {float_direct_err} should be same order as naive {naive_err}"
+        );
+    }
+
+    #[test]
+    fn ragged_shapes() {
+        props("direct transpose ragged shapes", 16, |g| {
+            let m = g.usize_in(1, 300);
+            let n = g.usize_in(1, 300);
+            let mut rng = Rng::seed_from(g.seed ^ 0xabcd);
+            let x = Mat::rand_log_uniform(m, n, -4.0, 4.0, &mut rng);
+            let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+            let t = direct_transpose(&q);
+            assert_eq!((t.rows, t.cols), (n, m));
+            let dq = q.dequantize();
+            let dt = t.dequantize();
+            for i in 0..m {
+                for j in 0..n {
+                    let a = dq.at(i, j);
+                    let b = dt.at(j, i);
+                    let tol = 0.5 * e4m3::MIN_SUBNORMAL * t.scale_at(j, i);
+                    assert!((a - b).abs() <= tol, "({i},{j}): {a} vs {b}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn preserves_nan_payloads() {
+        // NaN codes (shouldn't occur post-quantization, but the operator
+        // must not manufacture numbers from them) propagate as NaN.
+        let x = sample(128, 128, 9);
+        let mut q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        q.data[5] = e4m3::NAN_CODE;
+        let t = direct_transpose(&q);
+        // element (0,5) of X is (5,0) of Xᵀ
+        assert!(e4m3::is_nan(t.code_at(5, 0)));
+    }
+}

@@ -1,0 +1,109 @@
+//! **UE8M0** — the unsigned, exponent-only 8-bit format used for
+//! power-of-two scaling factors (§2.1: "encodes powers of two and is
+//! typically used for scaling factors").
+//!
+//! A code `b` represents `2^(b − 127)`; there is no sign, no mantissa, no
+//! NaN. This is the storage format for the po2 recipe's scales: the
+//! scaling-aware transpose then only ever *adds integer deltas* to these
+//! exponents (Alg. 1's `k = log2(S_max/s)`).
+
+/// Exponent bias.
+pub const BIAS: i32 = 127;
+
+/// Decode code → scale value `2^(b-127)`.
+#[inline]
+pub fn decode(b: u8) -> f32 {
+    ((b as i32 - BIAS) as f32).exp2()
+}
+
+/// Encode an exponent (log2 of the scale) to a UE8M0 code, saturating.
+#[inline]
+pub fn from_exponent(e: i32) -> u8 {
+    (e + BIAS).clamp(0, 255) as u8
+}
+
+/// Extract the exponent (log2 of the scale) from a code.
+#[inline]
+pub fn exponent(b: u8) -> i32 {
+    b as i32 - BIAS
+}
+
+/// Round a positive scale *up* to the next power of two and encode it.
+///
+/// "Up" (ceil) is the correct direction for quantization scales: a larger
+/// scale can only shrink payload magnitudes, so `amax/s ≤ fmax` stays true
+/// and overflow is impossible (the paper's overflow-avoidance argument for
+/// aligning to `S_max`).
+#[inline]
+pub fn encode_ceil(s: f32) -> u8 {
+    assert!(s > 0.0 && s.is_finite(), "UE8M0 scale must be positive finite, got {s}");
+    from_exponent(ceil_log2(s))
+}
+
+/// `ceil(log2(s))` computed exactly from f32 bits (no libm rounding risk).
+#[inline]
+pub fn ceil_log2(s: f32) -> i32 {
+    let bits = s.to_bits();
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x7F_FFFF;
+    if exp == 0 {
+        // subnormal: s = man · 2^-149
+        let top = 31 - (man.leading_zeros() as i32);
+        let e = top - 149;
+        return if man == (1 << top) { e } else { e + 1 };
+    }
+    let e = exp - 127;
+    if man == 0 {
+        e
+    } else {
+        e + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_known() {
+        assert_eq!(decode(127), 1.0);
+        assert_eq!(decode(128), 2.0);
+        assert_eq!(decode(126), 0.5);
+    }
+
+    #[test]
+    fn ceil_log2_exact_powers() {
+        for e in -30..30 {
+            let s = (e as f32).exp2();
+            assert_eq!(ceil_log2(s), e, "s={s}");
+        }
+    }
+
+    #[test]
+    fn ceil_log2_between_powers() {
+        assert_eq!(ceil_log2(1.5), 1);
+        assert_eq!(ceil_log2(3.0), 2);
+        assert_eq!(ceil_log2(0.75), 0);
+        assert_eq!(ceil_log2(0.51), 0);
+        assert_eq!(ceil_log2(0.5), -1);
+    }
+
+    #[test]
+    fn encode_roundtrip_is_geq() {
+        // decoded(encode_ceil(s)) ≥ s always (never underestimates)
+        let mut s = 1.7e-20f32;
+        while s < 1e20 {
+            let d = decode(encode_ceil(s));
+            assert!(d >= s, "s={s} d={d}");
+            assert!(d <= s * 2.0 + f32::EPSILON, "not tight: s={s} d={d}");
+            s *= 1.31;
+        }
+    }
+
+    #[test]
+    fn subnormal_scales() {
+        let s = f32::from_bits(1); // smallest positive subnormal
+        let d = decode(encode_ceil(s));
+        assert!(d >= s);
+    }
+}

@@ -1,0 +1,34 @@
+//! # fp8-flow-moe
+//!
+//! Reproduction of **FP8-Flow-MoE: A Casting-Free FP8 Recipe without Double
+//! Quantization Error** (Wang, Su, Hu, Wang, Sun — Zhejiang Lab, 2025).
+//!
+//! Three-layer architecture:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`, build-time only)
+//! * **L2** — JAX MoE model + train step (`python/compile/model.py`),
+//!   AOT-lowered to HLO text in `artifacts/`
+//! * **L3** — this crate: the FP8 numeric substrate, the MoE dataflow
+//!   recipes with cast accounting, the expert-parallel cluster simulator,
+//!   native (hot-path) kernels, and the PJRT runtime that loads and
+//!   executes the AOT artifacts.
+//!
+//! The paper's two central ideas are both implemented natively and in the
+//! JAX graph:
+//!
+//! 1. [`fp8::transpose`] — the *scaling-aware direct transpose* (Alg. 1):
+//!    converting a row-wise-quantized FP8 tensor into a column-wise one by
+//!    exponent manipulation alone, eliminating the **double quantization
+//!    error** `E = Q_col(D(Q_row(X))) − Q_col(X)` (Eq. 1).
+//! 2. [`dataflow`] — the casting-free FP8 dataflow: the MoE expert path
+//!    keeps FP8 end-to-end except two BF16 islands, reducing explicit cast
+//!    ops from 12 to 2 (Fig. 2).
+
+pub mod cluster;
+pub mod coordinator;
+pub mod dataflow;
+pub mod fp8;
+pub mod moe;
+pub mod runtime;
+pub mod train;
+pub mod util;

@@ -1,0 +1,151 @@
+//! FP8 GEMM with per-tile (1×128) scaling — the DeepGEMM-style contraction
+//! the expert FFN runs on (§3.2).
+//!
+//! Operand layout contract (the whole point of the transpose story):
+//! * `a`: row-wise quantized `[M, K]` — scales tile along K;
+//! * `b`: row-wise quantized **Bᵀ** `[N, K]` — also tiling along K, which
+//!   is exactly what [`crate::fp8::transpose::direct_transpose`] produces.
+//!
+//! Accumulation is f32; each 128-wide k-tile's partial product is scaled
+//! by the outer product of the two tile scales.
+
+use crate::fp8::tensor::{n_tiles, Fp8Tensor, TileLayout};
+use crate::fp8::{e4m3, Fp8Format, TILE};
+use crate::util::mat::Mat;
+
+/// `A @ Bᵀ` over FP8 operands (see module docs for layout).
+///
+/// §Perf structure: per 128-wide k-tile, the whole `B` panel (`n × 128`)
+/// is decoded ONCE into a contiguous f32 scratch and reused across all `m`
+/// rows of `A` — amortizing the LUT decode that dominated the naive
+/// per-(row,row) loop (before/after in EXPERIMENTS.md §Perf). The inner
+/// dot over 128 f32 auto-vectorizes.
+pub fn fp8_matmul(a: &Fp8Tensor, b: &Fp8Tensor) -> Mat {
+    assert_eq!(a.layout, TileLayout::RowWise);
+    assert_eq!(b.layout, TileLayout::RowWise);
+    assert_eq!(a.cols, b.cols, "contraction length mismatch");
+    assert_eq!(a.fmt, Fp8Format::E4M3);
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let kt = n_tiles(k);
+    let mut out = Mat::zeros(m, n);
+    // decoded B panel for the current k-tile: [n][TILE], padded with zeros
+    let mut bpanel = vec![0f32; n * TILE];
+    let mut adec = [0f32; TILE];
+    for t in 0..kt {
+        let j0 = t * TILE;
+        let j1 = (j0 + TILE).min(k);
+        let w = j1 - j0;
+        // decode B panel once per k-tile (scales folded in)
+        for nn in 0..n {
+            let brow = &b.data[nn * k + j0..nn * k + j1];
+            let sb = b.scales[nn * kt + t];
+            let dst = &mut bpanel[nn * TILE..nn * TILE + w];
+            for (o, &c) in dst.iter_mut().zip(brow) {
+                *o = e4m3::DECODE_LUT[c as usize] * sb;
+            }
+        }
+        for i in 0..m {
+            let arow = &a.data[i * k + j0..i * k + j1];
+            let sa = a.scales[i * kt + t];
+            for (o, &c) in adec.iter_mut().zip(arow) {
+                *o = e4m3::DECODE_LUT[c as usize];
+            }
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            if w == TILE {
+                // common case: 8 independent accumulators let the reduce
+                // vectorize without float reassociation
+                for (nn, bp) in bpanel.chunks_exact(TILE).enumerate() {
+                    let mut acc = [0f32; 8];
+                    for ch in 0..TILE / 8 {
+                        for l in 0..8 {
+                            acc[l] += adec[ch * 8 + l] * bp[ch * 8 + l];
+                        }
+                    }
+                    orow[nn] += acc.iter().sum::<f32>() * sa;
+                }
+            } else {
+                for nn in 0..n {
+                    let bp = &bpanel[nn * TILE..nn * TILE + w];
+                    let mut acc = 0f32;
+                    for o in 0..w {
+                        acc += adec[o] * bp[o];
+                    }
+                    orow[nn] += acc * sa;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Grouped (per-expert) FP8 GEMM: `out[e] = A[e] @ B[e]ᵀ`.
+///
+/// `a`: one tensor per expert `[C, K]`; `b`: per-expert weights `[N, K]`.
+pub fn grouped_fp8_matmul(a: &[Fp8Tensor], b: &[Fp8Tensor]) -> Vec<Mat> {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(ae, be)| fp8_matmul(ae, be)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp8::tile::quantize_rowwise;
+    use crate::fp8::ScaleMode;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn close_to_f32_matmul() {
+        let mut rng = Rng::seed_from(1);
+        let x = Mat::randn(64, 256, 1.0, &mut rng);
+        let w = Mat::randn(32, 256, 1.0, &mut rng); // = Wᵀ layout
+        let qa = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        let qb = quantize_rowwise(&w, Fp8Format::E4M3, ScaleMode::Po2);
+        let got = fp8_matmul(&qa, &qb);
+        let expect = x.matmul(&w.transpose());
+        let rel = got.rel_err(&expect);
+        assert!(rel < 0.08, "rel={rel}");
+    }
+
+    #[test]
+    fn exact_on_quantized_inputs() {
+        // If inputs are already on the FP8 grid with scale 1, the GEMM must
+        // be exactly the f32 GEMM of the decoded values.
+        let mut rng = Rng::seed_from(2);
+        let x = Mat::randn(16, 128, 1.0, &mut rng)
+            .map(|v| e4m3::decode(e4m3::encode(v.clamp(-3.0, 3.0))));
+        let w = Mat::randn(8, 128, 1.0, &mut rng)
+            .map(|v| e4m3::decode(e4m3::encode(v.clamp(-3.0, 3.0))));
+        let qa = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        let qb = quantize_rowwise(&w, Fp8Format::E4M3, ScaleMode::Po2);
+        let got = fp8_matmul(&qa, &qb);
+        let expect = qa.dequantize().matmul(&qb.dequantize().transpose());
+        assert!(got.rel_err(&expect) < 1e-6);
+    }
+
+    #[test]
+    fn ragged_k() {
+        let mut rng = Rng::seed_from(3);
+        let x = Mat::randn(8, 200, 1.0, &mut rng);
+        let w = Mat::randn(4, 200, 1.0, &mut rng);
+        let qa = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        let qb = quantize_rowwise(&w, Fp8Format::E4M3, ScaleMode::Po2);
+        let got = fp8_matmul(&qa, &qb);
+        let expect = x.matmul(&w.transpose());
+        assert!(got.rel_err(&expect) < 0.1);
+    }
+
+    #[test]
+    fn grouped_matches_per_expert() {
+        let mut rng = Rng::seed_from(4);
+        let a: Vec<Fp8Tensor> = (0..3)
+            .map(|_| quantize_rowwise(&Mat::randn(16, 128, 1.0, &mut rng), Fp8Format::E4M3, ScaleMode::Po2))
+            .collect();
+        let b: Vec<Fp8Tensor> = (0..3)
+            .map(|_| quantize_rowwise(&Mat::randn(8, 128, 1.0, &mut rng), Fp8Format::E4M3, ScaleMode::Po2))
+            .collect();
+        let grouped = grouped_fp8_matmul(&a, &b);
+        for e in 0..3 {
+            assert_eq!(grouped[e], fp8_matmul(&a[e], &b[e]));
+        }
+    }
+}

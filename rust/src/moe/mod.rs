@@ -1,0 +1,14 @@
+//! Native (L3) MoE substrate: router, fused permute+pad, SwiGLU(+quant),
+//! grouped FP8 GEMM, and the full MoE layer in the three recipes.
+//!
+//! These are the Rust twins of the L1 Pallas kernels (`python/compile/
+//! kernels/`) with identical semantics — the integration tests cross-check
+//! them bitwise against the AOT-compiled HLO. They serve two purposes:
+//! the native hot path for the coordinator, and the measurable kernels
+//! behind the Fig. 1/3/4/5 benches.
+
+pub mod gemm;
+pub mod layer;
+pub mod permute;
+pub mod router;
+pub mod swiglu;

@@ -1,0 +1,224 @@
+//! Permute+padding kernels (§3.3.1) — fused and unfused variants.
+//!
+//! The *plan* abstraction matches `kernels/permute.py`: `plan[d]` is the
+//! source token of destination row `d` in the `[E·capacity, H]` buffer, or
+//! `-1` for a padding row. The fused kernel streams every token exactly
+//! once; the unfused baseline (Fig. 3/4) materializes the compact
+//! permutation first and re-reads it to insert padding.
+
+use crate::fp8::tensor::{n_tiles, Fp8Tensor, TileLayout};
+use crate::util::mat::Mat;
+
+/// Build the permute+pad row plan for slot assignments `expert_of`
+/// (`-1` entries = padding). Tokens beyond `capacity` are dropped
+/// (standard MoE capacity semantics); order within an expert is stable.
+pub fn permute_pad_plan(expert_of: &[usize], n_experts: usize, capacity: usize) -> Vec<i64> {
+    let mut plan = vec![-1i64; n_experts * capacity];
+    let mut fill = vec![0usize; n_experts];
+    for (tok, &e) in expert_of.iter().enumerate() {
+        debug_assert!(e < n_experts);
+        if fill[e] < capacity {
+            plan[e * capacity + fill[e]] = tok as i64;
+            fill[e] += 1;
+        }
+    }
+    plan
+}
+
+/// Fused permute+pad over f32 rows: `out[d] = x[plan[d]]` or zeros.
+pub fn permute_pad(x: &Mat, plan: &[i64]) -> Mat {
+    let h = x.cols;
+    let mut out = Mat::zeros(plan.len(), h);
+    for (d, &src) in plan.iter().enumerate() {
+        if src >= 0 {
+            out.data[d * h..(d + 1) * h].copy_from_slice(x.row(src as usize));
+        }
+    }
+    out
+}
+
+/// Fused permute+pad over FP8 rows (codes + row-wise scales move together;
+/// padding rows are zero codes with scale 1 — exactly representable).
+pub fn permute_pad_fp8(x: &Fp8Tensor, plan: &[i64]) -> Fp8Tensor {
+    assert_eq!(x.layout, TileLayout::RowWise);
+    let h = x.cols;
+    let tpr = n_tiles(h);
+    let mut data = vec![0u8; plan.len() * h];
+    let mut scales = vec![1.0f32; plan.len() * tpr];
+    let mut sexp = vec![0i32; plan.len() * tpr];
+    for (d, &src) in plan.iter().enumerate() {
+        if src >= 0 {
+            let s = src as usize;
+            data[d * h..(d + 1) * h].copy_from_slice(&x.data[s * h..(s + 1) * h]);
+            scales[d * tpr..(d + 1) * tpr].copy_from_slice(&x.scales[s * tpr..(s + 1) * tpr]);
+            if !x.sexp.is_empty() {
+                sexp[d * tpr..(d + 1) * tpr].copy_from_slice(&x.sexp[s * tpr..(s + 1) * tpr]);
+            }
+        }
+    }
+    Fp8Tensor {
+        rows: plan.len(),
+        cols: h,
+        fmt: x.fmt,
+        mode: x.mode,
+        layout: TileLayout::RowWise,
+        data,
+        scales,
+        sexp: if x.sexp.is_empty() { Vec::new() } else { sexp },
+    }
+}
+
+/// Unfused baseline pass 1: compact permutation (no padding rows).
+pub fn permute_compact(x: &Mat, plan: &[i64]) -> (Mat, Vec<i64>) {
+    let h = x.cols;
+    let compact_srcs: Vec<i64> = plan.iter().copied().filter(|&s| s >= 0).collect();
+    let mut out = Mat::zeros(compact_srcs.len(), h);
+    for (d, &src) in compact_srcs.iter().enumerate() {
+        out.data[d * h..(d + 1) * h].copy_from_slice(x.row(src as usize));
+    }
+    // pass-2 plan: destination row -> compact row (or -1 padding)
+    let mut pad_plan = vec![-1i64; plan.len()];
+    let mut c = 0i64;
+    for (d, &src) in plan.iter().enumerate() {
+        if src >= 0 {
+            pad_plan[d] = c;
+            c += 1;
+        }
+    }
+    (out, pad_plan)
+}
+
+/// Unfused baseline pass 2: insert padding rows (a second full pass).
+pub fn pad_expand(compact: &Mat, pad_plan: &[i64]) -> Mat {
+    permute_pad(compact, pad_plan)
+}
+
+/// Unfused permute→pad (the Fig. 3 baseline): two full HBM passes.
+pub fn permute_then_pad(x: &Mat, plan: &[i64]) -> Mat {
+    let (compact, pad_plan) = permute_compact(x, plan);
+    pad_expand(&compact, &pad_plan)
+}
+
+/// Fused unpermute+unpad (backward of `permute_pad`): scatter-add rows
+/// back to token order (a token routed to k experts receives the sum).
+pub fn unpermute_unpad(y: &Mat, plan: &[i64], n_tokens: usize) -> Mat {
+    let h = y.cols;
+    let mut out = Mat::zeros(n_tokens, h);
+    for (d, &src) in plan.iter().enumerate() {
+        if src >= 0 {
+            let dst = src as usize;
+            let yrow = &y.data[d * h..(d + 1) * h];
+            let orow = &mut out.data[dst * h..(dst + 1) * h];
+            for j in 0..h {
+                orow[j] += yrow[j];
+            }
+        }
+    }
+    out
+}
+
+/// Unfused unpermute baseline (Fig. 4): pass 1 strips padding rows into a
+/// compact buffer, pass 2 scatter-adds to token order.
+pub fn unpad_then_unpermute(y: &Mat, plan: &[i64], n_tokens: usize) -> Mat {
+    let h = y.cols;
+    // pass 1: drop padding rows
+    let kept: Vec<usize> = plan
+        .iter()
+        .enumerate()
+        .filter(|(_, &s)| s >= 0)
+        .map(|(d, _)| d)
+        .collect();
+    let mut compact = Mat::zeros(kept.len(), h);
+    for (c, &d) in kept.iter().enumerate() {
+        compact.data[c * h..(c + 1) * h].copy_from_slice(&y.data[d * h..(d + 1) * h]);
+    }
+    // pass 2: scatter to token order
+    let mut out = Mat::zeros(n_tokens, h);
+    for (c, &d) in kept.iter().enumerate() {
+        let dst = plan[d] as usize;
+        for j in 0..h {
+            out.data[dst * h + j] += compact.data[c * h + j];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp8::tile::quantize_rowwise;
+    use crate::fp8::{Fp8Format, ScaleMode};
+    use crate::util::rng::Rng;
+
+    fn setup(tokens: usize, experts: usize, cap: usize, seed: u64) -> (Mat, Vec<usize>, Vec<i64>) {
+        let mut rng = Rng::seed_from(seed);
+        let x = Mat::randn(tokens, 32, 1.0, &mut rng);
+        let expert_of: Vec<usize> = (0..tokens).map(|_| rng.below(experts)).collect();
+        let plan = permute_pad_plan(&expert_of, experts, cap);
+        (x, expert_of, plan)
+    }
+
+    #[test]
+    fn plan_groups_by_expert() {
+        let (_, expert_of, plan) = setup(100, 4, 64, 1);
+        for (d, &src) in plan.iter().enumerate() {
+            if src >= 0 {
+                assert_eq!(expert_of[src as usize], d / 64, "row {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_is_stable_within_expert() {
+        let (_, _, plan) = setup(100, 4, 64, 2);
+        for e in 0..4 {
+            let seg: Vec<i64> = plan[e * 64..(e + 1) * 64].iter().copied().filter(|&s| s >= 0).collect();
+            let mut sorted = seg.clone();
+            sorted.sort();
+            assert_eq!(seg, sorted, "expert {e} segment not in stable token order");
+        }
+    }
+
+    #[test]
+    fn fused_equals_unfused() {
+        let (x, _, plan) = setup(256, 8, 64, 3);
+        assert_eq!(permute_pad(&x, &plan), permute_then_pad(&x, &plan));
+    }
+
+    #[test]
+    fn unpermute_roundtrip_no_drops() {
+        let (x, _, plan) = setup(128, 4, 128, 4); // capacity ≥ tokens → no drop
+        let y = permute_pad(&x, &plan);
+        let back = unpermute_unpad(&y, &plan, 128);
+        assert_eq!(back, x);
+    }
+
+    #[test]
+    fn unfused_unpermute_matches_fused() {
+        let (x, _, plan) = setup(256, 8, 32, 5); // with drops
+        let y = permute_pad(&x, &plan);
+        let a = unpermute_unpad(&y, &plan, 256);
+        let b = unpad_then_unpermute(&y, &plan, 256);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn capacity_drops_excess_tokens() {
+        let expert_of = vec![0usize; 10];
+        let plan = permute_pad_plan(&expert_of, 2, 4);
+        assert_eq!(plan.iter().filter(|&&s| s >= 0).count(), 4);
+        assert_eq!(&plan[0..4], &[0, 1, 2, 3]);
+        assert!(plan[4..].iter().all(|&s| s == -1));
+    }
+
+    #[test]
+    fn fp8_permute_matches_f32_semantics() {
+        let (x, _, plan) = setup(256, 4, 128, 6);
+        let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        let qp = permute_pad_fp8(&q, &plan);
+        // dequantizing the permuted codes == permuting the dequantized mat
+        let a = qp.dequantize();
+        let b = permute_pad(&q.dequantize(), &plan);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,111 @@
+//! Top-k softmax router (§3.2 "routing" stage).
+
+use crate::util::mat::Mat;
+
+/// Routing decision for a batch of tokens.
+#[derive(Clone, Debug)]
+pub struct Routing {
+    /// `[tokens, k]` expert index per token per slot.
+    pub experts: Vec<Vec<usize>>,
+    /// `[tokens, k]` normalized gate weights.
+    pub gates: Vec<Vec<f32>>,
+    /// Switch-style load-balancing auxiliary loss.
+    pub aux_loss: f32,
+}
+
+/// Route `x [tokens, d]` through router weights `wr [d, E]`, top-k.
+pub fn route(x: &Mat, wr: &Mat, top_k: usize) -> Routing {
+    assert_eq!(x.cols, wr.rows);
+    let e = wr.cols;
+    assert!(top_k <= e);
+    let logits = x.matmul(wr);
+    let mut experts = Vec::with_capacity(x.rows);
+    let mut gates = Vec::with_capacity(x.rows);
+    let mut first_counts = vec![0usize; e];
+    let mut prob_sums = vec![0f64; e];
+    for t in 0..x.rows {
+        let row = logits.row(t);
+        // softmax
+        let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let exps: Vec<f32> = row.iter().map(|&v| (v - mx).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        let probs: Vec<f32> = exps.iter().map(|&v| v / z).collect();
+        for (i, &p) in probs.iter().enumerate() {
+            prob_sums[i] += p as f64;
+        }
+        // iterative top-k (ties broken by lower index — matches argmax)
+        let mut chosen = Vec::with_capacity(top_k);
+        let mut g = Vec::with_capacity(top_k);
+        let mut masked = probs.clone();
+        for _ in 0..top_k {
+            let (bi, bv) = masked
+                .iter()
+                .enumerate()
+                .fold((0usize, f32::NEG_INFINITY), |(bi, bv), (i, &v)| {
+                    if v > bv {
+                        (i, v)
+                    } else {
+                        (bi, bv)
+                    }
+                });
+            chosen.push(bi);
+            g.push(bv);
+            masked[bi] = f32::NEG_INFINITY;
+        }
+        first_counts[chosen[0]] += 1;
+        let gz: f32 = g.iter().sum();
+        let g: Vec<f32> = g.iter().map(|&v| v / gz).collect();
+        experts.push(chosen);
+        gates.push(g);
+    }
+    let n = x.rows as f64;
+    let aux_loss = (e as f64
+        * first_counts
+            .iter()
+            .zip(&prob_sums)
+            .map(|(&f, &p)| (f as f64 / n) * (p / n))
+            .sum::<f64>()) as f32;
+    Routing { experts, gates, aux_loss }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn routes_all_tokens() {
+        let mut rng = Rng::seed_from(1);
+        let x = Mat::randn(32, 16, 1.0, &mut rng);
+        let wr = Mat::randn(16, 4, 1.0, &mut rng);
+        let r = route(&x, &wr, 2);
+        assert_eq!(r.experts.len(), 32);
+        for t in 0..32 {
+            assert_eq!(r.experts[t].len(), 2);
+            assert_ne!(r.experts[t][0], r.experts[t][1]);
+            let gsum: f32 = r.gates[t].iter().sum();
+            assert!((gsum - 1.0).abs() < 1e-5);
+            assert!(r.gates[t][0] >= r.gates[t][1]); // top-1 has larger gate
+        }
+    }
+
+    #[test]
+    fn aux_loss_at_least_one_for_balanced() {
+        // aux = E·Σ f_e p_e ≥ 1 with equality iff perfectly balanced
+        let mut rng = Rng::seed_from(2);
+        let x = Mat::randn(512, 16, 1.0, &mut rng);
+        let wr = Mat::randn(16, 4, 0.5, &mut rng);
+        let r = route(&x, &wr, 1);
+        assert!(r.aux_loss >= 0.9, "aux={}", r.aux_loss);
+    }
+
+    #[test]
+    fn biased_router_concentrates() {
+        // strongly biased router weights → one expert dominates
+        let x = Mat::from_fn(64, 8, |_, j| if j == 0 { 1.0 } else { 0.0 });
+        let wr = Mat::from_fn(8, 4, |i, j| if i == 0 && j == 2 { 10.0 } else { 0.0 });
+        let r = route(&x, &wr, 1);
+        assert!(r.experts.iter().all(|e| e[0] == 2));
+        assert!(r.aux_loss > 2.0, "concentration should inflate aux: {}", r.aux_loss);
+    }
+}

@@ -1,0 +1,320 @@
+//! Artifact manifest — the typed index over `artifacts/manifest.json`
+//! written by `python/compile/aot.py`.
+//!
+//! Parsing is a purpose-built micro-parser for the manifest's fixed shape
+//! (serde is not vendored in this image): an object of
+//! `name → {file, inputs: [{shape, dtype}…], outputs: […]}`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of an artifact boundary tensor (the HLO entry interface is
+/// restricted to these — `f8e4m3fn` exists only *inside* graphs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    S32,
+    U8,
+    U32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "s32" => Dtype::S32,
+            "u8" => Dtype::U8,
+            "u32" => Dtype::U32,
+            other => bail!("unsupported boundary dtype {other:?}"),
+        })
+    }
+
+    pub fn size_bytes(self) -> usize {
+        match self {
+            Dtype::U8 => 1,
+            _ => 4,
+        }
+    }
+}
+
+/// Shape + dtype of one boundary tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn n_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact's manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    entries: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.entries.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Parse the manifest JSON (fixed schema; see module docs).
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut p = P { b: text.as_bytes(), i: 0 };
+        p.ws();
+        p.expect(b'{')?;
+        let mut entries = BTreeMap::new();
+        loop {
+            p.ws();
+            if p.peek() == Some(b'}') {
+                p.i += 1;
+                break;
+            }
+            let name = p.string()?;
+            p.ws();
+            p.expect(b':')?;
+            let spec = p.artifact()?;
+            entries.insert(name, spec);
+            p.ws();
+            if p.peek() == Some(b',') {
+                p.i += 1;
+            }
+        }
+        Ok(Manifest { entries })
+    }
+}
+
+/// Micro JSON parser over the manifest's fixed schema.
+struct P<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> P<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\n' | b'\t' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        self.ws();
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            bail!(
+                "manifest parse error at byte {}: expected {:?} found {:?}",
+                self.i,
+                c as char,
+                self.peek().map(|b| b as char)
+            )
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if c == b'"' {
+                let s = std::str::from_utf8(&self.b[start..self.i])?.to_string();
+                self.i += 1;
+                return Ok(s);
+            }
+            // manifest strings never contain escapes (paths + dtype names)
+            anyhow::ensure!(c != b'\\', "unexpected escape in manifest string");
+            self.i += 1;
+        }
+        bail!("unterminated string")
+    }
+
+    fn number(&mut self) -> Result<usize> {
+        self.ws();
+        let start = self.i;
+        while matches!(self.peek(), Some(b'0'..=b'9')) {
+            self.i += 1;
+        }
+        anyhow::ensure!(self.i > start, "expected number at byte {}", self.i);
+        Ok(std::str::from_utf8(&self.b[start..self.i])?.parse()?)
+    }
+
+    fn shape(&mut self) -> Result<Vec<usize>> {
+        self.expect(b'[')?;
+        let mut v = Vec::new();
+        loop {
+            self.ws();
+            if self.peek() == Some(b']') {
+                self.i += 1;
+                break;
+            }
+            v.push(self.number()?);
+            self.ws();
+            if self.peek() == Some(b',') {
+                self.i += 1;
+            }
+        }
+        Ok(v)
+    }
+
+    fn tensor(&mut self) -> Result<TensorSpec> {
+        self.expect(b'{')?;
+        let mut shape = None;
+        let mut dtype = None;
+        loop {
+            self.ws();
+            if self.peek() == Some(b'}') {
+                self.i += 1;
+                break;
+            }
+            let key = self.string()?;
+            self.expect(b':')?;
+            match key.as_str() {
+                "shape" => shape = Some(self.shape()?),
+                "dtype" => dtype = Some(Dtype::parse(&self.string()?)?),
+                other => bail!("unknown tensor key {other:?}"),
+            }
+            self.ws();
+            if self.peek() == Some(b',') {
+                self.i += 1;
+            }
+        }
+        Ok(TensorSpec {
+            shape: shape.context("tensor missing shape")?,
+            dtype: dtype.context("tensor missing dtype")?,
+        })
+    }
+
+    fn tensor_list(&mut self) -> Result<Vec<TensorSpec>> {
+        self.expect(b'[')?;
+        let mut v = Vec::new();
+        loop {
+            self.ws();
+            if self.peek() == Some(b']') {
+                self.i += 1;
+                break;
+            }
+            v.push(self.tensor()?);
+            self.ws();
+            if self.peek() == Some(b',') {
+                self.i += 1;
+            }
+        }
+        Ok(v)
+    }
+
+    fn artifact(&mut self) -> Result<ArtifactSpec> {
+        self.expect(b'{')?;
+        let mut file = None;
+        let mut inputs = None;
+        let mut outputs = None;
+        loop {
+            self.ws();
+            if self.peek() == Some(b'}') {
+                self.i += 1;
+                break;
+            }
+            let key = self.string()?;
+            self.expect(b':')?;
+            match key.as_str() {
+                "file" => file = Some(self.string()?),
+                "inputs" => inputs = Some(self.tensor_list()?),
+                "outputs" => outputs = Some(self.tensor_list()?),
+                other => bail!("unknown artifact key {other:?}"),
+            }
+            self.ws();
+            if self.peek() == Some(b',') {
+                self.i += 1;
+            }
+        }
+        Ok(ArtifactSpec {
+            file: file.context("artifact missing file")?,
+            inputs: inputs.context("artifact missing inputs")?,
+            outputs: outputs.context("artifact missing outputs")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "init_tiny": {
+        "file": "init_tiny.hlo.txt",
+        "inputs": [{"dtype": "u32", "shape": []}],
+        "outputs": [{"dtype": "f32", "shape": [64, 128]}, {"dtype": "f32", "shape": [128]}]
+      },
+      "k_quantize_1024x2048": {
+        "file": "k_quantize_1024x2048.hlo.txt",
+        "inputs": [{"dtype": "f32", "shape": [1024, 2048]}],
+        "outputs": [
+          {"dtype": "u8", "shape": [1024, 2048]},
+          {"dtype": "f32", "shape": [1024, 16]},
+          {"dtype": "s32", "shape": [1024, 16]}
+        ]
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 2);
+        let a = m.get("init_tiny").unwrap();
+        assert_eq!(a.file, "init_tiny.hlo.txt");
+        assert_eq!(a.inputs.len(), 1);
+        assert_eq!(a.inputs[0].dtype, Dtype::U32);
+        assert_eq!(a.inputs[0].shape, Vec::<usize>::new());
+        assert_eq!(a.outputs[0].shape, vec![64, 128]);
+        let k = m.get("k_quantize_1024x2048").unwrap();
+        assert_eq!(k.outputs[1].dtype, Dtype::F32);
+        assert_eq!(k.outputs[2].dtype, Dtype::S32);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("not json").is_err());
+        assert!(Manifest::parse(r#"{"a": {"file": "x"}}"#).is_err()); // missing fields
+    }
+
+    #[test]
+    fn n_elements() {
+        let t = TensorSpec { shape: vec![4, 8, 2], dtype: Dtype::F32 };
+        assert_eq!(t.n_elements(), 64);
+        let s = TensorSpec { shape: vec![], dtype: Dtype::U32 };
+        assert_eq!(s.n_elements(), 1);
+    }
+}

@@ -1,0 +1,121 @@
+//! Literal construction/extraction helpers for the restricted boundary
+//! dtype set (f32 / s32 / u8 / u32) used by every artifact.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::artifact::{Dtype, TensorSpec};
+use crate::util::mat::Mat;
+
+/// Build a literal of `spec`'s shape from raw bytes (row-major).
+pub fn from_bytes(spec: &TensorSpec, bytes: &[u8]) -> Result<xla::Literal> {
+    let want = spec.n_elements() * spec.dtype.size_bytes();
+    anyhow::ensure!(bytes.len() == want, "byte length {} != expected {want}", bytes.len());
+    let ty = prim(spec.dtype);
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        ty,
+        &spec.shape,
+        bytes,
+    )?)
+}
+
+fn prim(d: Dtype) -> xla::ElementType {
+    match d {
+        Dtype::F32 => xla::ElementType::F32,
+        Dtype::S32 => xla::ElementType::S32,
+        Dtype::U8 => xla::ElementType::U8,
+        Dtype::U32 => xla::ElementType::U32,
+    }
+}
+
+/// f32 tensor literal from a slice.
+pub fn f32_literal(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let spec = TensorSpec { shape: shape.to_vec(), dtype: Dtype::F32 };
+    let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+    from_bytes(&spec, &bytes)
+}
+
+/// i32 tensor literal from a slice.
+pub fn i32_literal(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let spec = TensorSpec { shape: shape.to_vec(), dtype: Dtype::S32 };
+    let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+    from_bytes(&spec, &bytes)
+}
+
+/// u8 tensor literal from a slice.
+pub fn u8_literal(shape: &[usize], data: &[u8]) -> Result<xla::Literal> {
+    let spec = TensorSpec { shape: shape.to_vec(), dtype: Dtype::U8 };
+    from_bytes(&spec, data)
+}
+
+/// u32 scalar literal (seeds).
+pub fn u32_scalar(v: u32) -> Result<xla::Literal> {
+    let spec = TensorSpec { shape: vec![], dtype: Dtype::U32 };
+    from_bytes(&spec, &v.to_le_bytes())
+}
+
+/// i32 scalar literal (step counters).
+pub fn i32_scalar(v: i32) -> Result<xla::Literal> {
+    let spec = TensorSpec { shape: vec![], dtype: Dtype::S32 };
+    from_bytes(&spec, &v.to_le_bytes())
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a u8 vector.
+pub fn to_u8_vec(lit: &xla::Literal) -> Result<Vec<u8>> {
+    Ok(lit.to_vec::<u8>()?)
+}
+
+/// Extract an i32 vector.
+pub fn to_i32_vec(lit: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+/// Extract a 2-D f32 literal into a [`Mat`].
+pub fn to_mat(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
+    let v = to_f32_vec(lit)?;
+    if v.len() != rows * cols {
+        bail!("literal has {} elements, expected {rows}x{cols}", v.len());
+    }
+    Ok(Mat::from_vec(rows, cols, v))
+}
+
+/// Scalar f32 (losses).
+pub fn to_f32_scalar(lit: &xla::Literal) -> Result<f32> {
+    let v = to_f32_vec(lit)?;
+    anyhow::ensure!(v.len() == 1, "expected scalar, got {} elements", v.len());
+    Ok(v[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let lit = f32_literal(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        assert_eq!(to_f32_vec(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let m = to_mat(&lit, 2, 3).unwrap();
+        assert_eq!(m.at(1, 2), 6.0);
+    }
+
+    #[test]
+    fn u8_roundtrip() {
+        let lit = u8_literal(&[4], &[7, 8, 9, 255]).unwrap();
+        assert_eq!(to_u8_vec(&lit).unwrap(), vec![7, 8, 9, 255]);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = i32_scalar(-42).unwrap();
+        assert_eq!(to_i32_vec(&lit).unwrap(), vec![-42]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(f32_literal(&[2, 2], &[1.0]).is_err());
+    }
+}

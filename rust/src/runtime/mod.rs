@@ -1,0 +1,97 @@
+//! PJRT runtime — loads the AOT artifacts (`artifacts/*.hlo.txt`) and
+//! executes them on the request path. Python never runs here.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): HLO **text** →
+//! [`xla::HloModuleProto::from_text_file`] → compile on the CPU PJRT
+//! client → execute. Device-resident buffers ([`xla::PjRtBuffer`]) are
+//! kept across steps by the training loop (`run_b`) so parameters and
+//! optimizer state never round-trip through the host.
+
+pub mod artifact;
+pub mod literal;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
+
+/// A compiled, loaded XLA executable plus its manifest entry.
+pub struct Executable {
+    pub name: String,
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host literals; returns the flattened output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            self.name,
+            self.spec.inputs.len(),
+            inputs.len()
+        );
+        let out = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute with device buffers (inputs stay on device); returns the
+    /// output buffers (still a 1-tuple wrapper is NOT unpacked here — the
+    /// caller decides when to fetch).
+    pub fn run_b(&self, inputs: &[xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut out = self.exe.execute_b::<xla::PjRtBuffer>(inputs)?;
+        Ok(out.remove(0))
+    }
+}
+
+/// The runtime: one PJRT client plus the artifact registry.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (reads `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?} — run `make artifacts` first"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, manifest, dir })
+    }
+
+    /// The artifacts dir: `$FP8_FLOW_ARTIFACTS` or `<crate>/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("FP8_FLOW_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Load + compile one artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        let spec = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        Ok(Executable { name: name.to_string(), spec, exe })
+    }
+
+    /// Copy a host literal to the device.
+    pub fn to_device(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+}

@@ -1,0 +1,11 @@
+//! Training driver — the Fig. 6 convergence experiment's engine.
+//!
+//! Rust owns the loop: data generation, step scheduling, metrics; the
+//! compute is the AOT `train_step_<recipe>_<cfg>` executable (L2 graph
+//! with L1 kernels inside). Python never runs here.
+
+pub mod data;
+pub mod trainer;
+
+pub use data::Corpus;
+pub use trainer::{TrainOutcome, Trainer};

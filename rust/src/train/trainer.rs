@@ -1,0 +1,98 @@
+//! The training loop over an AOT `train_step` executable.
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{literal, Executable, Runtime};
+use crate::train::data::Corpus;
+use crate::util::json::Json;
+
+/// Outcome of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainOutcome {
+    pub recipe: String,
+    pub losses: Vec<f32>,
+    pub steps: usize,
+    pub wall_s: f64,
+    pub tokens_per_s: f64,
+}
+
+/// Drives `init_<cfg>` + `train_step_<recipe>_<cfg>` from Rust.
+pub struct Trainer {
+    step_exe: Executable,
+    state: Vec<xla::Literal>,
+    n_leaves: usize,
+    batch: usize,
+    seq: usize,
+    recipe: String,
+}
+
+impl Trainer {
+    /// Initialize from artifacts: runs `init_<cfg>` with `seed`.
+    pub fn new(rt: &Runtime, cfg: &str, recipe: &str, seed: u32) -> Result<Trainer> {
+        let init = rt.load(&format!("init_{cfg}"))?;
+        let step_exe = rt.load(&format!("train_step_{recipe}_{cfg}"))?;
+        let state = init
+            .run(&[literal::u32_scalar(seed)?])
+            .context("running init")?;
+        anyhow::ensure!(state.len() % 3 == 0, "init output not 3P leaves");
+        let n_leaves = state.len() / 3;
+        let tok_spec = &step_exe.spec.inputs[3 * n_leaves + 1];
+        let (batch, seq) = (tok_spec.shape[0], tok_spec.shape[1]);
+        Ok(Trainer { step_exe, state, n_leaves, batch, seq, recipe: recipe.to_string() })
+    }
+
+    pub fn batch_shape(&self) -> (usize, usize) {
+        (self.batch, self.seq)
+    }
+
+    /// Run `steps` optimization steps against `corpus`, returning the loss
+    /// trajectory. `log_every > 0` prints progress lines.
+    pub fn run(&mut self, corpus: &mut Corpus, steps: usize, log_every: usize) -> Result<TrainOutcome> {
+        let p = self.n_leaves;
+        let mut losses = Vec::with_capacity(steps);
+        let t0 = std::time::Instant::now();
+        for s in 1..=steps {
+            let tokens = corpus.next_batch(self.batch, self.seq);
+            let mut inputs: Vec<xla::Literal> = Vec::with_capacity(3 * p + 2);
+            for lit in self.state.iter().take(3 * p) {
+                inputs.push(lit.clone());
+            }
+            inputs.push(literal::i32_scalar(s as i32)?);
+            inputs.push(literal::i32_literal(&[self.batch, self.seq], &tokens)?);
+            let out = self.step_exe.run(&inputs).with_context(|| format!("step {s}"))?;
+            let loss = literal::to_f32_scalar(&out[3 * p])?;
+            anyhow::ensure!(loss.is_finite(), "loss diverged at step {s}: {loss}");
+            losses.push(loss);
+            self.state = out[..3 * p].to_vec();
+            if log_every > 0 && s % log_every == 0 {
+                println!(
+                    "[{}] step {s:>5}  loss {loss:.4}  ({:.2} s/step)",
+                    self.recipe,
+                    t0.elapsed().as_secs_f64() / s as f64
+                );
+            }
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let tokens_per_s = (steps * self.batch * self.seq) as f64 / wall_s;
+        Ok(TrainOutcome { recipe: self.recipe.clone(), losses, steps, wall_s, tokens_per_s })
+    }
+}
+
+impl TrainOutcome {
+    /// Serialize to JSON (written into runs/*.json by the examples/CLI).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("recipe", self.recipe.as_str())
+            .set("steps", self.steps)
+            .set("wall_s", self.wall_s)
+            .set("tokens_per_s", self.tokens_per_s)
+            .set("losses", self.losses.iter().map(|&l| l as f64).collect::<Vec<f64>>())
+    }
+
+    /// Mean loss over the final `n` steps (the convergence comparison stat).
+    pub fn tail_mean(&self, n: usize) -> f64 {
+        let k = self.losses.len().saturating_sub(n);
+        let tail = &self.losses[k..];
+        tail.iter().map(|&l| l as f64).sum::<f64>() / tail.len().max(1) as f64
+    }
+}

@@ -1,0 +1,169 @@
+//! Miniature benchmark harness (substitute for `criterion`, which is not
+//! vendored in this image).
+//!
+//! Provides warmup, calibrated iteration counts, and robust statistics
+//! (median / p10 / p90), plus table-formatted reporting used by the
+//! per-figure/table bench binaries (`rust/benches/*.rs`, `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    /// Optional throughput denominator (bytes processed per iteration).
+    pub bytes: Option<u64>,
+}
+
+impl BenchStats {
+    pub fn median_ms(&self) -> f64 {
+        self.median.as_secs_f64() * 1e3
+    }
+
+    pub fn gib_per_s(&self) -> Option<f64> {
+        self.bytes
+            .map(|b| b as f64 / self.median.as_secs_f64() / (1u64 << 30) as f64)
+    }
+}
+
+/// Benchmark runner. `quick()` (or env `BENCH_QUICK=1`) shrinks budgets so
+/// `cargo test`-adjacent smoke runs stay fast.
+#[derive(Clone, Debug)]
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        if std::env::var("BENCH_QUICK").is_ok() {
+            Self::quick()
+        } else {
+            Bencher {
+                warmup: Duration::from_millis(200),
+                measure: Duration::from_millis(900),
+                min_iters: 5,
+                max_iters: 10_000,
+            }
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(20),
+            measure: Duration::from_millis(80),
+            min_iters: 3,
+            max_iters: 200,
+        }
+    }
+
+    /// Measure `f`, returning robust stats. `f` must do the full unit of
+    /// work each call; use `std::hint::black_box` on inputs/outputs.
+    pub fn run(&self, name: &str, mut f: impl FnMut()) -> BenchStats {
+        // Warmup + single-shot estimate.
+        let t0 = Instant::now();
+        let mut warm_iters = 0usize;
+        while t0.elapsed() < self.warmup || warm_iters == 0 {
+            f();
+            warm_iters += 1;
+            if warm_iters >= self.max_iters {
+                break;
+            }
+        }
+        let per_iter = t0.elapsed() / warm_iters.max(1) as u32;
+        let target = self
+            .measure
+            .as_nanos()
+            .checked_div(per_iter.as_nanos().max(1))
+            .unwrap_or(self.min_iters as u128) as usize;
+        let iters = target.clamp(self.min_iters, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        samples.sort();
+        let pick = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+        BenchStats {
+            name: name.to_string(),
+            iters,
+            median: pick(0.5),
+            p10: pick(0.1),
+            p90: pick(0.9),
+            bytes: None,
+        }
+    }
+
+    /// Like [`run`](Self::run) with a bytes-per-iteration annotation for
+    /// throughput reporting.
+    pub fn run_bytes(&self, name: &str, bytes: u64, f: impl FnMut()) -> BenchStats {
+        let mut s = self.run(name, f);
+        s.bytes = Some(bytes);
+        s
+    }
+}
+
+/// Print a uniform results table; used by every bench binary so outputs in
+/// `bench_output.txt` are machine-greppable (`ROW <bench> ...`).
+pub fn print_table(title: &str, rows: &[BenchStats]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>10} {:>10} {:>10} {:>10}",
+        "case", "median_ms", "p10_ms", "p90_ms", "GiB/s"
+    );
+    for r in rows {
+        println!(
+            "ROW {:<40} {:>10.4} {:>10.4} {:>10.4} {:>10}",
+            r.name,
+            r.median_ms(),
+            r.p10.as_secs_f64() * 1e3,
+            r.p90.as_secs_f64() * 1e3,
+            r.gib_per_s().map(|g| format!("{g:.2}")).unwrap_or_else(|| "-".into()),
+        );
+    }
+}
+
+/// Speedup line used by the figure benches ("who wins, by what factor").
+pub fn print_speedup(label: &str, baseline: &BenchStats, ours: &BenchStats) {
+    let s = baseline.median.as_secs_f64() / ours.median.as_secs_f64();
+    println!("SPEEDUP {label}: {s:.2}x  ({} -> {})", baseline.name, ours.name);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher::quick();
+        let mut acc = 0u64;
+        let s = b.run("noop-ish", || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(std::hint::black_box(i));
+            }
+        });
+        assert!(s.iters >= 3);
+        assert!(s.median > Duration::ZERO);
+        assert!(s.p10 <= s.median && s.median <= s.p90);
+    }
+
+    #[test]
+    fn throughput_annotation() {
+        let b = Bencher::quick();
+        let buf = vec![1u8; 1 << 16];
+        let s = b.run_bytes("memsum", buf.len() as u64, || {
+            std::hint::black_box(buf.iter().map(|&x| x as u64).sum::<u64>());
+        });
+        assert!(s.gib_per_s().unwrap() > 0.0);
+    }
+}

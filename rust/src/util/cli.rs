@@ -1,0 +1,115 @@
+//! Minimal command-line parsing (substitute for `clap`, not vendored).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args;
+//! typed getters with defaults. Each binary prints its own usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed argument bag.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — `std::env::args` callers
+    /// should use [`Args::from_env`].
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut out = Args::default();
+        let mut it = it.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag.
+                    let takes_value =
+                        matches!(it.peek(), Some(n) if !n.starts_with("--"));
+                    if takes_value {
+                        out.flags.insert(rest.to_string(), it.next().unwrap());
+                    } else {
+                        out.flags.insert(rest.to_string(), "true".to_string());
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(String::as_str), Some("true") | Some("1"))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = Args::parse(sv(&["train", "--steps", "100", "--lr=0.01", "--verbose"]));
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.usize_or("steps", 0), 100);
+        assert_eq!(a.f64_or("lr", 0.0), 0.01);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(sv(&[]));
+        assert_eq!(a.usize_or("steps", 7), 7);
+        assert_eq!(a.get_or("mode", "bf16"), "bf16");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse(sv(&["--fast", "--steps", "3"]));
+        assert!(a.flag("fast"));
+        assert_eq!(a.usize_or("steps", 0), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "expects an integer")]
+    fn bad_int_panics() {
+        let a = Args::parse(sv(&["--steps", "abc"]));
+        a.usize_or("steps", 0);
+    }
+}

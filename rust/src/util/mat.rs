@@ -1,0 +1,176 @@
+//! Minimal dense row-major `f32` matrix used throughout the native (L3)
+//! kernels and the test oracles. Deliberately tiny: the heavy lifting on
+//! the request path happens either in the FP8 domain (`crate::fp8`) or
+//! inside AOT-compiled XLA executables.
+
+use crate::util::rng::Rng;
+
+/// Dense row-major `f32` matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len(), "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Gaussian entries, `std` standard deviation.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.normal() * std).collect();
+        Mat { rows, cols, data }
+    }
+
+    /// Log-uniform magnitudes spanning `[2^lo, 2^hi)` with random signs —
+    /// the adversarial distribution for quantization tests.
+    pub fn rand_log_uniform(rows: usize, cols: usize, lo: f32, hi: f32, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.log_uniform_signed(lo, hi)).collect();
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// `self @ other`, f32 accumulate.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            for l in 0..k {
+                let a = self.data[i * k + l];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[l * n..(l + 1) * n];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Relative Frobenius error `|self − other|_F / |other|_F`.
+    pub fn rel_err(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let num: f64 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt();
+        let den = other.frobenius().max(1e-30);
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::seed_from(1);
+        let a = Mat::randn(7, 13, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn transpose_indices() {
+        let a = Mat::from_fn(3, 5, |i, j| (i * 10 + j) as f32);
+        let t = a.transpose();
+        for i in 0..3 {
+            for j in 0..5 {
+                assert_eq!(a.at(i, j), t.at(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn rel_err_zero_for_identical() {
+        let mut rng = Rng::seed_from(2);
+        let a = Mat::randn(4, 4, 1.0, &mut rng);
+        assert_eq!(a.rel_err(&a), 0.0);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::seed_from(3);
+        let a = Mat::randn(5, 5, 1.0, &mut rng);
+        let id = Mat::from_fn(5, 5, |i, j| if i == j { 1.0 } else { 0.0 });
+        let b = a.matmul(&id);
+        assert_eq!(a, b);
+    }
+}

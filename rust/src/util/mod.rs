@@ -1,0 +1,12 @@
+//! Small self-contained utilities that substitute for crates unavailable in
+//! this offline image (clap, criterion, proptest, serde, rand).
+//!
+//! Each submodule is deliberately tiny and fully tested; see DESIGN.md §3
+//! ("Dependency constraints") for the substitution rationale.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod mat;
+pub mod prop;
+pub mod rng;

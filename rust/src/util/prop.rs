@@ -1,0 +1,120 @@
+//! Miniature property-testing harness (substitute for `proptest`, which is
+//! not vendored in this image).
+//!
+//! Usage:
+//! ```
+//! use fp8_flow_moe::util::prop::{props, Gen};
+//! props("addition commutes", 256, |g: &mut Gen| {
+//!     let (a, b) = (g.f32_normal(), g.f32_normal());
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! Every run is seeded; on failure the panic message carries the case seed
+//! so the exact case can be replayed with `PROP_SEED=<seed>`. `PROP_CASES`
+//! scales the number of cases (e.g. `PROP_CASES=10000` for a soak run).
+
+use crate::util::rng::Rng;
+
+/// Case-level generator handed to each property execution.
+pub struct Gen {
+    pub rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    /// Standard-normal f32.
+    pub fn f32_normal(&mut self) -> f32 {
+        self.rng.normal()
+    }
+
+    /// Finite f32 spanning many binades (log-uniform magnitude, signed),
+    /// occasionally exactly zero — the adversarial quantizer input.
+    pub fn f32_wide(&mut self) -> f32 {
+        match self.rng.below(16) {
+            0 => 0.0,
+            1 => self.rng.log_uniform_signed(-20.0, -6.0), // deep subnormal region
+            2 => self.rng.log_uniform_signed(6.0, 12.0),   // near/above fp8 max
+            _ => self.rng.log_uniform_signed(-12.0, 9.0),
+        }
+    }
+
+    /// Uniform usize in `[lo, hi]`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// Vector of `n` values from `f`.
+    pub fn vec_of(&mut self, n: usize, mut f: impl FnMut(&mut Gen) -> f32) -> Vec<f32> {
+        (0..n).map(|_| f(self)).collect()
+    }
+}
+
+fn env_u64(name: &str) -> Option<u64> {
+    std::env::var(name).ok().and_then(|v| v.parse().ok())
+}
+
+/// Run `f` against `cases` random cases (scaled by `PROP_CASES`, overridden
+/// to a single case by `PROP_SEED`). Panics with the case seed on failure.
+pub fn props(name: &str, cases: usize, f: impl Fn(&mut Gen)) {
+    if let Some(seed) = env_u64("PROP_SEED") {
+        let mut g = Gen { rng: Rng::seed_from(seed), seed };
+        f(&mut g);
+        return;
+    }
+    let cases = env_u64("PROP_CASES").map(|c| c as usize).unwrap_or(cases);
+    // Derive per-case seeds from the property name so adding properties
+    // does not perturb existing ones.
+    let name_hash = name.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3)
+    });
+    for case in 0..cases {
+        let seed = name_hash.wrapping_add(case as u64);
+        let mut g = Gen { rng: Rng::seed_from(seed), seed };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut g)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed on case {case}/{cases} \
+                 (replay with PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        props("abs is non-negative", 64, |g| {
+            let x = g.f32_wide();
+            assert!(x.abs() >= 0.0);
+        });
+    }
+
+    #[test]
+    fn failure_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            props("always fails", 4, |_| panic!("boom"));
+        });
+        let err = r.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("PROP_SEED="), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn wide_generator_hits_zero_and_extremes() {
+        let mut g = Gen { rng: Rng::seed_from(123), seed: 123 };
+        let xs: Vec<f32> = (0..4096).map(|_| g.f32_wide()).collect();
+        assert!(xs.iter().any(|&x| x == 0.0));
+        assert!(xs.iter().any(|&x| x.abs() > 448.0));
+        assert!(xs.iter().any(|&x| x != 0.0 && x.abs() < 2.0_f32.powi(-9)));
+    }
+}

@@ -1,0 +1,96 @@
+//! Integration tests tying the dataflow graphs (Fig. 2) to the measured
+//! behaviour of the native MoE layer and the cluster simulator — the
+//! audited cast accounting must agree with what actually executes.
+
+use fp8_flow_moe::cluster::memory::AcMode;
+use fp8_flow_moe::cluster::model_cfg::DEEPSEEK_V3;
+use fp8_flow_moe::cluster::sim::simulate;
+use fp8_flow_moe::dataflow::{build, OpKind, Variant};
+use fp8_flow_moe::moe::layer::{moe_forward, MoeWeights, PreparedWeights, Recipe};
+use fp8_flow_moe::util::mat::Mat;
+use fp8_flow_moe::util::rng::Rng;
+
+#[test]
+fn paper_headline_twelve_to_two() {
+    assert_eq!(build(Variant::DeepSeekV3).explicit_casts(), 12);
+    assert_eq!(build(Variant::Fp8Flow).explicit_casts(), 2);
+}
+
+#[test]
+fn graph_forward_casts_match_executed_layer() {
+    // the graph's FORWARD cast count must equal what the native layer
+    // actually performs (layer.rs counts casts as it executes)
+    let mut rng = Rng::seed_from(7);
+    let x = Mat::randn(128, 128, 0.5, &mut rng);
+    let w = MoeWeights::random(128, 128, 2, &mut rng);
+
+    // fp8flow: graph says 1 fwd cast (entry quantize)
+    let g = build(Variant::Fp8Flow);
+    let fwd_casts = g.nodes.iter().filter(|n| !n.backward && n.op.is_explicit_cast()).count();
+    let out = moe_forward(&x, &PreparedWeights::new(w.clone(), Recipe::Fp8Flow), 1, 128);
+    assert_eq!(out.cast_ops, fwd_casts, "fp8flow fwd casts");
+
+    // blockwise: graph says 2 fwd casts per expert path; the native layer
+    // executes per-expert (2·E with E=2 experts) — per-expert granularity
+    // is an implementation detail, the per-layer kernel count is what the
+    // graph models
+    let gb = build(Variant::TeBlockwise);
+    let fwd_casts_b = gb.nodes.iter().filter(|n| !n.backward && n.op.is_explicit_cast()).count();
+    assert_eq!(fwd_casts_b, 2);
+    let outb = moe_forward(&x, &PreparedWeights::new(w, Recipe::Blockwise), 1, 128);
+    assert_eq!(outb.cast_ops, fwd_casts_b * 2 /* experts */, "blockwise fwd casts");
+}
+
+#[test]
+fn sim_cast_cost_proportional_to_graph_counts() {
+    // more explicit casts in the graph ⇒ more cast wallclock in the sim
+    let t = |r: Recipe| simulate(&DEEPSEEK_V3, 16, 16, r, AcMode::Full).t_cast;
+    let (bf16, block, flow) = (t(Recipe::Bf16), t(Recipe::Blockwise), t(Recipe::Fp8Flow));
+    assert_eq!(bf16, 0.0);
+    assert!(flow > 0.0 && block > flow);
+    // graph ratio 4:2 ⇒ sim ratio ≈ 2
+    let ratio = block / flow;
+    assert!((1.5..3.0).contains(&ratio), "ratio {ratio}");
+}
+
+#[test]
+fn fp8flow_kernel_launch_reduction() {
+    // fusion reduces launches vs deepseek-style by a meaningful margin
+    let ds = build(Variant::DeepSeekV3).kernel_launches();
+    let flow = build(Variant::Fp8Flow).kernel_launches();
+    assert!(flow as f64 <= ds as f64 * 0.8, "{flow} vs {ds}");
+}
+
+#[test]
+fn fp8_edges_dominate_fp8flow_expert_path() {
+    let g = build(Variant::Fp8Flow);
+    let expert_path: Vec<_> = g
+        .nodes
+        .iter()
+        .filter(|n| {
+            matches!(
+                n.stage,
+                fp8_flow_moe::dataflow::Stage::Permute
+                    | fp8_flow_moe::dataflow::Stage::Fc1
+                    | fp8_flow_moe::dataflow::Stage::Activation
+                    | fp8_flow_moe::dataflow::Stage::Fc2
+            )
+        })
+        .collect();
+    let fp8 = expert_path
+        .iter()
+        .filter(|n| n.out_dtype == fp8_flow_moe::dataflow::Dtype::Fp8)
+        .count();
+    // FP8 persists across most of the expert path (§3.2)
+    assert!(fp8 * 2 > expert_path.len(), "{fp8}/{}", expert_path.len());
+}
+
+#[test]
+fn all_variants_render_and_validate() {
+    for v in Variant::all() {
+        let g = build(v);
+        g.validate().unwrap();
+        let r = g.render();
+        assert!(r.contains("explicit casts"));
+    }
+}

@@ -1,0 +1,116 @@
+//! Integration tests across the native MoE substrate: router → permute →
+//! grouped FP8 GEMM → SwiGLU → combine, plus FP8/BF16 recipe coherence.
+
+use fp8_flow_moe::fp8::tile::quantize_rowwise;
+use fp8_flow_moe::fp8::transpose::direct_transpose;
+use fp8_flow_moe::fp8::{Fp8Format, ScaleMode};
+use fp8_flow_moe::moe::gemm::fp8_matmul;
+use fp8_flow_moe::moe::layer::{moe_forward, MoeWeights, PreparedWeights, Recipe};
+use fp8_flow_moe::moe::permute::{permute_pad_plan, unpermute_unpad};
+use fp8_flow_moe::moe::router::route;
+use fp8_flow_moe::util::mat::Mat;
+use fp8_flow_moe::util::rng::Rng;
+
+#[test]
+fn full_layer_pipeline_is_finite_and_reasonable() {
+    let mut rng = Rng::seed_from(100);
+    let (t, d, h, e) = (256, 128, 256, 4);
+    let x = Mat::randn(t, d, 0.7, &mut rng);
+    let w = MoeWeights::random(d, h, e, &mut rng);
+    for recipe in [Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow] {
+        let pw = PreparedWeights::new(w.clone(), recipe);
+        let out = moe_forward(&x, &pw, 2, 128);
+        assert!(out.y.data.iter().all(|v| v.is_finite()), "{recipe:?}");
+        assert!(out.y.frobenius() > 0.0);
+        assert!(out.aux_loss >= 0.9, "{recipe:?} aux {}", out.aux_loss);
+    }
+}
+
+#[test]
+fn wgrad_via_direct_transpose_matches_explicit_colwise_gemm() {
+    // The dataflow's key step: Wgrad consumes direct_T(Q_row(x)). Verify
+    // the GEMM result equals using an explicitly column-quantized operand,
+    // up to the bounded-underflow tolerance.
+    let mut rng = Rng::seed_from(101);
+    let x = Mat::rand_log_uniform(256, 256, -4.0, 4.0, &mut rng); // activations
+    let dy = Mat::randn(256, 128, 1.0, &mut rng); // upstream grads
+    let q_x = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+    let xt = direct_transpose(&q_x); // [256(k), 256(m)] = Q(xᵀ)
+    let q_dy_t = quantize_rowwise(&dy.transpose(), Fp8Format::E4M3, ScaleMode::Po2);
+    // dw = xᵀ @ dy = fp8_matmul(xt, Q(dyᵀ))
+    let dw = fp8_matmul(&xt, &q_dy_t);
+    // reference: f32 GEMM on dequantized one-rounding values
+    let expect = q_x.dequantize().transpose().matmul(&dy);
+    let rel = dw.rel_err(&expect);
+    assert!(rel < 0.08, "rel={rel}");
+}
+
+#[test]
+fn expert_locality_of_permute() {
+    // tokens routed to expert e land contiguously in e's capacity segment
+    let mut rng = Rng::seed_from(102);
+    let x = Mat::randn(128, 64, 1.0, &mut rng);
+    let wr = Mat::randn(64, 4, 1.0, &mut rng);
+    let r = route(&x, &wr, 1);
+    let expert_of: Vec<usize> = r.experts.iter().map(|e| e[0]).collect();
+    let plan = permute_pad_plan(&expert_of, 4, 64);
+    for (d, &src) in plan.iter().enumerate() {
+        if src >= 0 {
+            assert_eq!(expert_of[src as usize], d / 64);
+        }
+    }
+}
+
+#[test]
+fn combine_weights_by_gates() {
+    // with top_k=1 and capacity ≥ tokens, unpermute(permute(x)) == x and
+    // the layer output equals gate * expert_ffn(x) tokenwise
+    let mut rng = Rng::seed_from(103);
+    let (t, d) = (64, 128);
+    let x = Mat::randn(t, d, 0.5, &mut rng);
+    let w = MoeWeights::random(d, 128, 2, &mut rng);
+    let pw = PreparedWeights::new(w.clone(), Recipe::Bf16);
+    let out = moe_forward(&x, &pw, 1, 64);
+    let r = route(&x, &w.router, 1);
+    // recompute token 0 by hand
+    let e0 = r.experts[0][0];
+    let x0 = Mat::from_vec(1, d, x.row(0).to_vec());
+    let gate = x0.matmul(&w.w1[e0]);
+    let up = x0.matmul(&w.w3[e0]);
+    let act = fp8_flow_moe::moe::swiglu::swiglu(&gate, &up);
+    let y0 = act.matmul(&w.w2[e0]);
+    for j in 0..d {
+        let want = r.gates[0][0] * y0.data[j];
+        let got = out.y.at(0, j);
+        assert!((want - got).abs() < 1e-4, "j={j}: {want} vs {got}");
+    }
+}
+
+#[test]
+fn scatter_add_semantics_for_topk() {
+    // a token appearing in two plans receives the sum of both expert outs
+    let y1 = Mat::from_fn(4, 2, |i, _| i as f32);
+    let plan = vec![2i64, -1, 0, 1];
+    let back = unpermute_unpad(&y1, &plan, 3);
+    assert_eq!(back.at(2, 0), 0.0); // dest row 0 ← src plan[0]=2? no: plan[d]=src token
+    assert_eq!(back.at(0, 0), 2.0); // token 0 came from row 2
+    assert_eq!(back.at(1, 0), 3.0);
+}
+
+#[test]
+fn fp8flow_more_accurate_than_blockwise_on_wide_dynamic_range() {
+    // po2 + direct transpose should not be WORSE than float-scale
+    // blockwise on wide-dynamic-range inputs (the adversarial case for
+    // quantization); both stay within tolerance of bf16.
+    let mut rng = Rng::seed_from(104);
+    let (t, d, h, e) = (256, 128, 128, 2);
+    let x = Mat::rand_log_uniform(t, d, -5.0, 3.0, &mut rng);
+    let w = MoeWeights::random(d, h, e, &mut rng);
+    let bf16 = moe_forward(&x, &PreparedWeights::new(w.clone(), Recipe::Bf16), 1, 256);
+    let flow = moe_forward(&x, &PreparedWeights::new(w.clone(), Recipe::Fp8Flow), 1, 256);
+    let block = moe_forward(&x, &PreparedWeights::new(w, Recipe::Blockwise), 1, 256);
+    let rel_flow = flow.y.rel_err(&bf16.y);
+    let rel_block = block.y.rel_err(&bf16.y);
+    assert!(rel_flow < 0.25 && rel_block < 0.25);
+    assert!(rel_flow < rel_block * 2.0, "flow {rel_flow} vs block {rel_block}");
+}

@@ -1,0 +1,161 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! Require `make artifacts` to have run (skipped with a clear message
+//! otherwise). These are the cross-layer proofs: the L2 JAX graphs (with
+//! L1 kernels inside) load, compile and execute via the Rust runtime, and
+//! their numerics match the native Rust substrate.
+
+use fp8_flow_moe::fp8::tile::quantize_rowwise;
+use fp8_flow_moe::fp8::transpose::direct_transpose;
+use fp8_flow_moe::fp8::{Fp8Format, ScaleMode};
+use fp8_flow_moe::runtime::{literal, Runtime};
+use fp8_flow_moe::util::mat::Mat;
+use fp8_flow_moe::util::rng::Rng;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    match Runtime::open(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP: artifacts unavailable ({e:#}) — run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for name in [
+        "init_tiny",
+        "train_step_bf16_tiny",
+        "train_step_fp8flow_tiny",
+        "train_step_blockwise_tiny",
+        "moe_fwd_bf16_tiny",
+        "moe_fwd_fp8flow_tiny",
+    ] {
+        assert!(rt.manifest.get(name).is_some(), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn init_then_train_step_tiny_decreases_loss() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let init = rt.load("init_tiny").unwrap();
+    let step = rt.load("train_step_fp8flow_tiny").unwrap();
+
+    let state = init.run(&[literal::u32_scalar(42).unwrap()]).unwrap();
+    // init returns params + m + v (3P leaves)
+    assert_eq!(state.len() % 3, 0);
+    let p = state.len() / 3;
+    assert_eq!(step.spec.inputs.len(), 3 * p + 2);
+
+    // synthetic token stream (structured: repeating n-grams => learnable)
+    let (batch, seq) = (
+        step.spec.inputs[3 * p + 1].shape[0],
+        step.spec.inputs[3 * p + 1].shape[1],
+    );
+    let mut rng = Rng::seed_from(7);
+    let vocab = 64i32;
+    let mut losses = Vec::new();
+    let mut state = state;
+    for s in 1..=8 {
+        let tokens: Vec<i32> = (0..batch * seq)
+            .map(|i| ((i % 13) as i32 * 5 + (rng.below(3) as i32)) % vocab)
+            .collect();
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(3 * p + 2);
+        for lit in state.iter().take(3 * p) {
+            inputs.push(lit.clone());
+        }
+        inputs.push(literal::i32_scalar(s).unwrap());
+        inputs.push(literal::i32_literal(&[batch, seq], &tokens).unwrap());
+        let out = step.run(&inputs).unwrap();
+        assert_eq!(out.len(), 3 * p + 1);
+        let loss = literal::to_f32_scalar(&out[3 * p]).unwrap();
+        assert!(loss.is_finite(), "loss diverged at step {s}");
+        losses.push(loss);
+        state = out[..3 * p].to_vec();
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss should decrease on structured data: {losses:?}"
+    );
+}
+
+#[test]
+fn moe_fwd_recipes_agree_within_quantization_tolerance() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let bf16 = rt.load("moe_fwd_bf16_tiny").unwrap();
+    let fp8 = rt.load("moe_fwd_fp8flow_tiny").unwrap();
+
+    let spec = &bf16.spec.inputs;
+    let mut rng = Rng::seed_from(3);
+    let mut mk = |shape: &[usize], rng: &mut Rng, scale: f32| {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = (0..n).map(|_| rng.normal() * scale).collect();
+        literal::f32_literal(shape, &data).unwrap()
+    };
+    let inputs: Vec<xla::Literal> = spec
+        .iter()
+        .map(|t| mk(&t.shape, &mut rng, 0.5))
+        .collect();
+
+    let y_bf16 = bf16.run(&inputs).unwrap();
+    let y_fp8 = fp8.run(&inputs).unwrap();
+    let a = literal::to_f32_vec(&y_bf16[0]).unwrap();
+    let b = literal::to_f32_vec(&y_fp8[0]).unwrap();
+    assert_eq!(a.len(), b.len());
+    let num: f64 = a.iter().zip(&b).map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>().sqrt();
+    let den: f64 = a.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt().max(1e-9);
+    let rel = num / den;
+    assert!(rel < 0.15, "recipes diverged: rel={rel}");
+    assert!(rel > 0.0, "fp8 recipe should differ from bf16 at all");
+}
+
+#[test]
+fn hlo_direct_transpose_matches_rust_native_bitwise() {
+    let Some(rt) = runtime_or_skip() else { return };
+    if rt.manifest.get("k_direct_transpose_1024x2048").is_none() {
+        eprintln!("SKIP: kernel artifacts not built");
+        return;
+    }
+    let exe = rt.load("k_direct_transpose_1024x2048").unwrap();
+    let (m, n) = (1024usize, 2048usize);
+
+    let mut rng = Rng::seed_from(11);
+    let x = Mat::rand_log_uniform(m, n, -6.0, 6.0, &mut rng);
+    let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+
+    let inputs = vec![
+        literal::u8_literal(&[m, n], &q.data).unwrap(),
+        literal::i32_literal(&[m, n / 128], &q.sexp).unwrap(),
+    ];
+    let out = exe.run(&inputs).unwrap();
+    let hlo_codes = literal::to_u8_vec(&out[0]).unwrap();
+    let hlo_sexp = literal::to_i32_vec(&out[2]).unwrap();
+
+    let t = direct_transpose(&q);
+    assert_eq!(hlo_codes, t.data, "HLO and Rust direct transpose payload differ");
+    assert_eq!(hlo_sexp, t.sexp, "HLO and Rust direct transpose scales differ");
+}
+
+#[test]
+fn hlo_quantize_matches_rust_native_bitwise() {
+    let Some(rt) = runtime_or_skip() else { return };
+    if rt.manifest.get("k_quantize_1024x2048").is_none() {
+        eprintln!("SKIP: kernel artifacts not built");
+        return;
+    }
+    let exe = rt.load("k_quantize_1024x2048").unwrap();
+    let (m, n) = (1024usize, 2048usize);
+    let mut rng = Rng::seed_from(13);
+    let x = Mat::rand_log_uniform(m, n, -6.0, 6.0, &mut rng);
+    let out = exe
+        .run(&[literal::f32_literal(&[m, n], &x.data).unwrap()])
+        .unwrap();
+    let hlo_codes = literal::to_u8_vec(&out[0]).unwrap();
+    let hlo_sexp = literal::to_i32_vec(&out[2]).unwrap();
+    let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+    assert_eq!(hlo_codes, q.data, "HLO and Rust quantizer payload differ");
+    assert_eq!(hlo_sexp, q.sexp, "HLO and Rust quantizer scales differ");
+}

@@ -1,0 +1,156 @@
+//! Property-test suite over the FP8 numeric substrate — the crate-level
+//! invariants of DESIGN.md §6, run through the seeded property harness
+//! (`PROP_CASES` env scales case counts; failures print a replay seed).
+
+use fp8_flow_moe::fp8::tile::{quantize_rowwise, quantize_vec};
+use fp8_flow_moe::fp8::transpose::{direct_transpose, naive_transpose};
+use fp8_flow_moe::fp8::{e4m3, e5m2, Fp8Format, ScaleMode, TILE};
+use fp8_flow_moe::util::mat::Mat;
+use fp8_flow_moe::util::prop::props;
+use fp8_flow_moe::util::rng::Rng;
+
+#[test]
+fn prop_encode_decode_galois() {
+    // decode∘encode is idempotent: encode(decode(encode(x))) == encode(x)
+    props("e4m3 galois", 512, |g| {
+        let x = g.f32_wide();
+        let c = e4m3::encode(x);
+        let c2 = e4m3::encode(e4m3::decode(c));
+        if e4m3::is_nan(c) {
+            // NaN sign is not preserved through f32 (canonical NaN)
+            assert!(e4m3::is_nan(c2), "x={x} c={c:#04x}");
+        } else {
+            assert_eq!(c2, c, "x={x} c={c:#04x}");
+        }
+    });
+}
+
+#[test]
+fn prop_encode_monotone() {
+    props("e4m3 monotone", 512, |g| {
+        let a = g.f32_wide();
+        let b = g.f32_wide();
+        if !a.is_finite() || !b.is_finite() {
+            return;
+        }
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        let (cl, ch) = (e4m3::decode(e4m3::encode(lo)), e4m3::decode(e4m3::encode(hi)));
+        if cl.is_nan() || ch.is_nan() {
+            return; // overflow → NaN (|x| > 464)
+        }
+        assert!(cl <= ch, "monotonicity: {lo} -> {cl}, {hi} -> {ch}");
+    });
+}
+
+#[test]
+fn prop_decode_within_half_ulp() {
+    // |x − D(E(x))| ≤ max(|x|/16, half subnormal) for in-range x
+    props("e4m3 half-ulp", 512, |g| {
+        let x = g.rng.range_f32(-400.0, 400.0);
+        let d = e4m3::decode(e4m3::encode(x));
+        let tol = (x.abs() / 16.0).max(0.5 * e4m3::MIN_SUBNORMAL);
+        assert!((x - d).abs() <= tol * (1.0 + 1e-6), "x={x} d={d}");
+    });
+}
+
+#[test]
+fn prop_e5m2_wider_coarser() {
+    props("e5m2 vs e4m3 tradeoff", 256, |g| {
+        let x = g.rng.range_f32(1.0, 400.0);
+        let d4 = (e4m3::decode(e4m3::encode(x)) - x).abs();
+        let d5 = (e5m2::decode(e5m2::encode(x)) - x).abs();
+        // same magnitude range: e4m3 is at least as precise
+        assert!(d4 <= d5 + 1e-6, "x={x}: e4m3 err {d4} vs e5m2 err {d5}");
+    });
+}
+
+#[test]
+fn prop_scale_down_conserves_value() {
+    // scale_down_code(c, k) represents decode(c)·2^-k exactly or to the
+    // nearest subnormal grid point
+    props("scale_down semantics", 512, |g| {
+        let c = (g.rng.next_u64() & 0xFF) as u8;
+        let k = (g.rng.next_u64() % 16) as u32;
+        if e4m3::is_nan(c) {
+            assert!(e4m3::is_nan(e4m3::scale_down_code(c, k)));
+            return;
+        }
+        let want = e4m3::decode(c) * (-(k as f32)).exp2();
+        let got = e4m3::decode(e4m3::scale_down_code(c, k));
+        let tol = 0.5 * e4m3::MIN_SUBNORMAL;
+        assert!((want - got).abs() <= tol, "c={c:#04x} k={k}: want {want} got {got}");
+    });
+}
+
+#[test]
+fn prop_quantize_never_overflows() {
+    // the quantizer's scale choice keeps every payload finite, both modes
+    props("no payload overflow", 128, |g| {
+        let n = TILE * g.usize_in(1, 4);
+        let xs: Vec<f32> = g
+            .vec_of(n, |g| g.f32_wide())
+            .iter()
+            .map(|&v| if v.is_finite() { v } else { 0.0 })
+            .collect();
+        for mode in [ScaleMode::Float, ScaleMode::Po2] {
+            let q = quantize_vec(&xs, Fp8Format::E4M3, mode);
+            assert!(q.data.iter().all(|&c| !e4m3::is_nan(c)), "{mode:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_direct_transpose_value_preserving() {
+    // the paper's core claim, property-tested over random shapes/data:
+    // D(direct_T(Q)) == D(Q)ᵀ up to bounded subnormal underflow
+    props("direct transpose lossless", 24, |g| {
+        let m = g.usize_in(1, 3) * 64;
+        let n = g.usize_in(1, 3) * 64;
+        let mut rng = Rng::seed_from(g.seed ^ 0xD17EC7);
+        let spread = g.usize_in(2, 8) as f32;
+        let x = Mat::rand_log_uniform(m, n, -spread, spread, &mut rng);
+        let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        let t = direct_transpose(&q);
+        let dq = q.dequantize();
+        let dt = t.dequantize();
+        for i in 0..m {
+            for j in 0..n {
+                let tol = 0.5 * e4m3::MIN_SUBNORMAL * t.scale_at(j, i);
+                assert!(
+                    (dq.at(i, j) - dt.at(j, i)).abs() <= tol,
+                    "({i},{j}) {} vs {}",
+                    dq.at(i, j),
+                    dt.at(j, i)
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_double_transpose_identity_in_value_space() {
+    props("transpose involution", 16, |g| {
+        let m = g.usize_in(1, 2) * 128;
+        let n = g.usize_in(1, 2) * 128;
+        let mut rng = Rng::seed_from(g.seed ^ 0xB0B);
+        let x = Mat::rand_log_uniform(m, n, -4.0, 4.0, &mut rng);
+        let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        let tt = direct_transpose(&direct_transpose(&q));
+        let rel = tt.dequantize().rel_err(&q.dequantize());
+        assert!(rel < 1e-3, "rel={rel}");
+    });
+}
+
+#[test]
+fn prop_naive_transpose_error_bounded_by_one_rounding() {
+    // even the WORST recipe's double-quant error is bounded by two
+    // independent roundings: rel ≤ 2·(1/16) per element ⇒ rel_fro ≤ 0.13
+    props("naive transpose bounded", 24, |g| {
+        let mut rng = Rng::seed_from(g.seed ^ 0xAA);
+        let x = Mat::rand_log_uniform(128, 128, -5.0, 5.0, &mut rng);
+        let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Float);
+        let nt = naive_transpose(&q);
+        let rel = nt.dequantize().rel_err(&q.dequantize().transpose());
+        assert!(rel < 0.13, "rel={rel}");
+    });
+}
