@@ -10,10 +10,13 @@
 
 use fp8_flow_moe::fp8::error::dqe_report;
 use fp8_flow_moe::fp8::{Fp8Format, ScaleMode};
+use fp8_flow_moe::util::cli::Args;
 use fp8_flow_moe::util::mat::Mat;
 use fp8_flow_moe::util::rng::Rng;
 
 fn main() {
+    // analytic report: accepts --threads for CLI uniformity (no kernels run)
+    fp8_flow_moe::exec::set_threads(Args::from_env().usize_or("threads", 0));
     println!("ablation: double quantization error (rel Frobenius vs one-rounding ref)");
     println!(
         "{:<10} {:>12} {:>14} {:>14} {:>14}",

@@ -8,13 +8,15 @@
 use fp8_flow_moe::fp8::tile::quantize_rowwise;
 use fp8_flow_moe::fp8::transpose::{direct_transpose, naive_transpose};
 use fp8_flow_moe::fp8::{Fp8Format, ScaleMode};
-use fp8_flow_moe::util::bench::{print_speedup, print_table, Bencher};
+use fp8_flow_moe::util::bench::{bencher_from_cli, print_speedup, print_table};
 use fp8_flow_moe::util::mat::Mat;
 use fp8_flow_moe::util::rng::Rng;
 use std::hint::black_box;
 
 fn main() {
-    let b = Bencher::default();
+    // default to serial kernels: the unfused baselines are serial, so the
+    // figure's SPEEDUP must isolate fusion (override with --threads N)
+    let (b, _args) = bencher_from_cli(1);
     let shapes = [(1024usize, 2048usize), (2048, 2048), (2048, 5120), (4096, 2048)];
     let mut rows = Vec::new();
     println!("Fig. 1 — direct vs naive FP8 transpose (paper: 2-3x)");

@@ -5,13 +5,15 @@
 use fp8_flow_moe::moe::permute::{
     permute_pad, permute_pad_plan, unpad_then_unpermute, unpermute_unpad,
 };
-use fp8_flow_moe::util::bench::{print_speedup, print_table, Bencher};
+use fp8_flow_moe::util::bench::{bencher_from_cli, print_speedup, print_table};
 use fp8_flow_moe::util::mat::Mat;
 use fp8_flow_moe::util::rng::Rng;
 use std::hint::black_box;
 
 fn main() {
-    let b = Bencher::default();
+    // default to serial kernels: the unfused baselines are serial, so the
+    // figure's SPEEDUP must isolate fusion (override with --threads N)
+    let (b, _args) = bencher_from_cli(1);
     let configs = [(4096usize, 1024usize, 8usize), (8192, 1024, 16), (8192, 2048, 32)];
     let mut rows = Vec::new();
     println!("Fig. 4 — fused vs unfused unpermute+unpad (paper: up to 6.6x bwd)");

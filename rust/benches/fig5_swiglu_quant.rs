@@ -5,13 +5,15 @@
 
 use fp8_flow_moe::fp8::{Fp8Format, ScaleMode};
 use fp8_flow_moe::moe::swiglu::{swiglu, swiglu_quant, swiglu_then_quant};
-use fp8_flow_moe::util::bench::{print_table, Bencher};
+use fp8_flow_moe::util::bench::{bencher_from_cli, print_table};
 use fp8_flow_moe::util::mat::Mat;
 use fp8_flow_moe::util::rng::Rng;
 use std::hint::black_box;
 
 fn main() {
-    let b = Bencher::default();
+    // default to serial kernels: the unfused baselines are serial, so the
+    // figure's SPEEDUP must isolate fusion (override with --threads N)
+    let (b, _args) = bencher_from_cli(1);
     let shapes = [(2048usize, 1408usize), (4096, 2048), (8192, 2048)];
     let mut rows = Vec::new();
     println!("Fig. 5 — fused swiglu+quant vs standalone swiglu (paper: ~equal)");

@@ -1,19 +1,26 @@
 //! Hot-path kernel microbenchmarks (§Perf): throughput of the native
 //! quantizer, codec, direct transpose and FP8 GEMM, with a `memcpy`
-//! roofline reference for the movement kernels. This is the bench the
-//! EXPERIMENTS.md §Perf iteration log quotes.
+//! roofline reference for the movement kernels — plus the tile-parallel
+//! scaling section: each hot kernel and the fused expert pipeline
+//! (grouped GEMM → swiglu_quant → grouped GEMM) at 1 vs 8 workers.
+//! This is the bench the EXPERIMENTS.md §Perf iteration log quotes.
+//!
+//! `--threads N` sets the worker count for the serial section's kernels;
+//! the scaling section always compares explicit worker counts.
 
-use fp8_flow_moe::fp8::tile::quantize_rowwise;
-use fp8_flow_moe::fp8::transpose::direct_transpose;
+use fp8_flow_moe::fp8::tile::{quantize_rowwise, quantize_rowwise_with_threads};
+use fp8_flow_moe::fp8::transpose::{direct_transpose, direct_transpose_with_threads};
 use fp8_flow_moe::fp8::{e4m3, Fp8Format, ScaleMode};
-use fp8_flow_moe::moe::gemm::fp8_matmul;
-use fp8_flow_moe::util::bench::{print_table, Bencher};
+use fp8_flow_moe::moe::gemm::{fp8_matmul, fp8_matmul_with_threads};
+use fp8_flow_moe::moe::layer::{fused_expert_ffn, MoeWeights, PreparedWeights, Recipe};
+use fp8_flow_moe::moe::swiglu::swiglu_quant_with_threads;
+use fp8_flow_moe::util::bench::{bencher_from_cli, print_speedup, print_table};
 use fp8_flow_moe::util::mat::Mat;
 use fp8_flow_moe::util::rng::Rng;
 use std::hint::black_box;
 
 fn main() {
-    let b = Bencher::default();
+    let (b, args) = bencher_from_cli(0);
     let mut rows = Vec::new();
     let (m, n) = (2048usize, 2048usize);
     let mut rng = Rng::seed_from(9);
@@ -65,4 +72,68 @@ fn main() {
     rows.push(gemm);
 
     print_table("perf_kernels", &rows);
+
+    // ---- tile-parallel scaling: serial vs N workers per kernel ----
+    let hi = args.usize_or("scale-threads", 8);
+    println!("\n== parallel scaling (1 vs {hi} workers; bit-identical outputs) ==");
+    let mut srows = Vec::new();
+
+    let q1 = b.run_bytes("quantize_rowwise t=1", (m * n * 5) as u64, || {
+        black_box(quantize_rowwise_with_threads(black_box(&x), Fp8Format::E4M3, ScaleMode::Po2, 1));
+    });
+    let qn = b.run_bytes(&format!("quantize_rowwise t={hi}"), (m * n * 5) as u64, || {
+        black_box(quantize_rowwise_with_threads(black_box(&x), Fp8Format::E4M3, ScaleMode::Po2, hi));
+    });
+    print_speedup("quantize_rowwise", &q1, &qn);
+
+    let t1 = b.run_bytes("direct_transpose t=1", (2 * m * n) as u64, || {
+        black_box(direct_transpose_with_threads(black_box(&q), 1));
+    });
+    let tn = b.run_bytes(&format!("direct_transpose t={hi}"), (2 * m * n) as u64, || {
+        black_box(direct_transpose_with_threads(black_box(&q), hi));
+    });
+    print_speedup("direct_transpose", &t1, &tn);
+
+    let g1 = b.run("fp8_matmul t=1", || {
+        black_box(fp8_matmul_with_threads(black_box(&q), black_box(&w), 1));
+    });
+    let gn = b.run(&format!("fp8_matmul t={hi}"), || {
+        black_box(fp8_matmul_with_threads(black_box(&q), black_box(&w), hi));
+    });
+    print_speedup("fp8_matmul", &g1, &gn);
+
+    let gate = Mat::randn(4096, 2048, 1.0, &mut rng);
+    let up = Mat::randn(4096, 2048, 1.0, &mut rng);
+    let s1 = b.run("swiglu_quant t=1", || {
+        black_box(swiglu_quant_with_threads(
+            black_box(&gate), black_box(&up), Fp8Format::E4M3, ScaleMode::Po2, 1,
+        ));
+    });
+    let sn = b.run(&format!("swiglu_quant t={hi}"), || {
+        black_box(swiglu_quant_with_threads(
+            black_box(&gate), black_box(&up), Fp8Format::E4M3, ScaleMode::Po2, hi,
+        ));
+    });
+    print_speedup("swiglu_quant", &s1, &sn);
+
+    // the expert FFN streaming pipeline: grouped GEMM → fused swiglu_quant
+    // → grouped GEMM, E experts in parallel (the acceptance-criteria path)
+    let (e, cap, d, h) = (8usize, 512usize, 512usize, 512usize);
+    let mw = MoeWeights::random(d, h, e, &mut rng);
+    let pw = PreparedWeights::new(mw, Recipe::Fp8Flow);
+    let xg = quantize_rowwise(
+        &Mat::randn(e * cap, d, 0.5, &mut rng),
+        Fp8Format::E4M3,
+        ScaleMode::Po2,
+    );
+    let p1 = b.run("expert_ffn pipeline t=1", || {
+        black_box(fused_expert_ffn(black_box(&xg), &pw.w1_t, &pw.w3_t, &pw.w2_t, cap, 1));
+    });
+    let pn = b.run(&format!("expert_ffn pipeline t={hi}"), || {
+        black_box(fused_expert_ffn(black_box(&xg), &pw.w1_t, &pw.w3_t, &pw.w2_t, cap, hi));
+    });
+    print_speedup("grouped GEMM + fused swiglu_quant pipeline", &p1, &pn);
+
+    srows.extend([q1, qn, t1, tn, g1, gn, s1, sn, p1, pn]);
+    print_table("perf_kernels_scaling", &srows);
 }

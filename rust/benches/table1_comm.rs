@@ -4,8 +4,11 @@
 //! pattern, not absolute ms).
 
 use fp8_flow_moe::coordinator::reports;
+use fp8_flow_moe::util::cli::Args;
 
 fn main() {
+    // analytic report: accepts --threads for CLI uniformity (no kernels run)
+    fp8_flow_moe::exec::set_threads(Args::from_env().usize_or("threads", 0));
     print!("{}", reports::table1());
     println!();
     println!("shape checks (paper's findings):");

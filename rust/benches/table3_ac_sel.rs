@@ -7,8 +7,11 @@ use fp8_flow_moe::cluster::model_cfg::DEEPSEEK_V3;
 use fp8_flow_moe::cluster::sim::simulate;
 use fp8_flow_moe::coordinator::reports;
 use fp8_flow_moe::moe::layer::Recipe;
+use fp8_flow_moe::util::cli::Args;
 
 fn main() {
+    // analytic report: accepts --threads for CLI uniformity (no kernels run)
+    fp8_flow_moe::exec::set_threads(Args::from_env().usize_or("threads", 0));
     print!("{}", reports::table3());
     println!();
     let bf16 = simulate(&DEEPSEEK_V3, 8, 32, Recipe::Bf16, AcMode::SelMoeExpert).mem_gb;

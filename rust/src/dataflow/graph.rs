@@ -157,6 +157,18 @@ impl DataflowGraph {
             .collect()
     }
 
+    /// Is the expert FFN span (Fc1 → Activation → Fc2) free of explicit
+    /// cast kernels? This is the structural precondition for executing the
+    /// span as one streaming pipeline (`moe::layer::fused_expert_ffn`):
+    /// quantization may only happen *inside* compute kernels (fused ops),
+    /// never as a standalone launch between the stages.
+    pub fn casting_free_expert_ffn(&self) -> bool {
+        !self.nodes.iter().any(|n| {
+            matches!(n.stage, Stage::Fc1 | Stage::Activation | Stage::Fc2)
+                && n.op.is_explicit_cast()
+        })
+    }
+
     /// Per-stage node histogram (used by reports and the cluster sim).
     pub fn stage_histogram(&self) -> BTreeMap<Stage, usize> {
         let mut h = BTreeMap::new();

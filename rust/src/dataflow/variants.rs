@@ -279,6 +279,16 @@ mod tests {
     }
 
     #[test]
+    fn expert_ffn_casting_freedom_per_variant() {
+        // Only the recipes without standalone casts inside Fc1/Act/Fc2 can
+        // run the expert FFN as one fused streaming pipeline.
+        assert!(build(Variant::Bf16).casting_free_expert_ffn());
+        assert!(!build(Variant::TeBlockwise).casting_free_expert_ffn());
+        assert!(!build(Variant::DeepSeekV3).casting_free_expert_ffn());
+        assert!(build(Variant::Fp8Flow).casting_free_expert_ffn());
+    }
+
+    #[test]
     fn fp8_dispatch_volume() {
         // dispatch a2a runs in FP8 for deepseek & fp8flow, BF16 otherwise
         for (v, fp8) in [

@@ -1,0 +1,83 @@
+//! Tile-parallel execution layer for the native (L3) hot-path kernels.
+//!
+//! The paper's kernels are data-parallel by construction: the 1×128-tile
+//! quantizer (Eq. 2–3) is independent per row, the scaling-aware direct
+//! transpose (Alg. 1) is independent per 128×128 block, the per-tile
+//! scaled GEMM is independent per output row, and the grouped expert FFN
+//! is independent per expert. This module exploits exactly that structure
+//! and nothing more:
+//!
+//! * [`Partition`] — a **static** row/expert/block partitioner: contiguous
+//!   near-equal ranges, optionally aligned to a block size. Static
+//!   partitioning keeps every worker's iteration order identical to the
+//!   serial kernel's, which is what makes the parallel kernels
+//!   **bit-identical** to their serial forms (FP8 tile accumulation order
+//!   is fixed per output element — see `tests/prop_parallel.rs`).
+//! * [`pool`] — a scoped-thread worker pool (`std::thread::scope`, no
+//!   external deps): part 0 runs on the calling thread, the rest on
+//!   scoped workers; disjoint `&mut` output sub-slices are carved with
+//!   `split_at_mut`, so the whole layer is safe Rust.
+//!
+//! Thread-count resolution (highest wins): [`set_threads`] (CLI
+//! `--threads`), the `FP8_THREADS` environment variable, then
+//! `std::thread::available_parallelism()`. Kernels running *inside* an
+//! already-parallel region (e.g. per-expert work in
+//! [`crate::moe::layer::fused_expert_ffn`]) call the `*_with_threads`
+//! variants with `1` to avoid nested oversubscription.
+
+pub mod partition;
+pub mod pool;
+
+pub use partition::Partition;
+pub use pool::{map_parts, run_tasks, split_parts};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Process-wide thread override; 0 = resolve automatically.
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the worker count for subsequent kernel calls (0 = auto).
+pub fn set_threads(n: usize) {
+    THREADS.store(n, Ordering::Relaxed);
+}
+
+/// Resolved worker count: explicit [`set_threads`] value, else
+/// `FP8_THREADS`, else the machine's available parallelism.
+pub fn threads() -> usize {
+    let t = THREADS.load(Ordering::Relaxed);
+    if t > 0 {
+        return t;
+    }
+    if let Some(n) = env_threads() {
+        return n;
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+fn env_threads() -> Option<usize> {
+    std::env::var("FP8_THREADS").ok()?.parse::<usize>().ok().filter(|&n| n > 0)
+}
+
+/// Clamp a requested worker count to the number of parallel items
+/// (never zero, never more workers than items).
+pub fn workers_for(threads: usize, n_items: usize) -> usize {
+    threads.max(1).min(n_items.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workers_clamped_to_items() {
+        assert_eq!(workers_for(8, 3), 3);
+        assert_eq!(workers_for(2, 100), 2);
+        assert_eq!(workers_for(0, 10), 1);
+        assert_eq!(workers_for(4, 0), 1);
+    }
+
+    #[test]
+    fn threads_resolves_to_something_positive() {
+        assert!(threads() >= 1);
+    }
+}

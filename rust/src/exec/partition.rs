@@ -1,0 +1,128 @@
+//! Static partitioner: contiguous near-equal item ranges, optionally
+//! aligned to a block size (128 for the transpose's scale blocks).
+
+use std::ops::Range;
+
+/// A static partition of `0..n_items` into contiguous ranges.
+///
+/// `starts` has `n_parts + 1` entries; part `w` covers
+/// `starts[w]..starts[w+1]`. Ranges are non-overlapping, cover the whole
+/// item space, and are in ascending order — each worker processes exactly
+/// the items the serial loop would have processed, in the same order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Partition {
+    starts: Vec<usize>,
+}
+
+impl Partition {
+    /// Split `n_items` into `n_parts` near-equal contiguous ranges (the
+    /// first `n_items % n_parts` parts get one extra item).
+    pub fn even(n_items: usize, n_parts: usize) -> Partition {
+        let n_parts = n_parts.max(1).min(n_items.max(1));
+        let base = n_items / n_parts;
+        let rem = n_items % n_parts;
+        let mut starts = Vec::with_capacity(n_parts + 1);
+        let mut at = 0usize;
+        starts.push(at);
+        for w in 0..n_parts {
+            at += base + usize::from(w < rem);
+            starts.push(at);
+        }
+        debug_assert_eq!(at, n_items);
+        Partition { starts }
+    }
+
+    /// Split `n_items` into ranges whose boundaries fall on multiples of
+    /// `block` (except the final boundary, which is `n_items`). Used by
+    /// kernels whose unit of independence is a block of items — e.g. the
+    /// direct transpose's 128-row scale blocks.
+    pub fn blocks(n_items: usize, block: usize, n_parts: usize) -> Partition {
+        assert!(block > 0);
+        let n_blocks = n_items.div_ceil(block);
+        let bp = Partition::even(n_blocks, n_parts);
+        let starts = bp
+            .starts
+            .iter()
+            .map(|&b| (b * block).min(n_items))
+            .collect();
+        Partition { starts }
+    }
+
+    /// Number of parts.
+    pub fn len(&self) -> usize {
+        self.starts.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Item range of part `w`.
+    pub fn range(&self, w: usize) -> Range<usize> {
+        self.starts[w]..self.starts[w + 1]
+    }
+
+    /// Iterate over all part ranges in order.
+    pub fn ranges(&self) -> impl Iterator<Item = Range<usize>> + '_ {
+        (0..self.len()).map(|w| self.range(w))
+    }
+
+    /// Total number of items partitioned.
+    pub fn n_items(&self) -> usize {
+        *self.starts.last().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_covers_everything_in_order() {
+        for n in [0usize, 1, 7, 8, 9, 100, 1000] {
+            for p in [1usize, 2, 3, 8, 64] {
+                let part = Partition::even(n, p);
+                let mut at = 0;
+                for r in part.ranges() {
+                    assert_eq!(r.start, at, "n={n} p={p}");
+                    at = r.end;
+                }
+                assert_eq!(at, n);
+                assert!(part.len() <= p.max(1));
+            }
+        }
+    }
+
+    #[test]
+    fn even_is_balanced() {
+        let part = Partition::even(10, 3);
+        let lens: Vec<usize> = part.ranges().map(|r| r.len()).collect();
+        assert_eq!(lens, vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn never_more_parts_than_items() {
+        assert_eq!(Partition::even(2, 8).len(), 2);
+        assert_eq!(Partition::even(0, 8).len(), 1);
+        assert_eq!(Partition::even(0, 8).range(0), 0..0);
+    }
+
+    #[test]
+    fn blocks_align_to_block_size() {
+        let part = Partition::blocks(300, 128, 2); // 3 blocks of 128 (last ragged)
+        assert_eq!(part.len(), 2);
+        assert_eq!(part.range(0), 0..256);
+        assert_eq!(part.range(1), 256..300);
+        for r in part.ranges() {
+            assert_eq!(r.start % 128, 0);
+        }
+    }
+
+    #[test]
+    fn blocks_with_more_parts_than_blocks() {
+        let part = Partition::blocks(130, 128, 8); // 2 blocks
+        assert_eq!(part.len(), 2);
+        assert_eq!(part.range(0), 0..128);
+        assert_eq!(part.range(1), 128..130);
+    }
+}

@@ -1,0 +1,135 @@
+//! Scoped-thread worker pool: one worker per partition part, part 0 on the
+//! calling thread, disjoint output sub-slices via `split_at_mut`.
+
+use crate::exec::partition::Partition;
+
+/// Split `data` into per-part mutable sub-slices at the partition's item
+/// boundaries, where each item owns `stride` consecutive elements.
+///
+/// `data.len()` must equal `partition.n_items() * stride`; the returned
+/// slices are disjoint, in part order, and cover all of `data`.
+pub fn split_parts<'a, T>(p: &Partition, stride: usize, data: &'a mut [T]) -> Vec<&'a mut [T]> {
+    assert_eq!(
+        data.len(),
+        p.n_items() * stride,
+        "split_parts: slice length does not match partition × stride"
+    );
+    let mut out = Vec::with_capacity(p.len());
+    let mut rest = data;
+    for r in p.ranges() {
+        let (head, tail) = rest.split_at_mut(r.len() * stride);
+        out.push(head);
+        rest = tail;
+    }
+    out
+}
+
+/// Run one task per element of `tasks` on the scoped pool. The first task
+/// runs on the calling thread; the rest on scoped workers. Returns when
+/// every task has finished (a panicking worker propagates on scope exit).
+pub fn run_tasks<T: Send, F: Fn(T) + Sync>(tasks: Vec<T>, f: F) {
+    let mut it = tasks.into_iter();
+    let Some(first) = it.next() else { return };
+    let rest: Vec<T> = it.collect();
+    if rest.is_empty() {
+        f(first);
+        return;
+    }
+    std::thread::scope(|s| {
+        let f = &f;
+        for t in rest {
+            s.spawn(move || f(t));
+        }
+        f(first);
+    });
+}
+
+/// Map `f` over `0..p.n_items()` with one worker per part, preserving item
+/// order in the returned vector. Used where each item produces an owned
+/// result (e.g. one output matrix per expert in the grouped GEMM).
+pub fn map_parts<R, F>(p: &Partition, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    if p.len() <= 1 {
+        return p.range(0).map(f).collect();
+    }
+    std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = (1..p.len())
+            .map(|w| {
+                let r = p.range(w);
+                s.spawn(move || r.map(f).collect::<Vec<R>>())
+            })
+            .collect();
+        let mut out: Vec<R> = p.range(0).map(f).collect();
+        for h in handles {
+            out.extend(h.join().expect("worker panicked"));
+        }
+        out
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn split_parts_disjoint_cover() {
+        let p = Partition::even(10, 3);
+        let mut data = vec![0u32; 10 * 4];
+        let parts = split_parts(&p, 4, &mut data);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0].len(), 16);
+        assert_eq!(parts[1].len(), 12);
+        assert_eq!(parts[2].len(), 12);
+    }
+
+    #[test]
+    fn run_tasks_executes_all() {
+        let hits = AtomicUsize::new(0);
+        let tasks: Vec<usize> = (0..17).collect();
+        run_tasks(tasks, |i| {
+            hits.fetch_add(i + 1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), (1..=17).sum::<usize>());
+    }
+
+    #[test]
+    fn run_tasks_writes_through_mut_slices() {
+        let p = Partition::even(100, 8);
+        let mut data = vec![0usize; 100 * 2];
+        let tasks: Vec<_> = split_parts(&p, 2, &mut data)
+            .into_iter()
+            .zip(p.ranges())
+            .collect();
+        run_tasks(tasks, |(slice, r)| {
+            for (k, v) in slice.iter_mut().enumerate() {
+                *v = r.start * 2 + k;
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i);
+        }
+    }
+
+    #[test]
+    fn map_parts_preserves_order() {
+        for workers in [1usize, 2, 5, 16] {
+            let p = Partition::even(37, workers);
+            let out = map_parts(&p, |i| i * i);
+            assert_eq!(out, (0..37).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_fine() {
+        run_tasks(Vec::<usize>::new(), |_| {});
+        let p = Partition::even(0, 4);
+        assert_eq!(map_parts(&p, |i| i).len(), 0);
+        let mut data: Vec<u8> = Vec::new();
+        assert_eq!(split_parts(&p, 3, &mut data).len(), 1);
+    }
+}

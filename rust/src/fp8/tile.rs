@@ -3,6 +3,7 @@
 //! fmax))` (Po2 recipe, UE8M0-compatible — the recipe that makes the
 //! scaling-aware transpose lossless).
 
+use crate::exec::{self, Partition};
 use crate::fp8::tensor::{n_tiles, Fp8Tensor, TileLayout};
 use crate::fp8::{ue8m0, Fp8Format, ScaleMode, TILE};
 use crate::util::mat::Mat;
@@ -31,35 +32,40 @@ fn amax(xs: &[f32]) -> f32 {
     xs.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
 }
 
-/// `Q_row(X)` — row-wise per-tile quantization (Eq. 2–3).
+/// `Q_row(X)` — row-wise per-tile quantization (Eq. 2–3), parallel over
+/// row chunks on the [`crate::exec`] pool.
 pub fn quantize_rowwise(x: &Mat, fmt: Fp8Format, mode: ScaleMode) -> Fp8Tensor {
+    quantize_rowwise_with_threads(x, fmt, mode, exec::threads())
+}
+
+/// [`quantize_rowwise`] with an explicit worker count (1 = serial). Rows
+/// are independent (one scale per 1×128 row tile), so the parallel result
+/// is bit-identical to the serial one.
+pub fn quantize_rowwise_with_threads(
+    x: &Mat,
+    fmt: Fp8Format,
+    mode: ScaleMode,
+    threads: usize,
+) -> Fp8Tensor {
     let tpr = n_tiles(x.cols);
     let mut data = vec![0u8; x.rows * x.cols];
-    let mut scales = Vec::with_capacity(x.rows * tpr);
-    let mut sexp = Vec::with_capacity(x.rows * tpr);
-    for i in 0..x.rows {
-        let row = x.row(i);
-        for t in 0..tpr {
-            let j0 = t * TILE;
-            let j1 = (j0 + TILE).min(x.cols);
-            let (s, e) = tile_scale(amax(&row[j0..j1]), fmt, mode);
-            let inv = 1.0 / s;
-            match fmt {
-                // hot path: branch-free fused multiply+encode
-                Fp8Format::E4M3 => crate::fp8::e4m3::encode_scaled_slice(
-                    &row[j0..j1],
-                    inv,
-                    &mut data[i * x.cols + j0..i * x.cols + j1],
-                ),
-                _ => {
-                    for j in j0..j1 {
-                        data[i * x.cols + j] = fmt.encode(row[j] * inv);
-                    }
-                }
-            }
-            scales.push(s);
-            sexp.push(e);
-        }
+    let mut scales = vec![0.0f32; x.rows * tpr];
+    let mut sexp = vec![0i32; x.rows * tpr];
+    let p = Partition::even(x.rows, exec::workers_for(threads, x.rows));
+    if p.len() <= 1 {
+        quantize_rows(x, fmt, mode, 0..x.rows, &mut data, &mut scales, &mut sexp);
+    } else {
+        let d_parts = exec::split_parts(&p, x.cols, &mut data);
+        let s_parts = exec::split_parts(&p, tpr, &mut scales);
+        let e_parts = exec::split_parts(&p, tpr, &mut sexp);
+        let tasks: Vec<_> = d_parts
+            .into_iter()
+            .zip(s_parts)
+            .zip(e_parts)
+            .zip(p.ranges())
+            .map(|(((d, s), e), r)| (d, s, e, r))
+            .collect();
+        exec::run_tasks(tasks, |(d, s, e, r)| quantize_rows(x, fmt, mode, r, d, s, e));
     }
     if mode == ScaleMode::Float {
         sexp.clear();
@@ -73,6 +79,45 @@ pub fn quantize_rowwise(x: &Mat, fmt: Fp8Format, mode: ScaleMode) -> Fp8Tensor {
         data,
         scales,
         sexp,
+    }
+}
+
+/// Serial quantizer over one contiguous row chunk; the slices cover
+/// exactly rows `rows` of the output.
+fn quantize_rows(
+    x: &Mat,
+    fmt: Fp8Format,
+    mode: ScaleMode,
+    rows: std::ops::Range<usize>,
+    data: &mut [u8],
+    scales: &mut [f32],
+    sexp: &mut [i32],
+) {
+    let tpr = n_tiles(x.cols);
+    for i in rows.clone() {
+        let row = x.row(i);
+        let r = i - rows.start;
+        for t in 0..tpr {
+            let j0 = t * TILE;
+            let j1 = (j0 + TILE).min(x.cols);
+            let (s, e) = tile_scale(amax(&row[j0..j1]), fmt, mode);
+            let inv = 1.0 / s;
+            match fmt {
+                // hot path: branch-free fused multiply+encode
+                Fp8Format::E4M3 => crate::fp8::e4m3::encode_scaled_slice(
+                    &row[j0..j1],
+                    inv,
+                    &mut data[r * x.cols + j0..r * x.cols + j1],
+                ),
+                _ => {
+                    for j in j0..j1 {
+                        data[r * x.cols + j] = fmt.encode(row[j] * inv);
+                    }
+                }
+            }
+            scales[r * tpr + t] = s;
+            sexp[r * tpr + t] = e;
+        }
     }
 }
 
@@ -263,6 +308,21 @@ mod tests {
         let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
         let d = q.dequantize();
         assert!(d.rel_err(&x) < 0.05);
+    }
+
+    #[test]
+    fn parallel_rows_bit_identical_to_serial() {
+        let mut rng = Rng::seed_from(77);
+        let x = Mat::rand_log_uniform(37, 300, -6.0, 6.0, &mut rng); // ragged both ways
+        for mode in [ScaleMode::Float, ScaleMode::Po2] {
+            let serial = quantize_rowwise_with_threads(&x, Fp8Format::E4M3, mode, 1);
+            for t in [2usize, 8, 64] {
+                let par = quantize_rowwise_with_threads(&x, Fp8Format::E4M3, mode, t);
+                assert_eq!(par.data, serial.data, "{mode:?} threads={t}");
+                assert_eq!(par.scales, serial.scales, "{mode:?} threads={t}");
+                assert_eq!(par.sexp, serial.sexp, "{mode:?} threads={t}");
+            }
+        }
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! row-wise tensor for `Xᵀ [N,M]` — which *is* the column-wise quantization
 //! layout of `X` (see `tile::tests::row_col_agree_on_transpose`).
 
+use crate::exec::{self, Partition};
 use crate::fp8::tensor::{n_tiles, Fp8Tensor, TileLayout};
 use crate::fp8::tile::quantize_rowwise;
 use crate::fp8::{e4m3, Fp8Format, ScaleMode, TILE};
@@ -69,6 +70,16 @@ pub fn naive_transpose(t: &Fp8Tensor) -> Fp8Tensor {
 ///   stays normal, RNE mantissa shift if it crosses into subnormals (the
 ///   paper assumes no underflow; we handle it exactly rather than UB).
 pub fn direct_transpose(t: &Fp8Tensor) -> Fp8Tensor {
+    direct_transpose_with_threads(t, exec::threads())
+}
+
+/// [`direct_transpose`] with an explicit worker count (1 = serial).
+///
+/// Parallelism: output 128-row blocks (= input 128-column blocks). Every
+/// 128×128 block is independent — its output payload rows, scales and
+/// exponents are written by exactly one worker — so the parallel result is
+/// bit-identical to the serial one (`tests/prop_parallel.rs`).
+pub fn direct_transpose_with_threads(t: &Fp8Tensor, threads: usize) -> Fp8Tensor {
     assert_eq!(t.layout, TileLayout::RowWise, "direct_transpose expects a row-wise input");
     assert_eq!(t.mode, ScaleMode::Po2, "direct transpose requires power-of-two scales (Alg. 1)");
     assert_eq!(t.fmt, Fp8Format::E4M3, "direct transpose is specified for E4M3 payloads");
@@ -79,14 +90,64 @@ pub fn direct_transpose(t: &Fp8Tensor) -> Fp8Tensor {
     let mut scales = vec![0.0f32; n * tpr_out];
     let mut sexp = vec![0i32; n * tpr_out];
 
+    // Partition the n output rows on 128-block boundaries so each worker
+    // owns whole scale blocks (bj ranges) and contiguous output slices.
+    let workers = exec::workers_for(threads, tpr_in);
+    let p = Partition::blocks(n, TILE, workers);
+    if p.len() <= 1 {
+        transpose_out_rows(t, 0..n, &mut data, &mut scales, &mut sexp);
+    } else {
+        let d_parts = exec::split_parts(&p, m, &mut data);
+        let s_parts = exec::split_parts(&p, tpr_out, &mut scales);
+        let e_parts = exec::split_parts(&p, tpr_out, &mut sexp);
+        let tasks: Vec<_> = d_parts
+            .into_iter()
+            .zip(s_parts)
+            .zip(e_parts)
+            .zip(p.ranges())
+            .map(|(((d, s), e), r)| (d, s, e, r))
+            .collect();
+        exec::run_tasks(tasks, |(d, s, e, r)| transpose_out_rows(t, r, d, s, e));
+    }
+    Fp8Tensor {
+        rows: n,
+        cols: m,
+        fmt: t.fmt,
+        mode: t.mode,
+        layout: TileLayout::RowWise,
+        data,
+        scales,
+        sexp,
+    }
+}
+
+/// Serial Alg. 1 over the output rows `jr` (block-aligned: `jr.start` is a
+/// multiple of 128). `data`/`scales`/`sexp` are the output slices covering
+/// exactly those rows.
+fn transpose_out_rows(
+    t: &Fp8Tensor,
+    jr: std::ops::Range<usize>,
+    data: &mut [u8],
+    scales: &mut [f32],
+    sexp: &mut [i32],
+) {
+    let (m, n) = (t.rows, t.cols);
+    let tpr_in = n_tiles(n);
+    let tpr_out = n_tiles(m);
+    debug_assert_eq!(jr.start % TILE, 0);
+    debug_assert_eq!(data.len(), jr.len() * m);
+    debug_assert_eq!(scales.len(), jr.len() * tpr_out);
+    let jbase = jr.start;
+    let (bj0, bj1) = (jr.start / TILE, jr.end.div_ceil(TILE));
+
     for bi in 0..tpr_out {
         // block rows of X: i ∈ [i0, i1)
         let i0 = bi * TILE;
         let i1 = (i0 + TILE).min(m);
-        for bj in 0..tpr_in {
+        for bj in bj0..bj1 {
             // block cols of X: j ∈ [j0, j1)
             let j0 = bj * TILE;
-            let j1 = (j0 + TILE).min(n);
+            let j1 = (j0 + TILE).min(n).min(jr.end);
             // S_max over the block's row scales (exponent max — po2).
             let mut emax = i32::MIN;
             for i in i0..i1 {
@@ -95,8 +156,8 @@ pub fn direct_transpose(t: &Fp8Tensor) -> Fp8Tensor {
             // Output scales: rows j of Xᵀ, tile bi.
             let smax = (emax as f32).exp2();
             for j in j0..j1 {
-                scales[j * tpr_out + bi] = smax;
-                sexp[j * tpr_out + bi] = emax;
+                scales[(j - jbase) * tpr_out + bi] = smax;
+                sexp[(j - jbase) * tpr_out + bi] = emax;
             }
             // Payload: out[j, i] = scale_down(in[i, j], emax − e_i).
             //
@@ -133,7 +194,7 @@ pub fn direct_transpose(t: &Fp8Tensor) -> Fp8Tensor {
                             for i in si..sie {
                                 let src = &t.data[i * n + sj..i * n + sje];
                                 for (o, &c) in src.iter().enumerate() {
-                                    data[(sj + o) * m + i] = c;
+                                    data[(sj + o - jbase) * m + i] = c;
                                 }
                             }
                         }
@@ -142,7 +203,7 @@ pub fn direct_transpose(t: &Fp8Tensor) -> Fp8Tensor {
                                 let lut = row_luts[i - i0];
                                 let src = &t.data[i * n + sj..i * n + sje];
                                 for (o, &c) in src.iter().enumerate() {
-                                    data[(sj + o) * m + i] = lut[c as usize];
+                                    data[(sj + o - jbase) * m + i] = lut[c as usize];
                                 }
                             }
                         }
@@ -152,16 +213,6 @@ pub fn direct_transpose(t: &Fp8Tensor) -> Fp8Tensor {
                 si = sie;
             }
         }
-    }
-    Fp8Tensor {
-        rows: n,
-        cols: m,
-        fmt: t.fmt,
-        mode: t.mode,
-        layout: TileLayout::RowWise,
-        data,
-        scales,
-        sexp,
     }
 }
 

@@ -27,6 +27,7 @@
 pub mod cluster;
 pub mod coordinator;
 pub mod dataflow;
+pub mod exec;
 pub mod fp8;
 pub mod moe;
 pub mod runtime;

@@ -13,6 +13,7 @@
 
 use anyhow::Result;
 use fp8_flow_moe::coordinator::{reports, write_run_json};
+use fp8_flow_moe::exec;
 use fp8_flow_moe::dataflow::{build, Variant};
 use fp8_flow_moe::fp8::error::dqe_report;
 use fp8_flow_moe::fp8::{Fp8Format, ScaleMode};
@@ -33,10 +34,15 @@ USAGE:
   fp8-flow-moe dataflow
   fp8-flow-moe dqe [--size N]
   fp8-flow-moe artifacts
+
+Global flags:
+  --threads N   worker count for the native kernels (0 = auto; also
+                FP8_THREADS env var)
 ";
 
 fn main() -> Result<()> {
     let args = Args::from_env();
+    exec::set_threads(args.usize_or("threads", 0));
     match args.positional.first().map(String::as_str) {
         Some("train") => cmd_train(&args),
         Some("table1") => {

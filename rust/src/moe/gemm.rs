@@ -8,26 +8,57 @@
 //!
 //! Accumulation is f32; each 128-wide k-tile's partial product is scaled
 //! by the outer product of the two tile scales.
+//!
+//! Parallelism: M-row panels on the [`crate::exec`] scoped pool. Each
+//! worker runs the identical serial tile loop over its own contiguous row
+//! range (with a private decoded-B panel), so the parallel result is
+//! **bit-identical** to the serial one — per output element the k-tile
+//! accumulation order never changes (`tests/prop_parallel.rs`).
 
+use crate::exec::{self, Partition};
 use crate::fp8::tensor::{n_tiles, Fp8Tensor, TileLayout};
 use crate::fp8::{e4m3, Fp8Format, TILE};
 use crate::util::mat::Mat;
 
-/// `A @ Bᵀ` over FP8 operands (see module docs for layout).
-///
-/// §Perf structure: per 128-wide k-tile, the whole `B` panel (`n × 128`)
-/// is decoded ONCE into a contiguous f32 scratch and reused across all `m`
-/// rows of `A` — amortizing the LUT decode that dominated the naive
-/// per-(row,row) loop (before/after in EXPERIMENTS.md §Perf). The inner
-/// dot over 128 f32 auto-vectorizes.
+/// `A @ Bᵀ` over FP8 operands (see module docs for layout), parallelized
+/// over M-row panels with the process-wide worker count.
 pub fn fp8_matmul(a: &Fp8Tensor, b: &Fp8Tensor) -> Mat {
+    fp8_matmul_with_threads(a, b, exec::threads())
+}
+
+/// [`fp8_matmul`] with an explicit worker count (1 = the serial kernel).
+pub fn fp8_matmul_with_threads(a: &Fp8Tensor, b: &Fp8Tensor, threads: usize) -> Mat {
     assert_eq!(a.layout, TileLayout::RowWise);
     assert_eq!(b.layout, TileLayout::RowWise);
     assert_eq!(a.cols, b.cols, "contraction length mismatch");
     assert_eq!(a.fmt, Fp8Format::E4M3);
-    let (m, k, n) = (a.rows, a.cols, b.rows);
-    let kt = n_tiles(k);
+    let (m, n) = (a.rows, b.rows);
     let mut out = Mat::zeros(m, n);
+    let p = Partition::even(m, exec::workers_for(threads, m));
+    if p.len() <= 1 {
+        matmul_row_panel(a, b, 0..m, &mut out.data);
+        return out;
+    }
+    let tasks: Vec<_> = exec::split_parts(&p, n, &mut out.data)
+        .into_iter()
+        .zip(p.ranges())
+        .collect();
+    exec::run_tasks(tasks, |(panel, rows)| matmul_row_panel(a, b, rows, panel));
+    out
+}
+
+/// Serial kernel over one contiguous M-row panel; `out` holds exactly
+/// `rows.len() * b.rows` elements (the panel's slice of the output).
+///
+/// §Perf structure: per 128-wide k-tile, the whole `B` panel (`n × 128`)
+/// is decoded ONCE into a contiguous f32 scratch and reused across all
+/// rows of the panel — amortizing the LUT decode that dominated the naive
+/// per-(row,row) loop (before/after in EXPERIMENTS.md §Perf). The inner
+/// dot over 128 f32 auto-vectorizes.
+fn matmul_row_panel(a: &Fp8Tensor, b: &Fp8Tensor, rows: std::ops::Range<usize>, out: &mut [f32]) {
+    let (k, n) = (a.cols, b.rows);
+    let kt = n_tiles(k);
+    debug_assert_eq!(out.len(), rows.len() * n);
     // decoded B panel for the current k-tile: [n][TILE], padded with zeros
     let mut bpanel = vec![0f32; n * TILE];
     let mut adec = [0f32; TILE];
@@ -44,13 +75,14 @@ pub fn fp8_matmul(a: &Fp8Tensor, b: &Fp8Tensor) -> Mat {
                 *o = e4m3::DECODE_LUT[c as usize] * sb;
             }
         }
-        for i in 0..m {
+        for i in rows.clone() {
             let arow = &a.data[i * k + j0..i * k + j1];
             let sa = a.scales[i * kt + t];
             for (o, &c) in adec.iter_mut().zip(arow) {
                 *o = e4m3::DECODE_LUT[c as usize];
             }
-            let orow = &mut out.data[i * n..(i + 1) * n];
+            let r = i - rows.start;
+            let orow = &mut out[r * n..(r + 1) * n];
             if w == TILE {
                 // common case: 8 independent accumulators let the reduce
                 // vectorize without float reassociation
@@ -75,15 +107,26 @@ pub fn fp8_matmul(a: &Fp8Tensor, b: &Fp8Tensor) -> Mat {
             }
         }
     }
-    out
 }
 
-/// Grouped (per-expert) FP8 GEMM: `out[e] = A[e] @ B[e]ᵀ`.
+/// Grouped (per-expert) FP8 GEMM: `out[e] = A[e] @ B[e]ᵀ`, one worker per
+/// expert partition (each expert's GEMM runs the serial kernel — the
+/// grouped dimension is the parallel axis).
 ///
 /// `a`: one tensor per expert `[C, K]`; `b`: per-expert weights `[N, K]`.
 pub fn grouped_fp8_matmul(a: &[Fp8Tensor], b: &[Fp8Tensor]) -> Vec<Mat> {
+    grouped_fp8_matmul_with_threads(a, b, exec::threads())
+}
+
+/// [`grouped_fp8_matmul`] with an explicit worker count.
+pub fn grouped_fp8_matmul_with_threads(
+    a: &[Fp8Tensor],
+    b: &[Fp8Tensor],
+    threads: usize,
+) -> Vec<Mat> {
     assert_eq!(a.len(), b.len());
-    a.iter().zip(b).map(|(ae, be)| fp8_matmul(ae, be)).collect()
+    let p = Partition::even(a.len(), exec::workers_for(threads, a.len()));
+    exec::map_parts(&p, |e| fp8_matmul_with_threads(&a[e], &b[e], 1))
 }
 
 #[cfg(test)]
@@ -146,6 +189,22 @@ mod tests {
         let grouped = grouped_fp8_matmul(&a, &b);
         for e in 0..3 {
             assert_eq!(grouped[e], fp8_matmul(&a[e], &b[e]));
+        }
+    }
+
+    #[test]
+    fn parallel_panels_bit_identical_to_serial() {
+        let mut rng = Rng::seed_from(5);
+        let x = Mat::rand_log_uniform(77, 300, -4.0, 4.0, &mut rng); // ragged rows + k
+        let w = Mat::randn(33, 300, 1.0, &mut rng);
+        let qa = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        let qb = quantize_rowwise(&w, Fp8Format::E4M3, ScaleMode::Po2);
+        let serial = fp8_matmul_with_threads(&qa, &qb, 1);
+        for t in [2usize, 3, 8, 64] {
+            let par = fp8_matmul_with_threads(&qa, &qb, t);
+            for (a, b) in par.data.iter().zip(&serial.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads={t}");
+            }
         }
     }
 }

@@ -6,6 +6,7 @@
 //! once; the unfused baseline (Fig. 3/4) materializes the compact
 //! permutation first and re-reads it to insert padding.
 
+use crate::exec::{self, Partition};
 use crate::fp8::tensor::{n_tiles, Fp8Tensor, TileLayout};
 use crate::util::mat::Mat;
 
@@ -26,35 +27,76 @@ pub fn permute_pad_plan(expert_of: &[usize], n_experts: usize, capacity: usize) 
 }
 
 /// Fused permute+pad over f32 rows: `out[d] = x[plan[d]]` or zeros.
+/// Destination rows are independent — parallel over token chunks.
 pub fn permute_pad(x: &Mat, plan: &[i64]) -> Mat {
+    permute_pad_with_threads(x, plan, exec::threads())
+}
+
+/// [`permute_pad`] with an explicit worker count (pure row gather ⇒
+/// bit-identical across worker counts).
+pub fn permute_pad_with_threads(x: &Mat, plan: &[i64], threads: usize) -> Mat {
     let h = x.cols;
     let mut out = Mat::zeros(plan.len(), h);
-    for (d, &src) in plan.iter().enumerate() {
-        if src >= 0 {
-            out.data[d * h..(d + 1) * h].copy_from_slice(x.row(src as usize));
+    let p = Partition::even(plan.len(), exec::workers_for(threads, plan.len()));
+    let tasks: Vec<_> = exec::split_parts(&p, h, &mut out.data)
+        .into_iter()
+        .zip(p.ranges())
+        .collect();
+    exec::run_tasks(tasks, |(chunk, dr)| {
+        for d in dr.clone() {
+            let src = plan[d];
+            if src >= 0 {
+                let r = d - dr.start;
+                chunk[r * h..(r + 1) * h].copy_from_slice(x.row(src as usize));
+            }
         }
-    }
+    });
     out
 }
 
 /// Fused permute+pad over FP8 rows (codes + row-wise scales move together;
 /// padding rows are zero codes with scale 1 — exactly representable).
+/// Parallel over destination-row chunks like [`permute_pad`].
 pub fn permute_pad_fp8(x: &Fp8Tensor, plan: &[i64]) -> Fp8Tensor {
+    permute_pad_fp8_with_threads(x, plan, exec::threads())
+}
+
+/// [`permute_pad_fp8`] with an explicit worker count.
+pub fn permute_pad_fp8_with_threads(x: &Fp8Tensor, plan: &[i64], threads: usize) -> Fp8Tensor {
     assert_eq!(x.layout, TileLayout::RowWise);
     let h = x.cols;
     let tpr = n_tiles(h);
     let mut data = vec![0u8; plan.len() * h];
     let mut scales = vec![1.0f32; plan.len() * tpr];
     let mut sexp = vec![0i32; plan.len() * tpr];
-    for (d, &src) in plan.iter().enumerate() {
-        if src >= 0 {
-            let s = src as usize;
-            data[d * h..(d + 1) * h].copy_from_slice(&x.data[s * h..(s + 1) * h]);
-            scales[d * tpr..(d + 1) * tpr].copy_from_slice(&x.scales[s * tpr..(s + 1) * tpr]);
-            if !x.sexp.is_empty() {
-                sexp[d * tpr..(d + 1) * tpr].copy_from_slice(&x.sexp[s * tpr..(s + 1) * tpr]);
+    let p = Partition::even(plan.len(), exec::workers_for(threads, plan.len()));
+    {
+        let d_parts = exec::split_parts(&p, h, &mut data);
+        let s_parts = exec::split_parts(&p, tpr, &mut scales);
+        let e_parts = exec::split_parts(&p, tpr, &mut sexp);
+        let tasks: Vec<_> = d_parts
+            .into_iter()
+            .zip(s_parts)
+            .zip(e_parts)
+            .zip(p.ranges())
+            .map(|(((d, s), e), r)| (d, s, e, r))
+            .collect();
+        exec::run_tasks(tasks, |(dchunk, schunk, echunk, dr)| {
+            for d in dr.clone() {
+                let src = plan[d];
+                if src >= 0 {
+                    let s = src as usize;
+                    let r = d - dr.start;
+                    dchunk[r * h..(r + 1) * h].copy_from_slice(&x.data[s * h..(s + 1) * h]);
+                    schunk[r * tpr..(r + 1) * tpr]
+                        .copy_from_slice(&x.scales[s * tpr..(s + 1) * tpr]);
+                    if !x.sexp.is_empty() {
+                        echunk[r * tpr..(r + 1) * tpr]
+                            .copy_from_slice(&x.sexp[s * tpr..(s + 1) * tpr]);
+                    }
+                }
             }
-        }
+        });
     }
     Fp8Tensor {
         rows: plan.len(),
@@ -101,19 +143,43 @@ pub fn permute_then_pad(x: &Mat, plan: &[i64]) -> Mat {
 
 /// Fused unpermute+unpad (backward of `permute_pad`): scatter-add rows
 /// back to token order (a token routed to k experts receives the sum).
+/// Parallel over *destination* token chunks: each worker scans the whole
+/// plan and accumulates only rows landing in its token range, preserving
+/// the serial kernel's ascending-`d` addition order per token (the
+/// float-sum order is part of the bit-exactness contract).
 pub fn unpermute_unpad(y: &Mat, plan: &[i64], n_tokens: usize) -> Mat {
+    unpermute_unpad_with_threads(y, plan, n_tokens, exec::threads())
+}
+
+/// [`unpermute_unpad`] with an explicit worker count (1 = serial).
+pub fn unpermute_unpad_with_threads(
+    y: &Mat,
+    plan: &[i64],
+    n_tokens: usize,
+    threads: usize,
+) -> Mat {
     let h = y.cols;
     let mut out = Mat::zeros(n_tokens, h);
-    for (d, &src) in plan.iter().enumerate() {
-        if src >= 0 {
-            let dst = src as usize;
-            let yrow = &y.data[d * h..(d + 1) * h];
-            let orow = &mut out.data[dst * h..(dst + 1) * h];
-            for j in 0..h {
-                orow[j] += yrow[j];
+    let p = Partition::even(n_tokens, exec::workers_for(threads, n_tokens));
+    let tasks: Vec<_> = exec::split_parts(&p, h, &mut out.data)
+        .into_iter()
+        .zip(p.ranges())
+        .collect();
+    exec::run_tasks(tasks, |(chunk, tr)| {
+        for (d, &src) in plan.iter().enumerate() {
+            if src >= 0 {
+                let dst = src as usize;
+                if tr.contains(&dst) {
+                    let yrow = &y.data[d * h..(d + 1) * h];
+                    let r = dst - tr.start;
+                    let orow = &mut chunk[r * h..(r + 1) * h];
+                    for j in 0..h {
+                        orow[j] += yrow[j];
+                    }
+                }
             }
         }
-    }
+    });
     out
 }
 

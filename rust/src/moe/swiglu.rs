@@ -6,6 +6,7 @@
 //! round-trip. Contract: bitwise-identical payload/scales to
 //! `quantize(swiglu(gate, up))`.
 
+use crate::exec::{self, Partition};
 use crate::fp8::tensor::{n_tiles, Fp8Tensor, TileLayout};
 use crate::fp8::tile::tile_scale;
 use crate::fp8::{Fp8Format, ScaleMode, TILE};
@@ -16,13 +17,30 @@ fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
-/// Unfused SwiGLU (Fig. 5 baseline): `silu(gate) ⊙ up`.
+/// Unfused SwiGLU (Fig. 5 baseline): `silu(gate) ⊙ up`, parallel over
+/// token (row) chunks.
 pub fn swiglu(gate: &Mat, up: &Mat) -> Mat {
+    swiglu_with_threads(gate, up, exec::threads())
+}
+
+/// [`swiglu`] with an explicit worker count (elementwise ⇒ trivially
+/// bit-identical across worker counts).
+pub fn swiglu_with_threads(gate: &Mat, up: &Mat, threads: usize) -> Mat {
     assert_eq!((gate.rows, gate.cols), (up.rows, up.cols));
     let mut out = Mat::zeros(gate.rows, gate.cols);
-    for i in 0..gate.data.len() {
-        out.data[i] = silu(gate.data[i]) * up.data[i];
-    }
+    let p = Partition::even(gate.rows, exec::workers_for(threads, gate.rows));
+    let cols = gate.cols;
+    let tasks: Vec<_> = exec::split_parts(&p, cols, &mut out.data)
+        .into_iter()
+        .zip(p.ranges())
+        .collect();
+    exec::run_tasks(tasks, |(chunk, rows)| {
+        let g = &gate.data[rows.start * cols..rows.end * cols];
+        let u = &up.data[rows.start * cols..rows.end * cols];
+        for ((o, &gv), &uv) in chunk.iter_mut().zip(g).zip(u) {
+            *o = silu(gv) * uv;
+        }
+    });
     out
 }
 
@@ -42,18 +60,79 @@ pub fn swiglu_bwd(gate: &Mat, up: &Mat, dy: &Mat) -> (Mat, Mat) {
 
 /// **Fused SwiGLU + row-wise FP8 quantization** — single pass per row
 /// tile: activation values never leave the working set between the
-/// nonlinearity and the encode.
+/// nonlinearity and the encode. Parallel over token (row) chunks.
 pub fn swiglu_quant(gate: &Mat, up: &Mat, fmt: Fp8Format, mode: ScaleMode) -> Fp8Tensor {
+    swiglu_quant_with_threads(gate, up, fmt, mode, exec::threads())
+}
+
+/// [`swiglu_quant`] with an explicit worker count (1 = serial). Row tiles
+/// are independent, so the parallel payload/scales are bit-identical to
+/// the serial kernel's (`tests/prop_parallel.rs`).
+pub fn swiglu_quant_with_threads(
+    gate: &Mat,
+    up: &Mat,
+    fmt: Fp8Format,
+    mode: ScaleMode,
+    threads: usize,
+) -> Fp8Tensor {
     assert_eq!((gate.rows, gate.cols), (up.rows, up.cols));
     let (m, n) = (gate.rows, gate.cols);
     let tpr = n_tiles(n);
     let mut data = vec![0u8; m * n];
-    let mut scales = Vec::with_capacity(m * tpr);
-    let mut sexp = Vec::with_capacity(m * tpr);
+    let mut scales = vec![0.0f32; m * tpr];
+    let mut sexp = vec![0i32; m * tpr];
+    let p = Partition::even(m, exec::workers_for(threads, m));
+    if p.len() <= 1 {
+        swiglu_quant_rows(gate, up, fmt, mode, 0..m, &mut data, &mut scales, &mut sexp);
+    } else {
+        let d_parts = exec::split_parts(&p, n, &mut data);
+        let s_parts = exec::split_parts(&p, tpr, &mut scales);
+        let e_parts = exec::split_parts(&p, tpr, &mut sexp);
+        let tasks: Vec<_> = d_parts
+            .into_iter()
+            .zip(s_parts)
+            .zip(e_parts)
+            .zip(p.ranges())
+            .map(|(((d, s), e), r)| (d, s, e, r))
+            .collect();
+        exec::run_tasks(tasks, |(d, s, e, r)| {
+            swiglu_quant_rows(gate, up, fmt, mode, r, d, s, e)
+        });
+    }
+    if mode == ScaleMode::Float {
+        sexp.clear();
+    }
+    Fp8Tensor {
+        rows: m,
+        cols: n,
+        fmt,
+        mode,
+        layout: TileLayout::RowWise,
+        data,
+        scales,
+        sexp,
+    }
+}
+
+/// Serial fused kernel over one contiguous row chunk.
+#[allow(clippy::too_many_arguments)]
+fn swiglu_quant_rows(
+    gate: &Mat,
+    up: &Mat,
+    fmt: Fp8Format,
+    mode: ScaleMode,
+    rows: std::ops::Range<usize>,
+    data: &mut [u8],
+    scales: &mut [f32],
+    sexp: &mut [i32],
+) {
+    let n = gate.cols;
+    let tpr = n_tiles(n);
     let mut tilebuf = [0f32; TILE];
-    for i in 0..m {
+    for i in rows.clone() {
         let grow = gate.row(i);
         let urow = up.row(i);
+        let r = i - rows.start;
         for t in 0..tpr {
             let j0 = t * TILE;
             let j1 = (j0 + TILE).min(n);
@@ -71,30 +150,17 @@ pub fn swiglu_quant(gate: &Mat, up: &Mat, fmt: Fp8Format, mode: ScaleMode) -> Fp
                 Fp8Format::E4M3 => crate::fp8::e4m3::encode_scaled_slice(
                     &tilebuf[..w],
                     inv,
-                    &mut data[i * n + j0..i * n + j1],
+                    &mut data[r * n + j0..r * n + j1],
                 ),
                 _ => {
                     for bj in 0..w {
-                        data[i * n + j0 + bj] = fmt.encode(tilebuf[bj] * inv);
+                        data[r * n + j0 + bj] = fmt.encode(tilebuf[bj] * inv);
                     }
                 }
             }
-            scales.push(s);
-            sexp.push(e);
+            scales[r * tpr + t] = s;
+            sexp[r * tpr + t] = e;
         }
-    }
-    if mode == ScaleMode::Float {
-        sexp.clear();
-    }
-    Fp8Tensor {
-        rows: m,
-        cols: n,
-        fmt,
-        mode,
-        layout: TileLayout::RowWise,
-        data,
-        scales,
-        sexp,
     }
 }
 

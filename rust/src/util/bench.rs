@@ -55,6 +55,23 @@ impl Default for Bencher {
     }
 }
 
+/// Shared bench-binary entrypoint: parse the CLI (`--threads N` routes
+/// into the [`crate::exec`] layer, 0 = auto; `--quick` shrinks budgets),
+/// report the effective worker count, and hand back the remaining args.
+///
+/// `default_threads` is what `--threads` falls back to. The paper-figure
+/// benches pass **1**: their unfused baselines are serial kernels, so the
+/// fused side must run serial too or the printed SPEEDUP conflates fusion
+/// with multithreading. The scaling section of `perf_kernels` passes 0
+/// (auto) — comparing worker counts is its whole point.
+pub fn bencher_from_cli(default_threads: usize) -> (Bencher, crate::util::cli::Args) {
+    let args = crate::util::cli::Args::from_env();
+    crate::exec::set_threads(args.usize_or("threads", default_threads));
+    let b = if args.flag("quick") { Bencher::quick() } else { Bencher::default() };
+    println!("threads: {} (override with --threads N)", crate::exec::threads());
+    (b, args)
+}
+
 impl Bencher {
     pub fn quick() -> Self {
         Bencher {

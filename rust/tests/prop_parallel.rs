@@ -1,0 +1,149 @@
+//! Property tests for the tile-parallel execution layer: every parallel
+//! kernel must be **bit-identical** to its serial form across worker
+//! counts {1, 2, 8} and ragged shapes.
+//!
+//! This is the exec layer's central contract: the static partitioner keeps
+//! each worker's iteration order identical to the serial loop's, and FP8
+//! tile accumulation order is fixed per output element, so thread count
+//! must never change a single bit of payload, scale, or accumulator.
+
+use fp8_flow_moe::fp8::tile::{quantize_rowwise, quantize_rowwise_with_threads};
+use fp8_flow_moe::fp8::transpose::direct_transpose_with_threads;
+use fp8_flow_moe::fp8::{Fp8Format, ScaleMode};
+use fp8_flow_moe::moe::gemm::fp8_matmul_with_threads;
+use fp8_flow_moe::moe::permute::{
+    permute_pad_fp8_with_threads, permute_pad_plan, permute_pad_with_threads,
+    unpermute_unpad_with_threads,
+};
+use fp8_flow_moe::moe::swiglu::swiglu_quant_with_threads;
+use fp8_flow_moe::util::mat::Mat;
+use fp8_flow_moe::util::prop::props;
+use fp8_flow_moe::util::rng::Rng;
+
+const THREAD_COUNTS: [usize; 2] = [2, 8];
+
+fn assert_f32_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (k, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {k}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn prop_fp8_matmul_parallel_bit_exact() {
+    props("fp8_matmul parallel == serial", 24, |g| {
+        let m = g.usize_in(1, 220); // ragged row panels
+        let k = g.usize_in(1, 300); // ragged contraction (tail tile)
+        let n = g.usize_in(1, 48);
+        let mut rng = Rng::seed_from(g.seed ^ 0x9E41);
+        let x = Mat::rand_log_uniform(m, k, -4.0, 4.0, &mut rng);
+        let w = Mat::randn(n, k, 1.0, &mut rng);
+        let qa = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        let qb = quantize_rowwise(&w, Fp8Format::E4M3, ScaleMode::Po2);
+        let serial = fp8_matmul_with_threads(&qa, &qb, 1);
+        for t in THREAD_COUNTS {
+            let par = fp8_matmul_with_threads(&qa, &qb, t);
+            assert_f32_bits_eq(&par.data, &serial.data, &format!("matmul t={t} m={m} k={k} n={n}"));
+        }
+    });
+}
+
+#[test]
+fn prop_direct_transpose_parallel_bit_exact() {
+    props("direct_transpose parallel == serial", 24, |g| {
+        let m = g.usize_in(1, 300);
+        let n = g.usize_in(1, 300);
+        let mut rng = Rng::seed_from(g.seed ^ 0xD17E);
+        let x = Mat::rand_log_uniform(m, n, -6.0, 6.0, &mut rng);
+        let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        let serial = direct_transpose_with_threads(&q, 1);
+        for t in THREAD_COUNTS {
+            let par = direct_transpose_with_threads(&q, t);
+            assert_eq!(par.data, serial.data, "payload t={t} {m}x{n}");
+            assert_f32_bits_eq(&par.scales, &serial.scales, &format!("scales t={t} {m}x{n}"));
+            assert_eq!(par.sexp, serial.sexp, "sexp t={t} {m}x{n}");
+        }
+    });
+}
+
+#[test]
+fn prop_swiglu_quant_parallel_bit_exact() {
+    props("swiglu_quant parallel == serial", 24, |g| {
+        let m = g.usize_in(1, 260);
+        let n = g.usize_in(1, 300);
+        let mut rng = Rng::seed_from(g.seed ^ 0x5157);
+        let gate = Mat::randn(m, n, 2.0, &mut rng);
+        let up = Mat::randn(m, n, 2.0, &mut rng);
+        for mode in [ScaleMode::Po2, ScaleMode::Float] {
+            let serial = swiglu_quant_with_threads(&gate, &up, Fp8Format::E4M3, mode, 1);
+            for t in THREAD_COUNTS {
+                let par = swiglu_quant_with_threads(&gate, &up, Fp8Format::E4M3, mode, t);
+                assert_eq!(par.data, serial.data, "payload {mode:?} t={t} {m}x{n}");
+                assert_f32_bits_eq(
+                    &par.scales,
+                    &serial.scales,
+                    &format!("scales {mode:?} t={t} {m}x{n}"),
+                );
+                assert_eq!(par.sexp, serial.sexp, "sexp {mode:?} t={t}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_quantize_rowwise_parallel_bit_exact() {
+    props("quantize_rowwise parallel == serial", 24, |g| {
+        let m = g.usize_in(1, 260);
+        let n = g.usize_in(1, 300);
+        let mut rng = Rng::seed_from(g.seed ^ 0x0A7B);
+        let x = Mat::rand_log_uniform(m, n, -8.0, 8.0, &mut rng);
+        for mode in [ScaleMode::Po2, ScaleMode::Float] {
+            let serial = quantize_rowwise_with_threads(&x, Fp8Format::E4M3, mode, 1);
+            for t in THREAD_COUNTS {
+                let par = quantize_rowwise_with_threads(&x, Fp8Format::E4M3, mode, t);
+                assert_eq!(par.data, serial.data, "payload {mode:?} t={t} {m}x{n}");
+                assert_f32_bits_eq(
+                    &par.scales,
+                    &serial.scales,
+                    &format!("scales {mode:?} t={t} {m}x{n}"),
+                );
+                assert_eq!(par.sexp, serial.sexp, "sexp {mode:?} t={t}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_permute_family_parallel_bit_exact() {
+    props("permute/unpermute parallel == serial", 24, |g| {
+        let tokens = g.usize_in(1, 300);
+        let h = g.usize_in(1, 160);
+        let experts = g.usize_in(1, 8);
+        let cap = g.usize_in(1, tokens.max(2));
+        let mut rng = Rng::seed_from(g.seed ^ 0xFACE);
+        let x = Mat::randn(tokens, h, 1.0, &mut rng);
+        let expert_of: Vec<usize> = (0..tokens).map(|_| rng.below(experts)).collect();
+        let plan = permute_pad_plan(&expert_of, experts, cap);
+
+        let serial = permute_pad_with_threads(&x, &plan, 1);
+        let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        let serial_q = permute_pad_fp8_with_threads(&q, &plan, 1);
+        let back_serial = unpermute_unpad_with_threads(&serial, &plan, tokens, 1);
+        for t in THREAD_COUNTS {
+            let par = permute_pad_with_threads(&x, &plan, t);
+            assert_f32_bits_eq(&par.data, &serial.data, &format!("permute_pad t={t}"));
+
+            let par_q = permute_pad_fp8_with_threads(&q, &plan, t);
+            assert_eq!(par_q.data, serial_q.data, "permute_pad_fp8 payload t={t}");
+            assert_f32_bits_eq(
+                &par_q.scales,
+                &serial_q.scales,
+                &format!("permute_pad_fp8 scales t={t}"),
+            );
+            assert_eq!(par_q.sexp, serial_q.sexp, "permute_pad_fp8 sexp t={t}");
+
+            let back = unpermute_unpad_with_threads(&serial, &plan, tokens, t);
+            assert_f32_bits_eq(&back.data, &back_serial.data, &format!("unpermute t={t}"));
+        }
+    });
+}

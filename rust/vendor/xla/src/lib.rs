@@ -1,0 +1,269 @@
+//! Vendored offline stub of the `xla` (PJRT) bindings.
+//!
+//! The real bindings link libxla and a PJRT plugin, neither of which is
+//! present in this offline image. The repository's runtime layer
+//! (`fp8_flow_moe::runtime`) only needs two things to stay honest:
+//!
+//! 1. **Host literals work for real** — [`Literal`] stores element type,
+//!    shape and row-major bytes, and the typed constructors/extractors are
+//!    fully functional (the `runtime::literal` unit tests run against
+//!    them).
+//! 2. **Device paths fail loudly, not silently** — [`PjRtClient::compile`]
+//!    and friends return a clear "no XLA backend in this build" error, so
+//!    the integration tests over AOT artifacts skip with an actionable
+//!    message instead of linking garbage.
+//!
+//! Swapping in real bindings later is a Cargo.toml change; the API surface
+//! mirrors the subset of `xla-rs` the runtime uses.
+
+use std::fmt;
+
+/// Stub error type (implements `std::error::Error` so `?` converts it into
+/// the crate's `anyhow`-style error).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn backend() -> Error {
+        Error(
+            "XLA/PJRT backend is not vendored in this offline build; \
+             host literals work but compilation/execution is unavailable"
+                .to_string(),
+        )
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types of the restricted artifact boundary set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    U8,
+    U32,
+}
+
+impl ElementType {
+    pub fn size_bytes(self) -> usize {
+        match self {
+            ElementType::U8 => 1,
+            _ => 4,
+        }
+    }
+}
+
+/// Rust scalar types that can view a literal's payload.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn from_le_bytes(b: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le_bytes(b: &[u8]) -> f32 {
+        f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le_bytes(b: &[u8]) -> i32 {
+        i32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl NativeType for u32 {
+    const TY: ElementType = ElementType::U32;
+    fn from_le_bytes(b: &[u8]) -> u32 {
+        u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl NativeType for u8 {
+    const TY: ElementType = ElementType::U8;
+    fn from_le_bytes(b: &[u8]) -> u8 {
+        b[0]
+    }
+}
+
+/// A host tensor: element type + shape + row-major little-endian bytes.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    /// Build a literal from raw row-major bytes (validated length).
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let want = dims.iter().product::<usize>() * ty.size_bytes();
+        if data.len() != want {
+            return Err(Error(format!(
+                "literal byte length {} does not match shape {dims:?} of {ty:?} ({want} bytes)",
+                data.len()
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), bytes: data.to_vec() })
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Extract the payload as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(Error(format!(
+                "literal holds {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        let sz = self.ty.size_bytes();
+        Ok(self.bytes.chunks_exact(sz).map(T::from_le_bytes).collect())
+    }
+
+    /// Decompose a tuple literal. Stub literals are never tuples (tuples
+    /// only come back from executions, which need the real backend).
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::backend())
+    }
+}
+
+/// Parsed HLO module text (held verbatim; compilation needs the backend).
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read an `.hlo.txt` artifact from disk.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// A computation wrapping an HLO module.
+pub struct XlaComputation {
+    #[allow(dead_code)]
+    proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { proto: HloModuleProto { text: proto.text.clone() } }
+    }
+}
+
+/// Device-resident buffer handle (unreachable without the backend).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::backend())
+    }
+}
+
+/// A loaded executable (never constructed by the stub client).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _inputs: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::backend())
+    }
+
+    pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _inputs: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::backend())
+    }
+}
+
+/// The PJRT client. Construction succeeds (host-side work is fine);
+/// anything that would touch a device errors.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::backend())
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::backend())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data: Vec<u8> = [1.5f32, -2.0, 0.0].iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &data).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.5, -2.0, 0.0]);
+        assert_eq!(lit.dims(), &[3]);
+    }
+
+    #[test]
+    fn literal_type_checked() {
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::U8, &[2], &[1, 2]).unwrap();
+        assert_eq!(lit.to_vec::<u8>().unwrap(), vec![1, 2]);
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn literal_length_checked() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0u8; 7]).is_err()
+        );
+    }
+
+    #[test]
+    fn device_paths_error_loudly() {
+        let client = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto { text: String::new() };
+        let comp = XlaComputation::from_proto(&proto);
+        let err = client.compile(&comp).unwrap_err();
+        assert!(err.to_string().contains("not vendored"), "{err}");
+    }
+}

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Regenerate the §Perf scaling numbers and append them to rust/EXPERIMENTS.md.
+# Usage: scripts/record_perf.sh [machine-label]
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+label="${1:-$(hostname)}"
+out="rust/EXPERIMENTS.md"
+
+echo "running perf_kernels (this takes a minute)..."
+bench_output="$(cargo bench --bench perf_kernels 2>&1)"
+
+{
+    echo ""
+    echo "### §Perf run: ${label} ($(date -u +%Y-%m-%dT%H:%M:%SZ))"
+    echo ""
+    echo '```'
+    echo "${bench_output}" | grep -E '^(ROW|SPEEDUP|threads:|fp8_matmul:)'
+    echo '```'
+} >> "${out}"
+
+echo "appended §Perf run '${label}' to ${out}"

@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# Tier-1 verification + lint gate for the fp8_flow_moe crate.
+#
+#   build   cargo build --release
+#   test    cargo test -q
+#   fmt     cargo fmt --check      (skipped with a warning if rustfmt is absent)
+#   clippy  cargo clippy -D warnings (skipped with a warning if clippy is absent)
+#
+# Run from the repository root or from rust/. Fails fast on the first error.
+
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --check
+else
+    echo "WARN: rustfmt not installed; skipping cargo fmt --check" >&2
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy -D warnings =="
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "WARN: clippy not installed; skipping cargo clippy" >&2
+fi
+
+echo "verify OK"
