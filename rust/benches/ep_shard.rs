@@ -1,0 +1,71 @@
+//! **Executed EP sharding** — wall-clock scaling of the rank-group
+//! runtime across simulated rank counts, per recipe, with the per-stage
+//! measured-vs-modeled report the simulator can be calibrated against.
+//!
+//! ```bash
+//! cargo bench --bench ep_shard [-- --tokens N --ranks-max R --quick]
+//! ```
+
+use fp8_flow_moe::cluster::ep_exec::{ep_forward, EpConfig, EpShape};
+use fp8_flow_moe::cluster::sim::ep_measured_vs_modeled;
+use fp8_flow_moe::moe::layer::{MoeWeights, PreparedWeights, Recipe};
+use fp8_flow_moe::util::bench::{bencher_from_cli, print_speedup, print_table};
+use fp8_flow_moe::util::mat::Mat;
+use fp8_flow_moe::util::rng::Rng;
+
+fn main() {
+    // default --threads 0 (auto): rank scaling needs the full budget
+    let (b, args) = bencher_from_cli(0);
+    let tokens = args.usize_or("tokens", if args.flag("quick") { 256 } else { 1024 });
+    let d_model = args.usize_or("d-model", 256);
+    let ffn = args.usize_or("ffn", 256);
+    let experts = args.usize_or("experts", 8);
+    let top_k = args.usize_or("top-k", 2);
+    let capacity = args.usize_or("capacity", (tokens * top_k).div_ceil(experts));
+    let ranks_max = args.usize_or("ranks-max", 4).min(experts);
+
+    let mut rng = Rng::seed_from(42);
+    let x = Mat::randn(tokens, d_model, 0.5, &mut rng);
+    let w = MoeWeights::random(d_model, ffn, experts, &mut rng);
+
+    let mut rank_counts = vec![1usize];
+    while *rank_counts.last().unwrap() * 2 <= ranks_max {
+        let next = rank_counts.last().unwrap() * 2;
+        rank_counts.push(next);
+    }
+
+    for recipe in [Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow] {
+        let pw = PreparedWeights::new(w.clone(), recipe);
+        let mut rows = Vec::new();
+        for &ranks in &rank_counts {
+            let cfg = EpConfig { ranks, top_k, capacity, threads: 0 };
+            let bytes = (tokens * top_k * d_model * 2) as u64; // combine-wire bytes/iter
+            rows.push(b.run_bytes(
+                &format!("ep_forward/{recipe:?}/R={ranks}"),
+                bytes,
+                || {
+                    std::hint::black_box(ep_forward(
+                        std::hint::black_box(&x),
+                        std::hint::black_box(&pw),
+                        &cfg,
+                    ));
+                },
+            ));
+        }
+        print_table(
+            &format!("ep_shard {recipe:?} (tokens={tokens} E={experts} cap={capacity})"),
+            &rows,
+        );
+        if rows.len() > 1 {
+            print_speedup(&format!("{recipe:?} R=1 -> R={}", rank_counts[rows.len() - 1]),
+                &rows[0], &rows[rows.len() - 1]);
+        }
+        // one representative per-stage measured-vs-modeled report
+        let ranks = *rank_counts.last().unwrap();
+        let cfg = EpConfig { ranks, top_k, capacity, threads: 0 };
+        let shape = EpShape::of(&x, &pw, &cfg);
+        let out = ep_forward(&x, &pw, &cfg);
+        print!("{}", ep_measured_vs_modeled(recipe, ranks, &shape, &out));
+        println!();
+    }
+}

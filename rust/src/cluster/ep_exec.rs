@@ -1,0 +1,572 @@
+//! **Executed** expert-parallel sharding — the measured counterpart of
+//! [`crate::cluster::sim`]'s analytic EP model.
+//!
+//! [`ep_forward`] runs the MoE layer forward sharded across R simulated
+//! ranks ([`crate::cluster::rank::RankGroup`]): experts are partitioned
+//! `Partition::even(E, R)`, tokens `Partition::even(T, R)`, and each
+//! top-k slot executes the real dispatch pipeline
+//!
+//! ```text
+//! pack (per src rank: rows → per-destination send buffers)
+//!   → in-memory all-to-all (u8 codes + UE8M0 sidecar as two buffers;
+//!     dense rows as one — cluster/comm.rs's two-buffer model)
+//!   → assemble (per dst rank: rows → [E_local·capacity, d] batch)
+//!   → expert FFN (per rank, on its disjoint worker share)
+//!   → combine (per-rank unpermute_unpad → reduce → gates)
+//! ```
+//!
+//! with wall-clock timers around every stage, so the comm/compute claims
+//! the simulator makes analytically become measurements
+//! ([`crate::cluster::sim::ep_measured_vs_modeled`] prints them side by
+//! side).
+//!
+//! **Bit-identity contract**: for any R, the output equals the
+//! single-rank [`crate::moe::layer::moe_forward`] bit for bit
+//! (`tests/prop_ep_shard.rs`). The pieces that make this hold:
+//! per-expert math reads only that expert's `capacity` rows; the UE8M0
+//! sidecar reproduces po2 scales exactly (`scale == 2^sexp`); each token
+//! appears at most once per top-k slot, so the per-rank combine partials
+//! sum (in ascending rank = ascending plan order) to the single-rank
+//! scatter result.
+
+use std::ops::Range;
+use std::time::Instant;
+
+use crate::cluster::rank::{all_to_all, RankGroup, WireBuf};
+use crate::exec::{self, Partition};
+use crate::fp8::tensor::{n_tiles, Fp8Tensor, TileLayout};
+use crate::fp8::tile::quantize_rowwise_with_threads;
+use crate::fp8::{ue8m0, Fp8Format, ScaleMode};
+use crate::moe::layer::{
+    combine, expert_ffn, PreparedWeights, RankLocalBatch, Recipe, WirePayload,
+};
+use crate::moe::permute::permute_pad_plan;
+use crate::moe::router::route;
+use crate::util::json::Json;
+use crate::util::mat::Mat;
+
+/// Execution parameters for one EP-sharded forward.
+#[derive(Clone, Copy, Debug)]
+pub struct EpConfig {
+    /// Number of simulated ranks (expert shards).
+    pub ranks: usize,
+    pub top_k: usize,
+    pub capacity: usize,
+    /// Total worker budget shared by all ranks (0 = resolve via
+    /// [`crate::exec::threads`]). Each rank gets a disjoint share.
+    pub threads: usize,
+}
+
+/// Shape of one executed EP forward — shared by the runtime, the
+/// simulator's model ([`crate::cluster::sim::modeled_ep_stages`]) and the
+/// `epshard` CLI.
+#[derive(Clone, Copy, Debug)]
+pub struct EpShape {
+    pub tokens: usize,
+    pub d_model: usize,
+    pub ffn: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub capacity: usize,
+}
+
+impl EpShape {
+    pub fn of(x: &Mat, w: &PreparedWeights, cfg: &EpConfig) -> EpShape {
+        EpShape {
+            tokens: x.rows,
+            d_model: x.cols,
+            ffn: w.raw.w1[0].cols,
+            n_experts: w.raw.n_experts(),
+            top_k: cfg.top_k,
+            capacity: cfg.capacity,
+        }
+    }
+}
+
+/// Accumulated wall-clock seconds per pipeline stage (summed over the
+/// top-k slots; route and entry-quant run once).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageTimes {
+    pub route_s: f64,
+    pub quant_s: f64,
+    pub dispatch_s: f64,
+    pub expert_s: f64,
+    pub combine_s: f64,
+}
+
+impl StageTimes {
+    pub fn total_s(&self) -> f64 {
+        self.route_s + self.quant_s + self.dispatch_s + self.expert_s + self.combine_s
+    }
+}
+
+/// Result of one executed EP-sharded forward: the output plus the
+/// measurements the simulator can only model.
+pub struct EpForward {
+    pub y: Mat,
+    pub aux_loss: f32,
+    pub ranks: usize,
+    pub stages: StageTimes,
+    /// Per-rank expert-stage seconds (summed over slots) — the load
+    /// imbalance the capacity model hides.
+    pub rank_expert_s: Vec<f64>,
+    /// Dispatch payload bytes actually shipped (real rows only — padding
+    /// never crosses the wire).
+    pub dispatch_payload_bytes: usize,
+    /// UE8M0 scale sidecar bytes (FP8 wire only).
+    pub dispatch_sidecar_bytes: usize,
+    /// Number of separate wire buffers (the synchronization-count proxy:
+    /// FP8 ships 2 per src→dst pair, BF16 ships 1).
+    pub dispatch_buffers: usize,
+    /// Combine-path bytes (always BF16-accounted — §3.3 keeps the
+    /// combine in BF16 for gradient safety).
+    pub combine_bytes: usize,
+}
+
+impl EpForward {
+    /// Per-stage report as JSON (for `runs/epshard_*.json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("ranks", self.ranks)
+            .set("route_ms", self.stages.route_s * 1e3)
+            .set("quant_ms", self.stages.quant_s * 1e3)
+            .set("dispatch_ms", self.stages.dispatch_s * 1e3)
+            .set("expert_ms", self.stages.expert_s * 1e3)
+            .set("combine_ms", self.stages.combine_s * 1e3)
+            .set("total_ms", self.stages.total_s() * 1e3)
+            .set(
+                "rank_expert_ms",
+                self.rank_expert_s.iter().map(|s| s * 1e3).collect::<Vec<f64>>(),
+            )
+            .set("dispatch_payload_bytes", self.dispatch_payload_bytes)
+            .set("dispatch_sidecar_bytes", self.dispatch_sidecar_bytes)
+            .set("dispatch_buffers", self.dispatch_buffers)
+            .set("combine_bytes", self.combine_bytes)
+            .set("aux_loss", self.aux_loss)
+    }
+}
+
+/// Run the MoE forward sharded across `cfg.ranks` simulated ranks.
+/// Bit-identical to `moe_forward(x, w, cfg.top_k, cfg.capacity)` for any
+/// rank count.
+pub fn ep_forward(x: &Mat, w: &PreparedWeights, cfg: &EpConfig) -> EpForward {
+    let t = x.rows;
+    let d = x.cols;
+    let e = w.raw.n_experts();
+    let r = cfg.ranks;
+    assert!(r >= 1, "need at least one rank");
+    assert!(e >= r, "cannot shard {e} experts across {r} ranks");
+    assert!(t >= 1 && cfg.capacity >= 1);
+    let total_workers = if cfg.threads == 0 { exec::threads() } else { cfg.threads };
+    let group = RankGroup::new(r, total_workers);
+    let ex_part = Partition::even(e, r);
+    let tok_part = Partition::even(t, r);
+    let token_owner = owner_map(&tok_part, t);
+
+    let mut stages = StageTimes::default();
+
+    let ts = Instant::now();
+    let routing = route(x, &w.raw.router, cfg.top_k);
+    stages.route_s = ts.elapsed().as_secs_f64();
+
+    // Entry quantization (Fp8Flow's single cast). Row-independent, so
+    // quantizing per token-owner rank would be bit-identical; run it
+    // once over the batch with the full worker budget.
+    let x_q = if w.recipe == Recipe::Fp8Flow {
+        let tq = Instant::now();
+        let q = quantize_rowwise_with_threads(x, Fp8Format::E4M3, ScaleMode::Po2, total_workers);
+        stages.quant_s = tq.elapsed().as_secs_f64();
+        Some(q)
+    } else {
+        None
+    };
+    let fmt = x_q.as_ref().map(|q| q.fmt);
+
+    let expert_owner = {
+        let mut m = vec![0usize; e];
+        for (rk, range) in ex_part.ranges().enumerate() {
+            for ex in range {
+                m[ex] = rk;
+            }
+        }
+        m
+    };
+
+    let mut y = Mat::zeros(t, d);
+    let mut rank_expert_s = vec![0.0f64; r];
+    let (mut payload_b, mut sidecar_b, mut n_bufs, mut combine_b) = (0usize, 0usize, 0usize, 0usize);
+
+    for kk in 0..cfg.top_k {
+        let expert_of: Vec<usize> = routing.experts.iter().map(|ex| ex[kk]).collect();
+        let plan = permute_pad_plan(&expert_of, e, cfg.capacity);
+        // Serving rank per token this slot (each token appears at most
+        // once per slot; usize::MAX = dropped by capacity).
+        let mut serving = vec![usize::MAX; t];
+        for (gd, &src) in plan.iter().enumerate() {
+            if src >= 0 {
+                serving[src as usize] = expert_owner[gd / cfg.capacity];
+            }
+        }
+
+        // ---- dispatch: pack → all-to-all → assemble ----
+        let td = Instant::now();
+        let mailbox = group
+            .run_phase(|ctx| {
+                let tr = part_range(&tok_part, ctx.rank);
+                match &x_q {
+                    Some(xq) => pack_fp8(xq, &plan, &tr, &ex_part, cfg.capacity),
+                    None => pack_dense(x, &plan, &tr, &ex_part, cfg.capacity),
+                }
+            })
+            .results;
+        for row in &mailbox {
+            for b in row {
+                payload_b += b.payload_bytes();
+                sidecar_b += b.sidecar_bytes();
+                n_bufs += b.n_buffers();
+            }
+        }
+        let inbox = all_to_all(mailbox);
+        let batches = group
+            .run_phase(|ctx| {
+                let er = ex_part.range(ctx.rank);
+                match fmt {
+                    Some(f) => assemble_fp8(
+                        &inbox[ctx.rank],
+                        &plan,
+                        er,
+                        cfg.capacity,
+                        d,
+                        &token_owner,
+                        f,
+                    ),
+                    None => assemble_dense(&inbox[ctx.rank], &plan, er, cfg.capacity, d, &token_owner),
+                }
+            })
+            .results;
+        stages.dispatch_s += td.elapsed().as_secs_f64();
+
+        // ---- expert FFN: each rank on its disjoint worker share ----
+        let te = Instant::now();
+        let ph = group.run_phase(|ctx| expert_ffn(&batches[ctx.rank], w, ctx.workers));
+        for (i, s) in ph.rank_s.iter().enumerate() {
+            rank_expert_s[i] += s;
+        }
+        let yks = ph.results;
+        stages.expert_s += te.elapsed().as_secs_f64();
+
+        // Combine-wire accounting (BF16 rows back to token owners, §3.3)
+        // happens outside the timer: bookkeeping must not contaminate
+        // the measured combine stage (pack pre-sizes for the same reason).
+        combine_b += plan.iter().filter(|&&s| s >= 0).count() * d * 2;
+
+        // ---- combine: per-rank unpermute → reduce → gates ----
+        let tc = Instant::now();
+        let partials = group
+            .run_phase(|ctx| {
+                let er = ex_part.range(ctx.rank);
+                combine(&yks[ctx.rank], &plan, er, cfg.capacity, t, ctx.workers)
+            })
+            .results;
+        // Reduce + gate, one task per token shard (disjoint y rows).
+        // A token has at most one serving rank per slot, every other
+        // partial holds exactly +0.0 there, and partial values are never
+        // -0.0 (unpermute adds into zeros), so reading the serving
+        // partial directly equals the full ascending-rank sum — and the
+        // single-rank scatter — bit for bit. Dropped tokens contribute
+        // g·(+0.0), which never changes y's bits (y is never -0.0).
+        let tasks: Vec<_> = exec::split_parts(&tok_part, d, &mut y.data)
+            .into_iter()
+            .zip(tok_part.ranges())
+            .collect();
+        exec::run_tasks(tasks, |(rows, trange)| {
+            for tt in trange.clone() {
+                let sr = serving[tt];
+                if sr == usize::MAX {
+                    continue; // dropped by capacity: back row is zero
+                }
+                let g = routing.gates[tt][kk];
+                let o = (tt - trange.start) * d;
+                let p = &partials[sr].data;
+                for j in 0..d {
+                    rows[o + j] += g * p[tt * d + j];
+                }
+            }
+        });
+        stages.combine_s += tc.elapsed().as_secs_f64();
+    }
+
+    EpForward {
+        y,
+        aux_loss: routing.aux_loss,
+        ranks: r,
+        stages,
+        rank_expert_s,
+        dispatch_payload_bytes: payload_b,
+        dispatch_sidecar_bytes: sidecar_b,
+        dispatch_buffers: n_bufs,
+        combine_bytes: combine_b,
+    }
+}
+
+/// Token → owning rank, from the token partition.
+fn owner_map(tok_part: &Partition, n_tokens: usize) -> Vec<usize> {
+    let mut owner = vec![0usize; n_tokens];
+    for (r, range) in tok_part.ranges().enumerate() {
+        for t in range {
+            owner[t] = r;
+        }
+    }
+    owner
+}
+
+/// Range of part `i`, or empty when the partition has fewer parts than
+/// ranks (more ranks than tokens).
+fn part_range(p: &Partition, i: usize) -> Range<usize> {
+    if i < p.len() {
+        p.range(i)
+    } else {
+        0..0
+    }
+}
+
+/// Rows this source rank ships into one destination's expert segment
+/// (= the exact send-buffer size, computed before packing).
+fn sent_rows(plan: &[i64], dr: &Range<usize>, capacity: usize, tok: &Range<usize>) -> usize {
+    plan[dr.start * capacity..dr.end * capacity]
+        .iter()
+        .filter(|&&src| src >= 0 && tok.contains(&(src as usize)))
+        .count()
+}
+
+/// Pack one source rank's FP8 sends: for each destination rank, its
+/// tokens' code rows (ascending plan order) plus the UE8M0 sidecar as a
+/// second buffer.
+fn pack_fp8(
+    xq: &Fp8Tensor,
+    plan: &[i64],
+    tok: &Range<usize>,
+    ex_part: &Partition,
+    capacity: usize,
+) -> Vec<WireBuf> {
+    let h = xq.cols;
+    let tpr = n_tiles(h);
+    assert!(!xq.sexp.is_empty(), "FP8 wire needs po2 scale exponents");
+    (0..ex_part.len())
+        .map(|dst| {
+            let dr = ex_part.range(dst);
+            // size the buffers exactly up front: reallocation memmoves
+            // would otherwise be charged to the timed dispatch stage
+            let n_rows = sent_rows(plan, &dr, capacity, tok);
+            let mut codes = Vec::with_capacity(n_rows * h);
+            let mut sidecar = Vec::with_capacity(n_rows * tpr);
+            for gd in dr.start * capacity..dr.end * capacity {
+                let src = plan[gd];
+                if src >= 0 && tok.contains(&(src as usize)) {
+                    let s = src as usize;
+                    codes.extend_from_slice(&xq.data[s * h..(s + 1) * h]);
+                    for k in 0..tpr {
+                        let e = xq.sexp[s * tpr + k];
+                        // Outside UE8M0's exponent range the sidecar would
+                        // saturate and silently break the bit-identity
+                        // contract — fail loudly, in release builds too.
+                        assert!(
+                            (-(ue8m0::BIAS)..=(255 - ue8m0::BIAS)).contains(&e),
+                            "po2 scale exponent {e} not UE8M0-representable"
+                        );
+                        sidecar.push(ue8m0::from_exponent(e));
+                    }
+                }
+            }
+            WireBuf::Fp8 { codes, sidecar }
+        })
+        .collect()
+}
+
+/// Pack one source rank's dense (BF16-wire) sends.
+fn pack_dense(
+    x: &Mat,
+    plan: &[i64],
+    tok: &Range<usize>,
+    ex_part: &Partition,
+    capacity: usize,
+) -> Vec<WireBuf> {
+    let h = x.cols;
+    (0..ex_part.len())
+        .map(|dst| {
+            let dr = ex_part.range(dst);
+            let mut rows = Vec::with_capacity(sent_rows(plan, &dr, capacity, tok) * h);
+            for gd in dr.start * capacity..dr.end * capacity {
+                let src = plan[gd];
+                if src >= 0 && tok.contains(&(src as usize)) {
+                    rows.extend_from_slice(x.row(src as usize));
+                }
+            }
+            WireBuf::Dense(rows)
+        })
+        .collect()
+}
+
+/// Assemble one destination rank's `[E_local·capacity, d]` FP8 batch from
+/// its received buffers. Padding rows stay zero codes with scale 1
+/// (= 2^0) — exactly `permute_pad_fp8`'s initialization, which the
+/// bit-identity contract relies on.
+fn assemble_fp8(
+    inbox: &[WireBuf],
+    plan: &[i64],
+    experts: Range<usize>,
+    capacity: usize,
+    cols: usize,
+    token_owner: &[usize],
+    fmt: Fp8Format,
+) -> RankLocalBatch {
+    let tpr = n_tiles(cols);
+    let rows = experts.len() * capacity;
+    let mut data = vec![0u8; rows * cols];
+    let mut scales = vec![1.0f32; rows * tpr];
+    let mut sexp = vec![0i32; rows * tpr];
+    let mut cur = vec![0usize; inbox.len()];
+    for (ld, gd) in (experts.start * capacity..experts.end * capacity).enumerate() {
+        let src = plan[gd];
+        if src < 0 {
+            continue;
+        }
+        let s_rank = token_owner[src as usize];
+        let WireBuf::Fp8 { codes, sidecar } = &inbox[s_rank] else {
+            panic!("FP8 assemble received a dense wire buffer");
+        };
+        let c = cur[s_rank];
+        data[ld * cols..(ld + 1) * cols].copy_from_slice(&codes[c * cols..(c + 1) * cols]);
+        for k in 0..tpr {
+            let b = sidecar[c * tpr + k];
+            // scale == 2^sexp (po2 contract): decoding the sidecar byte
+            // reproduces the original f32 scale bitwise
+            scales[ld * tpr + k] = ue8m0::decode(b);
+            sexp[ld * tpr + k] = ue8m0::exponent(b);
+        }
+        cur[s_rank] += 1;
+    }
+    let payload = WirePayload::Fp8(Fp8Tensor {
+        rows,
+        cols,
+        fmt,
+        mode: ScaleMode::Po2,
+        layout: TileLayout::RowWise,
+        data,
+        scales,
+        sexp,
+    });
+    RankLocalBatch { experts, capacity, payload }
+}
+
+/// Assemble one destination rank's dense batch.
+fn assemble_dense(
+    inbox: &[WireBuf],
+    plan: &[i64],
+    experts: Range<usize>,
+    capacity: usize,
+    cols: usize,
+    token_owner: &[usize],
+) -> RankLocalBatch {
+    let rows = experts.len() * capacity;
+    let mut m = Mat::zeros(rows, cols);
+    let mut cur = vec![0usize; inbox.len()];
+    for (ld, gd) in (experts.start * capacity..experts.end * capacity).enumerate() {
+        let src = plan[gd];
+        if src < 0 {
+            continue;
+        }
+        let s_rank = token_owner[src as usize];
+        let WireBuf::Dense(buf) = &inbox[s_rank] else {
+            panic!("dense assemble received an FP8 wire buffer");
+        };
+        let c = cur[s_rank];
+        m.data[ld * cols..(ld + 1) * cols].copy_from_slice(&buf[c * cols..(c + 1) * cols]);
+        cur[s_rank] += 1;
+    }
+    RankLocalBatch { experts, capacity, payload: WirePayload::Dense(m) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::layer::{moe_forward, MoeWeights};
+    use crate::util::prop::assert_mat_bits_eq;
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64) -> (Mat, MoeWeights) {
+        let mut rng = Rng::seed_from(seed);
+        let (t, d, h, e) = (64, 64, 48, 4);
+        let x = Mat::randn(t, d, 0.5, &mut rng);
+        let w = MoeWeights::random(d, h, e, &mut rng);
+        (x, w)
+    }
+
+    #[test]
+    fn sharded_matches_single_rank_all_recipes() {
+        let (x, w) = setup(21);
+        for recipe in [Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow] {
+            let pw = PreparedWeights::new(w.clone(), recipe);
+            let reference = moe_forward(&x, &pw, 2, 24);
+            for ranks in [1usize, 2, 4] {
+                let cfg = EpConfig { ranks, top_k: 2, capacity: 24, threads: 0 };
+                let out = ep_forward(&x, &pw, &cfg);
+                assert_mat_bits_eq(&out.y, &reference.y, &format!("{recipe:?} R={ranks}"));
+                assert_eq!(out.aux_loss.to_bits(), reference.aux_loss.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn fp8_wire_is_lighter_and_doubles_buffer_count() {
+        let (x, w) = setup(22);
+        let cfg = EpConfig { ranks: 2, top_k: 1, capacity: 32, threads: 2 };
+        let flow = ep_forward(&x, &PreparedWeights::new(w.clone(), Recipe::Fp8Flow), &cfg);
+        let bf16 = ep_forward(&x, &PreparedWeights::new(w, Recipe::Bf16), &cfg);
+        // same real rows shipped → FP8 payload is exactly half the BF16 bytes
+        assert_eq!(flow.dispatch_payload_bytes * 2, bf16.dispatch_payload_bytes);
+        assert!(flow.dispatch_sidecar_bytes > 0);
+        assert_eq!(bf16.dispatch_sidecar_bytes, 0);
+        // two-buffer model: FP8 ships 2 buffers per src→dst pair, BF16 one
+        assert_eq!(flow.dispatch_buffers, 2 * bf16.dispatch_buffers);
+        assert_eq!(bf16.dispatch_buffers, 2 * 2); // R² pairs, one slot
+        // combine stays BF16 in both recipes
+        assert_eq!(flow.combine_bytes, bf16.combine_bytes);
+    }
+
+    #[test]
+    fn stage_timers_are_populated() {
+        let (x, w) = setup(23);
+        let cfg = EpConfig { ranks: 2, top_k: 1, capacity: 32, threads: 2 };
+        let out = ep_forward(&x, &PreparedWeights::new(w, Recipe::Fp8Flow), &cfg);
+        assert!(out.stages.route_s > 0.0);
+        assert!(out.stages.quant_s > 0.0);
+        assert!(out.stages.dispatch_s > 0.0);
+        assert!(out.stages.expert_s > 0.0);
+        assert!(out.stages.combine_s > 0.0);
+        assert_eq!(out.rank_expert_s.len(), 2);
+        assert!(out.stages.total_s() >= out.stages.expert_s);
+        let j = out.to_json().render();
+        assert!(j.contains("\"dispatch_ms\""), "{j}");
+    }
+
+    #[test]
+    fn more_ranks_than_tokens_still_exact() {
+        let mut rng = Rng::seed_from(24);
+        let (t, d, h, e) = (3, 32, 16, 4);
+        let x = Mat::randn(t, d, 0.5, &mut rng);
+        let w = MoeWeights::random(d, h, e, &mut rng);
+        let pw = PreparedWeights::new(w, Recipe::Fp8Flow);
+        let reference = moe_forward(&x, &pw, 1, 2);
+        let out = ep_forward(&x, &pw, &EpConfig { ranks: 4, top_k: 1, capacity: 2, threads: 3 });
+        assert_mat_bits_eq(&out.y, &reference.y, "R>T");
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot shard")]
+    fn more_ranks_than_experts_rejected() {
+        let (x, w) = setup(25);
+        let pw = PreparedWeights::new(w, Recipe::Bf16);
+        ep_forward(&x, &pw, &EpConfig { ranks: 8, top_k: 1, capacity: 8, threads: 1 });
+    }
+}

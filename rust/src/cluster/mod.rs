@@ -9,10 +9,21 @@
 //! which is the paper's own experimental control. Absolute milliseconds
 //! are calibrated to the same order as the paper's testbed; the asserted
 //! results are orderings, ratios and crossovers.
+//!
+//! Two substrates live here:
+//!
+//! * the **analytic** side ([`comm`], [`sim`], [`memory`], [`schedule`],
+//!   [`topology`]) — the Tables 1–3 cost model;
+//! * the **executed** side ([`rank`], [`ep_exec`]) — simulated ranks as
+//!   disjoint worker groups running the real FP8-code-space dispatch, so
+//!   the model's comm/compute claims can be measured
+//!   ([`sim::ep_measured_vs_modeled`]).
 
 pub mod comm;
+pub mod ep_exec;
 pub mod memory;
 pub mod model_cfg;
+pub mod rank;
 pub mod schedule;
 pub mod sim;
 pub mod topology;

@@ -1,0 +1,211 @@
+//! Rank-group runtime — simulated expert-parallel ranks as disjoint
+//! worker sub-pools, plus the in-memory wire between them.
+//!
+//! The cluster simulator ([`crate::cluster::sim`]) *costs* EP dispatch
+//! analytically; this module provides the substrate that *executes* it:
+//!
+//! * [`RankGroup`] — R simulated ranks, each backed by a disjoint worker
+//!   share of the process budget ([`crate::exec::WorkerGroup`]). A phase
+//!   runs one body per rank concurrently and reports per-rank and
+//!   wall-clock seconds, which is what turns the simulator's claims into
+//!   measurements.
+//! * [`WireBuf`] / [`all_to_all`] — the in-memory all-to-all. FP8
+//!   messages ship the u8 payload and the UE8M0 scale sidecar as two
+//!   *separate* buffers, mirroring [`crate::cluster::comm`]'s two-buffer
+//!   cost model (§3.3.2: FP8 "doubles the number of data buffers and
+//!   synchronizations"); BF16-wire recipes ship one dense buffer.
+//!
+//! The UE8M0 sidecar is bit-faithful: po2 tile scales satisfy
+//! `scale == 2^sexp` ([`crate::fp8::tile::tile_scale`]), so shipping the
+//! biased exponent byte and re-deriving the scale with
+//! [`crate::fp8::ue8m0::decode`] reproduces the exact f32 scale — the
+//! executed dispatch is bitwise equal to a local `permute_pad_fp8`.
+
+use crate::exec::WorkerGroup;
+use std::time::Instant;
+
+/// What one rank body knows about itself.
+#[derive(Clone, Copy, Debug)]
+pub struct RankCtx {
+    pub rank: usize,
+    pub n_ranks: usize,
+    /// Worker budget for kernels called inside this rank's body
+    /// (pass to the `*_with_threads` kernel forms).
+    pub workers: usize,
+}
+
+/// R simulated ranks over disjoint worker sub-pools.
+#[derive(Clone, Debug)]
+pub struct RankGroup {
+    group: WorkerGroup,
+}
+
+/// Result of one barrier-synchronized phase across all ranks.
+pub struct Phase<R> {
+    /// Per-rank results, in rank order.
+    pub results: Vec<R>,
+    /// Per-rank body duration (seconds).
+    pub rank_s: Vec<f64>,
+    /// Wall-clock duration of the whole phase (max over ranks plus
+    /// spawn/join overhead) — the number a real synchronized collective
+    /// would observe.
+    pub wall_s: f64,
+}
+
+impl RankGroup {
+    /// `n_ranks` simulated ranks sharing `total_workers` (0 = resolve via
+    /// [`crate::exec::threads`]). Every rank gets at least one worker.
+    pub fn new(n_ranks: usize, total_workers: usize) -> RankGroup {
+        let total = if total_workers == 0 { crate::exec::threads() } else { total_workers };
+        RankGroup { group: WorkerGroup::new(n_ranks, total) }
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.group.len()
+    }
+
+    /// Worker budget of one rank.
+    pub fn workers(&self, rank: usize) -> usize {
+        self.group.budget(rank)
+    }
+
+    /// Run `f` once per rank, concurrently (rank 0 on the calling
+    /// thread), with a barrier at the end — the executed analogue of one
+    /// bulk-synchronous pipeline stage.
+    pub fn run_phase<R, F>(&self, f: F) -> Phase<R>
+    where
+        R: Send,
+        F: Fn(&RankCtx) -> R + Sync,
+    {
+        let n_ranks = self.group.len();
+        let t0 = Instant::now();
+        let timed: Vec<(R, f64)> = self.group.run(|rank, workers| {
+            let ctx = RankCtx { rank, n_ranks, workers };
+            let ts = Instant::now();
+            let out = f(&ctx);
+            (out, ts.elapsed().as_secs_f64())
+        });
+        let wall_s = t0.elapsed().as_secs_f64();
+        let (results, rank_s) = timed.into_iter().unzip();
+        Phase { results, rank_s, wall_s }
+    }
+}
+
+/// One directional message on the in-memory wire.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireBuf {
+    /// BF16-wire recipes: one dense buffer (f32 in memory, accounted at
+    /// 2 B/element — the BF16 stand-in used throughout the repo).
+    Dense(Vec<f32>),
+    /// FP8 wire: u8 codes and the UE8M0 scale sidecar as two separate
+    /// buffers (the two-buffer model of `cluster/comm.rs`).
+    Fp8 { codes: Vec<u8>, sidecar: Vec<u8> },
+}
+
+impl WireBuf {
+    /// Payload bytes on the wire (excluding any sidecar).
+    pub fn payload_bytes(&self) -> usize {
+        match self {
+            WireBuf::Dense(v) => v.len() * 2,
+            WireBuf::Fp8 { codes, .. } => codes.len(),
+        }
+    }
+
+    /// Sidecar bytes on the wire (UE8M0: 1 B per 1×128 tile).
+    pub fn sidecar_bytes(&self) -> usize {
+        match self {
+            WireBuf::Dense(_) => 0,
+            WireBuf::Fp8 { sidecar, .. } => sidecar.len(),
+        }
+    }
+
+    /// Total bytes shipped.
+    pub fn wire_bytes(&self) -> usize {
+        self.payload_bytes() + self.sidecar_bytes()
+    }
+
+    /// Number of separate buffers (= synchronization rounds in the comm
+    /// model: FP8 pays two, BF16 one).
+    pub fn n_buffers(&self) -> usize {
+        match self {
+            WireBuf::Dense(_) => 1,
+            WireBuf::Fp8 { .. } => 2,
+        }
+    }
+}
+
+/// The in-memory all-to-all: `mailbox[src][dst]` → `inbox[dst][src]`.
+///
+/// Pure ownership transposition — the wire itself is free in shared
+/// memory; what the executed dispatch *measures* is the pack/assemble
+/// memory traffic around it, which is exactly the part the Table 1 model
+/// attributes to the payload term.
+pub fn all_to_all<T>(mailbox: Vec<Vec<T>>) -> Vec<Vec<T>> {
+    let r = mailbox.len();
+    let mut inbox: Vec<Vec<T>> = (0..r).map(|_| Vec::with_capacity(r)).collect();
+    for row in mailbox {
+        assert_eq!(row.len(), r, "all_to_all mailbox must be square (R×R)");
+        for (dst, buf) in row.into_iter().enumerate() {
+            inbox[dst].push(buf);
+        }
+    }
+    inbox
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp8::ue8m0;
+
+    #[test]
+    fn phase_runs_every_rank_with_disjoint_budgets() {
+        let g = RankGroup::new(4, 8);
+        assert_eq!(g.n_ranks(), 4);
+        let total: usize = (0..4).map(|r| g.workers(r)).sum();
+        assert_eq!(total, 8);
+        let ph = g.run_phase(|ctx| (ctx.rank, ctx.workers, ctx.n_ranks));
+        assert_eq!(ph.results.len(), 4);
+        assert_eq!(ph.rank_s.len(), 4);
+        assert!(ph.wall_s >= 0.0);
+        for (i, &(rank, workers, n)) in ph.results.iter().enumerate() {
+            assert_eq!(rank, i);
+            assert_eq!(workers, g.workers(i));
+            assert_eq!(n, 4);
+        }
+    }
+
+    #[test]
+    fn all_to_all_transposes() {
+        // mailbox[src][dst] = (src, dst)
+        let mailbox: Vec<Vec<(usize, usize)>> =
+            (0..3).map(|s| (0..3).map(|d| (s, d)).collect()).collect();
+        let inbox = all_to_all(mailbox);
+        for (d, row) in inbox.iter().enumerate() {
+            for (s, &(src, dst)) in row.iter().enumerate() {
+                assert_eq!((src, dst), (s, d));
+            }
+        }
+    }
+
+    #[test]
+    fn wire_accounting() {
+        let dense = WireBuf::Dense(vec![0.0; 10]);
+        assert_eq!(dense.wire_bytes(), 20);
+        assert_eq!(dense.n_buffers(), 1);
+        let fp8 = WireBuf::Fp8 { codes: vec![0; 256], sidecar: vec![127; 2] };
+        assert_eq!(fp8.payload_bytes(), 256);
+        assert_eq!(fp8.sidecar_bytes(), 2);
+        assert_eq!(fp8.wire_bytes(), 258);
+        assert_eq!(fp8.n_buffers(), 2);
+    }
+
+    #[test]
+    fn ue8m0_sidecar_roundtrips_po2_scales_bitwise() {
+        // the wire contract: scale == 2^sexp survives the sidecar byte
+        for e in -40i32..40 {
+            let b = ue8m0::from_exponent(e);
+            assert_eq!(ue8m0::exponent(b), e);
+            assert_eq!(ue8m0::decode(b).to_bits(), (e as f32).exp2().to_bits());
+        }
+    }
+}

@@ -11,9 +11,9 @@
 //! from the audited cast accounting.
 
 use crate::cluster::comm::{a2a_latency, Wire};
+use crate::cluster::ep_exec::{EpForward, EpShape};
 use crate::cluster::memory::{
-    inflight_microbatches, layers_per_stage, memory_report, AcMode, MemReport, Workload,
-    DEFAULT_WORKLOAD,
+    layers_per_stage, memory_report, AcMode, MemReport, Workload, DEFAULT_WORKLOAD,
 };
 use crate::cluster::model_cfg::ModelCfg;
 use crate::cluster::topology::Layout;
@@ -196,7 +196,111 @@ pub fn simulate(m: &ModelCfg, ep: usize, pp: usize, recipe: Recipe, ac: AcMode) 
     }
 }
 
-pub use crate::cluster::memory::AcMode as AcModeReexport;
+/// What the analytic model predicts for one executed `epshard`
+/// configuration (seconds): the comm model's dispatch/combine all-to-all
+/// plus the GEMM term for the per-rank expert work.
+#[derive(Clone, Copy, Debug)]
+pub struct ModeledEp {
+    pub dispatch_s: f64,
+    pub expert_s: f64,
+    pub combine_s: f64,
+}
+
+/// Cost the stages of an executed EP forward with the same model that
+/// generates Tables 1–3, at the executed shape. The executed runtime
+/// pays one dispatch + combine all-to-all **per top-k slot** (each slot
+/// ships ~`tokens` rows), so the α/sync term is charged per slot here
+/// too — charging one expanded `tokens·top_k` a2a would undercount it
+/// by `top_k`×. Expert GEMMs cover all slots, sharded across `ranks`.
+pub fn modeled_ep_stages(ranks: usize, recipe: Recipe, shape: &EpShape) -> ModeledEp {
+    let l = Layout::new(ranks, 1);
+    let te = shape.tokens * shape.top_k;
+    let slots = shape.top_k as f64;
+    let wire = if recipe == Recipe::Fp8Flow { Wire::Fp8 } else { Wire::Bf16 };
+    let dispatch_s = slots * a2a_latency(&l, shape.tokens, shape.d_model, wire);
+    // combine stays BF16 in every recipe (§3.3: gradient-safe combine)
+    let combine_s = slots * a2a_latency(&l, shape.tokens, shape.d_model, Wire::Bf16);
+    let (peak, eff) = match recipe {
+        Recipe::Bf16 => (l.hw.bf16_flops, l.hw.gemm_efficiency),
+        Recipe::Blockwise => (l.hw.bf16_flops * 1.1, l.hw.gemm_efficiency),
+        Recipe::Fp8Flow => (l.hw.fp8_flops, l.hw.gemm_efficiency * 0.8),
+    };
+    let flops = 2.0 * te as f64 * 3.0 * shape.d_model as f64 * shape.ffn as f64 / ranks as f64;
+    ModeledEp { dispatch_s, expert_s: flops / (peak * eff), combine_s }
+}
+
+/// Render one executed EP forward side by side with the analytic model —
+/// measured wall-clock (this machine) vs modeled time (H100 cluster).
+/// Absolute ratios differ by the hardware gap; the calibration signal is
+/// the *relative* shape (dispatch:expert:combine, and FP8-vs-BF16 wire
+/// ratios across recipes) — see `rust/EXPERIMENTS.md` §"Measured vs
+/// modeled EP dispatch".
+pub fn ep_measured_vs_modeled(
+    recipe: Recipe,
+    ranks: usize,
+    shape: &EpShape,
+    f: &EpForward,
+) -> String {
+    let m = modeled_ep_stages(ranks, recipe, shape);
+    let mut s = String::new();
+    s.push_str(&format!(
+        "== epshard {recipe:?}: R={ranks} tokens={} d={} E={} cap={} top_k={} ==\n",
+        shape.tokens, shape.d_model, shape.n_experts, shape.capacity, shape.top_k
+    ));
+    s.push_str(&format!(
+        "{:<10} {:>13} {:>13} {:>12}\n",
+        "stage", "measured_ms", "modeled_ms", "meas/model"
+    ));
+    let rows = [
+        ("dispatch", f.stages.dispatch_s, m.dispatch_s),
+        ("expert", f.stages.expert_s, m.expert_s),
+        ("combine", f.stages.combine_s, m.combine_s),
+    ];
+    for (name, meas, model) in rows {
+        s.push_str(&format!(
+            "ROW {:<6} {:>13.4} {:>13.4} {:>11.1}x\n",
+            name,
+            meas * 1e3,
+            model * 1e3,
+            meas / model
+        ));
+    }
+    s.push_str(&format!(
+        "    route {:.4} ms, entry-quant {:.4} ms; total {:.4} ms\n",
+        f.stages.route_s * 1e3,
+        f.stages.quant_s * 1e3,
+        f.stages.total_s() * 1e3
+    ));
+    s.push_str(&format!(
+        "    wire: payload {} B + sidecar {} B in {} buffers (dispatch), {} B (combine)\n",
+        f.dispatch_payload_bytes, f.dispatch_sidecar_bytes, f.dispatch_buffers, f.combine_bytes
+    ));
+    let imb = per_rank_imbalance(&f.rank_expert_s);
+    s.push_str(&format!(
+        "    per-rank expert ms: [{}]  (max/mean imbalance {:.2}x)\n",
+        f.rank_expert_s
+            .iter()
+            .map(|v| format!("{:.3}", v * 1e3))
+            .collect::<Vec<_>>()
+            .join(", "),
+        imb
+    ));
+    s
+}
+
+/// Max/mean ratio of per-rank stage times (1.0 = perfectly balanced).
+pub fn per_rank_imbalance(rank_s: &[f64]) -> f64 {
+    if rank_s.is_empty() {
+        return 1.0;
+    }
+    let mean = rank_s.iter().sum::<f64>() / rank_s.len() as f64;
+    let max = rank_s.iter().cloned().fold(0.0f64, f64::max);
+    if mean > 0.0 {
+        max / mean
+    } else {
+        1.0
+    }
+}
 
 /// The paper's Tables 2–3 values for side-by-side reporting:
 /// (recipe, ep, tgs, mem_gb) — `None` = OOM.
@@ -309,6 +413,33 @@ mod tests {
             let t32 = run(r, 32, AcMode::Full).tgs;
             assert!(t8 > t16 && t16 > t32, "{r:?}: {t8} {t16} {t32}");
         }
+    }
+
+    #[test]
+    fn modeled_ep_stages_have_the_right_shape() {
+        let shape = EpShape {
+            tokens: 4096,
+            d_model: 1024,
+            ffn: 1024,
+            n_experts: 8,
+            top_k: 2,
+            capacity: 1024,
+        };
+        let flow = modeled_ep_stages(4, Recipe::Fp8Flow, &shape);
+        let bf16 = modeled_ep_stages(4, Recipe::Bf16, &shape);
+        // FP8 wire beats BF16 on dispatch; combine (BF16 both) is equal
+        assert!(flow.dispatch_s < bf16.dispatch_s);
+        assert_eq!(flow.combine_s, bf16.combine_s);
+        // expert work shrinks with more ranks
+        let flow8 = modeled_ep_stages(8, Recipe::Fp8Flow, &shape);
+        assert!(flow8.expert_s < flow.expert_s);
+    }
+
+    #[test]
+    fn imbalance_metric() {
+        assert_eq!(per_rank_imbalance(&[]), 1.0);
+        assert_eq!(per_rank_imbalance(&[2.0, 2.0]), 1.0);
+        assert_eq!(per_rank_imbalance(&[3.0, 1.0]), 1.5);
     }
 
     #[test]

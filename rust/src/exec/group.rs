@@ -1,0 +1,123 @@
+//! Worker groups — [`Partition`]-backed sub-pools of the process worker
+//! budget.
+//!
+//! A [`WorkerGroup`] carves the total worker budget into `n_groups`
+//! disjoint shares (every group gets at least one worker) and runs one
+//! closure per group concurrently. Each closure receives its group index
+//! and its worker budget; kernels called inside a group body must use the
+//! `*_with_threads` forms with that budget, so the sum of live workers
+//! across all groups never exceeds the process budget — the same
+//! no-nested-oversubscription rule the expert loops follow, lifted one
+//! level up. The executed EP runtime ([`crate::cluster::rank`]) uses one
+//! group per simulated rank.
+
+use crate::exec::partition::Partition;
+
+/// Disjoint worker budgets for `n_groups` concurrent sub-pools.
+#[derive(Clone, Debug)]
+pub struct WorkerGroup {
+    budgets: Vec<usize>,
+}
+
+impl WorkerGroup {
+    /// Split `total_workers` into `n_groups` near-equal budgets. When the
+    /// budget is smaller than the group count, every group still gets one
+    /// worker (the groups then oversubscribe by `n_groups - total`, the
+    /// minimum possible).
+    pub fn new(n_groups: usize, total_workers: usize) -> WorkerGroup {
+        assert!(n_groups > 0, "WorkerGroup needs at least one group");
+        let p = Partition::even(total_workers.max(n_groups), n_groups);
+        WorkerGroup { budgets: p.ranges().map(|r| r.len()).collect() }
+    }
+
+    /// Number of groups.
+    pub fn len(&self) -> usize {
+        self.budgets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.budgets.is_empty()
+    }
+
+    /// Worker budget of group `g`.
+    pub fn budget(&self, g: usize) -> usize {
+        self.budgets[g]
+    }
+
+    /// Sum of all budgets (= `max(total_workers, n_groups)`).
+    pub fn total(&self) -> usize {
+        self.budgets.iter().sum()
+    }
+
+    /// Run `f(group_index, budget)` once per group, concurrently: group 0
+    /// on the calling thread, the rest on scoped threads. Results come
+    /// back in group order; a panicking group propagates.
+    pub fn run<R, F>(&self, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize, usize) -> R + Sync,
+    {
+        let n = self.budgets.len();
+        if n == 1 {
+            return vec![f(0, self.budgets[0])];
+        }
+        std::thread::scope(|s| {
+            let f = &f;
+            let handles: Vec<_> = (1..n)
+                .map(|g| {
+                    let b = self.budgets[g];
+                    s.spawn(move || f(g, b))
+                })
+                .collect();
+            let mut out = Vec::with_capacity(n);
+            out.push(f(0, self.budgets[0]));
+            for h in handles {
+                out.push(h.join().expect("worker-group member panicked"));
+            }
+            out
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn budgets_partition_the_total() {
+        let g = WorkerGroup::new(3, 8);
+        assert_eq!(g.len(), 3);
+        assert_eq!(g.total(), 8);
+        assert_eq!((g.budget(0), g.budget(1), g.budget(2)), (3, 3, 2));
+    }
+
+    #[test]
+    fn every_group_gets_a_worker() {
+        let g = WorkerGroup::new(4, 2); // budget smaller than group count
+        assert_eq!(g.len(), 4);
+        for i in 0..4 {
+            assert_eq!(g.budget(i), 1);
+        }
+        assert_eq!(g.total(), 4);
+    }
+
+    #[test]
+    fn run_covers_all_groups_in_order() {
+        let g = WorkerGroup::new(5, 16);
+        let out = g.run(|idx, budget| (idx, budget));
+        assert_eq!(out.len(), 5);
+        for (i, &(idx, budget)) in out.iter().enumerate() {
+            assert_eq!(idx, i);
+            assert_eq!(budget, g.budget(i));
+        }
+        let seen: BTreeSet<usize> = out.iter().map(|&(i, _)| i).collect();
+        assert_eq!(seen.len(), 5);
+    }
+
+    #[test]
+    fn single_group_gets_everything() {
+        let g = WorkerGroup::new(1, 8);
+        assert_eq!(g.run(|_, b| b), vec![8]);
+    }
+}

@@ -17,6 +17,10 @@
 //!   external deps): part 0 runs on the calling thread, the rest on
 //!   scoped workers; disjoint `&mut` output sub-slices are carved with
 //!   `split_at_mut`, so the whole layer is safe Rust.
+//! * [`group`] — worker groups: the budget itself partitioned into
+//!   disjoint sub-pools, one per concurrently running coarse unit (e.g.
+//!   one per simulated expert-parallel rank), so nested kernel calls
+//!   never oversubscribe the machine.
 //!
 //! Thread-count resolution (highest wins): [`set_threads`] (CLI
 //! `--threads`), the `FP8_THREADS` environment variable, then
@@ -25,9 +29,11 @@
 //! [`crate::moe::layer::fused_expert_ffn`]) call the `*_with_threads`
 //! variants with `1` to avoid nested oversubscription.
 
+pub mod group;
 pub mod partition;
 pub mod pool;
 
+pub use group::WorkerGroup;
 pub use partition::Partition;
 pub use pool::{map_parts, run_tasks, split_parts};
 

@@ -6,17 +6,24 @@
 //! fp8-flow-moe train --cfg tiny|small --recipe bf16|blockwise|fp8flow
 //!                    [--steps N] [--seed S] [--log-every K]   # Fig. 6
 //! fp8-flow-moe table1|table2|table3                           # Tables 1–3
+//! fp8-flow-moe epshard [--ranks R] [--recipe ...] [--tokens N]  # executed EP
 //! fp8-flow-moe dataflow                                       # Fig. 2 audit
 //! fp8-flow-moe dqe [--size N]                                 # Eq. 1 demo
 //! fp8-flow-moe artifacts                                      # list manifest
 //! ```
+//!
+//! Unknown or missing subcommands print usage to **stderr** and exit
+//! nonzero; `--help` / `-h` / `help` print it to stdout and exit 0.
 
-use anyhow::Result;
+use anyhow::{bail, ensure, Result};
+use fp8_flow_moe::cluster::ep_exec::{ep_forward, EpConfig, EpShape};
+use fp8_flow_moe::cluster::sim::ep_measured_vs_modeled;
 use fp8_flow_moe::coordinator::{reports, write_run_json};
-use fp8_flow_moe::exec;
 use fp8_flow_moe::dataflow::{build, Variant};
+use fp8_flow_moe::exec;
 use fp8_flow_moe::fp8::error::dqe_report;
 use fp8_flow_moe::fp8::{Fp8Format, ScaleMode};
+use fp8_flow_moe::moe::layer::{MoeWeights, PreparedWeights, Recipe};
 use fp8_flow_moe::runtime::Runtime;
 use fp8_flow_moe::train::{Corpus, Trainer};
 use fp8_flow_moe::util::cli::Args;
@@ -31,9 +38,13 @@ USAGE:
   fp8-flow-moe train --cfg <tiny|small> --recipe <bf16|blockwise|fp8flow>
                      [--steps N] [--seed S] [--noise PCT] [--log-every K]
   fp8-flow-moe table1 | table2 | table3
+  fp8-flow-moe epshard [--ranks R] [--recipe <all|bf16|blockwise|fp8flow>]
+                       [--tokens N] [--experts E] [--top-k K] [--capacity C]
+                       [--d-model D] [--ffn H] [--seed S]
   fp8-flow-moe dataflow
   fp8-flow-moe dqe [--size N]
   fp8-flow-moe artifacts
+  fp8-flow-moe help | --help | -h
 
 Global flags:
   --threads N   worker count for the native kernels (0 = auto; also
@@ -43,6 +54,10 @@ Global flags:
 fn main() -> Result<()> {
     let args = Args::from_env();
     exec::set_threads(args.usize_or("threads", 0));
+    if args.help_requested() {
+        print!("{USAGE}");
+        return Ok(());
+    }
     match args.positional.first().map(String::as_str) {
         Some("train") => cmd_train(&args),
         Some("table1") => {
@@ -57,6 +72,7 @@ fn main() -> Result<()> {
             print!("{}", reports::table3());
             Ok(())
         }
+        Some("epshard") => cmd_epshard(&args),
         Some("dataflow") => {
             for v in Variant::all() {
                 let g = build(v);
@@ -74,9 +90,15 @@ fn main() -> Result<()> {
             }
             Ok(())
         }
-        _ => {
-            print!("{USAGE}");
-            Ok(())
+        Some(unknown) => {
+            eprintln!("error: unknown subcommand '{unknown}'\n");
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+        None => {
+            eprintln!("error: missing subcommand\n");
+            eprint!("{USAGE}");
+            std::process::exit(2);
         }
     }
 }
@@ -103,6 +125,68 @@ fn cmd_train(args: &Args) -> Result<()> {
         out.tokens_per_s
     );
     let path = write_run_json(&format!("train_{recipe}_{cfg}_s{seed}"), &out.to_json())?;
+    println!("wrote {path:?}");
+    Ok(())
+}
+
+/// Execute the EP-sharded forward and report measured vs modeled
+/// per-stage times (see `rust/EXPERIMENTS.md` §"Measured vs modeled EP
+/// dispatch").
+fn cmd_epshard(args: &Args) -> Result<()> {
+    let ranks = args.usize_or("ranks", 2);
+    let tokens = args.usize_or("tokens", 512);
+    let experts = args.usize_or("experts", 8);
+    let top_k = args.usize_or("top-k", 2);
+    let d_model = args.usize_or("d-model", 256);
+    let ffn = args.usize_or("ffn", 256);
+    let capacity = args.usize_or("capacity", (tokens * top_k).div_ceil(experts));
+    let seed = args.u64_or("seed", 42);
+    ensure!(ranks >= 1, "--ranks must be at least 1");
+    ensure!(tokens >= 1, "--tokens must be at least 1");
+    ensure!(capacity >= 1, "--capacity must be at least 1");
+    ensure!(experts >= ranks, "need at least as many experts ({experts}) as ranks ({ranks})");
+    ensure!(top_k >= 1 && top_k <= experts, "--top-k must be in 1..=--experts");
+
+    let recipes: Vec<Recipe> = match args.get_or("recipe", "all").as_str() {
+        "all" => vec![Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow],
+        other => match Recipe::parse(other) {
+            Some(r) => vec![r],
+            None => bail!("unknown recipe {other:?} (want all|bf16|blockwise|fp8flow)"),
+        },
+    };
+
+    let mut rng = Rng::seed_from(seed);
+    let x = Mat::randn(tokens, d_model, 0.5, &mut rng);
+    let w = MoeWeights::random(d_model, ffn, experts, &mut rng);
+    println!(
+        "epshard: {ranks} simulated ranks sharing {} workers (--threads to change)",
+        exec::threads()
+    );
+
+    let mut doc = Json::obj()
+        .set("ranks", ranks)
+        .set("tokens", tokens)
+        .set("experts", experts)
+        .set("top_k", top_k)
+        .set("capacity", capacity)
+        .set("d_model", d_model)
+        .set("ffn", ffn)
+        .set("seed", seed);
+    for recipe in recipes {
+        let pw = PreparedWeights::new(w.clone(), recipe);
+        let cfg = EpConfig { ranks, top_k, capacity, threads: 0 };
+        let shape = EpShape::of(&x, &pw, &cfg);
+        let out = ep_forward(&x, &pw, &cfg);
+        print!("{}", ep_measured_vs_modeled(recipe, ranks, &shape, &out));
+        println!();
+        let key = match recipe {
+            Recipe::Bf16 => "bf16",
+            Recipe::Blockwise => "blockwise",
+            Recipe::Fp8Flow => "fp8flow",
+        };
+        doc = doc.set(key, out.to_json());
+    }
+    let path = write_run_json(&format!("epshard_r{ranks}"), &doc)?;
     println!("wrote {path:?}");
     Ok(())
 }

@@ -15,16 +15,31 @@
 //!   intermediate dequantize, the two BF16 islands exactly where §3.2
 //!   puts them (the GEMM accumulators).
 //!
+//! The forward is decomposed into three **stage APIs** over a
+//! [`RankLocalBatch`] — [`dispatch`], [`expert_ffn`], [`combine`] — each
+//! scoped to an arbitrary contiguous *expert range*. [`moe_forward`] runs
+//! them over the full range `0..E` (the single-rank path); the executed
+//! expert-parallel runtime ([`crate::cluster::ep_exec`]) runs one range
+//! per simulated rank with a real wire in between, and is bit-identical
+//! to the single-rank path by construction. The three recipes differ
+//! only in the dispatch **wire type** ([`WirePayload`]): Fp8Flow ships
+//! FP8 codes + scales, the other two ship dense (BF16-accounted) rows.
+//!
 //! All three expert loops run expert-parallel on the [`crate::exec`] pool;
 //! per-expert work calls the serial (`threads = 1`) kernel forms so the
 //! grouped dimension is the only parallel axis (no nested oversubscription).
+
+use std::ops::Range;
 
 use crate::exec::{self, Partition};
 use crate::fp8::tensor::Fp8Tensor;
 use crate::fp8::tile::{quantize_rowwise, quantize_rowwise_with_threads};
 use crate::fp8::{Fp8Format, ScaleMode};
 use crate::moe::gemm::fp8_matmul_with_threads;
-use crate::moe::permute::{permute_pad, permute_pad_fp8, permute_pad_plan, unpermute_unpad};
+use crate::moe::permute::{
+    permute_pad_fp8_with_threads, permute_pad_plan, permute_pad_with_threads,
+    unpermute_unpad_with_threads,
+};
 use crate::moe::router::route;
 use crate::moe::swiglu::{swiglu_quant_with_threads, swiglu_with_threads};
 use crate::util::mat::Mat;
@@ -117,13 +132,183 @@ pub struct MoeOutput {
     pub cast_ops: usize,
 }
 
+// ---------------------------------------------------------------------------
+// Stage APIs: dispatch → expert_ffn → combine over a RankLocalBatch.
+// ---------------------------------------------------------------------------
+
+/// What crosses the dispatch wire: the recipe's wire type.
+#[derive(Clone, Debug)]
+pub enum WirePayload {
+    /// Dense rows (f32 in memory, accounted as BF16 on the wire) — the
+    /// Bf16 and Blockwise (TE-style) dispatch.
+    Dense(Mat),
+    /// FP8 codes + per-tile scales — the Fp8Flow dispatch.
+    Fp8(Fp8Tensor),
+}
+
+/// The dispatched, expert-grouped activations local to one rank: rows
+/// `[|experts| · capacity, d]` for a contiguous range of global experts.
+#[derive(Clone, Debug)]
+pub struct RankLocalBatch {
+    /// Global expert ids this batch covers (row block `i` holds expert
+    /// `experts.start + i`).
+    pub experts: Range<usize>,
+    pub capacity: usize,
+    pub payload: WirePayload,
+}
+
+impl RankLocalBatch {
+    pub fn n_experts(&self) -> usize {
+        self.experts.len()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.experts.len() * self.capacity
+    }
+
+    /// Bytes this batch puts on the dispatch wire (BF16-accounted dense
+    /// rows, or FP8 payload + scale sidecar).
+    pub fn wire_bytes(&self) -> usize {
+        match &self.payload {
+            WirePayload::Dense(m) => m.data.len() * 2,
+            WirePayload::Fp8(t) => t.nbytes(),
+        }
+    }
+}
+
+/// What the dispatch stage reads: raw activations (BF16 wire) or the
+/// entry-quantized codes (FP8 wire). The choice IS the recipe's wire
+/// type — Blockwise and Fp8Flow differ here and nowhere else in the
+/// dispatch path.
+#[derive(Clone, Copy, Debug)]
+pub enum DispatchSource<'a> {
+    Dense(&'a Mat),
+    Fp8(&'a Fp8Tensor),
+}
+
+/// Dispatch stage: gather the rows destined for `experts` (a contiguous
+/// sub-range of the global plan) into an expert-grouped rank-local batch.
+/// With `experts == 0..E` this is exactly the classic single-rank fused
+/// permute+pad.
+pub fn dispatch(
+    src: DispatchSource,
+    plan: &[i64],
+    experts: Range<usize>,
+    capacity: usize,
+    threads: usize,
+) -> RankLocalBatch {
+    let sub = &plan[experts.start * capacity..experts.end * capacity];
+    let payload = match src {
+        DispatchSource::Dense(x) => WirePayload::Dense(permute_pad_with_threads(x, sub, threads)),
+        DispatchSource::Fp8(xq) => {
+            WirePayload::Fp8(permute_pad_fp8_with_threads(xq, sub, threads))
+        }
+    };
+    RankLocalBatch { experts, capacity, payload }
+}
+
+/// Expert-FFN stage: run this rank's experts over its dispatched batch,
+/// per-recipe. Returns `[|experts| · capacity, d]` outputs.
+///
+/// Experts are the parallel axis (one contiguous expert slab per worker,
+/// serial kernels inside), so the result is bit-identical for any
+/// `threads` — and, because per-expert math reads only that expert's
+/// `capacity` rows, bit-identical under any sharding of the expert range.
+pub fn expert_ffn(batch: &RankLocalBatch, w: &PreparedWeights, threads: usize) -> Mat {
+    let er = batch.experts.clone();
+    let cap = batch.capacity;
+    match (&batch.payload, w.recipe) {
+        (WirePayload::Fp8(xg), Recipe::Fp8Flow) => {
+            fused_expert_ffn(xg, &w.w1_t[er.clone()], &w.w3_t[er.clone()], &w.w2_t[er], cap, threads)
+        }
+        (WirePayload::Dense(xg), Recipe::Bf16) => {
+            dense_expert_loop(xg, er, cap, threads, |ge, xe| {
+                let gate = xe.matmul(&w.raw.w1[ge]);
+                let up = xe.matmul(&w.raw.w3[ge]);
+                let act = swiglu_with_threads(&gate, &up, 1);
+                act.matmul(&w.raw.w2[ge])
+            })
+        }
+        (WirePayload::Dense(xg), Recipe::Blockwise) => {
+            // TE-style: dispatched BF16; quantize at each GEMM boundary
+            // (2 explicit casts per expert: Q(x) for fc1, Q(act) for fc2).
+            dense_expert_loop(xg, er, cap, threads, |ge, xe| {
+                // Q(x) for fc1 (one cast), DQ after GEMM is implicit in
+                // f32 accumulation; fc1 runs twice (gate+up) on the same
+                // quantized activation.
+                let xq = quantize_rowwise_with_threads(&xe, Fp8Format::E4M3, ScaleMode::Float, 1);
+                let gate = fp8_matmul_with_threads(&xq, &w.w1_t[ge], 1);
+                let up = fp8_matmul_with_threads(&xq, &w.w3_t[ge], 1);
+                let act = swiglu_with_threads(&gate, &up, 1);
+                // Q(act) for fc2 — the second per-expert cast
+                let aq = quantize_rowwise_with_threads(&act, Fp8Format::E4M3, ScaleMode::Float, 1);
+                fp8_matmul_with_threads(&aq, &w.w2_t[ge], 1)
+            })
+        }
+        _ => panic!("recipe/wire mismatch: {:?} batch for {:?}", batch.payload, w.recipe),
+    }
+}
+
+/// Shared scaffolding of the dense (BF16-wire) expert loops: experts are
+/// the parallel axis, each worker owns a contiguous expert slab of the
+/// output, `per_expert(global_expert, xe)` supplies the recipe's math on
+/// one expert's `[capacity, d]` slice (serial kernels inside — the
+/// grouped dimension is the only parallel axis).
+fn dense_expert_loop(
+    xg: &Mat,
+    experts: Range<usize>,
+    cap: usize,
+    threads: usize,
+    per_expert: impl Fn(usize, Mat) -> Mat + Sync,
+) -> Mat {
+    let el = experts.len();
+    let cols = xg.cols;
+    let mut yk = Mat::zeros(el * cap, cols);
+    let p = Partition::even(el, exec::workers_for(threads, el));
+    let tasks: Vec<_> = exec::split_parts(&p, cap * cols, &mut yk.data)
+        .into_iter()
+        .zip(p.ranges())
+        .collect();
+    exec::run_tasks(tasks, |(slab, lr)| {
+        for lx in lr.clone() {
+            let xe = Mat::from_vec(
+                cap,
+                cols,
+                xg.data[lx * cap * cols..(lx + 1) * cap * cols].to_vec(),
+            );
+            let ye = per_expert(experts.start + lx, xe);
+            let r = lx - lr.start;
+            slab[r * cap * cols..(r + 1) * cap * cols].copy_from_slice(&ye.data);
+        }
+    });
+    yk
+}
+
+/// Combine stage: scatter this rank's expert outputs back to token order
+/// through its slice of the global plan. Tokens served by other ranks'
+/// experts stay exactly zero, so summing the per-rank results (in rank
+/// order) reproduces the single-rank `unpermute_unpad` bit-for-bit —
+/// each token appears at most once per top-k slot.
+pub fn combine(
+    yk: &Mat,
+    plan: &[i64],
+    experts: Range<usize>,
+    capacity: usize,
+    n_tokens: usize,
+    threads: usize,
+) -> Mat {
+    let sub = &plan[experts.start * capacity..experts.end * capacity];
+    unpermute_unpad_with_threads(yk, sub, n_tokens, threads)
+}
+
 /// The casting-free expert FFN as one streaming pipeline: for each expert,
 /// grouped GEMM (fc1 gate+up) → fused SwiGLU+quant → grouped GEMM (fc2),
 /// with the activation staying in FP8 code space between the GEMMs.
 ///
 /// `xg` is the dispatched FP8 buffer `[E·capacity, d]` (output of
-/// [`permute_pad_fp8`]); `w*_t` are the transposed-quantized expert
-/// weights. Returns the expert outputs `[E·capacity, d]`.
+/// [`crate::moe::permute::permute_pad_fp8`]); `w*_t` are the
+/// transposed-quantized expert weights. Returns the expert outputs
+/// `[E·capacity, d]`.
 ///
 /// Experts are the parallel axis: each worker owns a contiguous expert
 /// slab of the output and streams its experts end-to-end (the FP8
@@ -169,7 +354,8 @@ pub fn fused_expert_ffn(
     yk
 }
 
-/// Run the MoE layer forward.
+/// Run the MoE layer forward — the single-rank composition of the stage
+/// APIs over the full expert range `0..E`.
 pub fn moe_forward(x: &Mat, w: &PreparedWeights, top_k: usize, capacity: usize) -> MoeOutput {
     let t = x.rows;
     let e = w.raw.n_experts();
@@ -191,84 +377,20 @@ pub fn moe_forward(x: &Mat, w: &PreparedWeights, top_k: usize, capacity: usize) 
         let expert_of: Vec<usize> = routing.experts.iter().map(|ex| ex[kk]).collect();
         let plan = permute_pad_plan(&expert_of, e, capacity);
 
-        let yk = match w.recipe {
-            Recipe::Bf16 => {
-                let xg = permute_pad(x, &plan);
-                dispatch_bytes += xg.data.len() * 2; // bf16 on the wire
-                let mut yk = Mat::zeros(e * capacity, x.cols);
-                let p = Partition::even(e, exec::workers_for(threads, e));
-                let tasks: Vec<_> = exec::split_parts(&p, capacity * x.cols, &mut yk.data)
-                    .into_iter()
-                    .zip(p.ranges())
-                    .collect();
-                exec::run_tasks(tasks, |(slab, er)| {
-                    for ex in er.clone() {
-                        let xe = Mat::from_vec(
-                            capacity,
-                            x.cols,
-                            xg.data[ex * capacity * x.cols..(ex + 1) * capacity * x.cols].to_vec(),
-                        );
-                        let gate = xe.matmul(&w.raw.w1[ex]);
-                        let up = xe.matmul(&w.raw.w3[ex]);
-                        let act = swiglu_with_threads(&gate, &up, 1);
-                        let ye = act.matmul(&w.raw.w2[ex]);
-                        let r = ex - er.start;
-                        slab[r * capacity * x.cols..(r + 1) * capacity * x.cols]
-                            .copy_from_slice(&ye.data);
-                    }
-                });
-                yk
-            }
-            Recipe::Blockwise => {
-                // TE-style: dispatch BF16; quantize at each GEMM boundary.
-                let xg = permute_pad(x, &plan);
-                dispatch_bytes += xg.data.len() * 2;
-                // 2 explicit casts per expert: Q(x) for fc1, Q(act) for
-                // fc2 (each expert quantizes its slice unconditionally)
-                cast_ops += 2 * e;
-                let mut yk = Mat::zeros(e * capacity, x.cols);
-                let p = Partition::even(e, exec::workers_for(threads, e));
-                let tasks: Vec<_> = exec::split_parts(&p, capacity * x.cols, &mut yk.data)
-                    .into_iter()
-                    .zip(p.ranges())
-                    .collect();
-                exec::run_tasks(tasks, |(slab, er)| {
-                    for ex in er.clone() {
-                        let xe = Mat::from_vec(
-                            capacity,
-                            x.cols,
-                            xg.data[ex * capacity * x.cols..(ex + 1) * capacity * x.cols].to_vec(),
-                        );
-                        // Q(x) for fc1 (one cast), DQ after GEMM is
-                        // implicit in f32 accumulation; fc1 runs twice
-                        // (gate+up) on the same quantized activation.
-                        let xq =
-                            quantize_rowwise_with_threads(&xe, Fp8Format::E4M3, ScaleMode::Float, 1);
-                        let gate = fp8_matmul_with_threads(&xq, &w.w1_t[ex], 1);
-                        let up = fp8_matmul_with_threads(&xq, &w.w3_t[ex], 1);
-                        let act = swiglu_with_threads(&gate, &up, 1);
-                        // Q(act) for fc2 — the second per-expert cast
-                        let aq =
-                            quantize_rowwise_with_threads(&act, Fp8Format::E4M3, ScaleMode::Float, 1);
-                        let ye = fp8_matmul_with_threads(&aq, &w.w2_t[ex], 1);
-                        let r = ex - er.start;
-                        slab[r * capacity * x.cols..(r + 1) * capacity * x.cols]
-                            .copy_from_slice(&ye.data);
-                    }
-                });
-                yk
-            }
-            Recipe::Fp8Flow => {
-                // dispatch moves FP8 codes + scales (half the bytes)
-                let xq = x_q.as_ref().unwrap();
-                let xg = permute_pad_fp8(xq, &plan);
-                dispatch_bytes += xg.nbytes();
-                // the casting-free streaming pipeline: no explicit cast
-                // between entry quantize and combine
-                fused_expert_ffn(&xg, &w.w1_t, &w.w3_t, &w.w2_t, capacity, threads)
-            }
+        let src = match &x_q {
+            Some(xq) => DispatchSource::Fp8(xq),
+            None => DispatchSource::Dense(x),
         };
-        let back = unpermute_unpad(&yk, &plan, t);
+        let batch = dispatch(src, &plan, 0..e, capacity, threads);
+        dispatch_bytes += batch.wire_bytes();
+        if w.recipe == Recipe::Blockwise {
+            // 2 explicit casts per expert: Q(x) for fc1, Q(act) for fc2
+            // (each expert quantizes its slice unconditionally)
+            cast_ops += 2 * e;
+        }
+
+        let yk = expert_ffn(&batch, w, threads);
+        let back = combine(&yk, &plan, 0..e, capacity, t, threads);
         for tt in 0..t {
             let g = routing.gates[tt][kk];
             for j in 0..x.cols {
@@ -407,5 +529,83 @@ mod tests {
         assert_eq!(aq.fmt, Fp8Format::E4M3);
         assert_eq!(aq.rows, 16);
         assert_eq!(aq.cols, h);
+    }
+
+    // --- stage-API contracts -------------------------------------------
+
+    /// Routing plan with ragged per-expert loads for the stage tests.
+    fn staged_setup(
+        seed: u64,
+        recipe: Recipe,
+    ) -> (Mat, PreparedWeights, Vec<i64>, usize, usize) {
+        let mut rng = Rng::seed_from(seed);
+        let (t, d, h, e, cap) = (96, 64, 48, 4, 32);
+        let x = Mat::randn(t, d, 0.5, &mut rng);
+        let w = MoeWeights::random(d, h, e, &mut rng);
+        let expert_of: Vec<usize> = (0..t).map(|_| rng.below(e)).collect();
+        let plan = permute_pad_plan(&expert_of, e, cap);
+        (x, PreparedWeights::new(w, recipe), plan, e, cap)
+    }
+
+    #[test]
+    fn sharded_stages_cover_the_full_range_bitwise() {
+        // dispatch/expert_ffn over expert sub-ranges must tile the full
+        // single-range result exactly, for every recipe.
+        for recipe in [Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow] {
+            let (x, pw, plan, e, cap) = staged_setup(8, recipe);
+            let xq = (recipe == Recipe::Fp8Flow)
+                .then(|| quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2));
+            let src = || match &xq {
+                Some(q) => DispatchSource::Fp8(q),
+                None => DispatchSource::Dense(&x),
+            };
+            let full = expert_ffn(&dispatch(src(), &plan, 0..e, cap, 1), &pw, 1);
+            for n_shards in [2usize, 4] {
+                let p = Partition::even(e, n_shards);
+                for er in p.ranges() {
+                    let yk = expert_ffn(&dispatch(src(), &plan, er.clone(), cap, 1), &pw, 2);
+                    let lo = er.start * cap * x.cols;
+                    let hi = er.end * cap * x.cols;
+                    for (a, b) in yk.data.iter().zip(&full.data[lo..hi]) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{recipe:?} shard {er:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_combine_sums_to_single_rank_bitwise() {
+        let (x, pw, plan, e, cap) = staged_setup(9, Recipe::Bf16);
+        let t = x.rows;
+        let batch = dispatch(DispatchSource::Dense(&x), &plan, 0..e, cap, 1);
+        let yk = expert_ffn(&batch, &pw, 1);
+        let full = combine(&yk, &plan, 0..e, cap, t, 1);
+        let p = Partition::even(e, 2);
+        let mut summed = Mat::zeros(t, x.cols);
+        for er in p.ranges() {
+            let lo = er.start * cap * x.cols;
+            let hi = er.end * cap * x.cols;
+            let yk_local =
+                Mat::from_vec(er.len() * cap, x.cols, yk.data[lo..hi].to_vec());
+            let part = combine(&yk_local, &plan, er, cap, t, 1);
+            for (acc, v) in summed.data.iter_mut().zip(&part.data) {
+                *acc += v;
+            }
+        }
+        for (a, b) in summed.data.iter().zip(&full.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn wire_bytes_follow_the_wire_type() {
+        let (x, _, plan, e, cap) = staged_setup(10, Recipe::Fp8Flow);
+        let xq = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        let dense = dispatch(DispatchSource::Dense(&x), &plan, 0..e, cap, 1);
+        let fp8 = dispatch(DispatchSource::Fp8(&xq), &plan, 0..e, cap, 1);
+        assert_eq!(dense.rows(), fp8.rows());
+        // FP8 wire ≈ half the dense bytes (+1B/128 sidecar)
+        assert!(fp8.wire_bytes() * 2 <= dense.wire_bytes() + fp8.rows() * 2);
     }
 }

@@ -47,6 +47,15 @@ impl Args {
         matches!(self.flags.get(key).map(String::as_str), Some("true") | Some("1"))
     }
 
+    /// True when the user asked for usage text: a `--help` flag anywhere
+    /// (even when the parser attached a value to it, as in
+    /// `--help train`), or `-h`/`help` in any positional slot
+    /// (single-dash args parse as positionals, so `train -h` lands here).
+    pub fn help_requested(&self) -> bool {
+        self.flags.contains_key("help")
+            || self.positional.iter().any(|p| p == "-h" || p == "help")
+    }
+
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(String::as_str)
     }
@@ -111,5 +120,18 @@ mod tests {
     fn bad_int_panics() {
         let a = Args::parse(sv(&["--steps", "abc"]));
         a.usize_or("steps", 0);
+    }
+
+    #[test]
+    fn help_detection() {
+        assert!(Args::parse(sv(&["--help"])).help_requested());
+        assert!(Args::parse(sv(&["-h"])).help_requested());
+        assert!(Args::parse(sv(&["help"])).help_requested());
+        // flag anywhere, even when the parser eats a value or it trails
+        assert!(Args::parse(sv(&["--help", "train"])).help_requested());
+        assert!(Args::parse(sv(&["train", "-h"])).help_requested());
+        assert!(Args::parse(sv(&["train", "--help"])).help_requested());
+        assert!(!Args::parse(sv(&["train", "--steps", "3"])).help_requested());
+        assert!(!Args::parse(sv(&[])).help_requested());
     }
 }

@@ -14,7 +14,24 @@
 //! so the exact case can be replayed with `PROP_SEED=<seed>`. `PROP_CASES`
 //! scales the number of cases (e.g. `PROP_CASES=10000` for a soak run).
 
+use crate::util::mat::Mat;
 use crate::util::rng::Rng;
+
+/// Assert two f32 buffers are bitwise identical — the repo-wide
+/// bit-exactness contract checker (thread invariance, EP invariance):
+/// `-0.0` vs `+0.0` and NaN payloads all count as differences.
+pub fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (k, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {k}: {x} vs {y}");
+    }
+}
+
+/// [`assert_bits_eq`] over whole matrices (shape checked first).
+pub fn assert_mat_bits_eq(a: &Mat, b: &Mat, what: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{what}: shape");
+    assert_bits_eq(&a.data, &b.data, what);
+}
 
 /// Case-level generator handed to each property execution.
 pub struct Gen {

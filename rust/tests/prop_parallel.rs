@@ -17,17 +17,10 @@ use fp8_flow_moe::moe::permute::{
 };
 use fp8_flow_moe::moe::swiglu::swiglu_quant_with_threads;
 use fp8_flow_moe::util::mat::Mat;
-use fp8_flow_moe::util::prop::props;
+use fp8_flow_moe::util::prop::{assert_bits_eq as assert_f32_bits_eq, props};
 use fp8_flow_moe::util::rng::Rng;
 
 const THREAD_COUNTS: [usize; 2] = [2, 8];
-
-fn assert_f32_bits_eq(a: &[f32], b: &[f32], what: &str) {
-    assert_eq!(a.len(), b.len(), "{what}: length");
-    for (k, (x, y)) in a.iter().zip(b).enumerate() {
-        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {k}: {x} vs {y}");
-    }
-}
 
 #[test]
 fn prop_fp8_matmul_parallel_bit_exact() {

@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# Regenerate the §Perf scaling numbers and append them to rust/EXPERIMENTS.md.
+# Regenerate the §Perf scaling numbers and the executed-EP per-stage
+# numbers, and append them to rust/EXPERIMENTS.md.
 # Usage: scripts/record_perf.sh [machine-label]
 
 set -euo pipefail
@@ -11,6 +12,9 @@ out="rust/EXPERIMENTS.md"
 echo "running perf_kernels (this takes a minute)..."
 bench_output="$(cargo bench --bench perf_kernels 2>&1)"
 
+echo "running epshard (2 ranks, all recipes; per-stage JSON)..."
+epshard_output="$(cargo run --release -p fp8_flow_moe -- epshard --ranks 2 2>&1)"
+
 {
     echo ""
     echo "### §Perf run: ${label} ($(date -u +%Y-%m-%dT%H:%M:%SZ))"
@@ -18,6 +22,16 @@ bench_output="$(cargo bench --bench perf_kernels 2>&1)"
     echo '```'
     echo "${bench_output}" | grep -E '^(ROW|SPEEDUP|threads:|fp8_matmul:)'
     echo '```'
+    echo ""
+    echo "#### Executed EP dispatch (epshard --ranks 2, per-stage measured vs modeled)"
+    echo ""
+    echo '```'
+    echo "${epshard_output}" | grep -E '^(== epshard|ROW|    (route|wire|per-rank)|epshard:|wrote)'
+    echo '```'
+    if [ -f rust/runs/epshard_r2.json ]; then
+        echo ""
+        echo "Per-stage JSON: \`rust/runs/epshard_r2.json\`"
+    fi
 } >> "${out}"
 
 echo "appended §Perf run '${label}' to ${out}"
