@@ -1,0 +1,86 @@
+//! **Executed backward pass** — wall-clock of the stashing forward vs the
+//! full backward per recipe, the grouped scaling-aware transpose stage in
+//! isolation, and the measured bwd/fwd ratio that calibrates the cluster
+//! simulator (`cluster/sim.rs` charges `gemm_bwd = 2 × gemm_fwd` for
+//! dgrad+wgrad — the printed `RATIO` lines are the executed check on that
+//! assumption; movement-heavy shapes land above 2× because the backward
+//! also pays the wgrad-operand transposes).
+//!
+//! ```bash
+//! cargo bench --bench bwd [-- --tokens N --threads T --quick]
+//! ```
+
+use fp8_flow_moe::fp8::tile::quantize_rowwise;
+use fp8_flow_moe::fp8::transpose::grouped_direct_transpose;
+use fp8_flow_moe::fp8::{Fp8Format, ScaleMode};
+use fp8_flow_moe::moe::backward::{forward_stash, moe_backward};
+use fp8_flow_moe::moe::layer::{MoeWeights, PreparedWeights, Recipe};
+use fp8_flow_moe::util::bench::{bencher_from_cli, print_table};
+use fp8_flow_moe::util::mat::Mat;
+use fp8_flow_moe::util::rng::Rng;
+
+fn main() {
+    let (b, args) = bencher_from_cli(0);
+    let tokens = args.usize_or("tokens", if args.flag("quick") { 128 } else { 512 });
+    let d_model = args.usize_or("d-model", 256);
+    let ffn = args.usize_or("ffn", 256);
+    let experts = args.usize_or("experts", 8);
+    let top_k = args.usize_or("top-k", 2);
+    let capacity = args.usize_or("capacity", (tokens * top_k).div_ceil(experts));
+
+    let mut rng = Rng::seed_from(42);
+    let x = Mat::randn(tokens, d_model, 0.5, &mut rng);
+    let w = MoeWeights::random(d_model, ffn, experts, &mut rng);
+    let dy = Mat::randn(tokens, d_model, 1.0, &mut rng);
+
+    for recipe in [Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow] {
+        let pw = PreparedWeights::new(w.clone(), recipe);
+        let fwd = b.run(&format!("forward_stash/{recipe:?}"), || {
+            std::hint::black_box(forward_stash(
+                std::hint::black_box(&x),
+                std::hint::black_box(&pw),
+                top_k,
+                capacity,
+            ));
+        });
+        let stash = forward_stash(&x, &pw, top_k, capacity);
+        let bwd = b.run(&format!("moe_backward/{recipe:?}"), || {
+            std::hint::black_box(moe_backward(
+                std::hint::black_box(&stash),
+                std::hint::black_box(&pw),
+                std::hint::black_box(&dy),
+            ));
+        });
+        print_table(
+            &format!("bwd {recipe:?} (tokens={tokens} E={experts} cap={capacity})"),
+            &[fwd.clone(), bwd.clone()],
+        );
+        println!(
+            "RATIO {recipe:?} bwd/fwd: {:.2}x  (sim charges dgrad+wgrad as 2.0x the fwd GEMM)",
+            bwd.median.as_secs_f64() / fwd.median.as_secs_f64()
+        );
+        println!();
+    }
+
+    // the wgrad-operand prep stage in isolation: batched scaling-aware
+    // transpose over the expert slabs of a dispatched [E·cap, h] buffer
+    let act = Mat::rand_log_uniform(experts * capacity, ffn, -4.0, 4.0, &mut rng);
+    let aq = quantize_rowwise(&act, Fp8Format::E4M3, ScaleMode::Po2);
+    let rows: Vec<_> = [1usize, fp8_flow_moe::exec::threads()]
+        .iter()
+        .map(|&t| {
+            b.run_bytes(
+                &format!("grouped_direct_transpose/E={experts}/t={t}"),
+                aq.data.len() as u64,
+                || {
+                    std::hint::black_box(grouped_direct_transpose(
+                        std::hint::black_box(&aq),
+                        experts,
+                        t,
+                    ));
+                },
+            )
+        })
+        .collect();
+    print_table("grouped wgrad-operand transpose", &rows);
+}

@@ -37,6 +37,10 @@ use crate::exec::{self, Partition};
 use crate::fp8::tensor::{n_tiles, Fp8Tensor, TileLayout};
 use crate::fp8::tile::quantize_rowwise_with_threads;
 use crate::fp8::{ue8m0, Fp8Format, ScaleMode};
+use crate::moe::backward::{
+    expert_ffn_bwd, mat_add_assign, scale_by_gates_with_threads, BwdStageTimes, BwdStats,
+    FwdStash, MoeGrads,
+};
 use crate::moe::layer::{
     combine, expert_ffn, PreparedWeights, RankLocalBatch, Recipe, WirePayload,
 };
@@ -182,15 +186,7 @@ pub fn ep_forward(x: &Mat, w: &PreparedWeights, cfg: &EpConfig) -> EpForward {
     };
     let fmt = x_q.as_ref().map(|q| q.fmt);
 
-    let expert_owner = {
-        let mut m = vec![0usize; e];
-        for (rk, range) in ex_part.ranges().enumerate() {
-            for ex in range {
-                m[ex] = rk;
-            }
-        }
-        m
-    };
+    let expert_owner = owner_map(&ex_part, e);
 
     let mut y = Mat::zeros(t, d);
     let mut rank_expert_s = vec![0.0f64; r];
@@ -199,14 +195,8 @@ pub fn ep_forward(x: &Mat, w: &PreparedWeights, cfg: &EpConfig) -> EpForward {
     for kk in 0..cfg.top_k {
         let expert_of: Vec<usize> = routing.experts.iter().map(|ex| ex[kk]).collect();
         let plan = permute_pad_plan(&expert_of, e, cfg.capacity);
-        // Serving rank per token this slot (each token appears at most
-        // once per slot; usize::MAX = dropped by capacity).
-        let mut serving = vec![usize::MAX; t];
-        for (gd, &src) in plan.iter().enumerate() {
-            if src >= 0 {
-                serving[src as usize] = expert_owner[gd / cfg.capacity];
-            }
-        }
+        // Each token appears at most once per slot.
+        let serving = serving_map(&plan, &expert_owner, cfg.capacity, t);
 
         // ---- dispatch: pack → all-to-all → assemble ----
         let td = Instant::now();
@@ -309,12 +299,239 @@ pub fn ep_forward(x: &Mat, w: &PreparedWeights, cfg: &EpConfig) -> EpForward {
     }
 }
 
-/// Token → owning rank, from the token partition.
-fn owner_map(tok_part: &Partition, n_tokens: usize) -> Vec<usize> {
-    let mut owner = vec![0usize; n_tokens];
-    for (r, range) in tok_part.ranges().enumerate() {
-        for t in range {
-            owner[t] = r;
+/// Result of one executed EP-sharded backward: the gradients plus the
+/// wire measurements (the reverse-direction all-to-all).
+pub struct EpBackward {
+    pub grads: MoeGrads,
+    pub ranks: usize,
+    /// Per-rank expert-backward seconds (summed over slots).
+    pub rank_expert_s: Vec<f64>,
+    /// Combine-bwd payload bytes shipped (gate-scaled dy rows; FP8 codes
+    /// on the Fp8Flow wire, BF16-accounted rows otherwise).
+    pub dy_payload_bytes: usize,
+    /// UE8M0 scale sidecar bytes on the combine-bwd wire (FP8 only).
+    pub dy_sidecar_bytes: usize,
+    /// Separate combine-bwd wire buffers (FP8 ships 2 per src→dst pair).
+    pub dy_buffers: usize,
+    /// Dispatch-bwd bytes (dX rows back to token owners — accumulator
+    /// precision, BF16-accounted, like the forward combine).
+    pub dx_bytes: usize,
+}
+
+impl EpBackward {
+    /// Per-stage report as JSON (for `runs/bwd_*.json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("ranks", self.ranks)
+            .set("combine_bwd_ms", self.grads.stages.combine_bwd_s * 1e3)
+            .set("expert_bwd_ms", self.grads.stages.expert_bwd_s * 1e3)
+            .set("dispatch_bwd_ms", self.grads.stages.dispatch_bwd_s * 1e3)
+            .set("total_ms", self.grads.stages.total_s() * 1e3)
+            .set(
+                "rank_expert_ms",
+                self.rank_expert_s.iter().map(|s| s * 1e3).collect::<Vec<f64>>(),
+            )
+            .set("casts", self.grads.stats.casts)
+            .set("requants", self.grads.stats.requants)
+            .set("dy_payload_bytes", self.dy_payload_bytes)
+            .set("dy_sidecar_bytes", self.dy_sidecar_bytes)
+            .set("dy_buffers", self.dy_buffers)
+            .set("dx_bytes", self.dx_bytes)
+    }
+}
+
+/// Run the MoE backward sharded across `cfg.ranks` simulated ranks — the
+/// forward pipeline reversed, reusing the same rank group and wire:
+///
+/// ```text
+/// gate-scale dy (+ Q(dy) on the Fp8Flow wire)
+///   → pack per token-owner rank → all-to-all → assemble per expert rank
+///     (the combine-bwd a2a: same routing as the fwd dispatch)
+///   → per-rank expert backward (dgrad + wgrad on its worker share)
+///   → per-rank unpermute → serving-rank reduce into the token shards
+///     (the dispatch-bwd direction; dX rides in accumulator precision)
+/// ```
+///
+/// Bit-identical to the single-rank [`crate::moe::backward::moe_backward`]
+/// for any rank count (`tests/prop_ep_shard.rs`): per-expert math reads
+/// only that expert's rows, the UE8M0 sidecar reproduces po2 scales
+/// exactly, each expert's weight gradient is owned by exactly one rank,
+/// and per-slot each token receives at most one dX row.
+pub fn ep_backward(
+    stash: &FwdStash,
+    w: &PreparedWeights,
+    dy: &Mat,
+    cfg: &EpConfig,
+) -> EpBackward {
+    let t = dy.rows;
+    let d = dy.cols;
+    let e = w.raw.n_experts();
+    let r = cfg.ranks;
+    assert!(r >= 1, "need at least one rank");
+    assert!(e >= r, "cannot shard {e} experts across {r} ranks");
+    assert_eq!(cfg.capacity, stash.capacity, "config/stash capacity mismatch");
+    assert_eq!(cfg.top_k, stash.top_k(), "config/stash top_k mismatch");
+    assert_eq!((t, d), (stash.y.rows, stash.y.cols), "dy must match the forward output");
+    let total_workers = if cfg.threads == 0 { exec::threads() } else { cfg.threads };
+    let group = RankGroup::new(r, total_workers);
+    let ex_part = Partition::even(e, r);
+    let tok_part = Partition::even(t, r);
+    let token_owner = owner_map(&tok_part, t);
+    let expert_owner = owner_map(&ex_part, e);
+    let cap = cfg.capacity;
+
+    let mut dx = Mat::zeros(t, d);
+    let mut dw1: Vec<Mat> = w.raw.w1.iter().map(|m| Mat::zeros(m.rows, m.cols)).collect();
+    let mut dw3: Vec<Mat> = w.raw.w3.iter().map(|m| Mat::zeros(m.rows, m.cols)).collect();
+    let mut dw2: Vec<Mat> = w.raw.w2.iter().map(|m| Mat::zeros(m.rows, m.cols)).collect();
+    let mut stats = BwdStats::default();
+    let mut stages = BwdStageTimes::default();
+    let mut rank_expert_s = vec![0.0f64; r];
+    let (mut dy_payload_b, mut dy_sidecar_b, mut dy_bufs, mut dx_b) = (0usize, 0, 0, 0usize);
+
+    for (kk, slot) in stash.slots.iter().enumerate() {
+        let plan = &slot.plan;
+        let serving = serving_map(plan, &expert_owner, cap, t);
+
+        // ---- combine-bwd: gate-scale (+ Q) → pack → a2a → assemble ----
+        let tc = Instant::now();
+        let dyg = scale_by_gates_with_threads(dy, &stash.routing, kk, total_workers);
+        // Row-independent, so quantizing per token-owner rank would be
+        // bit-identical; run it once with the full budget (same structure
+        // as the forward's entry quantization).
+        let dy_q = if w.recipe == Recipe::Fp8Flow {
+            stats.casts += 1;
+            Some(quantize_rowwise_with_threads(
+                &dyg,
+                Fp8Format::E4M3,
+                ScaleMode::Po2,
+                total_workers,
+            ))
+        } else {
+            None
+        };
+        let mailbox = group
+            .run_phase(|ctx| {
+                let tr = part_range(&tok_part, ctx.rank);
+                match &dy_q {
+                    Some(q) => pack_fp8(q, plan, &tr, &ex_part, cap),
+                    None => pack_dense(&dyg, plan, &tr, &ex_part, cap),
+                }
+            })
+            .results;
+        for row in &mailbox {
+            for b in row {
+                dy_payload_b += b.payload_bytes();
+                dy_sidecar_b += b.sidecar_bytes();
+                dy_bufs += b.n_buffers();
+            }
+        }
+        let inbox = all_to_all(mailbox);
+        let dyks = group
+            .run_phase(|ctx| {
+                let er = ex_part.range(ctx.rank);
+                match dy_q.as_ref() {
+                    Some(q) => {
+                        assemble_fp8(&inbox[ctx.rank], plan, er, cap, d, &token_owner, q.fmt)
+                    }
+                    None => assemble_dense(&inbox[ctx.rank], plan, er, cap, d, &token_owner),
+                }
+            })
+            .results;
+        stages.combine_bwd_s += tc.elapsed().as_secs_f64();
+
+        // ---- expert backward: each rank on its disjoint worker share ----
+        let te = Instant::now();
+        let ph = group.run_phase(|ctx| expert_ffn_bwd(&dyks[ctx.rank], slot, w, ctx.workers));
+        for (i, s) in ph.rank_s.iter().enumerate() {
+            rank_expert_s[i] += s;
+        }
+        let ebs = ph.results;
+        stages.expert_bwd_s += te.elapsed().as_secs_f64();
+
+        // Weight gradients stay with their expert's owning rank; the
+        // global Vec is just the shard union (ascending expert order, one
+        // owner per expert ⇒ bitwise the single-rank accumulation).
+        for eb in &ebs {
+            stats.add(eb.stats);
+            for (lx, g) in eb.grads.iter().enumerate() {
+                let ge = eb.experts.start + lx;
+                mat_add_assign(&mut dw1[ge], &g.dw1);
+                mat_add_assign(&mut dw3[ge], &g.dw3);
+                mat_add_assign(&mut dw2[ge], &g.dw2);
+            }
+        }
+        // dispatch-bwd wire accounting (real rows only, BF16-accounted;
+        // bookkeeping outside the timer, like the forward combine)
+        dx_b += plan.iter().filter(|&&s| s >= 0).count() * d * 2;
+
+        // ---- dispatch-bwd: per-rank unpermute → serving-rank reduce ----
+        // Same bit-exactness argument as the forward combine: a token has
+        // at most one serving rank per slot, partials are never -0.0
+        // (unpermute adds into zeros), and dropped tokens contribute +0.0,
+        // which never changes dx's bits (dx is never -0.0).
+        let td = Instant::now();
+        let partials = group
+            .run_phase(|ctx| {
+                let er = ex_part.range(ctx.rank);
+                combine(&ebs[ctx.rank].dxk, plan, er, cap, t, ctx.workers)
+            })
+            .results;
+        let tasks: Vec<_> = exec::split_parts(&tok_part, d, &mut dx.data)
+            .into_iter()
+            .zip(tok_part.ranges())
+            .collect();
+        exec::run_tasks(tasks, |(rows, trange)| {
+            for tt in trange.clone() {
+                let sr = serving[tt];
+                if sr == usize::MAX {
+                    continue; // dropped by capacity: dX row is zero
+                }
+                let o = (tt - trange.start) * d;
+                let p = &partials[sr].data;
+                for j in 0..d {
+                    rows[o + j] += p[tt * d + j];
+                }
+            }
+        });
+        stages.dispatch_bwd_s += td.elapsed().as_secs_f64();
+    }
+
+    EpBackward {
+        grads: MoeGrads { dx, dw1, dw3, dw2, stats, stages },
+        ranks: r,
+        rank_expert_s,
+        dy_payload_bytes: dy_payload_b,
+        dy_sidecar_bytes: dy_sidecar_b,
+        dy_buffers: dy_bufs,
+        dx_bytes: dx_b,
+    }
+}
+
+/// Serving rank per token for one slot's plan (`usize::MAX` = dropped by
+/// capacity). Shared by the forward combine reduce and the backward
+/// dispatch-bwd reduce — both read exactly one partial per served token.
+fn serving_map(
+    plan: &[i64],
+    expert_owner: &[usize],
+    capacity: usize,
+    n_tokens: usize,
+) -> Vec<usize> {
+    let mut serving = vec![usize::MAX; n_tokens];
+    for (gd, &src) in plan.iter().enumerate() {
+        if src >= 0 {
+            serving[src as usize] = expert_owner[gd / capacity];
+        }
+    }
+    serving
+}
+
+/// Item → owning rank, from a partition (tokens or experts).
+fn owner_map(part: &Partition, n_items: usize) -> Vec<usize> {
+    let mut owner = vec![0usize; n_items];
+    for (r, range) in part.ranges().enumerate() {
+        for i in range {
+            owner[i] = r;
         }
     }
     owner
@@ -568,5 +785,59 @@ mod tests {
         let (x, w) = setup(25);
         let pw = PreparedWeights::new(w, Recipe::Bf16);
         ep_forward(&x, &pw, &EpConfig { ranks: 8, top_k: 1, capacity: 8, threads: 1 });
+    }
+
+    #[test]
+    fn sharded_backward_matches_single_rank_all_recipes() {
+        use crate::moe::backward::{forward_stash, moe_backward};
+        let (x, w) = setup(26);
+        let mut rng = Rng::seed_from(27);
+        let dy = Mat::randn(x.rows, x.cols, 1.0, &mut rng);
+        for recipe in [Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow] {
+            let pw = PreparedWeights::new(w.clone(), recipe);
+            let stash = forward_stash(&x, &pw, 2, 24);
+            let reference = moe_backward(&stash, &pw, &dy);
+            for ranks in [1usize, 2, 4] {
+                let cfg = EpConfig { ranks, top_k: 2, capacity: 24, threads: 0 };
+                let out = ep_backward(&stash, &pw, &dy, &cfg);
+                let tag = format!("{recipe:?} R={ranks}");
+                assert_mat_bits_eq(&out.grads.dx, &reference.dx, &format!("{tag} dx"));
+                for e in 0..w.n_experts() {
+                    assert_mat_bits_eq(&out.grads.dw1[e], &reference.dw1[e], &format!("{tag} dw1[{e}]"));
+                    assert_mat_bits_eq(&out.grads.dw3[e], &reference.dw3[e], &format!("{tag} dw3[{e}]"));
+                    assert_mat_bits_eq(&out.grads.dw2[e], &reference.dw2[e], &format!("{tag} dw2[{e}]"));
+                }
+                assert_eq!(out.grads.stats, reference.stats, "{tag} cast audit");
+            }
+        }
+    }
+
+    #[test]
+    fn backward_fp8_wire_accounting() {
+        use crate::moe::backward::forward_stash;
+        let (x, w) = setup(28);
+        let mut rng = Rng::seed_from(29);
+        let dy = Mat::randn(x.rows, x.cols, 1.0, &mut rng);
+        let cfg = EpConfig { ranks: 2, top_k: 1, capacity: 32, threads: 2 };
+        let pw_f = PreparedWeights::new(w.clone(), Recipe::Fp8Flow);
+        let st_f = forward_stash(&x, &pw_f, 1, 32);
+        let flow = ep_backward(&st_f, &pw_f, &dy, &cfg);
+        let pw_b = PreparedWeights::new(w, Recipe::Bf16);
+        let st_b = forward_stash(&x, &pw_b, 1, 32);
+        let bf16 = ep_backward(&st_b, &pw_b, &dy, &cfg);
+        // same real rows shipped → FP8 dy payload is exactly half the BF16
+        // bytes, plus the UE8M0 sidecar in a second buffer per pair
+        assert_eq!(flow.dy_payload_bytes * 2, bf16.dy_payload_bytes);
+        assert!(flow.dy_sidecar_bytes > 0);
+        assert_eq!(bf16.dy_sidecar_bytes, 0);
+        assert_eq!(flow.dy_buffers, 2 * bf16.dy_buffers);
+        // dX rides in accumulator precision in both recipes
+        assert_eq!(flow.dx_bytes, bf16.dx_bytes);
+        // and the stage timers are populated
+        assert!(flow.grads.stages.combine_bwd_s > 0.0);
+        assert!(flow.grads.stages.expert_bwd_s > 0.0);
+        assert!(flow.grads.stages.dispatch_bwd_s > 0.0);
+        let j = flow.to_json().render();
+        assert!(j.contains("\"expert_bwd_ms\""), "{j}");
     }
 }

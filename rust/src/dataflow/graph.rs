@@ -126,6 +126,37 @@ impl DataflowGraph {
         self.nodes.iter().filter(|n| n.op.is_explicit_cast()).count()
     }
 
+    /// Explicit casts on the forward path only.
+    pub fn explicit_casts_fwd(&self) -> usize {
+        self.nodes.iter().filter(|n| !n.backward && n.op.is_explicit_cast()).count()
+    }
+
+    /// Explicit casts on the backward path only — what the executed
+    /// backward's cast audit (`moe::backward::BwdStats::casts`) is checked
+    /// against.
+    pub fn explicit_casts_bwd(&self) -> usize {
+        self.nodes.iter().filter(|n| n.backward && n.op.is_explicit_cast()).count()
+    }
+
+    /// Backward nodes that requantize already-FP8 data (the naive wgrad
+    /// transposes — the double-quantization site).
+    pub fn requant_nodes_bwd(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| n.backward && n.op == OpKind::NaiveTransposeRequant)
+            .count()
+    }
+
+    /// Is the wgrad operand prep casting-free? True iff every backward
+    /// transpose is the scaling-aware direct transpose (no
+    /// dequantize→transpose→requantize anywhere on the gradient path) —
+    /// the structural precondition for `moe::backward`'s zero-requant
+    /// Fp8Flow execution.
+    pub fn casting_free_wgrad(&self) -> bool {
+        self.requant_nodes_bwd() == 0
+            && self.nodes.iter().any(|n| n.backward && n.op == OpKind::DirectTranspose)
+    }
+
     /// Total quantization events including those hidden inside naive
     /// transposes (what the double-quantization analysis counts).
     pub fn total_qdq_events(&self) -> usize {

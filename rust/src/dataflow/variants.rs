@@ -235,6 +235,34 @@ mod tests {
     }
 
     #[test]
+    fn per_direction_cast_split_matches_headline() {
+        // fwd/bwd split of the Fig. 2 accounting (the executed backward's
+        // audit anchors: tests/prop_backward.rs)
+        for (v, fwd, bwd) in [
+            (Variant::Bf16, 0usize, 0usize),
+            (Variant::TeBlockwise, 2, 2),
+            (Variant::DeepSeekV3, 6, 6),
+            (Variant::Fp8Flow, 1, 1),
+        ] {
+            let g = build(v);
+            assert_eq!(g.explicit_casts_fwd(), fwd, "{} fwd", v.name());
+            assert_eq!(g.explicit_casts_bwd(), bwd, "{} bwd", v.name());
+        }
+    }
+
+    #[test]
+    fn wgrad_casting_freedom_per_variant() {
+        // only the recipes whose backward transposes are scaling-aware can
+        // run the executed zero-requant backward (moe::backward)
+        assert!(build(Variant::Bf16).casting_free_wgrad());
+        assert!(!build(Variant::TeBlockwise).casting_free_wgrad());
+        assert!(!build(Variant::DeepSeekV3).casting_free_wgrad());
+        assert!(build(Variant::Fp8Flow).casting_free_wgrad());
+        assert_eq!(build(Variant::TeBlockwise).requant_nodes_bwd(), 2);
+        assert_eq!(build(Variant::Fp8Flow).requant_nodes_bwd(), 0);
+    }
+
+    #[test]
     fn fp8flow_has_exactly_two_bf16_islands_forward() {
         let g = build(Variant::Fp8Flow);
         let islands: Vec<_> = g

@@ -112,6 +112,30 @@ impl Fp8Tensor {
         out
     }
 
+    /// Copy `rows` rows starting at `start` into a new row-wise tensor —
+    /// payload, scales and (when present) po2 exponents move together.
+    /// This is the expert-slab view the grouped kernels (fused expert FFN,
+    /// grouped transpose, per-expert backward) are built on.
+    pub fn slice_rows(&self, start: usize, rows: usize) -> Fp8Tensor {
+        assert_eq!(self.layout, TileLayout::RowWise, "slice_rows is defined for row-wise tensors");
+        assert!(start + rows <= self.rows, "slice_rows out of range");
+        let tpr = n_tiles(self.cols);
+        Fp8Tensor {
+            rows,
+            cols: self.cols,
+            fmt: self.fmt,
+            mode: self.mode,
+            layout: self.layout,
+            data: self.data[start * self.cols..(start + rows) * self.cols].to_vec(),
+            scales: self.scales[start * tpr..(start + rows) * tpr].to_vec(),
+            sexp: if self.sexp.is_empty() {
+                Vec::new()
+            } else {
+                self.sexp[start * tpr..(start + rows) * tpr].to_vec()
+            },
+        }
+    }
+
     /// Payload bytes + scale bytes (memory accounting for the cluster sim;
     /// scales are 4 B in Float mode, 1 B (UE8M0) in Po2 mode).
     pub fn nbytes(&self) -> usize {
@@ -151,6 +175,24 @@ mod tests {
         assert_eq!(q.n_scales(), 3 * 4);
         assert_eq!(q.scale_at(0, 2), q.scale_at(127, 2));
         assert_eq!(q.scale_at(128, 2), q.scale_at(255, 2));
+    }
+
+    #[test]
+    fn slice_rows_matches_elementwise() {
+        let mut rng = Rng::seed_from(4);
+        let x = Mat::randn(12, 300, 1.0, &mut rng); // ragged tail tile
+        for mode in [crate::fp8::ScaleMode::Po2, crate::fp8::ScaleMode::Float] {
+            let q = quantize_rowwise(&x, Fp8Format::E4M3, mode);
+            let s = q.slice_rows(3, 5);
+            assert_eq!((s.rows, s.cols), (5, 300));
+            assert_eq!(s.sexp.is_empty(), q.sexp.is_empty());
+            for i in 0..5 {
+                for j in 0..300 {
+                    assert_eq!(s.code_at(i, j), q.code_at(i + 3, j));
+                    assert_eq!(s.scale_at(i, j), q.scale_at(i + 3, j));
+                }
+            }
+        }
     }
 
     #[test]

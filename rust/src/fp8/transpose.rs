@@ -19,7 +19,7 @@
 
 use crate::exec::{self, Partition};
 use crate::fp8::tensor::{n_tiles, Fp8Tensor, TileLayout};
-use crate::fp8::tile::quantize_rowwise;
+use crate::fp8::tile::{quantize_rowwise, quantize_rowwise_with_threads};
 use crate::fp8::{e4m3, Fp8Format, ScaleMode, TILE};
 
 /// Per-`k` scale-down lookup tables: `lut[k][c] = scale_down_code(c, k)`.
@@ -53,9 +53,44 @@ impl ScaleDownLuts {
 /// Naive conversion (Fig. 1 strategy 1): `Q_col(D(Q_row(X)))`, i.e.
 /// dequantize, transpose, requantize with fresh data-dependent scales.
 pub fn naive_transpose(t: &Fp8Tensor) -> Fp8Tensor {
+    naive_transpose_with_threads(t, exec::threads())
+}
+
+/// [`naive_transpose`] with an explicit worker count (1 = serial) — the
+/// per-expert backward calls it with 1 so the grouped dimension stays the
+/// only parallel axis.
+pub fn naive_transpose_with_threads(t: &Fp8Tensor, threads: usize) -> Fp8Tensor {
     assert_eq!(t.layout, TileLayout::RowWise, "naive_transpose expects a row-wise input");
     let dq = t.dequantize();
-    quantize_rowwise(&dq.transpose(), t.fmt, t.mode)
+    quantize_rowwise_with_threads(&dq.transpose(), t.fmt, t.mode, threads)
+}
+
+/// Batched scaling-aware transpose over equal row groups: each expert's
+/// slab of a dispatched `[G·capacity, n]` buffer is transposed
+/// independently (its own block-max scale alignment), yielding the
+/// per-expert column-wise operands the grouped wgrad GEMM consumes.
+///
+/// This is the *standalone* batched form of the wgrad operand prep — the
+/// executed backward (`moe::backward::expert`) streams exactly these
+/// per-slab transposes inside its own expert-parallel loop (calling this
+/// kernel there would nest two parallel axes), so this form exists for
+/// callers that want the prep stage in isolation: `benches/bwd.rs` times
+/// it, and the property suite pins its slab/parallel equivalences.
+///
+/// Groups are the parallel axis on the [`crate::exec`] pool (serial
+/// Alg. 1 inside each slab), so the result is bit-identical for any
+/// worker count (`tests/prop_parallel.rs`).
+pub fn grouped_direct_transpose(t: &Fp8Tensor, groups: usize, threads: usize) -> Vec<Fp8Tensor> {
+    assert!(groups > 0, "grouped_direct_transpose needs at least one group");
+    assert_eq!(
+        t.rows % groups,
+        0,
+        "rows ({}) must split evenly into {groups} groups",
+        t.rows
+    );
+    let rpg = t.rows / groups;
+    let p = Partition::even(groups, exec::workers_for(threads, groups));
+    exec::map_parts(&p, |g| direct_transpose_with_threads(&t.slice_rows(g * rpg, rpg), 1))
 }
 
 /// The paper's **Direct Transpose** (Alg. 1), power-of-two scales required.
@@ -516,6 +551,24 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn grouped_transpose_equals_per_slab_transpose() {
+        // the batched form is exactly G independent direct transposes
+        let mut rng = Rng::seed_from(10);
+        let (g, cap, n) = (4usize, 48usize, 200usize);
+        let x = Mat::rand_log_uniform(g * cap, n, -5.0, 5.0, &mut rng);
+        let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        let batched = grouped_direct_transpose(&q, g, 2);
+        assert_eq!(batched.len(), g);
+        for e in 0..g {
+            let slab = direct_transpose(&q.slice_rows(e * cap, cap));
+            assert_eq!(batched[e].data, slab.data, "group {e}");
+            assert_eq!(batched[e].scales, slab.scales, "group {e}");
+            assert_eq!(batched[e].sexp, slab.sexp, "group {e}");
+            assert_eq!((batched[e].rows, batched[e].cols), (n, cap));
+        }
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //!                    [--steps N] [--seed S] [--log-every K]   # Fig. 6
 //! fp8-flow-moe table1|table2|table3                           # Tables 1–3
 //! fp8-flow-moe epshard [--ranks R] [--recipe ...] [--tokens N]  # executed EP
+//! fp8-flow-moe bwd [--ranks R] [--recipe ...] [--tokens N]    # executed backward
 //! fp8-flow-moe dataflow                                       # Fig. 2 audit
 //! fp8-flow-moe dqe [--size N]                                 # Eq. 1 demo
 //! fp8-flow-moe artifacts                                      # list manifest
@@ -16,13 +17,14 @@
 //! nonzero; `--help` / `-h` / `help` print it to stdout and exit 0.
 
 use anyhow::{bail, ensure, Result};
-use fp8_flow_moe::cluster::ep_exec::{ep_forward, EpConfig, EpShape};
+use fp8_flow_moe::cluster::ep_exec::{ep_backward, ep_forward, EpConfig, EpShape};
 use fp8_flow_moe::cluster::sim::ep_measured_vs_modeled;
 use fp8_flow_moe::coordinator::{reports, write_run_json};
 use fp8_flow_moe::dataflow::{build, Variant};
 use fp8_flow_moe::exec;
 use fp8_flow_moe::fp8::error::dqe_report;
 use fp8_flow_moe::fp8::{Fp8Format, ScaleMode};
+use fp8_flow_moe::moe::backward::{forward_stash, moe_backward, FwdStash, MoeGrads};
 use fp8_flow_moe::moe::layer::{MoeWeights, PreparedWeights, Recipe};
 use fp8_flow_moe::runtime::Runtime;
 use fp8_flow_moe::train::{Corpus, Trainer};
@@ -39,6 +41,9 @@ USAGE:
                      [--steps N] [--seed S] [--noise PCT] [--log-every K]
   fp8-flow-moe table1 | table2 | table3
   fp8-flow-moe epshard [--ranks R] [--recipe <all|bf16|blockwise|fp8flow>]
+                       [--tokens N] [--experts E] [--top-k K] [--capacity C]
+                       [--d-model D] [--ffn H] [--seed S]
+  fp8-flow-moe bwd     [--ranks R] [--recipe <all|bf16|blockwise|fp8flow>]
                        [--tokens N] [--experts E] [--top-k K] [--capacity C]
                        [--d-model D] [--ffn H] [--seed S]
   fp8-flow-moe dataflow
@@ -73,6 +78,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         Some("epshard") => cmd_epshard(&args),
+        Some("bwd") => cmd_bwd(&args),
         Some("dataflow") => {
             for v in Variant::all() {
                 let g = build(v);
@@ -129,31 +135,67 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Shared shape/recipe arguments of the executed-layer subcommands
+/// (`epshard`, `bwd`): one parse + validation site so the two commands
+/// cannot drift.
+struct ShardArgs {
+    ranks: usize,
+    tokens: usize,
+    experts: usize,
+    top_k: usize,
+    d_model: usize,
+    ffn: usize,
+    capacity: usize,
+    seed: u64,
+    recipes: Vec<Recipe>,
+}
+
+impl ShardArgs {
+    fn parse(args: &Args, default_ranks: usize) -> Result<ShardArgs> {
+        let ranks = args.usize_or("ranks", default_ranks);
+        let tokens = args.usize_or("tokens", 512);
+        let experts = args.usize_or("experts", 8);
+        let top_k = args.usize_or("top-k", 2);
+        let d_model = args.usize_or("d-model", 256);
+        let ffn = args.usize_or("ffn", 256);
+        let capacity = args.usize_or("capacity", (tokens * top_k).div_ceil(experts));
+        let seed = args.u64_or("seed", 42);
+        ensure!(ranks >= 1, "--ranks must be at least 1");
+        ensure!(tokens >= 1, "--tokens must be at least 1");
+        ensure!(capacity >= 1, "--capacity must be at least 1");
+        ensure!(experts >= ranks, "need at least as many experts ({experts}) as ranks ({ranks})");
+        ensure!(top_k >= 1 && top_k <= experts, "--top-k must be in 1..=--experts");
+        let recipes = match args.get_or("recipe", "all").as_str() {
+            "all" => vec![Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow],
+            other => match Recipe::parse(other) {
+                Some(r) => vec![r],
+                None => bail!("unknown recipe {other:?} (want all|bf16|blockwise|fp8flow)"),
+            },
+        };
+        Ok(ShardArgs { ranks, tokens, experts, top_k, d_model, ffn, capacity, seed, recipes })
+    }
+
+    /// The shared run-JSON header.
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("ranks", self.ranks)
+            .set("tokens", self.tokens)
+            .set("experts", self.experts)
+            .set("top_k", self.top_k)
+            .set("capacity", self.capacity)
+            .set("d_model", self.d_model)
+            .set("ffn", self.ffn)
+            .set("seed", self.seed)
+    }
+}
+
 /// Execute the EP-sharded forward and report measured vs modeled
 /// per-stage times (see `rust/EXPERIMENTS.md` §"Measured vs modeled EP
 /// dispatch").
 fn cmd_epshard(args: &Args) -> Result<()> {
-    let ranks = args.usize_or("ranks", 2);
-    let tokens = args.usize_or("tokens", 512);
-    let experts = args.usize_or("experts", 8);
-    let top_k = args.usize_or("top-k", 2);
-    let d_model = args.usize_or("d-model", 256);
-    let ffn = args.usize_or("ffn", 256);
-    let capacity = args.usize_or("capacity", (tokens * top_k).div_ceil(experts));
-    let seed = args.u64_or("seed", 42);
-    ensure!(ranks >= 1, "--ranks must be at least 1");
-    ensure!(tokens >= 1, "--tokens must be at least 1");
-    ensure!(capacity >= 1, "--capacity must be at least 1");
-    ensure!(experts >= ranks, "need at least as many experts ({experts}) as ranks ({ranks})");
-    ensure!(top_k >= 1 && top_k <= experts, "--top-k must be in 1..=--experts");
-
-    let recipes: Vec<Recipe> = match args.get_or("recipe", "all").as_str() {
-        "all" => vec![Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow],
-        other => match Recipe::parse(other) {
-            Some(r) => vec![r],
-            None => bail!("unknown recipe {other:?} (want all|bf16|blockwise|fp8flow)"),
-        },
-    };
+    let sa = ShardArgs::parse(args, 2)?;
+    let (ranks, tokens, experts, top_k, d_model, ffn, capacity, seed) =
+        (sa.ranks, sa.tokens, sa.experts, sa.top_k, sa.d_model, sa.ffn, sa.capacity, sa.seed);
 
     let mut rng = Rng::seed_from(seed);
     let x = Mat::randn(tokens, d_model, 0.5, &mut rng);
@@ -163,16 +205,8 @@ fn cmd_epshard(args: &Args) -> Result<()> {
         exec::threads()
     );
 
-    let mut doc = Json::obj()
-        .set("ranks", ranks)
-        .set("tokens", tokens)
-        .set("experts", experts)
-        .set("top_k", top_k)
-        .set("capacity", capacity)
-        .set("d_model", d_model)
-        .set("ffn", ffn)
-        .set("seed", seed);
-    for recipe in recipes {
+    let mut doc = sa.to_json();
+    for recipe in sa.recipes.iter().copied() {
         let pw = PreparedWeights::new(w.clone(), recipe);
         let cfg = EpConfig { ranks, top_k, capacity, threads: 0 };
         let shape = EpShape::of(&x, &pw, &cfg);
@@ -187,6 +221,107 @@ fn cmd_epshard(args: &Args) -> Result<()> {
         doc = doc.set(key, out.to_json());
     }
     let path = write_run_json(&format!("epshard_r{ranks}"), &doc)?;
+    println!("wrote {path:?}");
+    Ok(())
+}
+
+/// Execute the full fwd+bwd MoE layer per recipe — single-rank or
+/// EP-sharded — and report per-stage times, the Fig. 2 cast audit (graph
+/// vs executed, the 12→2 table), and gradient deviation from the BF16
+/// reference (see `rust/EXPERIMENTS.md` §Backward).
+fn cmd_bwd(args: &Args) -> Result<()> {
+    let sa = ShardArgs::parse(args, 1)?;
+    let (ranks, tokens, experts, top_k, d_model, ffn, capacity, seed) =
+        (sa.ranks, sa.tokens, sa.experts, sa.top_k, sa.d_model, sa.ffn, sa.capacity, sa.seed);
+
+    let mut rng = Rng::seed_from(seed);
+    let x = Mat::randn(tokens, d_model, 0.5, &mut rng);
+    let w = MoeWeights::random(d_model, ffn, experts, &mut rng);
+    let dy = Mat::randn(tokens, d_model, 1.0, &mut rng);
+    println!(
+        "bwd: {tokens} tokens, {experts} experts, top-{top_k}, {ranks} rank(s), \
+         {} workers",
+        exec::threads()
+    );
+
+    // BF16 reference gradients for the deviation report
+    let pw_ref = PreparedWeights::new(w.clone(), Recipe::Bf16);
+    let stash_ref = forward_stash(&x, &pw_ref, top_k, capacity);
+    let ref_grads = moe_backward(&stash_ref, &pw_ref, &dy);
+
+    let mut doc = sa.to_json();
+    for recipe in sa.recipes.iter().copied() {
+        let (key, variant) = match recipe {
+            Recipe::Bf16 => ("bf16", Variant::Bf16),
+            Recipe::Blockwise => ("blockwise", Variant::TeBlockwise),
+            Recipe::Fp8Flow => ("fp8flow", Variant::Fp8Flow),
+        };
+        println!("== bwd {key}: R={ranks} ==");
+        // Single-rank BF16 *is* the deviation reference — reuse it rather
+        // than recomputing the identical forward+backward.
+        let computed: Option<(FwdStash, MoeGrads, Option<Json>)> =
+            if recipe == Recipe::Bf16 && ranks == 1 {
+                None
+            } else {
+                let pw = PreparedWeights::new(w.clone(), recipe);
+                let stash = forward_stash(&x, &pw, top_k, capacity);
+                let (grads, wj) = if ranks > 1 {
+                    let cfg = EpConfig { ranks, top_k, capacity, threads: 0 };
+                    let out = ep_backward(&stash, &pw, &dy, &cfg);
+                    let j = out.to_json();
+                    println!(
+                        "    combine-bwd wire {} B payload + {} B sidecar in {} buffers; \
+                         dispatch-bwd {} B",
+                        out.dy_payload_bytes, out.dy_sidecar_bytes, out.dy_buffers, out.dx_bytes
+                    );
+                    (out.grads, Some(j))
+                } else {
+                    (moe_backward(&stash, &pw, &dy), None)
+                };
+                Some((stash, grads, wj))
+            };
+        let (stash, grads, wire_json) = match &computed {
+            Some((s, g, wj)) => (s, g, wj.clone()),
+            None => (&stash_ref, &ref_grads, None),
+        };
+        let g = build(variant);
+        let dx_rel = grads.dx.rel_err(&ref_grads.dx);
+        let dw_rel: f64 = (0..experts)
+            .map(|e| grads.dw1[e].rel_err(&ref_grads.dw1[e]))
+            .sum::<f64>()
+            / experts as f64;
+        println!(
+            "ROW combine-bwd {:>9.4} ms | expert-bwd {:>9.4} ms | dispatch-bwd {:>9.4} ms",
+            grads.stages.combine_bwd_s * 1e3,
+            grads.stages.expert_bwd_s * 1e3,
+            grads.stages.dispatch_bwd_s * 1e3,
+        );
+        println!(
+            "    casts fwd+bwd: {} + {} executed (graph: {} + {} = {}); requants: {}",
+            stash.cast_ops,
+            grads.stats.casts,
+            g.explicit_casts_fwd(),
+            g.explicit_casts_bwd(),
+            g.explicit_casts(),
+            grads.stats.requants,
+        );
+        println!("    vs bf16 grads: dx rel {dx_rel:.4}, mean dw1 rel {dw_rel:.4}\n");
+        let mut rj = Json::obj()
+            .set("combine_bwd_ms", grads.stages.combine_bwd_s * 1e3)
+            .set("expert_bwd_ms", grads.stages.expert_bwd_s * 1e3)
+            .set("dispatch_bwd_ms", grads.stages.dispatch_bwd_s * 1e3)
+            .set("casts_fwd", stash.cast_ops)
+            .set("casts_bwd", grads.stats.casts)
+            .set("requants_bwd", grads.stats.requants)
+            .set("graph_casts_total", g.explicit_casts())
+            .set("dx_rel_vs_bf16", dx_rel)
+            .set("dw1_rel_vs_bf16", dw_rel);
+        if let Some(wj) = wire_json {
+            rj = rj.set("ep", wj);
+        }
+        doc = doc.set(key, rj);
+    }
+    let path = write_run_json(&format!("bwd_r{ranks}"), &doc)?;
     println!("wrote {path:?}");
     Ok(())
 }

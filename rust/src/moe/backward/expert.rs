@@ -1,0 +1,236 @@
+//! The expert-FFN **backward** stage — per-recipe dgrad/wgrad over a
+//! rank-local dY batch, experts as the parallel axis (serial kernels
+//! inside, so the result is bit-identical for any worker count and any
+//! sharding of the expert range).
+//!
+//! Per expert (stashed fwd: `gate/up = x·W1/W3`, `a = swiglu(gate, up)`,
+//! `y = a·W2`):
+//!
+//! ```text
+//! d_a  = dY · W2ᵀ                    (fc2 dgrad)
+//! dW2  = aᵀ · dY                     (fc2 wgrad — column-major operands!)
+//! (d_gate, d_up) = swiglu_bwd(gate, up, d_a)
+//! dX   = d_gate · W1ᵀ + d_up · W3ᵀ   (fc1 dgrad)
+//! dW1  = Xᵀ · d_gate;  dW3 = Xᵀ · d_up
+//! ```
+//!
+//! The wgrad GEMMs contract over the *token* axis, so both operands need
+//! the column-wise FP8 layout — exactly the paper's Fig. 2 fork:
+//!
+//! * **Fp8Flow**: every wgrad operand comes from the scaling-aware
+//!   [`crate::fp8::transpose::direct_transpose`] — pure exponent
+//!   manipulation in code space, scale sidecars carried, **zero
+//!   re-quantization** of already-FP8 tensors; the SwiGLU backward is the
+//!   fused [`crate::moe::swiglu::swiglu_bwd_quant`] (the BF16 island ends
+//!   inside the kernel). The only explicit bwd cast is the entry `Q(dy)`,
+//!   counted by the driver.
+//! * **Blockwise** (the measurable foil): wgrad operands go through
+//!   [`crate::fp8::transpose::naive_transpose`] — dequantize → transpose →
+//!   requantize onto fresh float scales, the double-quantization site —
+//!   plus standalone `Q(dy)`/`Q(d_gate)`/`Q(d_up)` cast launches.
+//! * **Bf16**: plain f32 reference math (the gradcheck oracle).
+
+use std::ops::Range;
+
+use crate::exec::{self, Partition};
+use crate::fp8::tensor::Fp8Tensor;
+use crate::fp8::tile::quantize_rowwise_with_threads;
+use crate::fp8::transpose::{direct_transpose_with_threads, naive_transpose_with_threads};
+use crate::fp8::{Fp8Format, ScaleMode};
+use crate::moe::backward::stash::{mat_rows, ActStash, SlotStash};
+use crate::moe::backward::BwdStats;
+use crate::moe::gemm::fp8_matmul_with_threads;
+use crate::moe::layer::{PreparedWeights, RankLocalBatch, Recipe, WirePayload};
+use crate::moe::swiglu::{swiglu_bwd_quant_with_threads, swiglu_bwd_with_threads};
+use crate::util::mat::Mat;
+
+/// Gradients of one expert's weights (f32 master-gradient layout).
+pub struct ExpertGrads {
+    pub dw1: Mat, // [d, h]
+    pub dw3: Mat, // [d, h]
+    pub dw2: Mat, // [h, d]
+}
+
+/// Result of the expert backward stage over one expert range.
+pub struct ExpertBwd {
+    /// Global expert ids covered (mirrors the dY batch).
+    pub experts: Range<usize>,
+    /// Input gradients `[|experts|·capacity, d]` in dispatched row order
+    /// (accumulator precision — ready for the unpermute scatter).
+    pub dxk: Mat,
+    /// Per local expert, in expert order.
+    pub grads: Vec<ExpertGrads>,
+    /// Executed cast/requant audit for this stage.
+    pub stats: BwdStats,
+}
+
+/// Run the expert backward for the batch's expert range. `slot` is the
+/// *global* forward stash; this stage reads only the rows of the experts
+/// it covers, which is what makes it shardable (the EP runtime calls it
+/// once per rank with that rank's dY batch).
+pub fn expert_ffn_bwd(
+    dyk: &RankLocalBatch,
+    slot: &SlotStash,
+    w: &PreparedWeights,
+    threads: usize,
+) -> ExpertBwd {
+    let er = dyk.experts.clone();
+    let el = er.len();
+    let cap = dyk.capacity;
+    assert_eq!(cap, slot.batch.capacity, "stash/batch capacity mismatch");
+    let d = w.raw.w1[0].rows;
+    let p = Partition::even(el, exec::workers_for(threads, el));
+    let per: Vec<(Mat, ExpertGrads, BwdStats)> = exec::map_parts(&p, |lx| {
+        let ge = er.start + lx;
+        match (&dyk.payload, w.recipe) {
+            (WirePayload::Fp8(dyg), Recipe::Fp8Flow) => {
+                flow_expert_bwd(dyg.slice_rows(lx * cap, cap), slot, w, ge, cap)
+            }
+            (WirePayload::Dense(dyg), Recipe::Blockwise) => {
+                blockwise_expert_bwd(mat_rows(dyg, lx * cap, cap), slot, w, ge, cap)
+            }
+            (WirePayload::Dense(dyg), Recipe::Bf16) => {
+                bf16_expert_bwd(mat_rows(dyg, lx * cap, cap), slot, w, ge, cap)
+            }
+            _ => panic!("recipe/wire mismatch in expert_ffn_bwd: {:?}", w.recipe),
+        }
+    });
+    let mut dxk = Mat::zeros(el * cap, d);
+    let mut grads = Vec::with_capacity(el);
+    let mut stats = BwdStats::default();
+    for (lx, (dxe, g, s)) in per.into_iter().enumerate() {
+        debug_assert_eq!((dxe.rows, dxe.cols), (cap, d));
+        dxk.data[lx * cap * d..(lx + 1) * cap * d].copy_from_slice(&dxe.data);
+        grads.push(g);
+        stats.add(s);
+    }
+    ExpertBwd { experts: er, dxk, grads, stats }
+}
+
+/// Fp8Flow: the casting-free backward chain — FP8 operands in, f32
+/// accumulators out, wgrad layouts via the scaling-aware direct transpose.
+fn flow_expert_bwd(
+    dye_q: Fp8Tensor,
+    slot: &SlotStash,
+    w: &PreparedWeights,
+    ge: usize,
+    cap: usize,
+) -> (Mat, ExpertGrads, BwdStats) {
+    let WirePayload::Fp8(xg) = &slot.batch.payload else {
+        panic!("Fp8Flow backward needs the FP8 dispatched stash");
+    };
+    let ActStash::Fp8(aqg) = &slot.act else {
+        panic!("Fp8Flow backward needs the quantized activation stash");
+    };
+    let xe_q = xg.slice_rows(ge * cap, cap);
+    let aq_e = aqg.slice_rows(ge * cap, cap);
+    let gate_e = mat_rows(&slot.gate, ge * cap, cap);
+    let up_e = mat_rows(&slot.up, ge * cap, cap);
+
+    // fc2 dgrad: dY consumed straight from the FP8 wire — BF16 island
+    let d_act = fp8_matmul_with_threads(&dye_q, &w.w2_d[ge], 1);
+    // fused SwiGLU-bwd+quant: grads re-enter FP8 inside the kernel
+    let (dg_q, du_q) =
+        swiglu_bwd_quant_with_threads(&gate_e, &up_e, &d_act, Fp8Format::E4M3, ScaleMode::Po2, 1);
+    // fc1 dgrad (two projections share the FP8 grads)
+    let dxe_g = fp8_matmul_with_threads(&dg_q, &w.w1_d[ge], 1);
+    let dxe_u = fp8_matmul_with_threads(&du_q, &w.w3_d[ge], 1);
+    let dxe = mat_add(&dxe_g, &dxe_u);
+    // wgrad operands: scaling-aware transposes — code space only, the
+    // scale sidecars ride along, nothing is re-quantized
+    let xt = direct_transpose_with_threads(&xe_q, 1); // [d, cap]
+    let dgt = direct_transpose_with_threads(&dg_q, 1); // [h, cap]
+    let dut = direct_transpose_with_threads(&du_q, 1);
+    let at = direct_transpose_with_threads(&aq_e, 1); // [h, cap]
+    let dyt = direct_transpose_with_threads(&dye_q, 1); // [d, cap]
+    let dw1 = fp8_matmul_with_threads(&xt, &dgt, 1); // [d, h]
+    let dw3 = fp8_matmul_with_threads(&xt, &dut, 1);
+    let dw2 = fp8_matmul_with_threads(&at, &dyt, 1); // [h, d]
+    (dxe, ExpertGrads { dw1, dw3, dw2 }, BwdStats { casts: 0, requants: 0 })
+}
+
+/// Blockwise (TE-style): standalone casts at every GEMM boundary and
+/// naive requantizing transposes for the wgrad operands — the
+/// double-quantization error is executed, not just modeled.
+fn blockwise_expert_bwd(
+    dye: Mat,
+    slot: &SlotStash,
+    w: &PreparedWeights,
+    ge: usize,
+    cap: usize,
+) -> (Mat, ExpertGrads, BwdStats) {
+    let Some(xqg) = &slot.x_q else {
+        panic!("Blockwise backward needs the quantized-input stash");
+    };
+    let ActStash::Fp8(aqg) = &slot.act else {
+        panic!("Blockwise backward needs the quantized activation stash");
+    };
+    let xq_e = xqg.slice_rows(ge * cap, cap);
+    let aq_e = aqg.slice_rows(ge * cap, cap);
+    let gate_e = mat_rows(&slot.gate, ge * cap, cap);
+    let up_e = mat_rows(&slot.up, ge * cap, cap);
+
+    // Q(dy) for the fc2 grads — explicit cast #1
+    let dyq = quantize_rowwise_with_threads(&dye, Fp8Format::E4M3, ScaleMode::Float, 1);
+    let d_act = fp8_matmul_with_threads(&dyq, &w.w2_d[ge], 1);
+    let (dg, du) = swiglu_bwd_with_threads(&gate_e, &up_e, &d_act, 1);
+    // Q(d_gate)/Q(d_up) for the fc1 grads — explicit casts #2/#3
+    let dgq = quantize_rowwise_with_threads(&dg, Fp8Format::E4M3, ScaleMode::Float, 1);
+    let duq = quantize_rowwise_with_threads(&du, Fp8Format::E4M3, ScaleMode::Float, 1);
+    let dxe_g = fp8_matmul_with_threads(&dgq, &w.w1_d[ge], 1);
+    let dxe_u = fp8_matmul_with_threads(&duq, &w.w3_d[ge], 1);
+    let dxe = mat_add(&dxe_g, &dxe_u);
+    // wgrad operands: dequantize → transpose → requantize (fresh float
+    // scales) — five requantizations of already-FP8 tensors per expert
+    let xt = naive_transpose_with_threads(&xq_e, 1);
+    let dgt = naive_transpose_with_threads(&dgq, 1);
+    let dut = naive_transpose_with_threads(&duq, 1);
+    let at = naive_transpose_with_threads(&aq_e, 1);
+    let dyt = naive_transpose_with_threads(&dyq, 1);
+    let dw1 = fp8_matmul_with_threads(&xt, &dgt, 1);
+    let dw3 = fp8_matmul_with_threads(&xt, &dut, 1);
+    let dw2 = fp8_matmul_with_threads(&at, &dyt, 1);
+    (dxe, ExpertGrads { dw1, dw3, dw2 }, BwdStats { casts: 3, requants: 5 })
+}
+
+/// Bf16: the dense f32 reference backward (gradcheck oracle).
+fn bf16_expert_bwd(
+    dye: Mat,
+    slot: &SlotStash,
+    w: &PreparedWeights,
+    ge: usize,
+    cap: usize,
+) -> (Mat, ExpertGrads, BwdStats) {
+    let WirePayload::Dense(xg) = &slot.batch.payload else {
+        panic!("Bf16 backward needs the dense dispatched stash");
+    };
+    let ActStash::Dense(actg) = &slot.act else {
+        panic!("Bf16 backward needs the dense activation stash");
+    };
+    let xe = mat_rows(xg, ge * cap, cap);
+    let act_e = mat_rows(actg, ge * cap, cap);
+    let gate_e = mat_rows(&slot.gate, ge * cap, cap);
+    let up_e = mat_rows(&slot.up, ge * cap, cap);
+
+    let d_act = dye.matmul(&w.raw.w2[ge].transpose());
+    let (dg, du) = swiglu_bwd_with_threads(&gate_e, &up_e, &d_act, 1);
+    let dxe = mat_add(
+        &dg.matmul(&w.raw.w1[ge].transpose()),
+        &du.matmul(&w.raw.w3[ge].transpose()),
+    );
+    let dw1 = xe.transpose().matmul(&dg);
+    let dw3 = xe.transpose().matmul(&du);
+    let dw2 = act_e.transpose().matmul(&dye);
+    (dxe, ExpertGrads { dw1, dw3, dw2 }, BwdStats { casts: 0, requants: 0 })
+}
+
+/// Elementwise `a + b` (fixed left-to-right order — part of the
+/// bit-identity contract across thread counts and shardings).
+fn mat_add(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    let mut out = Mat::zeros(a.rows, a.cols);
+    for ((o, &x), &y) in out.data.iter_mut().zip(&a.data).zip(&b.data) {
+        *o = x + y;
+    }
+    out
+}

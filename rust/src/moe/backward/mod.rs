@@ -1,0 +1,291 @@
+//! The MoE-layer **backward** on the native substrate — the executed form
+//! of the Fig. 2 bwd graphs ([`crate::dataflow::variants`]), for all three
+//! recipes.
+//!
+//! Stage decomposition mirrors the forward's dispatch/expert/combine split
+//! (PR 2), with the data flowing the other way:
+//!
+//! ```text
+//! combine-bwd   gate-scale dy  (+ Q(dy): Fp8Flow's single bwd entry cast)
+//!               → permute+pad into expert order        == fwd `dispatch`
+//! expert-bwd    per-expert dgrad + wgrad               (backward/expert.rs)
+//! dispatch-bwd  unpermute dX back to token order       == fwd `combine`
+//! ```
+//!
+//! [`combine_bwd`] and [`dispatch_bwd`] *are* the forward stage kernels
+//! with the roles swapped — the backward of a gather is a scatter and vice
+//! versa — so every bit-identity property the forward stages carry
+//! (thread invariance, expert-range shardability) transfers for free.
+//!
+//! Scope: gradients w.r.t. the layer input and the expert weights. Gates
+//! and routing are treated as constants (no router backward), matching the
+//! paper's Fig. 2 graphs, which model the expert path only.
+//!
+//! The executed cast audit ([`BwdStats`]) is the module's acceptance
+//! contract: the Fp8Flow backward performs **zero** re-quantizations of
+//! already-FP8 tensors and exactly the graph's explicit casts
+//! (`tests/prop_backward.rs`).
+
+pub mod expert;
+pub mod stash;
+
+pub use expert::{expert_ffn_bwd, ExpertBwd, ExpertGrads};
+pub use stash::{forward_stash, forward_stash_with_routing, ActStash, FwdStash, SlotStash};
+
+use std::ops::Range;
+use std::time::Instant;
+
+use crate::exec::{self, Partition};
+use crate::fp8::tile::quantize_rowwise_with_threads;
+use crate::fp8::{Fp8Format, ScaleMode};
+use crate::moe::layer::{
+    combine, dispatch, DispatchSource, PreparedWeights, RankLocalBatch, Recipe,
+};
+use crate::moe::router::Routing;
+use crate::util::mat::Mat;
+
+/// Executed cast accounting for one backward pass — the measured side of
+/// the Fig. 2 audit.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BwdStats {
+    /// Standalone quantize launches of f32/BF16 tensors (explicit casts).
+    pub casts: usize,
+    /// Quantize launches whose input was *already* FP8 (the naive-transpose
+    /// double-quantization site). Zero for Fp8Flow, by construction.
+    pub requants: usize,
+}
+
+impl BwdStats {
+    pub fn add(&mut self, o: BwdStats) {
+        self.casts += o.casts;
+        self.requants += o.requants;
+    }
+}
+
+/// Accumulated wall-clock seconds per backward stage (summed over slots).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BwdStageTimes {
+    /// Gate-scaling + (Fp8Flow) entry quantization + permute+pad.
+    pub combine_bwd_s: f64,
+    /// Per-expert dgrad/wgrad GEMMs + transposes.
+    pub expert_bwd_s: f64,
+    /// Unpermute scatter back to token order + accumulate.
+    pub dispatch_bwd_s: f64,
+}
+
+impl BwdStageTimes {
+    pub fn total_s(&self) -> f64 {
+        self.combine_bwd_s + self.expert_bwd_s + self.dispatch_bwd_s
+    }
+}
+
+/// Gradients of one MoE layer (gates/routing held constant).
+pub struct MoeGrads {
+    /// `[tokens, d]` input gradient.
+    pub dx: Mat,
+    pub dw1: Vec<Mat>, // E × [d, h]
+    pub dw3: Vec<Mat>, // E × [d, h]
+    pub dw2: Vec<Mat>, // E × [h, d]
+    pub stats: BwdStats,
+    pub stages: BwdStageTimes,
+}
+
+/// Combine-backward stage: route the (already gate-scaled, per-recipe
+/// quantized) output gradients into expert-grouped order for a contiguous
+/// expert range. This is exactly the forward [`dispatch`] kernel — the
+/// backward of the combine scatter is the dispatch gather.
+pub fn combine_bwd(
+    src: DispatchSource,
+    plan: &[i64],
+    experts: Range<usize>,
+    capacity: usize,
+    threads: usize,
+) -> RankLocalBatch {
+    dispatch(src, plan, experts, capacity, threads)
+}
+
+/// Dispatch-backward stage: scatter expert-order input gradients back to
+/// token order. This is exactly the forward [`combine`] kernel — the
+/// backward of the dispatch gather is the combine scatter.
+pub fn dispatch_bwd(
+    dxk: &Mat,
+    plan: &[i64],
+    experts: Range<usize>,
+    capacity: usize,
+    n_tokens: usize,
+    threads: usize,
+) -> Mat {
+    combine(dxk, plan, experts, capacity, n_tokens, threads)
+}
+
+/// Gate-scale the upstream gradient for one top-k slot (the combine-bwd
+/// entry): `out[t] = gates[t][kk] · dy[t]`. Row-independent ⇒
+/// bit-identical across worker counts.
+pub fn scale_by_gates_with_threads(
+    dy: &Mat,
+    routing: &Routing,
+    kk: usize,
+    threads: usize,
+) -> Mat {
+    assert_eq!(dy.rows, routing.gates.len(), "dy/routing token mismatch");
+    let cols = dy.cols;
+    let mut out = Mat::zeros(dy.rows, dy.cols);
+    let p = Partition::even(dy.rows, exec::workers_for(threads, dy.rows));
+    let tasks: Vec<_> = exec::split_parts(&p, cols, &mut out.data)
+        .into_iter()
+        .zip(p.ranges())
+        .collect();
+    exec::run_tasks(tasks, |(chunk, tr)| {
+        for tt in tr.clone() {
+            let g = routing.gates[tt][kk];
+            let o = (tt - tr.start) * cols;
+            for j in 0..cols {
+                chunk[o + j] = g * dy.data[tt * cols + j];
+            }
+        }
+    });
+    out
+}
+
+/// Run the full layer backward single-rank (expert range `0..E`).
+pub fn moe_backward(stash: &FwdStash, w: &PreparedWeights, dy: &Mat) -> MoeGrads {
+    moe_backward_with_threads(stash, w, dy, exec::threads())
+}
+
+/// [`moe_backward`] with an explicit worker count (1 = fully serial) —
+/// bit-identical across worker counts (`tests/prop_parallel.rs`).
+pub fn moe_backward_with_threads(
+    stash: &FwdStash,
+    w: &PreparedWeights,
+    dy: &Mat,
+    threads: usize,
+) -> MoeGrads {
+    let t = dy.rows;
+    let d = dy.cols;
+    let e = w.raw.n_experts();
+    assert_eq!((t, d), (stash.y.rows, stash.y.cols), "dy must match the forward output shape");
+    let cap = stash.capacity;
+    let mut dx = Mat::zeros(t, d);
+    let mut dw1: Vec<Mat> = w.raw.w1.iter().map(|m| Mat::zeros(m.rows, m.cols)).collect();
+    let mut dw3: Vec<Mat> = w.raw.w3.iter().map(|m| Mat::zeros(m.rows, m.cols)).collect();
+    let mut dw2: Vec<Mat> = w.raw.w2.iter().map(|m| Mat::zeros(m.rows, m.cols)).collect();
+    let mut stats = BwdStats::default();
+    let mut stages = BwdStageTimes::default();
+
+    for (kk, slot) in stash.slots.iter().enumerate() {
+        // ---- combine-bwd: gate-scale (+ entry quant) → permute+pad ----
+        let tc = Instant::now();
+        let dyg = scale_by_gates_with_threads(dy, &stash.routing, kk, threads);
+        let dyk = if w.recipe == Recipe::Fp8Flow {
+            // Q(dy): the recipe's single explicit backward cast (§3.2 —
+            // everything downstream stays in FP8 code space)
+            stats.casts += 1;
+            let dyq =
+                quantize_rowwise_with_threads(&dyg, Fp8Format::E4M3, ScaleMode::Po2, threads);
+            combine_bwd(DispatchSource::Fp8(&dyq), &slot.plan, 0..e, cap, threads)
+        } else {
+            combine_bwd(DispatchSource::Dense(&dyg), &slot.plan, 0..e, cap, threads)
+        };
+        stages.combine_bwd_s += tc.elapsed().as_secs_f64();
+
+        // ---- expert backward: dgrad + wgrad, experts parallel ----
+        let te = Instant::now();
+        let eb = expert_ffn_bwd(&dyk, slot, w, threads);
+        stats.add(eb.stats);
+        for (lx, g) in eb.grads.iter().enumerate() {
+            mat_add_assign(&mut dw1[lx], &g.dw1);
+            mat_add_assign(&mut dw3[lx], &g.dw3);
+            mat_add_assign(&mut dw2[lx], &g.dw2);
+        }
+        stages.expert_bwd_s += te.elapsed().as_secs_f64();
+
+        // ---- dispatch-bwd: scatter dX back to token order ----
+        let td = Instant::now();
+        let dxs = dispatch_bwd(&eb.dxk, &slot.plan, 0..e, cap, t, threads);
+        for (a, b) in dx.data.iter_mut().zip(&dxs.data) {
+            *a += b;
+        }
+        stages.dispatch_bwd_s += td.elapsed().as_secs_f64();
+    }
+    MoeGrads { dx, dw1, dw3, dw2, stats, stages }
+}
+
+/// `a += b` elementwise (slot-order accumulation of weight gradients —
+/// the fixed order is part of the EP bit-identity contract).
+pub(crate) fn mat_add_assign(a: &mut Mat, b: &Mat) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    for (x, &y) in a.data.iter_mut().zip(&b.data) {
+        *x += y;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::layer::{moe_forward, MoeWeights};
+    use crate::util::prop::assert_mat_bits_eq;
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64) -> (Mat, MoeWeights, Mat) {
+        let mut rng = Rng::seed_from(seed);
+        let (t, d, h, e) = (48, 64, 48, 4);
+        let x = Mat::randn(t, d, 0.5, &mut rng);
+        let w = MoeWeights::random(d, h, e, &mut rng);
+        let dy = Mat::randn(t, d, 1.0, &mut rng);
+        (x, w, dy)
+    }
+
+    #[test]
+    fn stash_forward_bit_matches_plain_forward() {
+        let (x, w, _) = setup(31);
+        for recipe in [Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow] {
+            let pw = PreparedWeights::new(w.clone(), recipe);
+            let plain = moe_forward(&x, &pw, 2, 16);
+            let st = forward_stash(&x, &pw, 2, 16);
+            assert_mat_bits_eq(&st.y, &plain.y, &format!("{recipe:?} stash fwd"));
+            assert_eq!(st.cast_ops, plain.cast_ops, "{recipe:?}");
+            assert_eq!(st.dispatch_bytes, plain.dispatch_bytes, "{recipe:?}");
+            assert_eq!(st.aux_loss.to_bits(), plain.aux_loss.to_bits());
+        }
+    }
+
+    #[test]
+    fn backward_shapes_and_finiteness() {
+        let (x, w, dy) = setup(32);
+        for recipe in [Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow] {
+            let pw = PreparedWeights::new(w.clone(), recipe);
+            let st = forward_stash(&x, &pw, 2, 16);
+            let g = moe_backward(&st, &pw, &dy);
+            assert_eq!((g.dx.rows, g.dx.cols), (x.rows, x.cols));
+            assert_eq!(g.dw1.len(), w.n_experts());
+            for e in 0..w.n_experts() {
+                assert_eq!((g.dw1[e].rows, g.dw1[e].cols), (w.w1[e].rows, w.w1[e].cols));
+                assert_eq!((g.dw2[e].rows, g.dw2[e].cols), (w.w2[e].rows, w.w2[e].cols));
+                assert!(g.dw1[e].data.iter().all(|v| v.is_finite()), "{recipe:?}");
+            }
+            assert!(g.dx.data.iter().all(|v| v.is_finite()), "{recipe:?}");
+            assert!(g.dx.frobenius() > 0.0, "{recipe:?}: dx is all zero");
+        }
+    }
+
+    #[test]
+    fn flow_backward_is_casting_free() {
+        let (x, w, dy) = setup(33);
+        let pw = PreparedWeights::new(w, Recipe::Fp8Flow);
+        let st = forward_stash(&x, &pw, 1, 16);
+        let g = moe_backward(&st, &pw, &dy);
+        assert_eq!(g.stats.requants, 0, "Fp8Flow must never requantize FP8 data");
+        assert_eq!(g.stats.casts, 1, "one Q(dy) entry cast per slot");
+    }
+
+    #[test]
+    fn blockwise_backward_requantizes() {
+        let (x, w, dy) = setup(34);
+        let e = w.n_experts();
+        let pw = PreparedWeights::new(w, Recipe::Blockwise);
+        let st = forward_stash(&x, &pw, 1, 16);
+        let g = moe_backward(&st, &pw, &dy);
+        assert_eq!(g.stats.casts, 3 * e, "Q(dy), Q(d_gate), Q(d_up) per expert");
+        assert_eq!(g.stats.requants, 5 * e, "five naive wgrad-operand transposes per expert");
+    }
+}

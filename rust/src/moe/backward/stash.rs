@@ -1,0 +1,297 @@
+//! The stashing forward: runs the MoE layer forward through the same
+//! stage APIs as [`crate::moe::layer::moe_forward`] — bit-identical `y`,
+//! cast and wire accounting — while keeping the per-slot intermediates the
+//! backward needs:
+//!
+//! * the dispatched input batch (the recipe's wire payload — FP8 codes for
+//!   Fp8Flow, dense rows otherwise);
+//! * the per-expert quantized fc1 input (`x_q`, Blockwise only — Fp8Flow's
+//!   dispatched payload already *is* the fc1 operand);
+//! * the fc1 outputs `gate`/`up` (the BF16 islands, needed by SwiGLU-bwd);
+//! * the fc2 input activation ([`ActStash`]): the FP8 codes+scales for the
+//!   quantizing recipes (what the fwd GEMM actually consumed — stashing
+//!   codes instead of f32 is the recipe's activation-memory saving), dense
+//!   f32 for Bf16.
+//!
+//! Per-expert math is call-for-call identical to the executing forward
+//! (`tests/prop_backward.rs::stash_forward_matches_moe_forward_bitwise`).
+
+use crate::exec::{self, Partition};
+use crate::fp8::tensor::{n_tiles, Fp8Tensor, TileLayout};
+use crate::fp8::tile::{quantize_rowwise, quantize_rowwise_with_threads};
+use crate::fp8::{Fp8Format, ScaleMode};
+use crate::moe::gemm::fp8_matmul_with_threads;
+use crate::moe::layer::{
+    combine, dispatch, DispatchSource, PreparedWeights, RankLocalBatch, Recipe, WirePayload,
+};
+use crate::moe::permute::permute_pad_plan;
+use crate::moe::router::{route, Routing};
+use crate::moe::swiglu::{swiglu_quant_with_threads, swiglu_with_threads};
+use crate::util::mat::Mat;
+
+/// The stashed fc2 input: exactly what the forward fc2 GEMM consumed.
+#[derive(Clone, Debug)]
+pub enum ActStash {
+    /// Quantized activation codes + per-tile scales (Fp8Flow: po2,
+    /// Blockwise: float).
+    Fp8(Fp8Tensor),
+    /// Dense f32 activation (Bf16 recipe).
+    Dense(Mat),
+}
+
+/// Everything the backward needs from one top-k slot of the forward.
+#[derive(Clone, Debug)]
+pub struct SlotStash {
+    /// The slot's permute+pad plan over the full expert range.
+    pub plan: Vec<i64>,
+    /// Dispatched input batch `[E·capacity, d]` (recipe wire payload).
+    pub batch: RankLocalBatch,
+    /// Blockwise only: the per-expert float-quantized fc1 input
+    /// `[E·capacity, d]` (the fwd `Q(x)` whose transpose feeds fc1 wgrad).
+    pub x_q: Option<Fp8Tensor>,
+    /// fc1 gate-projection output `[E·capacity, h]` (BF16 island #1).
+    pub gate: Mat,
+    /// fc1 up-projection output `[E·capacity, h]`.
+    pub up: Mat,
+    /// fc2 input `[E·capacity, h]` (see [`ActStash`]).
+    pub act: ActStash,
+}
+
+/// A completed stashing forward: output + accounting (bit-identical to
+/// [`crate::moe::layer::moe_forward`]) plus the per-slot backward stash.
+pub struct FwdStash {
+    pub routing: Routing,
+    pub capacity: usize,
+    pub slots: Vec<SlotStash>,
+    pub y: Mat,
+    pub aux_loss: f32,
+    pub dispatch_bytes: usize,
+    pub cast_ops: usize,
+}
+
+impl FwdStash {
+    pub fn top_k(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+/// Run the stashing forward with the layer's own routing.
+pub fn forward_stash(x: &Mat, w: &PreparedWeights, top_k: usize, capacity: usize) -> FwdStash {
+    let routing = route(x, &w.raw.router, top_k);
+    forward_stash_with_routing(x, w, &routing, capacity)
+}
+
+/// Run the stashing forward under an explicit (possibly frozen) routing —
+/// the gradcheck entry point: with routing held fixed the layer is a
+/// smooth function of `x` and the weights, so central differences are
+/// well-defined (the executed backward treats gates as constants; there is
+/// no router backward, matching the Fig. 2 graphs).
+pub fn forward_stash_with_routing(
+    x: &Mat,
+    w: &PreparedWeights,
+    routing: &Routing,
+    capacity: usize,
+) -> FwdStash {
+    let t = x.rows;
+    let e = w.raw.n_experts();
+    assert!(t >= 1, "forward_stash needs at least one token");
+    assert_eq!(routing.experts.len(), t, "routing/token count mismatch");
+    let top_k = routing.experts[0].len();
+    let threads = exec::threads();
+    let mut y = Mat::zeros(t, x.cols);
+    let mut dispatch_bytes = 0usize;
+    let mut cast_ops = 0usize;
+    let mut slots = Vec::with_capacity(top_k);
+
+    // fp8flow: ONE entry quantization (same call as moe_forward's)
+    let x_q = if w.recipe == Recipe::Fp8Flow {
+        cast_ops += 1;
+        Some(quantize_rowwise(x, Fp8Format::E4M3, ScaleMode::Po2))
+    } else {
+        None
+    };
+
+    for kk in 0..top_k {
+        let expert_of: Vec<usize> = routing.experts.iter().map(|ex| ex[kk]).collect();
+        let plan = permute_pad_plan(&expert_of, e, capacity);
+        let src = match &x_q {
+            Some(xq) => DispatchSource::Fp8(xq),
+            None => DispatchSource::Dense(x),
+        };
+        let batch = dispatch(src, &plan, 0..e, capacity, threads);
+        dispatch_bytes += batch.wire_bytes();
+        if w.recipe == Recipe::Blockwise {
+            cast_ops += 2 * e;
+        }
+
+        let (yk, inter) = expert_ffn_stash(&batch, w, threads);
+        let back = combine(&yk, &plan, 0..e, capacity, t, threads);
+        for tt in 0..t {
+            let g = routing.gates[tt][kk];
+            for j in 0..x.cols {
+                y.data[tt * x.cols + j] += g * back.data[tt * x.cols + j];
+            }
+        }
+        slots.push(SlotStash {
+            plan,
+            batch,
+            x_q: inter.x_q,
+            gate: inter.gate,
+            up: inter.up,
+            act: inter.act,
+        });
+    }
+    FwdStash {
+        routing: routing.clone(),
+        capacity,
+        slots,
+        y,
+        aux_loss: routing.aux_loss,
+        dispatch_bytes,
+        cast_ops,
+    }
+}
+
+/// Per-slot intermediates returned by the stashing expert stage.
+struct Inter {
+    x_q: Option<Fp8Tensor>,
+    gate: Mat,
+    up: Mat,
+    act: ActStash,
+}
+
+/// The expert-FFN stage with stashing: per-expert math identical (same
+/// kernel calls, same order) to [`crate::moe::layer::expert_ffn`], plus
+/// slab copies of the intermediates. Experts are the parallel axis.
+fn expert_ffn_stash(batch: &RankLocalBatch, w: &PreparedWeights, threads: usize) -> (Mat, Inter) {
+    let er = batch.experts.clone();
+    let el = er.len();
+    let cap = batch.capacity;
+    let p = Partition::even(el, exec::workers_for(threads, el));
+    match (&batch.payload, w.recipe) {
+        (WirePayload::Fp8(xg), Recipe::Fp8Flow) => {
+            let per: Vec<(Mat, Mat, Mat, Fp8Tensor)> = exec::map_parts(&p, |lx| {
+                let ge = er.start + lx;
+                let xe = xg.slice_rows(lx * cap, cap);
+                let gate = fp8_matmul_with_threads(&xe, &w.w1_t[ge], 1);
+                let up = fp8_matmul_with_threads(&xe, &w.w3_t[ge], 1);
+                let aq =
+                    swiglu_quant_with_threads(&gate, &up, Fp8Format::E4M3, ScaleMode::Po2, 1);
+                let ye = fp8_matmul_with_threads(&aq, &w.w2_t[ge], 1);
+                (ye, gate, up, aq)
+            });
+            let (yk, gate, up, aqs) = unzip_stash(per);
+            (yk, Inter { x_q: None, gate, up, act: ActStash::Fp8(concat_fp8_rows(aqs)) })
+        }
+        (WirePayload::Dense(xg), Recipe::Blockwise) => {
+            let per: Vec<((Mat, Mat, Mat, Fp8Tensor), Fp8Tensor)> = exec::map_parts(&p, |lx| {
+                let ge = er.start + lx;
+                let xe = mat_rows(xg, lx * cap, cap);
+                let xq = quantize_rowwise_with_threads(&xe, Fp8Format::E4M3, ScaleMode::Float, 1);
+                let gate = fp8_matmul_with_threads(&xq, &w.w1_t[ge], 1);
+                let up = fp8_matmul_with_threads(&xq, &w.w3_t[ge], 1);
+                let act = swiglu_with_threads(&gate, &up, 1);
+                let aq = quantize_rowwise_with_threads(&act, Fp8Format::E4M3, ScaleMode::Float, 1);
+                let ye = fp8_matmul_with_threads(&aq, &w.w2_t[ge], 1);
+                ((ye, gate, up, aq), xq)
+            });
+            let (main, xqs): (Vec<_>, Vec<_>) = per.into_iter().unzip();
+            let (yk, gate, up, aqs) = unzip_stash(main);
+            (
+                yk,
+                Inter {
+                    x_q: Some(concat_fp8_rows(xqs)),
+                    gate,
+                    up,
+                    act: ActStash::Fp8(concat_fp8_rows(aqs)),
+                },
+            )
+        }
+        (WirePayload::Dense(xg), Recipe::Bf16) => {
+            let per: Vec<(Mat, Mat, Mat, Mat)> = exec::map_parts(&p, |lx| {
+                let ge = er.start + lx;
+                let xe = mat_rows(xg, lx * cap, cap);
+                let gate = xe.matmul(&w.raw.w1[ge]);
+                let up = xe.matmul(&w.raw.w3[ge]);
+                let act = swiglu_with_threads(&gate, &up, 1);
+                let ye = act.matmul(&w.raw.w2[ge]);
+                (ye, gate, up, act)
+            });
+            let mut yks = Vec::with_capacity(el);
+            let mut gates = Vec::with_capacity(el);
+            let mut ups = Vec::with_capacity(el);
+            let mut acts = Vec::with_capacity(el);
+            for (ye, g, u, a) in per {
+                yks.push(ye);
+                gates.push(g);
+                ups.push(u);
+                acts.push(a);
+            }
+            (
+                concat_mat_rows(yks),
+                Inter {
+                    x_q: None,
+                    gate: concat_mat_rows(gates),
+                    up: concat_mat_rows(ups),
+                    act: ActStash::Dense(concat_mat_rows(acts)),
+                },
+            )
+        }
+        _ => panic!("recipe/wire mismatch in expert_ffn_stash: {:?}", w.recipe),
+    }
+}
+
+fn unzip_stash(per: Vec<(Mat, Mat, Mat, Fp8Tensor)>) -> (Mat, Mat, Mat, Vec<Fp8Tensor>) {
+    let mut yks = Vec::with_capacity(per.len());
+    let mut gates = Vec::with_capacity(per.len());
+    let mut ups = Vec::with_capacity(per.len());
+    let mut aqs = Vec::with_capacity(per.len());
+    for (ye, g, u, a) in per {
+        yks.push(ye);
+        gates.push(g);
+        ups.push(u);
+        aqs.push(a);
+    }
+    (concat_mat_rows(yks), concat_mat_rows(gates), concat_mat_rows(ups), aqs)
+}
+
+/// Copy `rows` rows of `m` starting at `start` into a new matrix.
+pub(crate) fn mat_rows(m: &Mat, start: usize, rows: usize) -> Mat {
+    Mat::from_vec(rows, m.cols, m.data[start * m.cols..(start + rows) * m.cols].to_vec())
+}
+
+/// Stack same-width matrices along the row axis.
+fn concat_mat_rows(parts: Vec<Mat>) -> Mat {
+    assert!(!parts.is_empty());
+    let cols = parts[0].cols;
+    let rows: usize = parts.iter().map(|p| p.rows).sum();
+    let mut data = Vec::with_capacity(rows * cols);
+    for p in parts {
+        assert_eq!(p.cols, cols);
+        data.extend_from_slice(&p.data);
+    }
+    Mat::from_vec(rows, cols, data)
+}
+
+/// Stack same-width row-wise FP8 tensors along the row axis (payload,
+/// scales and — when present — po2 exponents).
+fn concat_fp8_rows(parts: Vec<Fp8Tensor>) -> Fp8Tensor {
+    assert!(!parts.is_empty());
+    let first = &parts[0];
+    let (cols, fmt, mode) = (first.cols, first.fmt, first.mode);
+    let has_sexp = !first.sexp.is_empty();
+    let rows: usize = parts.iter().map(|p| p.rows).sum();
+    let tpr = n_tiles(cols);
+    let mut data = Vec::with_capacity(rows * cols);
+    let mut scales = Vec::with_capacity(rows * tpr);
+    let mut sexp = Vec::with_capacity(if has_sexp { rows * tpr } else { 0 });
+    for p in parts {
+        assert_eq!(p.layout, TileLayout::RowWise);
+        assert_eq!((p.cols, p.fmt, p.mode), (cols, fmt, mode));
+        assert_eq!(p.sexp.is_empty(), !has_sexp);
+        data.extend_from_slice(&p.data);
+        scales.extend_from_slice(&p.scales);
+        sexp.extend_from_slice(&p.sexp);
+    }
+    Fp8Tensor { rows, cols, fmt, mode, layout: TileLayout::RowWise, data, scales, sexp }
+}

@@ -90,14 +90,28 @@ impl MoeWeights {
     }
 }
 
-/// Per-recipe prepared weights: FP8 recipes store transposed-quantized
-/// expert weights (row-wise over the contraction dim — the GEMM layout).
+/// Per-recipe prepared weights. FP8 recipes store both GEMM layouts of
+/// each expert weight, quantized once from the f32 masters at
+/// construction time (weight prep, not a runtime cast):
+///
+/// * `w*_t` — **fprop/dgrad-operand** layout: the transposed weight,
+///   row-wise over the forward contraction dim (`fp8_matmul`'s B side);
+/// * `w*_d` — **dgrad-weight** layout: the untransposed weight, row-wise
+///   over the backward contraction dim (dgrad is `dY · Wᵀ`, so W itself
+///   is already the `[N, K]` operand `fp8_matmul` wants).
+///
+/// Both layouts are prepared eagerly: weight prep is a one-time cost off
+/// every timed path, and real training touches both directions each step.
+/// Forward-only callers pay ~2× the (small) prep quantization for it.
 pub struct PreparedWeights {
     pub recipe: Recipe,
     pub raw: MoeWeights,
     pub w1_t: Vec<Fp8Tensor>, // E × [h, d] codes (w1ᵀ)
     pub w3_t: Vec<Fp8Tensor>,
     pub w2_t: Vec<Fp8Tensor>, // E × [d, h] codes (w2ᵀ)
+    pub w1_d: Vec<Fp8Tensor>, // E × [d, h] codes (w1, dgrad layout)
+    pub w3_d: Vec<Fp8Tensor>,
+    pub w2_d: Vec<Fp8Tensor>, // E × [h, d] codes (w2, dgrad layout)
 }
 
 impl PreparedWeights {
@@ -111,12 +125,22 @@ impl PreparedWeights {
                 .map(|w| quantize_rowwise(&w.transpose(), Fp8Format::E4M3, mode))
                 .collect()
         };
-        let (w1_t, w3_t, w2_t) = if recipe == Recipe::Bf16 {
-            (Vec::new(), Vec::new(), Vec::new())
-        } else {
-            (quant_t(&raw.w1), quant_t(&raw.w3), quant_t(&raw.w2))
+        let quant_d = |ws: &[Mat]| -> Vec<Fp8Tensor> {
+            ws.iter().map(|w| quantize_rowwise(w, Fp8Format::E4M3, mode)).collect()
         };
-        PreparedWeights { recipe, raw, w1_t, w3_t, w2_t }
+        let (w1_t, w3_t, w2_t, w1_d, w3_d, w2_d) = if recipe == Recipe::Bf16 {
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new())
+        } else {
+            (
+                quant_t(&raw.w1),
+                quant_t(&raw.w3),
+                quant_t(&raw.w2),
+                quant_d(&raw.w1),
+                quant_d(&raw.w3),
+                quant_d(&raw.w2),
+            )
+        };
+        PreparedWeights { recipe, raw, w1_t, w3_t, w2_t, w1_d, w3_d, w2_d }
     }
 }
 
@@ -403,21 +427,7 @@ pub fn moe_forward(x: &Mat, w: &PreparedWeights, top_k: usize, capacity: usize) 
 
 /// View `rows` rows of an FP8 tensor starting at `start` (copy).
 fn slice_fp8(t: &Fp8Tensor, start: usize, rows: usize) -> Fp8Tensor {
-    let tpr = t.scales.len() / t.rows;
-    Fp8Tensor {
-        rows,
-        cols: t.cols,
-        fmt: t.fmt,
-        mode: t.mode,
-        layout: t.layout,
-        data: t.data[start * t.cols..(start + rows) * t.cols].to_vec(),
-        scales: t.scales[start * tpr..(start + rows) * tpr].to_vec(),
-        sexp: if t.sexp.is_empty() {
-            Vec::new()
-        } else {
-            t.sexp[start * tpr..(start + rows) * tpr].to_vec()
-        },
-    }
+    t.slice_rows(start, rows)
 }
 
 #[cfg(test)]

@@ -7,6 +7,7 @@
 //! the native hot path for the coordinator, and the measurable kernels
 //! behind the Fig. 1/3/4/5 benches.
 
+pub mod backward;
 pub mod gemm;
 pub mod layer;
 pub mod permute;

@@ -44,18 +44,190 @@ pub fn swiglu_with_threads(gate: &Mat, up: &Mat, threads: usize) -> Mat {
     out
 }
 
+/// One element of the SwiGLU backward — shared by the dense and the fused
+/// quantizing kernels so both compute bit-identical values (same op order).
+#[inline]
+fn swiglu_bwd_elem(g: f32, u: f32, dyv: f32) -> (f32, f32) {
+    let sig = 1.0 / (1.0 + (-g).exp());
+    let dsilu = sig * (1.0 + g * (1.0 - sig));
+    (dyv * u * dsilu, dyv * g * sig)
+}
+
 /// SwiGLU backward: `(d_gate, d_up)` given upstream `dy`.
 pub fn swiglu_bwd(gate: &Mat, up: &Mat, dy: &Mat) -> (Mat, Mat) {
+    swiglu_bwd_with_threads(gate, up, dy, exec::threads())
+}
+
+/// [`swiglu_bwd`] with an explicit worker count (elementwise ⇒ trivially
+/// bit-identical across worker counts).
+pub fn swiglu_bwd_with_threads(gate: &Mat, up: &Mat, dy: &Mat, threads: usize) -> (Mat, Mat) {
+    assert_eq!((gate.rows, gate.cols), (up.rows, up.cols));
+    assert_eq!((gate.rows, gate.cols), (dy.rows, dy.cols));
+    let cols = gate.cols;
     let mut dg = Mat::zeros(gate.rows, gate.cols);
     let mut du = Mat::zeros(gate.rows, gate.cols);
-    for i in 0..gate.data.len() {
-        let g = gate.data[i];
-        let sig = 1.0 / (1.0 + (-g).exp());
-        let dsilu = sig * (1.0 + g * (1.0 - sig));
-        dg.data[i] = dy.data[i] * up.data[i] * dsilu;
-        du.data[i] = dy.data[i] * g * sig;
-    }
+    let p = Partition::even(gate.rows, exec::workers_for(threads, gate.rows));
+    let tasks: Vec<_> = exec::split_parts(&p, cols, &mut dg.data)
+        .into_iter()
+        .zip(exec::split_parts(&p, cols, &mut du.data))
+        .zip(p.ranges())
+        .map(|((a, b), r)| (a, b, r))
+        .collect();
+    exec::run_tasks(tasks, |(dgc, duc, rows)| {
+        let base = rows.start * cols;
+        for k in 0..rows.len() * cols {
+            let (a, b) = swiglu_bwd_elem(gate.data[base + k], up.data[base + k], dy.data[base + k]);
+            dgc[k] = a;
+            duc[k] = b;
+        }
+    });
     (dg, du)
+}
+
+/// **Fused SwiGLU-backward + row-wise FP8 quantization** (the
+/// `FusedSwiGluBwdQuant` node of the Fp8Flow bwd graph): computes
+/// `(d_gate, d_up)` and quantizes both per 1×128 row tile in the same
+/// pass — the backward BF16 island ends inside the compute kernel, no
+/// standalone cast launch. Contract: bitwise-identical payloads/scales to
+/// `quantize_rowwise(swiglu_bwd(..))` applied to each output.
+pub fn swiglu_bwd_quant(
+    gate: &Mat,
+    up: &Mat,
+    dy: &Mat,
+    fmt: Fp8Format,
+    mode: ScaleMode,
+) -> (Fp8Tensor, Fp8Tensor) {
+    swiglu_bwd_quant_with_threads(gate, up, dy, fmt, mode, exec::threads())
+}
+
+/// [`swiglu_bwd_quant`] with an explicit worker count (1 = serial). Row
+/// tiles are independent, so the parallel payloads/scales are bit-identical
+/// to the serial kernel's (`tests/prop_parallel.rs`).
+pub fn swiglu_bwd_quant_with_threads(
+    gate: &Mat,
+    up: &Mat,
+    dy: &Mat,
+    fmt: Fp8Format,
+    mode: ScaleMode,
+    threads: usize,
+) -> (Fp8Tensor, Fp8Tensor) {
+    assert_eq!((gate.rows, gate.cols), (up.rows, up.cols));
+    assert_eq!((gate.rows, gate.cols), (dy.rows, dy.cols));
+    let (m, n) = (gate.rows, gate.cols);
+    let tpr = n_tiles(n);
+    let mut dg_data = vec![0u8; m * n];
+    let mut dg_scales = vec![0.0f32; m * tpr];
+    let mut dg_sexp = vec![0i32; m * tpr];
+    let mut du_data = vec![0u8; m * n];
+    let mut du_scales = vec![0.0f32; m * tpr];
+    let mut du_sexp = vec![0i32; m * tpr];
+    let p = Partition::even(m, exec::workers_for(threads, m));
+    if p.len() <= 1 {
+        swiglu_bwd_quant_rows(
+            gate, up, dy, fmt, mode, 0..m,
+            &mut dg_data, &mut dg_scales, &mut dg_sexp,
+            &mut du_data, &mut du_scales, &mut du_sexp,
+        );
+    } else {
+        let tasks: Vec<_> = exec::split_parts(&p, n, &mut dg_data)
+            .into_iter()
+            .zip(exec::split_parts(&p, tpr, &mut dg_scales))
+            .zip(exec::split_parts(&p, tpr, &mut dg_sexp))
+            .zip(exec::split_parts(&p, n, &mut du_data))
+            .zip(exec::split_parts(&p, tpr, &mut du_scales))
+            .zip(exec::split_parts(&p, tpr, &mut du_sexp))
+            .zip(p.ranges())
+            .map(|((((((a, b), c), d), e), f), r)| (a, b, c, d, e, f, r))
+            .collect();
+        exec::run_tasks(tasks, |(gd, gs, ge, ud, us, ue, r)| {
+            swiglu_bwd_quant_rows(gate, up, dy, fmt, mode, r, gd, gs, ge, ud, us, ue)
+        });
+    }
+    if mode == ScaleMode::Float {
+        dg_sexp.clear();
+        du_sexp.clear();
+    }
+    let mk = |data, scales, sexp| Fp8Tensor {
+        rows: m,
+        cols: n,
+        fmt,
+        mode,
+        layout: TileLayout::RowWise,
+        data,
+        scales,
+        sexp,
+    };
+    (mk(dg_data, dg_scales, dg_sexp), mk(du_data, du_scales, du_sexp))
+}
+
+/// Serial fused backward kernel over one contiguous row chunk.
+#[allow(clippy::too_many_arguments)]
+fn swiglu_bwd_quant_rows(
+    gate: &Mat,
+    up: &Mat,
+    dy: &Mat,
+    fmt: Fp8Format,
+    mode: ScaleMode,
+    rows: std::ops::Range<usize>,
+    dg_data: &mut [u8],
+    dg_scales: &mut [f32],
+    dg_sexp: &mut [i32],
+    du_data: &mut [u8],
+    du_scales: &mut [f32],
+    du_sexp: &mut [i32],
+) {
+    let n = gate.cols;
+    let tpr = n_tiles(n);
+    let mut gbuf = [0f32; TILE];
+    let mut ubuf = [0f32; TILE];
+    for i in rows.clone() {
+        let r = i - rows.start;
+        for t in 0..tpr {
+            let j0 = t * TILE;
+            let j1 = (j0 + TILE).min(n);
+            let w = j1 - j0;
+            // compute both gradient tiles once, in registers/L1
+            let mut gmax = 0f32;
+            let mut umax = 0f32;
+            for (bj, j) in (j0..j1).enumerate() {
+                let (a, b) =
+                    swiglu_bwd_elem(gate.data[i * n + j], up.data[i * n + j], dy.data[i * n + j]);
+                gbuf[bj] = a;
+                ubuf[bj] = b;
+                gmax = gmax.max(a.abs());
+                umax = umax.max(b.abs());
+            }
+            let (gs, gexp) = tile_scale(gmax, fmt, mode);
+            let (us, uexp) = tile_scale(umax, fmt, mode);
+            // same `v * (1/s)` scaling expression as `quantize_rowwise` —
+            // part of the bitwise contract with the unfused pair
+            let (ginv, uinv) = (1.0 / gs, 1.0 / us);
+            match fmt {
+                Fp8Format::E4M3 => {
+                    crate::fp8::e4m3::encode_scaled_slice(
+                        &gbuf[..w],
+                        ginv,
+                        &mut dg_data[r * n + j0..r * n + j1],
+                    );
+                    crate::fp8::e4m3::encode_scaled_slice(
+                        &ubuf[..w],
+                        uinv,
+                        &mut du_data[r * n + j0..r * n + j1],
+                    );
+                }
+                _ => {
+                    for bj in 0..w {
+                        dg_data[r * n + j0 + bj] = fmt.encode(gbuf[bj] * ginv);
+                        du_data[r * n + j0 + bj] = fmt.encode(ubuf[bj] * uinv);
+                    }
+                }
+            }
+            dg_scales[r * tpr + t] = gs;
+            dg_sexp[r * tpr + t] = gexp;
+            du_scales[r * tpr + t] = us;
+            du_sexp[r * tpr + t] = uexp;
+        }
+    }
 }
 
 /// **Fused SwiGLU + row-wise FP8 quantization** — single pass per row
@@ -242,6 +414,30 @@ mod tests {
                 du.data[idx]
             );
         }
+    }
+
+    #[test]
+    fn fused_bwd_quant_equals_unfused_bitwise() {
+        props("fused swiglu_bwd+quant == unfused", 24, |g| {
+            let m = g.usize_in(1, 96);
+            let n = g.usize_in(1, 300);
+            let mut rng = Rng::seed_from(g.seed ^ 0xB3D);
+            let gate = Mat::randn(m, n, 2.0, &mut rng);
+            let up = Mat::randn(m, n, 2.0, &mut rng);
+            let dy = Mat::randn(m, n, 1.0, &mut rng);
+            let (dg, du) = swiglu_bwd(&gate, &up, &dy);
+            for mode in [ScaleMode::Po2, ScaleMode::Float] {
+                let (fg, fu) = swiglu_bwd_quant(&gate, &up, &dy, Fp8Format::E4M3, mode);
+                let ug = crate::fp8::tile::quantize_rowwise(&dg, Fp8Format::E4M3, mode);
+                let uu = crate::fp8::tile::quantize_rowwise(&du, Fp8Format::E4M3, mode);
+                assert_eq!(fg.data, ug.data, "dgate payload ({mode:?})");
+                assert_eq!(fg.scales, ug.scales, "dgate scales ({mode:?})");
+                assert_eq!(fg.sexp, ug.sexp, "dgate sexp ({mode:?})");
+                assert_eq!(fu.data, uu.data, "dup payload ({mode:?})");
+                assert_eq!(fu.scales, uu.scales, "dup scales ({mode:?})");
+                assert_eq!(fu.sexp, uu.sexp, "dup sexp ({mode:?})");
+            }
+        });
     }
 
     #[test]

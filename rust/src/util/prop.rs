@@ -33,6 +33,56 @@ pub fn assert_mat_bits_eq(a: &Mat, b: &Mat, what: &str) {
     assert_bits_eq(&a.data, &b.data, what);
 }
 
+/// Central-difference gradient check: `analytic` must approximate
+/// `∂L/∂x` where `L(x) = Σ f(x) ⊙ dy` (the loss is accumulated in f64 to
+/// keep the difference quotient out of f32 cancellation noise).
+///
+/// For each probed index `i`, the symmetric quotient
+/// `(L(x + ε·eᵢ) − L(x − ε·eᵢ)) / 2ε` must match `analytic[i]` within
+/// `tol · (1 + |analytic[i]|)` — an absolute floor plus a relative term,
+/// so the same tolerance works across gradient magnitudes.
+///
+/// `f` maps the flat input to the flat output; probing a subset keeps the
+/// cost at two forward evaluations per probe.
+#[allow(clippy::too_many_arguments)]
+pub fn gradcheck(
+    what: &str,
+    f: impl Fn(&[f32]) -> Vec<f32>,
+    x: &[f32],
+    dy: &[f32],
+    analytic: &[f32],
+    eps: f32,
+    tol: f64,
+    probes: &[usize],
+) {
+    assert_eq!(x.len(), analytic.len(), "{what}: analytic gradient length");
+    let loss = |xs: &[f32]| -> f64 {
+        let y = f(xs);
+        assert_eq!(y.len(), dy.len(), "{what}: output length");
+        y.iter().zip(dy).map(|(&a, &b)| a as f64 * b as f64).sum()
+    };
+    for &i in probes {
+        assert!(i < x.len(), "{what}: probe {i} out of range");
+        let mut xp = x.to_vec();
+        xp[i] += eps;
+        let mut xm = x.to_vec();
+        xm[i] -= eps;
+        let fd = (loss(&xp) - loss(&xm)) / (2.0 * eps as f64);
+        let an = analytic[i] as f64;
+        assert!(
+            (fd - an).abs() <= tol * (1.0 + an.abs()),
+            "{what}: grad[{i}]: fd={fd} analytic={an} (eps={eps}, tol={tol})"
+        );
+    }
+}
+
+/// Deterministic spread of `count` probe indices over `0..n` (co-prime
+/// stride so probes hit many rows/columns, not just a prefix).
+pub fn probe_indices(n: usize, count: usize) -> Vec<usize> {
+    assert!(n > 0);
+    (0..count.min(n)).map(|k| (k * 7919 + 1) % n).collect()
+}
+
 /// Case-level generator handed to each property execution.
 pub struct Gen {
     pub rng: Rng,
@@ -124,6 +174,53 @@ mod tests {
         let msg = err.downcast_ref::<String>().unwrap();
         assert!(msg.contains("PROP_SEED="), "{msg}");
         assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn gradcheck_accepts_correct_gradient() {
+        // L = Σ (x²) ⊙ dy → ∂L/∂xᵢ = 2·xᵢ·dyᵢ
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 - 8.0) * 0.25).collect();
+        let dy: Vec<f32> = (0..16).map(|i| 1.0 + (i as f32) * 0.1).collect();
+        let analytic: Vec<f32> = x.iter().zip(&dy).map(|(&a, &b)| 2.0 * a * b).collect();
+        gradcheck(
+            "quadratic",
+            |xs| xs.iter().map(|&v| v * v).collect(),
+            &x,
+            &dy,
+            &analytic,
+            1e-3,
+            1e-2,
+            &probe_indices(16, 8),
+        );
+    }
+
+    #[test]
+    fn gradcheck_rejects_wrong_gradient() {
+        let x = vec![1.0f32; 4];
+        let dy = vec![1.0f32; 4];
+        let wrong = vec![5.0f32; 4]; // true gradient is 2.0
+        let r = std::panic::catch_unwind(|| {
+            gradcheck(
+                "bad",
+                |xs| xs.iter().map(|&v| v * v).collect(),
+                &x,
+                &dy,
+                &wrong,
+                1e-3,
+                1e-2,
+                &[0],
+            );
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn probe_indices_in_range_and_distinct_enough() {
+        let ps = probe_indices(100, 10);
+        assert_eq!(ps.len(), 10);
+        assert!(ps.iter().all(|&i| i < 100));
+        let set: std::collections::BTreeSet<usize> = ps.iter().copied().collect();
+        assert!(set.len() >= 9, "probes should mostly be distinct: {ps:?}");
     }
 
     #[test]

@@ -10,7 +10,8 @@
 //! reads only its own `capacity` rows, the UE8M0 sidecar reproduces po2
 //! scales exactly, and per-rank combine partials sum in plan order.
 
-use fp8_flow_moe::cluster::ep_exec::{ep_forward, EpConfig};
+use fp8_flow_moe::cluster::ep_exec::{ep_backward, ep_forward, EpConfig};
+use fp8_flow_moe::moe::backward::{forward_stash, moe_backward, MoeGrads};
 use fp8_flow_moe::moe::layer::{moe_forward, MoeWeights, PreparedWeights, Recipe};
 use fp8_flow_moe::util::mat::Mat;
 use fp8_flow_moe::util::prop::{assert_mat_bits_eq, props};
@@ -69,6 +70,72 @@ fn prop_ep_sharded_forward_bit_identical() {
             }
         }
     });
+}
+
+fn assert_grads_bits_eq(a: &MoeGrads, b: &MoeGrads, what: &str) {
+    assert_mat_bits_eq(&a.dx, &b.dx, &format!("{what}: dx"));
+    assert_eq!(a.dw1.len(), b.dw1.len(), "{what}: expert count");
+    for e in 0..a.dw1.len() {
+        assert_mat_bits_eq(&a.dw1[e], &b.dw1[e], &format!("{what}: dw1[{e}]"));
+        assert_mat_bits_eq(&a.dw3[e], &b.dw3[e], &format!("{what}: dw3[{e}]"));
+        assert_mat_bits_eq(&a.dw2[e], &b.dw2[e], &format!("{what}: dw2[{e}]"));
+    }
+    assert_eq!(a.stats, b.stats, "{what}: cast audit");
+}
+
+#[test]
+fn prop_ep_sharded_backward_bit_identical() {
+    // the reverse-direction analogue of the forward property: the
+    // EP-sharded backward (combine-bwd a2a in FP8 code space, per-rank
+    // dgrad/wgrad, dispatch-bwd reduce) must match the single-rank
+    // backward bit for bit — R ∈ {1,2,4}, all recipes, ragged loads
+    // including a zero-token expert (whose owning rank backprops through
+    // an all-padding slab)
+    props("ep sharded backward == single-rank", 8, |g| {
+        let (x, w, cap, top_k) = starved_setup(g);
+        let e = w.n_experts();
+        let mut rng = Rng::seed_from(g.seed ^ 0x8B3D);
+        let dy = Mat::randn(x.rows, x.cols, 1.0, &mut rng);
+        for recipe in [Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow] {
+            let pw = PreparedWeights::new(w.clone(), recipe);
+            let stash = forward_stash(&x, &pw, top_k, cap);
+            let reference = moe_backward(&stash, &pw, &dy);
+            for ranks in RANK_COUNTS {
+                let cfg = EpConfig { ranks, top_k, capacity: cap, threads: 0 };
+                let out = ep_backward(&stash, &pw, &dy, &cfg);
+                assert_grads_bits_eq(
+                    &out.grads,
+                    &reference,
+                    &format!("{recipe:?} R={ranks} E={e} cap={cap} top_k={top_k}"),
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn ep_backward_fixed_shape_exhaustive_thread_budgets() {
+    let mut rng = Rng::seed_from(17);
+    let (t, d, h, e, cap) = (48, 64, 48, 4, 16);
+    let x = Mat::randn(t, d, 0.5, &mut rng);
+    let w = MoeWeights::random(d, h, e, &mut rng);
+    let dy = Mat::randn(t, d, 1.0, &mut rng);
+    for recipe in [Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow] {
+        let pw = PreparedWeights::new(w.clone(), recipe);
+        let stash = forward_stash(&x, &pw, 2, cap);
+        let reference = moe_backward(&stash, &pw, &dy);
+        for ranks in RANK_COUNTS {
+            for threads in [1usize, 2, 8] {
+                let cfg = EpConfig { ranks, top_k: 2, capacity: cap, threads };
+                let out = ep_backward(&stash, &pw, &dy, &cfg);
+                assert_grads_bits_eq(
+                    &out.grads,
+                    &reference,
+                    &format!("{recipe:?} R={ranks} t={threads}"),
+                );
+            }
+        }
+    }
 }
 
 #[test]

@@ -3,7 +3,7 @@
 //! (`PROP_CASES` env scales case counts; failures print a replay seed).
 
 use fp8_flow_moe::fp8::tile::{quantize_rowwise, quantize_vec};
-use fp8_flow_moe::fp8::transpose::{direct_transpose, naive_transpose};
+use fp8_flow_moe::fp8::transpose::{direct_transpose, naive_transpose, unaware_transpose};
 use fp8_flow_moe::fp8::{e4m3, e5m2, Fp8Format, ScaleMode, TILE};
 use fp8_flow_moe::util::mat::Mat;
 use fp8_flow_moe::util::prop::props;
@@ -138,6 +138,71 @@ fn prop_double_transpose_identity_in_value_space() {
         let tt = direct_transpose(&direct_transpose(&q));
         let rel = tt.dequantize().rel_err(&q.dequantize());
         assert!(rel < 1e-3, "rel={rel}");
+    });
+}
+
+#[test]
+fn prop_wgrad_operand_double_quantization_ordering() {
+    // The backward's wgrad operands are transposed FP8 tensors; this locks
+    // in the error ordering of the three preparation strategies (the
+    // paper's Table 1 / Eq. 1 story, at the operand level):
+    //
+    //   direct (po2)        — bitwise scale-consistent: every element
+    //                         survives exactly, up to ≤ half a subnormal
+    //                         grid unit at the aligned scale;
+    //   naive (float)       — dequantize→transpose→requantize re-rounds
+    //                         onto an incommensurate grid (nonzero error);
+    //   unaware (po2)       — scale-ignoring byte transpose: strictly the
+    //                         largest max-ulp error.
+    props("wgrad operand DQE ordering", 12, |g| {
+        let m = g.usize_in(16, 200); // ≥ several rows per scale block so
+        let n = g.usize_in(64, 300); // intra-block scale variance exists
+        let mut rng = Rng::seed_from(g.seed ^ 0xD0E);
+        let x = Mat::rand_log_uniform(m, n, -6.0, 6.0, &mut rng);
+
+        // --- direct path: bitwise scale-consistent ---
+        let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        let dq = q.dequantize();
+        let dt = direct_transpose(&q);
+        let dtd = dt.dequantize();
+        let ut = unaware_transpose(&q);
+        let utd = ut.dequantize();
+        let mut direct_max_ulp = 0.0f64;
+        let mut unaware_max_ulp = 0.0f64;
+        let mut exact = 0usize;
+        for i in 0..m {
+            for j in 0..n {
+                let v = dq.at(i, j) as f64;
+                let unit_d = (e4m3::MIN_SUBNORMAL * dt.scale_at(j, i)) as f64;
+                direct_max_ulp = direct_max_ulp.max((v - dtd.at(j, i) as f64).abs() / unit_d);
+                if dq.at(i, j).to_bits() == dtd.at(j, i).to_bits() {
+                    exact += 1;
+                }
+                let unit_u = (e4m3::MIN_SUBNORMAL * ut.scale_at(j, i)) as f64;
+                unaware_max_ulp = unaware_max_ulp.max((v - utd.at(j, i) as f64).abs() / unit_u);
+            }
+        }
+        // direct: bounded subnormal underflow only, almost all bit-exact
+        assert!(direct_max_ulp <= 0.5 + 1e-9, "direct max ulp {direct_max_ulp}");
+        assert!(exact * 10 >= m * n * 9, "direct exact {exact}/{}", m * n);
+        // unaware: strictly larger max-ulp error (the Table 1 ordering)
+        assert!(
+            unaware_max_ulp > direct_max_ulp,
+            "unaware {unaware_max_ulp} must exceed direct {direct_max_ulp}"
+        );
+
+        // --- relative-Frobenius chain across the three strategies ---
+        let qf = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Float);
+        let ref_t = qf.dequantize().transpose();
+        let rel_naive_float = naive_transpose(&qf).dequantize().rel_err(&ref_t);
+        let rel_direct = dtd.rel_err(&dq.transpose());
+        let rel_unaware = utd.rel_err(&dq.transpose());
+        assert!(rel_naive_float > 1e-4, "float naive must show DQE: {rel_naive_float}");
+        assert!(rel_direct < rel_naive_float, "direct {rel_direct} vs naive {rel_naive_float}");
+        assert!(
+            rel_unaware > rel_naive_float,
+            "unaware {rel_unaware} must exceed float-naive {rel_naive_float}"
+        );
     });
 }
 

@@ -8,16 +8,22 @@
 //! must never change a single bit of payload, scale, or accumulator.
 
 use fp8_flow_moe::fp8::tile::{quantize_rowwise, quantize_rowwise_with_threads};
-use fp8_flow_moe::fp8::transpose::direct_transpose_with_threads;
+use fp8_flow_moe::fp8::transpose::{
+    direct_transpose_with_threads, grouped_direct_transpose,
+};
 use fp8_flow_moe::fp8::{Fp8Format, ScaleMode};
+use fp8_flow_moe::moe::backward::{forward_stash, moe_backward_with_threads};
 use fp8_flow_moe::moe::gemm::fp8_matmul_with_threads;
+use fp8_flow_moe::moe::layer::{MoeWeights, PreparedWeights, Recipe};
 use fp8_flow_moe::moe::permute::{
     permute_pad_fp8_with_threads, permute_pad_plan, permute_pad_with_threads,
     unpermute_unpad_with_threads,
 };
-use fp8_flow_moe::moe::swiglu::swiglu_quant_with_threads;
+use fp8_flow_moe::moe::swiglu::{
+    swiglu_bwd_quant_with_threads, swiglu_bwd_with_threads, swiglu_quant_with_threads,
+};
 use fp8_flow_moe::util::mat::Mat;
-use fp8_flow_moe::util::prop::{assert_bits_eq as assert_f32_bits_eq, props};
+use fp8_flow_moe::util::prop::{assert_bits_eq as assert_f32_bits_eq, assert_mat_bits_eq, props};
 use fp8_flow_moe::util::rng::Rng;
 
 const THREAD_COUNTS: [usize; 2] = [2, 8];
@@ -101,6 +107,107 @@ fn prop_quantize_rowwise_parallel_bit_exact() {
                     &format!("scales {mode:?} t={t} {m}x{n}"),
                 );
                 assert_eq!(par.sexp, serial.sexp, "sexp {mode:?} t={t}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_swiglu_bwd_parallel_bit_exact() {
+    props("swiglu_bwd parallel == serial", 24, |g| {
+        let m = g.usize_in(1, 260);
+        let n = g.usize_in(1, 300);
+        let mut rng = Rng::seed_from(g.seed ^ 0x5B3D);
+        let gate = Mat::randn(m, n, 2.0, &mut rng);
+        let up = Mat::randn(m, n, 2.0, &mut rng);
+        let dy = Mat::randn(m, n, 1.0, &mut rng);
+        let (sg, su) = swiglu_bwd_with_threads(&gate, &up, &dy, 1);
+        for t in THREAD_COUNTS {
+            let (pg, pu) = swiglu_bwd_with_threads(&gate, &up, &dy, t);
+            assert_f32_bits_eq(&pg.data, &sg.data, &format!("d_gate t={t} {m}x{n}"));
+            assert_f32_bits_eq(&pu.data, &su.data, &format!("d_up t={t} {m}x{n}"));
+        }
+    });
+}
+
+#[test]
+fn prop_swiglu_bwd_quant_parallel_bit_exact() {
+    props("swiglu_bwd_quant parallel == serial", 24, |g| {
+        let m = g.usize_in(1, 260);
+        let n = g.usize_in(1, 300);
+        let mut rng = Rng::seed_from(g.seed ^ 0xF5BD);
+        let gate = Mat::randn(m, n, 2.0, &mut rng);
+        let up = Mat::randn(m, n, 2.0, &mut rng);
+        let dy = Mat::randn(m, n, 1.0, &mut rng);
+        for mode in [ScaleMode::Po2, ScaleMode::Float] {
+            let (sg, su) =
+                swiglu_bwd_quant_with_threads(&gate, &up, &dy, Fp8Format::E4M3, mode, 1);
+            for t in THREAD_COUNTS {
+                let (pg, pu) =
+                    swiglu_bwd_quant_with_threads(&gate, &up, &dy, Fp8Format::E4M3, mode, t);
+                assert_eq!(pg.data, sg.data, "d_gate payload {mode:?} t={t}");
+                assert_f32_bits_eq(&pg.scales, &sg.scales, &format!("d_gate scales {mode:?} t={t}"));
+                assert_eq!(pg.sexp, sg.sexp, "d_gate sexp {mode:?} t={t}");
+                assert_eq!(pu.data, su.data, "d_up payload {mode:?} t={t}");
+                assert_f32_bits_eq(&pu.scales, &su.scales, &format!("d_up scales {mode:?} t={t}"));
+                assert_eq!(pu.sexp, su.sexp, "d_up sexp {mode:?} t={t}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_grouped_direct_transpose_parallel_bit_exact() {
+    props("grouped_direct_transpose parallel == serial", 24, |g| {
+        let groups = g.usize_in(1, 8);
+        let cap = g.usize_in(1, 64);
+        let n = g.usize_in(1, 300);
+        let mut rng = Rng::seed_from(g.seed ^ 0x6D17);
+        let x = Mat::rand_log_uniform(groups * cap, n, -5.0, 5.0, &mut rng);
+        let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+        let serial = grouped_direct_transpose(&q, groups, 1);
+        for t in THREAD_COUNTS {
+            let par = grouped_direct_transpose(&q, groups, t);
+            assert_eq!(par.len(), serial.len(), "t={t}");
+            for (e, (a, b)) in par.iter().zip(&serial).enumerate() {
+                assert_eq!(a.data, b.data, "payload g={e} t={t}");
+                assert_f32_bits_eq(&a.scales, &b.scales, &format!("scales g={e} t={t}"));
+                assert_eq!(a.sexp, b.sexp, "sexp g={e} t={t}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_moe_backward_parallel_bit_exact() {
+    // the full backward — combine-bwd, per-expert dgrad/wgrad (GEMMs +
+    // scaling-aware transposes), dispatch-bwd scatter — is bit-identical
+    // across worker counts for every recipe, ragged shapes included
+    props("moe_backward parallel == serial", 6, |g| {
+        let t = g.usize_in(3, 64);
+        let d = g.usize_in(8, 96);
+        let h = g.usize_in(8, 64);
+        let e = g.usize_in(1, 6);
+        let cap = g.usize_in(1, t);
+        let top_k = g.usize_in(1, e.min(2));
+        let mut rng = Rng::seed_from(g.seed ^ 0xBD2);
+        let x = Mat::randn(t, d, 0.5, &mut rng);
+        let w = MoeWeights::random(d, h, e, &mut rng);
+        let dy = Mat::randn(t, d, 1.0, &mut rng);
+        for recipe in [Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow] {
+            let pw = PreparedWeights::new(w.clone(), recipe);
+            let stash = forward_stash(&x, &pw, top_k, cap);
+            let serial = moe_backward_with_threads(&stash, &pw, &dy, 1);
+            for threads in THREAD_COUNTS {
+                let par = moe_backward_with_threads(&stash, &pw, &dy, threads);
+                let tag = format!("{recipe:?} t={threads} E={e} cap={cap}");
+                assert_mat_bits_eq(&par.dx, &serial.dx, &format!("{tag} dx"));
+                for ex in 0..e {
+                    assert_mat_bits_eq(&par.dw1[ex], &serial.dw1[ex], &format!("{tag} dw1[{ex}]"));
+                    assert_mat_bits_eq(&par.dw3[ex], &serial.dw3[ex], &format!("{tag} dw3[{ex}]"));
+                    assert_mat_bits_eq(&par.dw2[ex], &serial.dw2[ex], &format!("{tag} dw2[{ex}]"));
+                }
+                assert_eq!(par.stats, serial.stats, "{tag} audit");
             }
         }
     });

@@ -15,6 +15,12 @@ bench_output="$(cargo bench --bench perf_kernels 2>&1)"
 echo "running epshard (2 ranks, all recipes; per-stage JSON)..."
 epshard_output="$(cargo run --release -p fp8_flow_moe -- epshard --ranks 2 2>&1)"
 
+echo "running bwd bench (fwd/bwd wall-clock + bwd/fwd ratio)..."
+bwd_bench_output="$(cargo bench --bench bwd 2>&1)"
+
+echo "running bwd (2 ranks, all recipes; backward per-stage JSON)..."
+bwd_output="$(cargo run --release -p fp8_flow_moe -- bwd --ranks 2 2>&1)"
+
 {
     echo ""
     echo "### §Perf run: ${label} ($(date -u +%Y-%m-%dT%H:%M:%SZ))"
@@ -31,6 +37,22 @@ epshard_output="$(cargo run --release -p fp8_flow_moe -- epshard --ranks 2 2>&1)
     if [ -f rust/runs/epshard_r2.json ]; then
         echo ""
         echo "Per-stage JSON: \`rust/runs/epshard_r2.json\`"
+    fi
+    echo ""
+    echo "#### Executed backward (bench bwd: fwd/bwd wall-clock + ratio)"
+    echo ""
+    echo '```'
+    echo "${bwd_bench_output}" | grep -E '^(ROW|RATIO|threads:)'
+    echo '```'
+    echo ""
+    echo "#### Executed backward per-stage (bwd --ranks 2, cast audit)"
+    echo ""
+    echo '```'
+    echo "${bwd_output}" | grep -E '^(== bwd|ROW|    (casts|vs bf16)|bwd:|wrote)'
+    echo '```'
+    if [ -f rust/runs/bwd_r2.json ]; then
+        echo ""
+        echo "Backward per-stage JSON: \`rust/runs/bwd_r2.json\`"
     fi
 } >> "${out}"
 
