@@ -1,0 +1,56 @@
+//! **Native training step** — wall-clock of one full optimization step
+//! per recipe with the per-stage split (fwd / bwd / opt), and the
+//! step/fwd ratio that extends PR 3's bwd/fwd `RATIO` calibration lines
+//! to the whole training loop (the optimizer adds the master update +
+//! the masters→FP8 weight requantization on top of fwd+bwd).
+//!
+//! ```bash
+//! cargo bench --bench train_step [-- --cfg tiny|small --threads T --quick]
+//! ```
+
+use fp8_flow_moe::moe::layer::Recipe;
+use fp8_flow_moe::train::{Corpus, NativeTrainer, TrainConfig};
+use fp8_flow_moe::util::bench::{bencher_from_cli, print_table};
+
+fn main() {
+    let (b, args) = bencher_from_cli(0);
+    let cfg_name = args.get_or("cfg", if args.flag("quick") { "tiny" } else { "small" });
+    let cfg = TrainConfig::named(&cfg_name)
+        .unwrap_or_else(|| panic!("unknown --cfg {cfg_name:?} (want tiny|small)"));
+    let seed = args.u64_or("seed", 42);
+
+    println!(
+        "train_step/{cfg_name}: [{}, {}] tokens, top-{} over {} experts",
+        cfg.batch, cfg.seq, cfg.top_k, cfg.n_experts
+    );
+
+    for recipe in [Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow] {
+        let mut trainer = NativeTrainer::new(cfg, recipe, seed);
+        let mut corpus = Corpus::new(cfg.vocab, seed, 10);
+        let tokens = corpus.next_batch(cfg.batch, cfg.seq);
+        // warm the optimizer state so steady-state steps are measured
+        trainer.step_batch(&tokens);
+        let step = b.run(&format!("train_step/{recipe:?}"), || {
+            std::hint::black_box(trainer.step_batch(std::hint::black_box(&tokens)));
+        });
+        print_table(&format!("train step {recipe:?} ({cfg_name})"), &[step.clone()]);
+
+        // per-stage means over the measured steps (TrainMetrics timers)
+        let ms = &trainer.metrics[1..]; // skip the warmup step
+        let n = ms.len().max(1) as f64;
+        let (fwd, bwd, opt) = ms.iter().fold((0.0, 0.0, 0.0), |(f, w, o), m| {
+            (f + m.fwd_s, w + m.bwd_s, o + m.opt_s)
+        });
+        let (fwd, bwd, opt) = (fwd / n * 1e3, bwd / n * 1e3, opt / n * 1e3);
+        println!(
+            "ROW {recipe:?} fwd {fwd:>9.4} ms | bwd {bwd:>9.4} ms | opt {opt:>9.4} ms"
+        );
+        println!(
+            "RATIO {recipe:?} step/fwd: {:.2}x  (bwd/fwd {:.2}x, opt/fwd {:.2}x)",
+            (fwd + bwd + opt) / fwd,
+            bwd / fwd,
+            opt / fwd,
+        );
+        println!();
+    }
+}

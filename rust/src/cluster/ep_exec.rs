@@ -38,14 +38,15 @@ use crate::fp8::tensor::{n_tiles, Fp8Tensor, TileLayout};
 use crate::fp8::tile::quantize_rowwise_with_threads;
 use crate::fp8::{ue8m0, Fp8Format, ScaleMode};
 use crate::moe::backward::{
-    expert_ffn_bwd, mat_add_assign, scale_by_gates_with_threads, BwdStageTimes, BwdStats,
-    FwdStash, MoeGrads,
+    expert_ffn_bwd, mat_add_assign, router_backward_from_stash, scale_by_gates_with_threads,
+    BwdStageTimes, BwdStats, FwdStash, MoeGrads,
 };
 use crate::moe::layer::{
     combine, expert_ffn, PreparedWeights, RankLocalBatch, Recipe, WirePayload,
 };
 use crate::moe::permute::permute_pad_plan;
 use crate::moe::router::route;
+use crate::train::native::{NativeTrainer, TrainMetrics};
 use crate::util::json::Json;
 use crate::util::mat::Mat;
 
@@ -498,7 +499,7 @@ pub fn ep_backward(
     }
 
     EpBackward {
-        grads: MoeGrads { dx, dw1, dw3, dw2, stats, stages },
+        grads: MoeGrads { dx, dw1, dw3, dw2, d_router: None, stats, stages },
         ranks: r,
         rank_expert_s,
         dy_payload_bytes: dy_payload_b,
@@ -506,6 +507,51 @@ pub fn ep_backward(
         dy_buffers: dy_bufs,
         dx_bytes: dx_b,
     }
+}
+
+/// [`ep_backward`] plus the routing path: the gate/aux gradients are
+/// dense f32 and replicated (every rank computes the identical result in
+/// a real deployment; here they are computed once), so adding them after
+/// the sharded expert backward is bitwise the single-rank
+/// [`crate::moe::backward::moe_backward_with_router`].
+pub fn ep_backward_with_router(
+    stash: &FwdStash,
+    w: &PreparedWeights,
+    dy: &Mat,
+    cfg: &EpConfig,
+    aux_coef: f32,
+) -> EpBackward {
+    let mut out = ep_backward(stash, w, dy, cfg);
+    let rb = router_backward_from_stash(stash, w, dy, aux_coef);
+    mat_add_assign(&mut out.grads.dx, &rb.dx);
+    out.grads.d_router = Some(rb.d_router);
+    out
+}
+
+/// One **EP-sharded native training step**: the trainer's forward (whose
+/// stash is bitwise the sharded forward's, PR 2's invariance theorem),
+/// then per-rank backward → gradient reduce across the
+/// [`crate::cluster::rank::RankGroup`] ([`ep_backward_with_router`]: the
+/// dispatch-bwd serving-rank reduce for dX, the shard union for the
+/// expert weight grads, the replicated dense router path), then the
+/// **replicated optimizer step** — deterministic f32 over identical
+/// reduced gradients, so executing it once stands in for R identical
+/// executions — ending in the masters→FP8 weight requantization.
+///
+/// Bit-identical to [`NativeTrainer::step_batch`] at `ranks = 1` for any
+/// rank count (`tests/prop_train.rs`): the two paths share the step core
+/// and differ only in the MoE backward closure, whose EP invariance PR 3
+/// already proves.
+pub fn ep_train_step(tr: &mut NativeTrainer, tokens: &[i32]) -> TrainMetrics {
+    let cfg = EpConfig {
+        ranks: tr.cfg.ranks,
+        top_k: tr.cfg.top_k,
+        capacity: tr.cfg.capacity,
+        threads: tr.cfg.threads,
+    };
+    tr.step_with_backward(tokens, move |stash, w, dy, aux_coef| {
+        ep_backward_with_router(stash, w, dy, &cfg, aux_coef).grads
+    })
 }
 
 /// Serving rank per token for one slot's plan (`usize::MAX` = dropped by

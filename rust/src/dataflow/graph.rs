@@ -13,7 +13,9 @@ pub enum Dtype {
     F32,
 }
 
-/// Pipeline stage of the MoE layer (§3.2 decomposition).
+/// Pipeline stage of the MoE layer (§3.2 decomposition), plus the
+/// per-step optimizer tail of the training loop (master update + weight
+/// requantization — `dataflow::variants::build_train_step`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Stage {
     Router,
@@ -24,6 +26,7 @@ pub enum Stage {
     Fc2,
     Unperm,
     Combine,
+    Optimizer,
 }
 
 /// Operator kinds. `Quantize`/`Dequantize`/`Cast` are the *explicit* cast
@@ -53,6 +56,9 @@ pub enum OpKind {
     DirectTranspose,
     Scale,
     Add,
+    /// f32 optimizer math over the master weights (AdamW / SGD-momentum) —
+    /// stays in master precision, never a cast.
+    MasterUpdate,
 }
 
 impl OpKind {
@@ -126,9 +132,13 @@ impl DataflowGraph {
         self.nodes.iter().filter(|n| n.op.is_explicit_cast()).count()
     }
 
-    /// Explicit casts on the forward path only.
+    /// Explicit casts on the forward layer path only (the optimizer tail
+    /// is accounted separately — [`Self::explicit_casts_opt`]).
     pub fn explicit_casts_fwd(&self) -> usize {
-        self.nodes.iter().filter(|n| !n.backward && n.op.is_explicit_cast()).count()
+        self.nodes
+            .iter()
+            .filter(|n| !n.backward && n.stage != Stage::Optimizer && n.op.is_explicit_cast())
+            .count()
     }
 
     /// Explicit casts on the backward path only — what the executed
@@ -136,6 +146,27 @@ impl DataflowGraph {
     /// against.
     pub fn explicit_casts_bwd(&self) -> usize {
         self.nodes.iter().filter(|n| n.backward && n.op.is_explicit_cast()).count()
+    }
+
+    /// Explicit casts in the optimizer tail: the per-step weight
+    /// quantizations from the f32 masters (weight prep, counted apart
+    /// from the Fig. 2 activation-path numbers).
+    pub fn explicit_casts_opt(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| n.stage == Stage::Optimizer && n.op.is_explicit_cast())
+            .count()
+    }
+
+    /// Optimizer-tail nodes that requantize already-FP8 data (deriving a
+    /// second weight layout from the first instead of from the master) —
+    /// zero for the Fp8Flow train step by construction, the audit behind
+    /// `PreparedWeights::requantize_from_masters`.
+    pub fn requant_nodes_opt(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| n.stage == Stage::Optimizer && n.op == OpKind::NaiveTransposeRequant)
+            .count()
     }
 
     /// Backward nodes that requantize already-FP8 data (the naive wgrad
@@ -281,5 +312,20 @@ mod tests {
         let mut g = DataflowGraph::new("incomplete");
         g.add("input", OpKind::Add, Stage::Router, false, Dtype::Bf16, &[]);
         assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn optimizer_stage_accounted_separately() {
+        let mut g = DataflowGraph::new("opt");
+        let x = g.add("input", OpKind::Add, Stage::Router, false, Dtype::Bf16, &[]);
+        let q = g.add("Q(x)", OpKind::Quantize, Stage::Dispatch, false, Dtype::Fp8, &[x]);
+        let u = g.add("update", OpKind::MasterUpdate, Stage::Optimizer, false, Dtype::F32, &[q]);
+        g.add("Q(w)", OpKind::Quantize, Stage::Optimizer, false, Dtype::Fp8, &[u]);
+        g.add("w naive-T", OpKind::NaiveTransposeRequant, Stage::Optimizer, false, Dtype::Fp8, &[u]);
+        // the layer-path fwd count must not absorb the optimizer tail
+        assert_eq!(g.explicit_casts_fwd(), 1);
+        assert_eq!(g.explicit_casts_opt(), 1);
+        assert_eq!(g.requant_nodes_opt(), 1);
+        assert_eq!(g.requant_nodes_bwd(), 0);
     }
 }

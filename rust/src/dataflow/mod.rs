@@ -12,4 +12,4 @@ pub mod graph;
 pub mod variants;
 
 pub use graph::{DataflowGraph, Dtype, OpKind, Stage};
-pub use variants::{build, Variant};
+pub use variants::{build, build_train_step, Variant};

@@ -39,6 +39,11 @@ impl Variant {
 }
 
 /// Build the fwd+bwd dataflow graph of one MoE layer for `v`.
+///
+/// These graphs model the **expert path** (what Fig. 2 draws); the router
+/// runs dense f32 in every variant, so the executed router backward
+/// (`moe::router::route_backward`) adds no nodes here. The training
+/// step's optimizer tail is appended by [`build_train_step`].
 pub fn build(v: Variant) -> DataflowGraph {
     match v {
         Variant::Bf16 => build_bf16(),
@@ -46,6 +51,42 @@ pub fn build(v: Variant) -> DataflowGraph {
         Variant::DeepSeekV3 => build_deepseek(),
         Variant::Fp8Flow => build_fp8flow(),
     }
+}
+
+/// The full training-step graph: the layer fwd+bwd of [`build`] plus the
+/// per-step optimizer tail — f32 master update, then the weight cast
+/// back to FP8 layouts:
+///
+/// * **Fp8Flow** (and the executed substrate for every recipe,
+///   `PreparedWeights::requantize_from_masters`): each GEMM layout is ONE
+///   quantization straight from the updated f32 master — fprop/dgrad
+///   layouts are siblings of the same F32 node, so the step adds **zero**
+///   requant nodes;
+/// * **TeBlockwise / DeepSeekV3** (the incumbent foil): FP8 weights are
+///   stored once and the second layout is derived by
+///   dequantize→transpose→requantize — a per-step double-quantization
+///   site on the *weights*, mirroring the wgrad-operand naive transposes
+///   of the backward;
+/// * **Bf16**: the master update only (weights never leave f32).
+pub fn build_train_step(v: Variant) -> DataflowGraph {
+    use Dtype::*;
+    use OpKind::*;
+    use Stage::Optimizer;
+    let mut g = build(v);
+    let din = g.add("dw-master-input", Add, Optimizer, false, F32, &[]);
+    let upd = g.add("master-update", MasterUpdate, Optimizer, false, F32, &[din]);
+    match v {
+        Variant::Bf16 => {}
+        Variant::Fp8Flow => {
+            g.add("Q(w) fprop-layout", Quantize, Optimizer, false, Fp8, &[upd]);
+            g.add("Q(w) dgrad-layout", Quantize, Optimizer, false, Fp8, &[upd]);
+        }
+        Variant::TeBlockwise | Variant::DeepSeekV3 => {
+            let q = g.add("Q(w) fprop-layout", Quantize, Optimizer, false, Fp8, &[upd]);
+            g.add("w naive-T dgrad-layout", NaiveTransposeRequant, Optimizer, false, Fp8, &[q]);
+        }
+    }
+    g
 }
 
 fn build_bf16() -> DataflowGraph {
@@ -314,6 +355,28 @@ mod tests {
         assert!(!build(Variant::TeBlockwise).casting_free_expert_ffn());
         assert!(!build(Variant::DeepSeekV3).casting_free_expert_ffn());
         assert!(build(Variant::Fp8Flow).casting_free_expert_ffn());
+    }
+
+    #[test]
+    fn train_step_optimizer_tail_audit() {
+        // The Fig. 2 headline is untouched by the optimizer tail, and the
+        // weight requantization adds zero requant nodes for Fp8Flow while
+        // the incumbent layout derivation pays one per step.
+        for v in Variant::all() {
+            let layer = build(v);
+            let step = build_train_step(v);
+            assert_eq!(step.explicit_casts_fwd(), layer.explicit_casts_fwd(), "{}", v.name());
+            assert_eq!(step.explicit_casts_bwd(), layer.explicit_casts_bwd(), "{}", v.name());
+            step.validate().unwrap_or_else(|e| panic!("{}: {e}", v.name()));
+        }
+        let flow = build_train_step(Variant::Fp8Flow);
+        assert_eq!(flow.explicit_casts_fwd() + flow.explicit_casts_bwd(), 2);
+        assert_eq!(flow.requant_nodes_opt(), 0);
+        assert_eq!(flow.explicit_casts_opt(), 2); // one Q per layout, both master-sourced
+        assert_eq!(build_train_step(Variant::Bf16).explicit_casts_opt(), 0);
+        for v in [Variant::TeBlockwise, Variant::DeepSeekV3] {
+            assert_eq!(build_train_step(v).requant_nodes_opt(), 1, "{}", v.name());
+        }
     }
 
     #[test]

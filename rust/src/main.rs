@@ -3,8 +3,9 @@
 //! Subcommands map one-to-one onto the paper's experiments:
 //!
 //! ```text
-//! fp8-flow-moe train --cfg tiny|small --recipe bf16|blockwise|fp8flow
-//!                    [--steps N] [--seed S] [--log-every K]   # Fig. 6
+//! fp8-flow-moe train [--cfg tiny|small] [--recipe all|bf16|blockwise|fp8flow]
+//!                    [--steps N] [--ranks R] [--seed S]       # Fig. 6, native
+//! fp8-flow-moe train --aot --cfg tiny --recipe fp8flow        # AOT-artifact path
 //! fp8-flow-moe table1|table2|table3                           # Tables 1–3
 //! fp8-flow-moe epshard [--ranks R] [--recipe ...] [--tokens N]  # executed EP
 //! fp8-flow-moe bwd [--ranks R] [--recipe ...] [--tokens N]    # executed backward
@@ -16,7 +17,7 @@
 //! Unknown or missing subcommands print usage to **stderr** and exit
 //! nonzero; `--help` / `-h` / `help` print it to stdout and exit 0.
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{bail, ensure, Context, Result};
 use fp8_flow_moe::cluster::ep_exec::{ep_backward, ep_forward, EpConfig, EpShape};
 use fp8_flow_moe::cluster::sim::ep_measured_vs_modeled;
 use fp8_flow_moe::coordinator::{reports, write_run_json};
@@ -27,7 +28,7 @@ use fp8_flow_moe::fp8::{Fp8Format, ScaleMode};
 use fp8_flow_moe::moe::backward::{forward_stash, moe_backward, FwdStash, MoeGrads};
 use fp8_flow_moe::moe::layer::{MoeWeights, PreparedWeights, Recipe};
 use fp8_flow_moe::runtime::Runtime;
-use fp8_flow_moe::train::{Corpus, Trainer};
+use fp8_flow_moe::train::{AotTrainer, Corpus, NativeTrainer, TrainConfig, TrainDriver, TrainOutcome};
 use fp8_flow_moe::util::cli::Args;
 use fp8_flow_moe::util::json::Json;
 use fp8_flow_moe::util::mat::Mat;
@@ -37,8 +38,11 @@ const USAGE: &str = "\
 fp8-flow-moe — FP8-Flow-MoE reproduction (see README.md)
 
 USAGE:
-  fp8-flow-moe train --cfg <tiny|small> --recipe <bf16|blockwise|fp8flow>
-                     [--steps N] [--seed S] [--noise PCT] [--log-every K]
+  fp8-flow-moe train [--cfg <tiny|small>] [--recipe <all|bf16|blockwise|fp8flow>]
+                     [--steps N] [--ranks R] [--seed S] [--noise PCT]
+                     [--log-every K] [--lr X] [--aot]
+                     (native Fig. 6 convergence run; --aot drives the
+                      AOT-artifact executable instead)
   fp8-flow-moe table1 | table2 | table3
   fp8-flow-moe epshard [--ranks R] [--recipe <all|bf16|blockwise|fp8flow>]
                        [--tokens N] [--experts E] [--top-k K] [--capacity C]
@@ -109,7 +113,84 @@ fn main() -> Result<()> {
     }
 }
 
+/// The native Fig. 6 convergence run (default), or the AOT-artifact path
+/// with `--aot`.
 fn cmd_train(args: &Args) -> Result<()> {
+    if args.flag("aot") {
+        return cmd_train_aot(args);
+    }
+    let cfg_name = args.get_or("cfg", "tiny");
+    let Some(mut cfg) = TrainConfig::named(&cfg_name) else {
+        bail!("unknown --cfg {cfg_name:?} (want tiny|small)");
+    };
+    cfg.ranks = args.usize_or("ranks", 1);
+    cfg.opt.lr = args.f64_or("lr", cfg.opt.lr as f64) as f32;
+    ensure!(cfg.ranks >= 1 && cfg.ranks <= cfg.n_experts, "--ranks must be in 1..=E");
+    let steps = args.usize_or("steps", 200);
+    ensure!(steps >= 1, "--steps must be at least 1");
+    let seed = args.u64_or("seed", 42);
+    let noise = args.usize_or("noise", 10);
+    let log_every = args.usize_or("log-every", 20);
+    let recipes = match args.get_or("recipe", "all").as_str() {
+        "all" => vec![Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow],
+        other => match Recipe::parse(other) {
+            Some(r) => vec![r],
+            None => bail!("unknown recipe {other:?} (want all|bf16|blockwise|fp8flow)"),
+        },
+    };
+    println!(
+        "native train/{cfg_name}: {steps} steps of [{}, {}] tokens, top-{} over {} experts, \
+         {} rank(s), {} workers",
+        cfg.batch,
+        cfg.seq,
+        cfg.top_k,
+        cfg.n_experts,
+        cfg.ranks,
+        exec::threads()
+    );
+
+    let mut outcomes: Vec<(Recipe, TrainOutcome)> = Vec::new();
+    for recipe in recipes {
+        // identical init seed + identical corpus stream per recipe
+        let mut trainer = NativeTrainer::new(cfg, recipe, seed);
+        let mut corpus = Corpus::new(cfg.vocab, seed, noise);
+        let out = trainer.run(&mut corpus, steps, log_every)?;
+        let m = trainer.metrics.last().unwrap();
+        println!(
+            "[{}] first {:.4} → tail-mean {:.4}  ({:.0} tokens/s; per step: \
+             casts {}+{}, bwd requants {}, opt requants {})",
+            out.recipe,
+            out.losses[0],
+            out.tail_mean(10),
+            out.tokens_per_s,
+            m.casts_fwd,
+            m.casts_bwd,
+            m.requants_bwd,
+            m.opt_requants,
+        );
+        let path =
+            write_run_json(&format!("train_{}", out.recipe), &trainer.report_json(&out))?;
+        println!("wrote {path:?}\n");
+        outcomes.push((recipe, out));
+    }
+
+    // Fig. 6 parity summary when the oracle and at least one FP8 recipe ran
+    if let Some((_, bf16)) = outcomes.iter().find(|(r, _)| *r == Recipe::Bf16) {
+        println!("== Fig. 6 convergence summary (tail-mean over the last 10 steps) ==");
+        for (_, out) in &outcomes {
+            println!(
+                "{:>10}: final {:.4}  gap vs bf16 {:+.4}",
+                out.recipe,
+                out.tail_mean(10),
+                out.tail_mean(10) - bf16.tail_mean(10)
+            );
+        }
+    }
+    Ok(())
+}
+
+/// The AOT path: loop in Rust, compute in `train_step_<recipe>_<cfg>`.
+fn cmd_train_aot(args: &Args) -> Result<()> {
     let cfg = args.get_or("cfg", "tiny");
     let recipe = args.get_or("recipe", "fp8flow");
     let steps = args.usize_or("steps", 50);
@@ -117,10 +198,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     let noise = args.usize_or("noise", 10);
     let log_every = args.usize_or("log-every", 10);
 
-    let rt = Runtime::open(Runtime::default_dir())?;
-    let mut trainer = Trainer::new(&rt, &cfg, &recipe, seed as u32)?;
+    let rt = Runtime::open(Runtime::default_dir()).context(
+        "AOT artifacts unavailable — run `make artifacts`, or drop --aot to use the \
+         native trainer (train/native/), which needs none",
+    )?;
+    let mut trainer = AotTrainer::new(&rt, &cfg, &recipe, seed as u32)?;
     let (b, s) = trainer.batch_shape();
-    println!("training {recipe}/{cfg}: {steps} steps of [{b}, {s}] tokens");
+    println!("training {recipe}/{cfg} (AOT): {steps} steps of [{b}, {s}] tokens");
     let vocab = if cfg == "tiny" { 64 } else { 256 };
     let mut corpus = Corpus::new(vocab, seed, noise);
     let out = trainer.run(&mut corpus, steps, log_every)?;

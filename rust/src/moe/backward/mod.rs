@@ -17,9 +17,14 @@
 //! versa — so every bit-identity property the forward stages carry
 //! (thread invariance, expert-range shardability) transfers for free.
 //!
-//! Scope: gradients w.r.t. the layer input and the expert weights. Gates
-//! and routing are treated as constants (no router backward), matching the
-//! paper's Fig. 2 graphs, which model the expert path only.
+//! Scope: [`moe_backward`] produces gradients w.r.t. the layer input and
+//! the expert weights with gates held constant (the Fig. 2 surrogate —
+//! the graphs model the expert path only); [`moe_backward_with_router`]
+//! removes that restriction, adding the softmax top-k gate gradient and
+//! the aux-loss gradient ([`crate::moe::router::route_backward`]) so the
+//! native trainer ([`crate::train::native`]) can learn the routing. The
+//! router runs in f32 on every recipe, so the router path adds **zero**
+//! casts and zero requantizations to the audit below.
 //!
 //! The executed cast audit ([`BwdStats`]) is the module's acceptance
 //! contract: the Fp8Flow backward performs **zero** re-quantizations of
@@ -41,7 +46,7 @@ use crate::fp8::{Fp8Format, ScaleMode};
 use crate::moe::layer::{
     combine, dispatch, DispatchSource, PreparedWeights, RankLocalBatch, Recipe,
 };
-use crate::moe::router::Routing;
+use crate::moe::router::{route_backward, RouterBwd, Routing};
 use crate::util::mat::Mat;
 
 /// Executed cast accounting for one backward pass — the measured side of
@@ -79,13 +84,17 @@ impl BwdStageTimes {
     }
 }
 
-/// Gradients of one MoE layer (gates/routing held constant).
+/// Gradients of one MoE layer. `d_router` is `None` on the frozen-gates
+/// path ([`moe_backward`]) and populated by [`moe_backward_with_router`],
+/// whose `dx` then also carries the routing contribution.
 pub struct MoeGrads {
     /// `[tokens, d]` input gradient.
     pub dx: Mat,
     pub dw1: Vec<Mat>, // E × [d, h]
     pub dw3: Vec<Mat>, // E × [d, h]
     pub dw2: Vec<Mat>, // E × [h, d]
+    /// `[d, E]` router weight gradient (router-aware path only).
+    pub d_router: Option<Mat>,
     pub stats: BwdStats,
     pub stages: BwdStageTimes,
 }
@@ -207,7 +216,61 @@ pub fn moe_backward_with_threads(
         }
         stages.dispatch_bwd_s += td.elapsed().as_secs_f64();
     }
-    MoeGrads { dx, dw1, dw3, dw2, stats, stages }
+    MoeGrads { dx, dw1, dw3, dw2, d_router: None, stats, stages }
+}
+
+/// The routing-path backward from a stashed forward: assemble the
+/// per-slot gate gradients `∂L/∂g_{t,k} = ⟨dy_t, back_k[t]⟩` and chain
+/// them (plus the aux loss, coefficient `aux_coef`) through the softmax
+/// top-k router. Dense f32, serial and deterministic — identical on the
+/// single-rank and EP-sharded paths, which is what keeps the EP training
+/// step bitwise equal to single-rank.
+pub fn router_backward_from_stash(
+    stash: &FwdStash,
+    w: &PreparedWeights,
+    dy: &Mat,
+    aux_coef: f32,
+) -> RouterBwd {
+    let t = dy.rows;
+    let k = stash.top_k();
+    let mut d_gates = vec![vec![0f32; k]; t];
+    for (kk, slot) in stash.slots.iter().enumerate() {
+        for (tt, dg) in d_gates.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for j in 0..dy.cols {
+                acc += dy.data[tt * dy.cols + j] * slot.back.data[tt * dy.cols + j];
+            }
+            dg[kk] = acc;
+        }
+    }
+    route_backward(&stash.x, &w.raw.router, &stash.routing, &d_gates, aux_coef)
+}
+
+/// [`moe_backward`] plus the routing path: the full layer backward the
+/// native training loop consumes. `dx` includes the router contribution;
+/// `d_router` is populated.
+pub fn moe_backward_with_router(
+    stash: &FwdStash,
+    w: &PreparedWeights,
+    dy: &Mat,
+    aux_coef: f32,
+) -> MoeGrads {
+    moe_backward_with_router_threads(stash, w, dy, aux_coef, exec::threads())
+}
+
+/// [`moe_backward_with_router`] with an explicit worker count.
+pub fn moe_backward_with_router_threads(
+    stash: &FwdStash,
+    w: &PreparedWeights,
+    dy: &Mat,
+    aux_coef: f32,
+    threads: usize,
+) -> MoeGrads {
+    let mut g = moe_backward_with_threads(stash, w, dy, threads);
+    let rb = router_backward_from_stash(stash, w, dy, aux_coef);
+    mat_add_assign(&mut g.dx, &rb.dx);
+    g.d_router = Some(rb.d_router);
+    g
 }
 
 /// `a += b` elementwise (slot-order accumulation of weight gradients —

@@ -11,7 +11,10 @@
 //! * the fc2 input activation ([`ActStash`]): the FP8 codes+scales for the
 //!   quantizing recipes (what the fwd GEMM actually consumed — stashing
 //!   codes instead of f32 is the recipe's activation-memory saving), dense
-//!   f32 for Bf16.
+//!   f32 for Bf16;
+//! * the layer input `x` and each slot's pre-gate combined output `back`
+//!   — the two tensors the router backward reads (`∂L/∂g = ⟨dy, back⟩`,
+//!   probabilities re-derived from `x`).
 //!
 //! Per-expert math is call-for-call identical to the executing forward
 //! (`tests/prop_backward.rs::stash_forward_matches_moe_forward_bitwise`).
@@ -55,6 +58,10 @@ pub struct SlotStash {
     pub up: Mat,
     /// fc2 input `[E·capacity, h]` (see [`ActStash`]).
     pub act: ActStash,
+    /// Combined pre-gate slot output `[tokens, d]` (the `back` the forward
+    /// scales by `g_k` before accumulating) — what the router backward
+    /// needs: `∂L/∂g_{t,k} = ⟨dy_t, back[t]⟩`.
+    pub back: Mat,
 }
 
 /// A completed stashing forward: output + accounting (bit-identical to
@@ -63,6 +70,9 @@ pub struct FwdStash {
     pub routing: Routing,
     pub capacity: usize,
     pub slots: Vec<SlotStash>,
+    /// The undisturbed layer input `[tokens, d]` — the router backward
+    /// re-derives the softmax probabilities from it.
+    pub x: Mat,
     pub y: Mat,
     pub aux_loss: f32,
     pub dispatch_bytes: usize,
@@ -84,8 +94,10 @@ pub fn forward_stash(x: &Mat, w: &PreparedWeights, top_k: usize, capacity: usize
 /// Run the stashing forward under an explicit (possibly frozen) routing —
 /// the gradcheck entry point: with routing held fixed the layer is a
 /// smooth function of `x` and the weights, so central differences are
-/// well-defined (the executed backward treats gates as constants; there is
-/// no router backward, matching the Fig. 2 graphs).
+/// well-defined. [`crate::moe::backward::moe_backward`] matches this
+/// frozen-gates surrogate; the full-path gradchecks instead freeze only
+/// the *selection* ([`crate::moe::router::route_with_selection`]) and pair
+/// with [`crate::moe::backward::moe_backward_with_router`].
 pub fn forward_stash_with_routing(
     x: &Mat,
     w: &PreparedWeights,
@@ -139,12 +151,14 @@ pub fn forward_stash_with_routing(
             gate: inter.gate,
             up: inter.up,
             act: inter.act,
+            back,
         });
     }
     FwdStash {
         routing: routing.clone(),
         capacity,
         slots,
+        x: x.clone(),
         y,
         aux_loss: routing.aux_loss,
         dispatch_bytes,

@@ -114,9 +114,54 @@ pub struct PreparedWeights {
     pub w2_d: Vec<Fp8Tensor>, // E × [h, d] codes (w2, dgrad layout)
 }
 
+/// Audit of one weight-requantization pass (same counting convention as
+/// `moe::backward::BwdStats`: launches tallied at the call site).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WeightPrepStats {
+    /// Quantize launches whose input is f32 master data (one per layout
+    /// per expert weight — the legitimate per-step weight cast).
+    pub weight_quants: usize,
+    /// Requantizations of already-FP8 tensors. Zero by construction:
+    /// every layout is sourced from the masters, never derived from
+    /// another FP8 layout (the audit the graph's optimizer tail pins,
+    /// `dataflow::variants::build_train_step`).
+    pub requants: usize,
+}
+
 impl PreparedWeights {
     pub fn new(raw: MoeWeights, recipe: Recipe) -> PreparedWeights {
-        let mode = match recipe {
+        let mut pw = PreparedWeights {
+            recipe,
+            raw,
+            w1_t: Vec::new(),
+            w3_t: Vec::new(),
+            w2_t: Vec::new(),
+            w1_d: Vec::new(),
+            w3_d: Vec::new(),
+            w2_d: Vec::new(),
+        };
+        pw.requantize_from_masters();
+        pw
+    }
+
+    /// Regenerate every FP8 weight layout from the f32 masters (`raw`) —
+    /// the optimizer's post-update weight cast (the Fig. 2 weight-prep
+    /// discipline, executed once per training step).
+    ///
+    /// Each layout is ONE quantization of master data — `w*_t` quantizes
+    /// the transposed master, `w*_d` the untransposed master — so no
+    /// already-FP8 tensor is ever requantized: the step contributes **zero**
+    /// requant events to the audit (the graph's optimizer tail,
+    /// `dataflow::variants::build_train_step`, models the same discipline;
+    /// the incumbent foil there derives the second layout by
+    /// requantizing the first). Bit-identical to a fresh
+    /// [`PreparedWeights::new`] over the same masters
+    /// (`tests/prop_train.rs`).
+    pub fn requantize_from_masters(&mut self) -> WeightPrepStats {
+        if self.recipe == Recipe::Bf16 {
+            return WeightPrepStats::default();
+        }
+        let mode = match self.recipe {
             Recipe::Blockwise => ScaleMode::Float,
             _ => ScaleMode::Po2,
         };
@@ -128,19 +173,13 @@ impl PreparedWeights {
         let quant_d = |ws: &[Mat]| -> Vec<Fp8Tensor> {
             ws.iter().map(|w| quantize_rowwise(w, Fp8Format::E4M3, mode)).collect()
         };
-        let (w1_t, w3_t, w2_t, w1_d, w3_d, w2_d) = if recipe == Recipe::Bf16 {
-            (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new())
-        } else {
-            (
-                quant_t(&raw.w1),
-                quant_t(&raw.w3),
-                quant_t(&raw.w2),
-                quant_d(&raw.w1),
-                quant_d(&raw.w3),
-                quant_d(&raw.w2),
-            )
-        };
-        PreparedWeights { recipe, raw, w1_t, w3_t, w2_t, w1_d, w3_d, w2_d }
+        self.w1_t = quant_t(&self.raw.w1);
+        self.w3_t = quant_t(&self.raw.w3);
+        self.w2_t = quant_t(&self.raw.w2);
+        self.w1_d = quant_d(&self.raw.w1);
+        self.w3_d = quant_d(&self.raw.w3);
+        self.w2_d = quant_d(&self.raw.w2);
+        WeightPrepStats { weight_quants: 6 * self.raw.n_experts(), requants: 0 }
     }
 }
 

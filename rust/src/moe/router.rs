@@ -1,4 +1,22 @@
-//! Top-k softmax router (§3.2 "routing" stage).
+//! Top-k softmax router (§3.2 "routing" stage) — forward and backward.
+//!
+//! The backward ([`route_backward`]) is the piece the Fig. 2 graphs leave
+//! out (they model the expert path only): the gradient of the gated
+//! combine `y = Σ_k g_k · back_k` plus the Switch-style auxiliary
+//! load-balancing loss, w.r.t. the router weights and the layer input.
+//! Conventions:
+//!
+//! * the discrete top-k **selection** is a constant of the backward (an
+//!   argmax has no gradient); the **gates** are live through the softmax
+//!   and the top-k renormalization — [`route_with_selection`] is the
+//!   matching frozen-selection forward the gradchecks differentiate;
+//! * the aux loss `E · Σ_e f_e · m_e` follows the Switch convention: the
+//!   dispatch fraction `f` is a constant, gradient flows through the mean
+//!   probabilities `m` only.
+//!
+//! The router runs in f32 on every recipe (the paper keeps routing in
+//! high precision), so the backward adds **zero** casts and zero
+//! requantizations to the per-step audit.
 
 use crate::util::mat::Mat;
 
@@ -13,30 +31,57 @@ pub struct Routing {
     pub aux_loss: f32,
 }
 
+/// Row-wise softmax with max-subtraction. Shared by the forward route and
+/// the backward's recomputation so both see bit-identical probabilities
+/// (same per-element op order).
+fn softmax_rows(logits: &Mat) -> Mat {
+    let mut probs = Mat::zeros(logits.rows, logits.cols);
+    for t in 0..logits.rows {
+        let row = logits.row(t);
+        let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let out = &mut probs.data[t * logits.cols..(t + 1) * logits.cols];
+        let mut z = 0.0f32;
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o = (v - mx).exp();
+            z += *o;
+        }
+        for o in out.iter_mut() {
+            *o /= z;
+        }
+    }
+    probs
+}
+
+/// `aux = E · Σ_e f_e · m_e` from the per-expert top-1 counts and
+/// probability sums (both over `n` tokens).
+fn aux_from(first_counts: &[usize], prob_sums: &[f64], n: f64) -> f32 {
+    (first_counts.len() as f64
+        * first_counts
+            .iter()
+            .zip(prob_sums)
+            .map(|(&f, &p)| (f as f64 / n) * (p / n))
+            .sum::<f64>()) as f32
+}
+
 /// Route `x [tokens, d]` through router weights `wr [d, E]`, top-k.
 pub fn route(x: &Mat, wr: &Mat, top_k: usize) -> Routing {
     assert_eq!(x.cols, wr.rows);
     let e = wr.cols;
     assert!(top_k <= e);
-    let logits = x.matmul(wr);
+    let probs = softmax_rows(&x.matmul(wr));
     let mut experts = Vec::with_capacity(x.rows);
     let mut gates = Vec::with_capacity(x.rows);
     let mut first_counts = vec![0usize; e];
     let mut prob_sums = vec![0f64; e];
     for t in 0..x.rows {
-        let row = logits.row(t);
-        // softmax
-        let mx = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
-        let exps: Vec<f32> = row.iter().map(|&v| (v - mx).exp()).collect();
-        let z: f32 = exps.iter().sum();
-        let probs: Vec<f32> = exps.iter().map(|&v| v / z).collect();
-        for (i, &p) in probs.iter().enumerate() {
+        let prow = probs.row(t);
+        for (i, &p) in prow.iter().enumerate() {
             prob_sums[i] += p as f64;
         }
         // iterative top-k (ties broken by lower index — matches argmax)
         let mut chosen = Vec::with_capacity(top_k);
         let mut g = Vec::with_capacity(top_k);
-        let mut masked = probs.clone();
+        let mut masked = prow.to_vec();
         for _ in 0..top_k {
             let (bi, bv) = masked
                 .iter()
@@ -58,19 +103,117 @@ pub fn route(x: &Mat, wr: &Mat, top_k: usize) -> Routing {
         experts.push(chosen);
         gates.push(g);
     }
-    let n = x.rows as f64;
-    let aux_loss = (e as f64
-        * first_counts
-            .iter()
-            .zip(&prob_sums)
-            .map(|(&f, &p)| (f as f64 / n) * (p / n))
-            .sum::<f64>()) as f32;
+    let aux_loss = aux_from(&first_counts, &prob_sums, x.rows as f64);
     Routing { experts, gates, aux_loss }
+}
+
+/// [`route`] under a **frozen selection**: the top-k indices are given,
+/// the gates (and the aux loss) are recomputed live from `x` and `wr`.
+///
+/// With `selection == route(..).experts` this reproduces [`route`] bit
+/// for bit; with the selection held fixed while `x`/`wr` are perturbed it
+/// is the smooth surrogate that [`route_backward`] differentiates — the
+/// gradcheck entry point for the router path (`tests/prop_backward.rs`).
+pub fn route_with_selection(x: &Mat, wr: &Mat, selection: &[Vec<usize>]) -> Routing {
+    assert_eq!(x.cols, wr.rows);
+    assert_eq!(selection.len(), x.rows, "selection/token count mismatch");
+    let e = wr.cols;
+    let probs = softmax_rows(&x.matmul(wr));
+    let mut gates = Vec::with_capacity(x.rows);
+    let mut first_counts = vec![0usize; e];
+    let mut prob_sums = vec![0f64; e];
+    for t in 0..x.rows {
+        let prow = probs.row(t);
+        for (i, &p) in prow.iter().enumerate() {
+            prob_sums[i] += p as f64;
+        }
+        let chosen = &selection[t];
+        assert!(!chosen.is_empty() && chosen.iter().all(|&c| c < e), "bad selection");
+        let g: Vec<f32> = chosen.iter().map(|&c| prow[c]).collect();
+        first_counts[chosen[0]] += 1;
+        let gz: f32 = g.iter().sum();
+        gates.push(g.iter().map(|&v| v / gz).collect());
+    }
+    let aux_loss = aux_from(&first_counts, &prob_sums, x.rows as f64);
+    Routing { experts: selection.to_vec(), gates, aux_loss }
+}
+
+/// Gradients of the routing path.
+pub struct RouterBwd {
+    /// `[d, E]` router weight gradient.
+    pub d_router: Mat,
+    /// `[tokens, d]` contribution to the layer input gradient.
+    pub dx: Mat,
+}
+
+/// Backward of the routing path: given `d_gates[t][k] = ∂L/∂g_{t,k}` (the
+/// upstream gradient of each normalized gate, i.e. `⟨dy_t, back_k[t]⟩`)
+/// and the aux-loss coefficient, produce the router weight gradient and
+/// the input-gradient contribution.
+///
+/// Chain, per token (selection `c` frozen, probabilities `p` recomputed
+/// bit-identically to the forward):
+///
+/// ```text
+/// g_j = p_{c_j} / Σ_i p_{c_i}          (top-k renormalization)
+/// ∂L/∂p_{c_j} = (d_gates_j − Σ_i d_gates_i·g_i) / Σ_i p_{c_i}
+/// ∂L/∂p_e    += λ · E · f_e / T        (aux: f frozen, m live)
+/// dlogits     = p ⊙ (dp − ⟨dp, p⟩)     (softmax backward)
+/// d_router    = Xᵀ · dlogits;   dx = dlogits · Wrᵀ
+/// ```
+///
+/// For top-1 the renormalized gate is identically 1, so the gate path
+/// vanishes exactly (zero gradient) and only the aux term drives the
+/// router — the formulas handle it without special-casing.
+pub fn route_backward(
+    x: &Mat,
+    wr: &Mat,
+    routing: &Routing,
+    d_gates: &[Vec<f32>],
+    aux_coef: f32,
+) -> RouterBwd {
+    let t_n = x.rows;
+    let e = wr.cols;
+    assert_eq!(routing.experts.len(), t_n, "routing/token count mismatch");
+    assert_eq!(d_gates.len(), t_n, "d_gates/token count mismatch");
+    let probs = softmax_rows(&x.matmul(wr));
+
+    // dispatch fraction f (frozen, Switch convention)
+    let mut first_counts = vec![0usize; e];
+    for ex in &routing.experts {
+        first_counts[ex[0]] += 1;
+    }
+    let aux_term: Vec<f32> = first_counts
+        .iter()
+        .map(|&f| aux_coef * (e as f32) * (f as f32 / t_n as f32) / t_n as f32)
+        .collect();
+
+    let mut dlogits = Mat::zeros(t_n, e);
+    let mut dp = vec![0f32; e];
+    for t in 0..t_n {
+        let prow = probs.row(t);
+        let chosen = &routing.experts[t];
+        let g = &routing.gates[t];
+        assert_eq!(d_gates[t].len(), chosen.len(), "d_gates/top-k mismatch");
+        dp.copy_from_slice(&aux_term);
+        let gz: f32 = chosen.iter().map(|&c| prow[c]).sum();
+        let inner: f32 = d_gates[t].iter().zip(g).map(|(&a, &b)| a * b).sum();
+        for (j, &c) in chosen.iter().enumerate() {
+            dp[c] += (d_gates[t][j] - inner) / gz;
+        }
+        let s: f32 = dp.iter().zip(prow).map(|(&a, &b)| a * b).sum();
+        let out = &mut dlogits.data[t * e..(t + 1) * e];
+        for ((o, &dpe), &pe) in out.iter_mut().zip(&dp).zip(prow) {
+            *o = pe * (dpe - s);
+        }
+    }
+    RouterBwd { d_router: x.transpose().matmul(&dlogits), dx: dlogits.matmul(&wr.transpose()) }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::{gradcheck, probe_indices};
     use crate::util::rng::Rng;
 
     #[test]
@@ -107,5 +250,84 @@ mod tests {
         let r = route(&x, &wr, 1);
         assert!(r.experts.iter().all(|e| e[0] == 2));
         assert!(r.aux_loss > 2.0, "concentration should inflate aux: {}", r.aux_loss);
+    }
+
+    #[test]
+    fn frozen_selection_reproduces_route_bitwise() {
+        let mut rng = Rng::seed_from(3);
+        let x = Mat::randn(48, 16, 0.7, &mut rng);
+        let wr = Mat::randn(16, 6, 0.5, &mut rng);
+        for top_k in [1usize, 2, 3] {
+            let a = route(&x, &wr, top_k);
+            let b = route_with_selection(&x, &wr, &a.experts);
+            assert_eq!(a.experts, b.experts);
+            for t in 0..x.rows {
+                for (u, v) in a.gates[t].iter().zip(&b.gates[t]) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "k={top_k} t={t}");
+                }
+            }
+            assert_eq!(a.aux_loss.to_bits(), b.aux_loss.to_bits());
+        }
+    }
+
+    #[test]
+    fn top1_gate_path_is_exactly_zero() {
+        // top-1 renormalized gate ≡ 1 ⇒ with aux off, the router gets
+        // exactly zero gradient (the selection is discrete)
+        let mut rng = Rng::seed_from(4);
+        let x = Mat::randn(24, 8, 0.5, &mut rng);
+        let wr = Mat::randn(8, 4, 0.5, &mut rng);
+        let r = route(&x, &wr, 1);
+        let d_gates: Vec<Vec<f32>> = (0..24).map(|t| vec![1.0 + t as f32]).collect();
+        let rb = route_backward(&x, &wr, &r, &d_gates, 0.0);
+        assert!(rb.d_router.data.iter().all(|&v| v == 0.0));
+        assert!(rb.dx.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn route_backward_gradchecks_gate_and_aux_paths() {
+        // surrogate: L = Σ_t Σ_k g_{t,k}·u_{t,k} + λ·aux under frozen
+        // selection — pure routing, no expert math
+        let mut rng = Rng::seed_from(5);
+        let (t_n, d, e, k) = (12, 8, 4, 2);
+        let x = Mat::randn(t_n, d, 0.5, &mut rng);
+        let wr = Mat::randn(d, e, 0.4, &mut rng);
+        let u = Mat::randn(t_n, k, 1.0, &mut rng); // ∂L/∂g directly
+        let lam = 0.5f32;
+        let base = route(&x, &wr, k);
+        let sel = base.experts.clone();
+        let d_gates: Vec<Vec<f32>> = (0..t_n).map(|t| u.row(t).to_vec()).collect();
+        let rb = route_backward(&x, &wr, &base, &d_gates, lam);
+
+        // flat output: gates [t_n·k] then aux; dy weights: u then λ
+        let fwd = |xv: &Mat, wv: &Mat| -> Vec<f32> {
+            let r = route_with_selection(xv, wv, &sel);
+            let mut out: Vec<f32> = r.gates.iter().flatten().copied().collect();
+            out.push(r.aux_loss);
+            out
+        };
+        let mut dy: Vec<f32> = u.data.clone();
+        dy.push(lam);
+
+        gradcheck(
+            "route_backward d_router",
+            |ws| fwd(&x, &Mat::from_vec(d, e, ws.to_vec())),
+            &wr.data,
+            &dy,
+            &rb.d_router.data,
+            1e-2,
+            2e-2,
+            &probe_indices(d * e, 12),
+        );
+        gradcheck(
+            "route_backward dx",
+            |xs| fwd(&Mat::from_vec(t_n, d, xs.to_vec()), &wr),
+            &x.data,
+            &dy,
+            &rb.dx.data,
+            1e-2,
+            2e-2,
+            &probe_indices(t_n * d, 12),
+        );
     }
 }

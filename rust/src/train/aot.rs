@@ -1,23 +1,20 @@
-//! The training loop over an AOT `train_step` executable.
+//! The AOT training driver: the loop over an ahead-of-time compiled
+//! `train_step` executable (L2 JAX graph with L1 kernels inside).
+//!
+//! This path needs `make artifacts` plus real `xla` bindings behind the
+//! vendored stub; until both exist, [`AotTrainer::new`] fails with a
+//! message pointing at the working alternative — the native driver
+//! ([`crate::train::native::NativeTrainer`]), which runs the same
+//! experiment entirely on the in-repo substrate.
 
 use anyhow::{Context, Result};
 
 use crate::runtime::{literal, Executable, Runtime};
 use crate::train::data::Corpus;
-use crate::util::json::Json;
-
-/// Outcome of a training run.
-#[derive(Clone, Debug)]
-pub struct TrainOutcome {
-    pub recipe: String,
-    pub losses: Vec<f32>,
-    pub steps: usize,
-    pub wall_s: f64,
-    pub tokens_per_s: f64,
-}
+use crate::train::{TrainDriver, TrainOutcome};
 
 /// Drives `init_<cfg>` + `train_step_<recipe>_<cfg>` from Rust.
-pub struct Trainer {
+pub struct AotTrainer {
     step_exe: Executable,
     state: Vec<xla::Literal>,
     n_leaves: usize,
@@ -26,11 +23,14 @@ pub struct Trainer {
     recipe: String,
 }
 
-impl Trainer {
+impl AotTrainer {
     /// Initialize from artifacts: runs `init_<cfg>` with `seed`.
-    pub fn new(rt: &Runtime, cfg: &str, recipe: &str, seed: u32) -> Result<Trainer> {
-        let init = rt.load(&format!("init_{cfg}"))?;
-        let step_exe = rt.load(&format!("train_step_{recipe}_{cfg}"))?;
+    pub fn new(rt: &Runtime, cfg: &str, recipe: &str, seed: u32) -> Result<AotTrainer> {
+        let ctx = "AOT artifacts unavailable — run `make artifacts`, or use the \
+                   native trainer (train/native/: `fp8-flow-moe train` without --aot), \
+                   which needs none";
+        let init = rt.load(&format!("init_{cfg}")).context(ctx)?;
+        let step_exe = rt.load(&format!("train_step_{recipe}_{cfg}")).context(ctx)?;
         let state = init
             .run(&[literal::u32_scalar(seed)?])
             .context("running init")?;
@@ -38,11 +38,7 @@ impl Trainer {
         let n_leaves = state.len() / 3;
         let tok_spec = &step_exe.spec.inputs[3 * n_leaves + 1];
         let (batch, seq) = (tok_spec.shape[0], tok_spec.shape[1]);
-        Ok(Trainer { step_exe, state, n_leaves, batch, seq, recipe: recipe.to_string() })
-    }
-
-    pub fn batch_shape(&self) -> (usize, usize) {
-        (self.batch, self.seq)
+        Ok(AotTrainer { step_exe, state, n_leaves, batch, seq, recipe: recipe.to_string() })
     }
 
     /// Run `steps` optimization steps against `corpus`, returning the loss
@@ -78,21 +74,16 @@ impl Trainer {
     }
 }
 
-impl TrainOutcome {
-    /// Serialize to JSON (written into runs/*.json by the examples/CLI).
-    pub fn to_json(&self) -> Json {
-        Json::obj()
-            .set("recipe", self.recipe.as_str())
-            .set("steps", self.steps)
-            .set("wall_s", self.wall_s)
-            .set("tokens_per_s", self.tokens_per_s)
-            .set("losses", self.losses.iter().map(|&l| l as f64).collect::<Vec<f64>>())
+impl TrainDriver for AotTrainer {
+    fn recipe(&self) -> &str {
+        &self.recipe
     }
 
-    /// Mean loss over the final `n` steps (the convergence comparison stat).
-    pub fn tail_mean(&self, n: usize) -> f64 {
-        let k = self.losses.len().saturating_sub(n);
-        let tail = &self.losses[k..];
-        tail.iter().map(|&l| l as f64).sum::<f64>() / tail.len().max(1) as f64
+    fn batch_shape(&self) -> (usize, usize) {
+        (self.batch, self.seq)
+    }
+
+    fn run(&mut self, corpus: &mut Corpus, steps: usize, log_every: usize) -> Result<TrainOutcome> {
+        AotTrainer::run(self, corpus, steps, log_every)
     }
 }

@@ -1,11 +1,69 @@
-//! Training driver — the Fig. 6 convergence experiment's engine.
+//! Training drivers — the Fig. 6 convergence experiment's engine.
 //!
-//! Rust owns the loop: data generation, step scheduling, metrics; the
-//! compute is the AOT `train_step_<recipe>_<cfg>` executable (L2 graph
-//! with L1 kernels inside). Python never runs here.
+//! Two drivers share one API ([`TrainDriver`]):
+//!
+//! * [`native::NativeTrainer`] — the **native** subsystem ([`native`]):
+//!   loss, router/gate backward, FP8-consistent optimizer and the step
+//!   loop all run on the in-repo substrate. No artifacts needed; this is
+//!   the path that executes the three-recipe Fig. 6 comparison.
+//! * [`aot::AotTrainer`] — the AOT path: Rust owns the loop, the compute
+//!   is the `train_step_<recipe>_<cfg>` XLA executable. Requires
+//!   `make artifacts` + real `xla` bindings; until then it fails loudly
+//!   and points at the native driver.
 
+pub mod aot;
 pub mod data;
-pub mod trainer;
+pub mod native;
 
+pub use aot::AotTrainer;
 pub use data::Corpus;
-pub use trainer::{TrainOutcome, Trainer};
+pub use native::{NativeTrainer, TrainConfig, TrainMetrics};
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// Outcome of a training run (shared by both drivers).
+#[derive(Clone, Debug)]
+pub struct TrainOutcome {
+    pub recipe: String,
+    pub losses: Vec<f32>,
+    pub steps: usize,
+    pub wall_s: f64,
+    pub tokens_per_s: f64,
+}
+
+/// One training driver: step loop over a [`Corpus`], loss trajectory out.
+/// Both the AOT-artifact path and the native path expose exactly this
+/// API, so experiments are written once and run on either engine.
+pub trait TrainDriver {
+    /// Recipe label (`bf16` / `blockwise` / `fp8flow`).
+    fn recipe(&self) -> &str;
+
+    /// `(batch, seq)` token shape one step consumes.
+    fn batch_shape(&self) -> (usize, usize);
+
+    /// Run `steps` optimization steps against `corpus`, returning the
+    /// loss trajectory. `log_every > 0` prints progress lines.
+    fn run(&mut self, corpus: &mut Corpus, steps: usize, log_every: usize)
+        -> Result<TrainOutcome>;
+}
+
+impl TrainOutcome {
+    /// Serialize to JSON (written into runs/*.json by the examples/CLI).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("recipe", self.recipe.as_str())
+            .set("steps", self.steps)
+            .set("wall_s", self.wall_s)
+            .set("tokens_per_s", self.tokens_per_s)
+            .set("losses", self.losses.iter().map(|&l| l as f64).collect::<Vec<f64>>())
+    }
+
+    /// Mean loss over the final `n` steps (the convergence comparison stat).
+    pub fn tail_mean(&self, n: usize) -> f64 {
+        let k = self.losses.len().saturating_sub(n);
+        let tail = &self.losses[k..];
+        tail.iter().map(|&l| l as f64).sum::<f64>() / tail.len().max(1) as f64
+    }
+}

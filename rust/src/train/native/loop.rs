@@ -1,0 +1,436 @@
+//! The native step loop ([`NativeTrainer`]): loss, LR schedule, the
+//! per-step cast audit, and the executed Fig. 6 three-recipe convergence
+//! run.
+//!
+//! One step:
+//!
+//! ```text
+//! fwd   embed → stashing MoE forward (live routing) → residual → head
+//!       → softmax cross-entropy (+ λ·aux load-balancing loss)
+//! bwd   head/residual grads → MoE backward WITH the router path
+//!       (moe_backward_with_router; EP-sharded: ep_exec::ep_train_step)
+//! opt   AdamW/SGD over every f32 master → requantize_from_masters
+//!       (FP8 layouts regenerated from the masters — 0 requants)
+//! ```
+//!
+//! [`TrainMetrics`] measures each step: per-stage seconds and the full
+//! cast audit — fwd casts + bwd casts stay at the Fig. 2 headline (one
+//! entry quantization each way for Fp8Flow) and the optimizer adds zero
+//! requantizations, per `tests/prop_train.rs`.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::exec;
+use crate::moe::backward::{
+    forward_stash, mat_add_assign, moe_backward_with_router_threads, FwdStash, MoeGrads,
+};
+use crate::moe::layer::{PreparedWeights, Recipe};
+use crate::train::native::model::{embed_grad, embed_rows, next_token_pairs, NativeLm};
+use crate::train::native::opt::{OptConfig, Optimizer};
+use crate::train::{Corpus, TrainDriver, TrainOutcome};
+use crate::util::json::Json;
+use crate::util::mat::Mat;
+
+/// Shape + hyperparameters of one native training run.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub ffn: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub batch: usize,
+    pub seq: usize,
+    /// Per-expert row budget of the dispatched buffer. The named configs
+    /// set it to [`Self::positions`] so no token is ever capacity-dropped
+    /// — convergence differences stay attributable to numerics.
+    pub capacity: usize,
+    /// Aux load-balancing loss coefficient (λ).
+    pub aux_coef: f32,
+    pub opt: OptConfig,
+    /// Simulated EP ranks for the training step (1 = single-rank;
+    /// bit-identical either way — `tests/prop_train.rs`).
+    pub ranks: usize,
+    /// Worker budget for the backward kernels (0 = auto).
+    pub threads: usize,
+}
+
+impl TrainConfig {
+    /// The Fig. 6 testbed config: top-1 routing, so the executed per-step
+    /// cast audit is exactly the paper's headline 2 (one entry cast per
+    /// direction).
+    pub fn tiny() -> TrainConfig {
+        let (batch, seq) = (8, 16);
+        TrainConfig {
+            vocab: 64,
+            d_model: 32,
+            ffn: 32,
+            n_experts: 4,
+            top_k: 1,
+            batch,
+            seq,
+            capacity: batch * (seq - 1),
+            aux_coef: 0.01,
+            opt: OptConfig::adamw(0.01),
+            ranks: 1,
+            threads: 0,
+        }
+    }
+
+    /// A wider config with top-2 routing (the gate gradient is live, not
+    /// just the aux path).
+    pub fn small() -> TrainConfig {
+        let (batch, seq) = (8, 32);
+        TrainConfig {
+            vocab: 256,
+            d_model: 64,
+            ffn: 64,
+            n_experts: 8,
+            top_k: 2,
+            batch,
+            seq,
+            capacity: batch * (seq - 1),
+            aux_coef: 0.01,
+            opt: OptConfig::adamw(0.01),
+            ranks: 1,
+            threads: 0,
+        }
+    }
+
+    pub fn named(name: &str) -> Option<TrainConfig> {
+        match name {
+            "tiny" => Some(TrainConfig::tiny()),
+            "small" => Some(TrainConfig::small()),
+            _ => None,
+        }
+    }
+
+    /// Next-token positions per step (= tokens entering the MoE layer).
+    pub fn positions(&self) -> usize {
+        self.batch * (self.seq - 1)
+    }
+}
+
+/// Everything one optimization step measured — the per-step row of the
+/// Fig. 6 audit table.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainMetrics {
+    pub step: usize,
+    /// Total loss (CE + λ·aux).
+    pub loss: f32,
+    pub ce: f32,
+    pub aux: f32,
+    pub lr: f32,
+    /// Executed explicit casts, forward pass (entry quantization only for
+    /// Fp8Flow).
+    pub casts_fwd: usize,
+    /// Executed explicit casts, backward pass.
+    pub casts_bwd: usize,
+    /// Requantizations of already-FP8 tensors in the backward (0 for
+    /// Fp8Flow, the naive-transpose count for Blockwise).
+    pub requants_bwd: usize,
+    /// Master-sourced weight quantizations in the optimizer step.
+    pub opt_weight_quants: usize,
+    /// Requantizations in the optimizer step — 0 for every recipe on the
+    /// native substrate (layouts are regenerated from the f32 masters).
+    pub opt_requants: usize,
+    pub fwd_s: f64,
+    pub bwd_s: f64,
+    pub opt_s: f64,
+}
+
+impl TrainMetrics {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("step", self.step)
+            .set("loss", self.loss)
+            .set("ce", self.ce)
+            .set("aux", self.aux)
+            .set("lr", self.lr)
+            .set("casts_fwd", self.casts_fwd)
+            .set("casts_bwd", self.casts_bwd)
+            .set("requants_bwd", self.requants_bwd)
+            .set("opt_weight_quants", self.opt_weight_quants)
+            .set("opt_requants", self.opt_requants)
+            .set("fwd_ms", self.fwd_s * 1e3)
+            .set("bwd_ms", self.bwd_s * 1e3)
+            .set("opt_ms", self.opt_s * 1e3)
+    }
+}
+
+/// The native training driver: masters in f32 (`embed`, `head`,
+/// `pw.raw`), per-recipe FP8 layouts in `pw`, optimizer state in `opt`.
+pub struct NativeTrainer {
+    pub cfg: TrainConfig,
+    recipe: Recipe,
+    name: String,
+    pub embed: Mat,
+    pub head: Mat,
+    pub pw: PreparedWeights,
+    opt: Optimizer,
+    step: usize,
+    /// Per-step measurements of every step taken so far.
+    pub metrics: Vec<TrainMetrics>,
+}
+
+impl NativeTrainer {
+    /// Deterministic init from `seed`: the same f32 masters for every
+    /// recipe (quantized per-recipe afterwards), so loss curves differ by
+    /// numerics only — the Fig. 6 premise.
+    pub fn new(cfg: TrainConfig, recipe: Recipe, seed: u64) -> NativeTrainer {
+        assert!(cfg.top_k >= 1 && cfg.top_k <= cfg.n_experts, "bad top_k");
+        assert!(cfg.ranks >= 1 && cfg.n_experts >= cfg.ranks, "bad ranks");
+        assert!(cfg.seq >= 2, "need at least two positions per row");
+        let lm = NativeLm::init(cfg.vocab, cfg.d_model, cfg.ffn, cfg.n_experts, seed);
+        let name = match recipe {
+            Recipe::Bf16 => "bf16",
+            Recipe::Blockwise => "blockwise",
+            Recipe::Fp8Flow => "fp8flow",
+        };
+        NativeTrainer {
+            cfg,
+            recipe,
+            name: name.to_string(),
+            embed: lm.embed,
+            head: lm.head,
+            pw: PreparedWeights::new(lm.moe, recipe),
+            opt: Optimizer::new(cfg.opt),
+            step: 0,
+            metrics: Vec::new(),
+        }
+    }
+
+    pub fn recipe_enum(&self) -> Recipe {
+        self.recipe
+    }
+
+    pub fn steps_done(&self) -> usize {
+        self.step
+    }
+
+    /// One optimization step on a `[batch, seq]` token grid. Dispatches
+    /// to the EP-sharded step when `cfg.ranks > 1` (bit-identical).
+    pub fn step_batch(&mut self, tokens: &[i32]) -> TrainMetrics {
+        if self.cfg.ranks > 1 {
+            crate::cluster::ep_exec::ep_train_step(self, tokens)
+        } else {
+            let threads = self.cfg.threads;
+            self.step_with_backward(tokens, |stash, pw, dy, aux| {
+                let t = if threads == 0 { exec::threads() } else { threads };
+                moe_backward_with_router_threads(stash, pw, dy, aux, t)
+            })
+        }
+    }
+
+    /// The step core, parameterized over the MoE-layer backward — the
+    /// single-rank and EP-sharded steps differ ONLY in the closure passed
+    /// here (`cluster::ep_exec::ep_train_step` supplies the sharded one),
+    /// which is what makes their bit-identity an inheritance from the
+    /// backward's rather than a fresh proof obligation.
+    pub fn step_with_backward(
+        &mut self,
+        tokens: &[i32],
+        moe_bwd: impl FnOnce(&FwdStash, &PreparedWeights, &Mat, f32) -> MoeGrads,
+    ) -> TrainMetrics {
+        let cfg = self.cfg;
+        let (inputs, targets) = next_token_pairs(tokens, cfg.batch, cfg.seq);
+
+        // ---- forward ----
+        let tf = Instant::now();
+        let x = embed_rows(&self.embed, &inputs);
+        let stash = forward_stash(&x, &self.pw, cfg.top_k, cfg.capacity);
+        let mut z = stash.y.clone();
+        mat_add_assign(&mut z, &x);
+        let logits = z.matmul(&self.head);
+        let (ce, dlogits) = crate::train::native::model::softmax_xent(&logits, &targets);
+        let aux = stash.aux_loss;
+        let loss = ce + cfg.aux_coef * aux;
+        let fwd_s = tf.elapsed().as_secs_f64();
+
+        // ---- backward ----
+        let tb = Instant::now();
+        let dhead = z.transpose().matmul(&dlogits);
+        let dz = dlogits.matmul(&self.head.transpose());
+        let grads = moe_bwd(&stash, &self.pw, &dz, cfg.aux_coef);
+        let d_router = grads
+            .d_router
+            .as_ref()
+            .expect("native training step needs the router-aware backward");
+        // residual: dL/dx = MoE dx (incl. router path) + the skip branch
+        let mut dx = grads.dx.clone();
+        mat_add_assign(&mut dx, &dz);
+        let dembed = embed_grad(cfg.vocab, &inputs, &dx);
+        let bwd_s = tb.elapsed().as_secs_f64();
+
+        // ---- optimizer: masters update, then ONE quantization per FP8
+        // layout straight from the masters ----
+        let to = Instant::now();
+        let mut params: Vec<&mut Mat> = vec![&mut self.embed, &mut self.head];
+        params.push(&mut self.pw.raw.router);
+        params.extend(self.pw.raw.w1.iter_mut());
+        params.extend(self.pw.raw.w3.iter_mut());
+        params.extend(self.pw.raw.w2.iter_mut());
+        let mut grad_refs: Vec<&Mat> = vec![&dembed, &dhead, d_router];
+        grad_refs.extend(grads.dw1.iter());
+        grad_refs.extend(grads.dw3.iter());
+        grad_refs.extend(grads.dw2.iter());
+        let lr = self.opt.step(&mut params, &grad_refs);
+        let prep = self.pw.requantize_from_masters();
+        let opt_s = to.elapsed().as_secs_f64();
+
+        self.step += 1;
+        let m = TrainMetrics {
+            step: self.step,
+            loss,
+            ce,
+            aux,
+            lr,
+            casts_fwd: stash.cast_ops,
+            casts_bwd: grads.stats.casts,
+            requants_bwd: grads.stats.requants,
+            opt_weight_quants: prep.weight_quants,
+            opt_requants: prep.requants,
+            fwd_s,
+            bwd_s,
+            opt_s,
+        };
+        self.metrics.push(m);
+        m
+    }
+
+    /// Run `steps` optimization steps against `corpus`.
+    pub fn run(&mut self, corpus: &mut Corpus, steps: usize, log_every: usize) -> Result<TrainOutcome> {
+        let (b, s) = (self.cfg.batch, self.cfg.seq);
+        let mut losses = Vec::with_capacity(steps);
+        let t0 = Instant::now();
+        for k in 1..=steps {
+            let tokens = corpus.next_batch(b, s);
+            let m = self.step_batch(&tokens);
+            ensure!(m.loss.is_finite(), "loss diverged at step {k}: {}", m.loss);
+            losses.push(m.loss);
+            if log_every > 0 && k % log_every == 0 {
+                println!(
+                    "[{}] step {k:>5}  loss {:.4}  (ce {:.4} aux {:.3}, lr {:.4}, \
+                     casts {}+{} req {}, {:.1} ms/step)",
+                    self.name,
+                    m.loss,
+                    m.ce,
+                    m.aux,
+                    m.lr,
+                    m.casts_fwd,
+                    m.casts_bwd,
+                    m.requants_bwd,
+                    t0.elapsed().as_secs_f64() / k as f64 * 1e3
+                );
+            }
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let tokens_per_s = (steps * b * s) as f64 / wall_s.max(1e-12);
+        Ok(TrainOutcome {
+            recipe: self.name.clone(),
+            losses,
+            steps,
+            wall_s,
+            tokens_per_s,
+        })
+    }
+
+    /// Aggregate run document: outcome + the per-step audit totals and
+    /// stage seconds (written to `runs/train_<recipe>.json`).
+    pub fn report_json(&self, outcome: &TrainOutcome) -> Json {
+        let n = self.metrics.len().max(1);
+        let sum = |f: fn(&TrainMetrics) -> f64| self.metrics.iter().map(f).sum::<f64>();
+        let last = self.metrics.last();
+        Json::obj()
+            .set("outcome", outcome.to_json())
+            .set("ranks", self.cfg.ranks)
+            .set("top_k", self.cfg.top_k)
+            .set("n_experts", self.cfg.n_experts)
+            .set("final_loss", outcome.tail_mean(10))
+            .set("casts_fwd_per_step", last.map_or(0, |m| m.casts_fwd))
+            .set("casts_bwd_per_step", last.map_or(0, |m| m.casts_bwd))
+            .set("requants_bwd_per_step", last.map_or(0, |m| m.requants_bwd))
+            .set("opt_weight_quants_per_step", last.map_or(0, |m| m.opt_weight_quants))
+            .set("opt_requants_per_step", last.map_or(0, |m| m.opt_requants))
+            .set("fwd_ms_mean", sum(|m| m.fwd_s) / n as f64 * 1e3)
+            .set("bwd_ms_mean", sum(|m| m.bwd_s) / n as f64 * 1e3)
+            .set("opt_ms_mean", sum(|m| m.opt_s) / n as f64 * 1e3)
+    }
+}
+
+impl TrainDriver for NativeTrainer {
+    fn recipe(&self) -> &str {
+        &self.name
+    }
+
+    fn batch_shape(&self) -> (usize, usize) {
+        (self.cfg.batch, self.cfg.seq)
+    }
+
+    fn run(&mut self, corpus: &mut Corpus, steps: usize, log_every: usize) -> Result<TrainOutcome> {
+        NativeTrainer::run(self, corpus, steps, log_every)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn named_configs_resolve() {
+        assert!(TrainConfig::named("tiny").is_some());
+        assert!(TrainConfig::named("small").is_some());
+        assert!(TrainConfig::named("huge").is_none());
+        let t = TrainConfig::tiny();
+        assert_eq!(t.positions(), 120);
+        assert_eq!(t.capacity, t.positions(), "tiny must never capacity-drop");
+        assert_eq!(t.top_k, 1, "tiny carries the headline-2 cast audit");
+    }
+
+    #[test]
+    fn one_step_runs_and_audits_for_every_recipe() {
+        let cfg = TrainConfig::tiny();
+        let mut corpus = Corpus::new(cfg.vocab, 9, 10);
+        let tokens = corpus.next_batch(cfg.batch, cfg.seq);
+        for recipe in [Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow] {
+            let mut tr = NativeTrainer::new(cfg, recipe, 9);
+            let m = tr.step_batch(&tokens);
+            assert!(m.loss.is_finite());
+            assert!(m.loss > 0.0);
+            assert_eq!(m.step, 1);
+            assert_eq!(m.opt_requants, 0, "{recipe:?}: optimizer must never requantize");
+            match recipe {
+                Recipe::Fp8Flow => {
+                    assert_eq!(m.casts_fwd + m.casts_bwd, 2, "the Fig. 2 headline");
+                    assert_eq!(m.requants_bwd, 0);
+                    assert_eq!(m.opt_weight_quants, 6 * cfg.n_experts);
+                }
+                Recipe::Blockwise => {
+                    assert!(m.requants_bwd > 0, "the executed DQE foil");
+                }
+                Recipe::Bf16 => {
+                    assert_eq!(m.casts_fwd + m.casts_bwd, 0);
+                    assert_eq!(m.opt_weight_quants, 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn identical_seed_and_data_reproduce_bitwise() {
+        let cfg = TrainConfig::tiny();
+        let run = || {
+            let mut tr = NativeTrainer::new(cfg, Recipe::Fp8Flow, 3);
+            let mut corpus = Corpus::new(cfg.vocab, 3, 10);
+            let mut out = Vec::new();
+            for _ in 0..3 {
+                let toks = corpus.next_batch(cfg.batch, cfg.seq);
+                out.push(tr.step_batch(&toks).loss.to_bits());
+            }
+            (out, tr.embed.data, tr.pw.w1_t[0].data.clone())
+        };
+        assert_eq!(run(), run(), "the step must be a pure function of seed + data");
+    }
+}

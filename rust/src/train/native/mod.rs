@@ -1,0 +1,30 @@
+//! The **native training subsystem**: the whole loop — forward, router
+//! backward, FP8-consistent optimizer step — on the in-repo substrate,
+//! zero AOT artifacts.
+//!
+//! * [`opt`] — SGD-momentum / AdamW over the f32 master weights, with an
+//!   LR warmup schedule; the step ends in
+//!   `PreparedWeights::requantize_from_masters`, the paper's weight-cast
+//!   discipline (each FP8 layout is one quantization from the master —
+//!   zero requantization of FP8 data, audited against
+//!   `dataflow::variants::build_train_step`).
+//! * [`model`] — the tiny MoE language model (embedding → MoE layer with
+//!   residual → output head → cross-entropy); everything outside the MoE
+//!   layer stays f32, matching the paper's high-precision non-expert
+//!   parts.
+//! * [`loop`](self::train_loop) — [`NativeTrainer`]: the step loop, the
+//!   per-step [`TrainMetrics`] cast audit (fwd + bwd + optimizer), and
+//!   the Fig. 6 three-recipe convergence run.
+//!
+//! The EP-sharded form of the step lives in
+//! [`crate::cluster::ep_exec::ep_train_step`] and is bit-identical to the
+//! single-rank loop for any rank count (`tests/prop_train.rs`).
+
+pub mod model;
+pub mod opt;
+#[path = "loop.rs"]
+pub mod train_loop;
+
+pub use model::NativeLm;
+pub use opt::{OptAlgo, OptConfig, Optimizer};
+pub use train_loop::{NativeTrainer, TrainConfig, TrainMetrics};

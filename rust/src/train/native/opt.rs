@@ -1,0 +1,170 @@
+//! Optimizers over f32 master weights (the update half of the training
+//! step; the other half — casting the updated masters back to FP8
+//! layouts — is `PreparedWeights::requantize_from_masters`).
+//!
+//! Deterministic by construction: parameters are visited in a fixed
+//! order, element updates are straight-line f32 (no reductions), so the
+//! update is bit-identical across thread budgets and EP rank counts —
+//! the "replicated optimizer step" of the EP-sharded training step is
+//! simply this step executed once on the (identical) reduced gradients.
+//!
+//! `tests/prop_train.rs` pins both algorithms to closed-form scalar
+//! references.
+
+use crate::util::mat::Mat;
+
+/// Update rule.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum OptAlgo {
+    /// `buf = μ·buf + g;  p -= lr·(buf + wd·p)`
+    SgdMomentum { momentum: f32 },
+    /// Decoupled weight decay Adam:
+    /// `m = β1·m + (1−β1)·g;  v = β2·v + (1−β2)·g²;`
+    /// `p -= lr·(m̂/(√v̂ + ε) + wd·p)` with bias-corrected `m̂`, `v̂`.
+    AdamW { beta1: f32, beta2: f32, eps: f32 },
+}
+
+/// Optimizer hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct OptConfig {
+    pub algo: OptAlgo,
+    /// Peak learning rate (after warmup).
+    pub lr: f32,
+    /// Decoupled weight decay coefficient.
+    pub weight_decay: f32,
+    /// Linear warmup steps (0 = none); constant `lr` afterwards.
+    pub warmup: usize,
+}
+
+impl OptConfig {
+    /// The convergence-run default: AdamW, the Fig. 6 hyperparameters.
+    pub fn adamw(lr: f32) -> OptConfig {
+        OptConfig {
+            algo: OptAlgo::AdamW { beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+            lr,
+            weight_decay: 0.01,
+            warmup: 5,
+        }
+    }
+
+    pub fn sgd(lr: f32, momentum: f32) -> OptConfig {
+        OptConfig { algo: OptAlgo::SgdMomentum { momentum }, lr, weight_decay: 0.0, warmup: 5 }
+    }
+}
+
+/// Stateful optimizer over an ordered parameter list. State slots are
+/// lazily sized on the first step and keyed by position, so callers must
+/// pass the same tensors in the same order every step.
+pub struct Optimizer {
+    pub cfg: OptConfig,
+    /// Completed steps (1-based inside the update math).
+    t: usize,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Optimizer {
+    pub fn new(cfg: OptConfig) -> Optimizer {
+        Optimizer { cfg, t: 0, m: Vec::new(), v: Vec::new() }
+    }
+
+    /// Completed step count.
+    pub fn steps_done(&self) -> usize {
+        self.t
+    }
+
+    /// Learning rate at (1-based) step `step`: linear warmup to `lr`,
+    /// constant afterwards.
+    pub fn lr_at(&self, step: usize) -> f32 {
+        if self.cfg.warmup == 0 || step >= self.cfg.warmup {
+            self.cfg.lr
+        } else {
+            self.cfg.lr * (step as f32 / self.cfg.warmup as f32)
+        }
+    }
+
+    /// Apply one update step: `params[i] -= f(grads[i])` under the
+    /// configured algorithm. Returns the learning rate used.
+    pub fn step(&mut self, params: &mut [&mut Mat], grads: &[&Mat]) -> f32 {
+        assert_eq!(params.len(), grads.len(), "param/grad list mismatch");
+        if self.m.is_empty() {
+            self.m = params.iter().map(|p| vec![0.0f32; p.data.len()]).collect();
+            if matches!(self.cfg.algo, OptAlgo::AdamW { .. }) {
+                self.v = params.iter().map(|p| vec![0.0f32; p.data.len()]).collect();
+            }
+        }
+        assert_eq!(self.m.len(), params.len(), "optimizer state/param count drifted");
+        self.t += 1;
+        let lr = self.lr_at(self.t);
+        let wd = self.cfg.weight_decay;
+        match self.cfg.algo {
+            OptAlgo::SgdMomentum { momentum } => {
+                for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+                    assert_eq!(p.data.len(), g.data.len(), "param {i} shape drifted");
+                    let buf = &mut self.m[i];
+                    for ((pv, &gv), bv) in
+                        p.data.iter_mut().zip(&g.data).zip(buf.iter_mut())
+                    {
+                        *bv = momentum * *bv + gv;
+                        *pv -= lr * (*bv + wd * *pv);
+                    }
+                }
+            }
+            OptAlgo::AdamW { beta1, beta2, eps } => {
+                let bc1 = 1.0 - beta1.powi(self.t as i32);
+                let bc2 = 1.0 - beta2.powi(self.t as i32);
+                for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+                    assert_eq!(p.data.len(), g.data.len(), "param {i} shape drifted");
+                    let (ms, vs) = (&mut self.m[i], &mut self.v[i]);
+                    for (((pv, &gv), mv), vv) in
+                        p.data.iter_mut().zip(&g.data).zip(ms.iter_mut()).zip(vs.iter_mut())
+                    {
+                        *mv = beta1 * *mv + (1.0 - beta1) * gv;
+                        *vv = beta2 * *vv + (1.0 - beta2) * gv * gv;
+                        let mh = *mv / bc1;
+                        let vh = *vv / bc2;
+                        *pv -= lr * (mh / (vh.sqrt() + eps) + wd * *pv);
+                    }
+                }
+            }
+        }
+        lr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly_then_holds() {
+        let o = Optimizer::new(OptConfig::adamw(0.01));
+        assert_eq!(o.lr_at(1), 0.01 * (1.0 / 5.0));
+        assert_eq!(o.lr_at(4), 0.01 * (4.0 / 5.0));
+        assert_eq!(o.lr_at(5), 0.01);
+        assert_eq!(o.lr_at(500), 0.01);
+        let c = Optimizer::new(OptConfig { warmup: 0, ..OptConfig::adamw(0.02) });
+        assert_eq!(c.lr_at(1), 0.02);
+    }
+
+    #[test]
+    fn state_is_lazily_shaped_and_sticky() {
+        let mut o = Optimizer::new(OptConfig::adamw(0.1));
+        let mut p = Mat::zeros(2, 3);
+        let g = Mat::from_fn(2, 3, |i, j| (i + j) as f32);
+        o.step(&mut [&mut p], &[&g]);
+        assert_eq!(o.steps_done(), 1);
+        assert_eq!(o.m.len(), 1);
+        assert_eq!(o.m[0].len(), 6);
+        assert_eq!(o.v[0].len(), 6);
+    }
+
+    #[test]
+    fn sgd_momentum_first_step_is_plain_sgd() {
+        let mut o = Optimizer::new(OptConfig { warmup: 0, ..OptConfig::sgd(0.5, 0.9) });
+        let mut p = Mat::from_vec(1, 2, vec![1.0, -2.0]);
+        let g = Mat::from_vec(1, 2, vec![0.2, -0.4]);
+        o.step(&mut [&mut p], &[&g]);
+        assert_eq!(p.data, vec![1.0 - 0.5 * 0.2, -2.0 + 0.5 * 0.4]);
+    }
+}

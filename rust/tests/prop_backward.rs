@@ -5,21 +5,22 @@
 //! zero re-quantizations of already-FP8 tensors, wgrad via the
 //! scaling-aware transpose.
 //!
-//! Gradcheck conventions: the loss is `Σ y ⊙ dy` accumulated in f64;
-//! routing is frozen during layer-level checks (the executed backward
-//! treats gates as constants — there is no router backward, matching the
-//! paper's graphs, which model the expert path only).
+//! Gradcheck conventions: the loss is `Σ y ⊙ dy` accumulated in f64.
+//! The expert-path checks freeze the whole routing (the Fig. 2 surrogate,
+//! `moe_backward`); the router-path checks freeze only the top-k
+//! *selection* (`route_with_selection`) so the gates and the aux loss
+//! stay live, and pair with `moe_backward_with_router`.
 
 use fp8_flow_moe::dataflow::{build, Variant};
 use fp8_flow_moe::fp8::tile::quantize_rowwise;
 use fp8_flow_moe::fp8::transpose::direct_transpose;
 use fp8_flow_moe::fp8::{Fp8Format, ScaleMode};
 use fp8_flow_moe::moe::backward::{
-    forward_stash, forward_stash_with_routing, moe_backward,
+    forward_stash, forward_stash_with_routing, moe_backward, moe_backward_with_router,
 };
 use fp8_flow_moe::moe::gemm::fp8_matmul;
 use fp8_flow_moe::moe::layer::{MoeWeights, PreparedWeights, Recipe};
-use fp8_flow_moe::moe::router::route;
+use fp8_flow_moe::moe::router::{route, route_with_selection};
 use fp8_flow_moe::moe::swiglu::{swiglu, swiglu_bwd};
 use fp8_flow_moe::util::mat::Mat;
 use fp8_flow_moe::util::prop::{gradcheck, probe_indices};
@@ -198,6 +199,116 @@ fn fp8_recipes_backward_tracks_bf16_reference() {
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Router backward (live gates + aux under a frozen selection)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn layer_backward_with_router_gradchecks_bf16() {
+    // the full-path surrogate: selection frozen, gates + aux live;
+    // flat output = y ++ [aux], dy weights = dy ++ [λ]
+    let mut rng = Rng::seed_from(8);
+    let (t, d, h, e, cap, top_k) = (6, 12, 10, 3, 6, 2);
+    let x = Mat::randn(t, d, 0.5, &mut rng);
+    let w = MoeWeights::random(d, h, e, &mut rng);
+    let dy = Mat::randn(t, d, 1.0, &mut rng);
+    let lam = 0.5f32;
+    let routing = route(&x, &w.router, top_k);
+    let sel = routing.experts.clone();
+    let pw = PreparedWeights::new(w.clone(), Recipe::Bf16);
+    let stash = forward_stash_with_routing(&x, &pw, &routing, cap);
+    let grads = moe_backward_with_router(&stash, &pw, &dy, lam);
+    let d_router = grads.d_router.as_ref().expect("router-aware path sets d_router");
+
+    let mut dyv = dy.data.clone();
+    dyv.push(lam);
+    let surrogate = |xm: &Mat, wrm: &Mat| -> Vec<f32> {
+        let r = route_with_selection(xm, wrm, &sel);
+        let st = forward_stash_with_routing(xm, &pw, &r, cap);
+        let mut out = st.y.data;
+        out.push(st.aux_loss);
+        out
+    };
+    gradcheck(
+        "layer dx incl. router (bf16)",
+        |xs| surrogate(&Mat::from_vec(t, d, xs.to_vec()), &w.router),
+        &x.data,
+        &dyv,
+        &grads.dx.data,
+        1e-2,
+        3e-2,
+        &probe_indices(t * d, 10),
+    );
+    gradcheck(
+        "layer d_router (bf16)",
+        |ws| surrogate(&x, &Mat::from_vec(d, e, ws.to_vec())),
+        &w.router.data,
+        &dyv,
+        &d_router.data,
+        1e-2,
+        3e-2,
+        &probe_indices(d * e, 12),
+    );
+}
+
+#[test]
+fn router_gradient_tracks_bf16_across_fp8_recipes() {
+    // the gate gradients read the recipe's quantized expert outputs
+    // (`back`), so FP8 d_router deviates only by quantization noise
+    let mut rng = Rng::seed_from(9);
+    let (t, d, h, e, cap, top_k) = (64, 64, 48, 4, 64, 2);
+    let x = Mat::randn(t, d, 0.5, &mut rng);
+    let w = MoeWeights::random(d, h, e, &mut rng);
+    let dy = Mat::randn(t, d, 1.0, &mut rng);
+    let run = |recipe: Recipe| {
+        let pw = PreparedWeights::new(w.clone(), recipe);
+        let stash = forward_stash(&x, &pw, top_k, cap);
+        moe_backward_with_router(&stash, &pw, &dy, 0.01)
+    };
+    let reference = run(Recipe::Bf16);
+    let ref_router = reference.d_router.as_ref().unwrap();
+    assert!(ref_router.frobenius() > 0.0, "top-2 gate path must drive the router");
+    for recipe in [Recipe::Fp8Flow, Recipe::Blockwise] {
+        let g = run(recipe);
+        let rel = g.d_router.as_ref().unwrap().rel_err(ref_router);
+        assert!(rel > 0.0 && rel < 0.35, "{recipe:?} d_router rel={rel}");
+        if recipe == Recipe::Fp8Flow {
+            // the (dense f32) router path adds nothing to the cast audit
+            assert_eq!(g.stats.casts, top_k, "unchanged from the frozen-path audit");
+            assert_eq!(g.stats.requants, 0);
+        }
+    }
+}
+
+#[test]
+fn router_aware_dx_is_frozen_dx_plus_router_contribution() {
+    let mut rng = Rng::seed_from(10);
+    let (t, d, h, e, cap, top_k) = (32, 32, 24, 4, 32, 2);
+    let x = Mat::randn(t, d, 0.5, &mut rng);
+    let w = MoeWeights::random(d, h, e, &mut rng);
+    let dy = Mat::randn(t, d, 1.0, &mut rng);
+    let pw = PreparedWeights::new(w, Recipe::Fp8Flow);
+    let stash = forward_stash(&x, &pw, top_k, cap);
+    let frozen = moe_backward(&stash, &pw, &dy);
+    let full = moe_backward_with_router(&stash, &pw, &dy, 0.01);
+    assert!(frozen.d_router.is_none());
+    // expert wgrads are untouched by the router path
+    for ex in 0..e {
+        for (a, b) in frozen.dw1[ex].data.iter().zip(&full.dw1[ex].data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+    // dx differs exactly by the (nonzero) router contribution
+    let delta: f32 = frozen
+        .dx
+        .data
+        .iter()
+        .zip(&full.dx.data)
+        .map(|(a, b)| (a - b).abs())
+        .sum();
+    assert!(delta > 0.0, "router path must contribute to dx under top-2");
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,320 @@
+//! Property suite for the native training subsystem (ISSUE 4):
+//! optimizer numerics against closed-form scalar references, the
+//! requantize-then-prepare bit-identity (the optimizer's single-quantization
+//! weight cast), the executed Fig. 6 convergence assertions (loss falls
+//! for all three recipes; Fp8Flow tracks the Bf16 oracle; the per-step
+//! cast audit holds the Fig. 2 headline with zero optimizer requants),
+//! and the EP/thread bit-identity of the full training step.
+
+use fp8_flow_moe::dataflow::{build_train_step, Variant};
+use fp8_flow_moe::fp8::tensor::Fp8Tensor;
+use fp8_flow_moe::moe::layer::{MoeWeights, PreparedWeights, Recipe};
+use fp8_flow_moe::train::native::{NativeTrainer, OptAlgo, OptConfig, Optimizer, TrainConfig};
+use fp8_flow_moe::train::Corpus;
+use fp8_flow_moe::util::mat::Mat;
+use fp8_flow_moe::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Optimizer numerics vs closed-form scalar references
+// ---------------------------------------------------------------------------
+
+#[test]
+fn adamw_matches_closed_form_two_param_reference() {
+    let (lr, b1, b2, eps, wd) = (0.1f32, 0.9f32, 0.999f32, 1e-8f32, 0.01f32);
+    let cfg = OptConfig {
+        algo: OptAlgo::AdamW { beta1: b1, beta2: b2, eps },
+        lr,
+        weight_decay: wd,
+        warmup: 0,
+    };
+    let mut opt = Optimizer::new(cfg);
+    let mut pa = Mat::from_vec(1, 1, vec![1.5f32]);
+    let mut pb = Mat::from_vec(1, 2, vec![-0.75f32, 0.3]);
+    // closed-form scalar mirror (same f32 op order as the implementation)
+    let mut refs = [(1.5f32, 0.0f32, 0.0f32), (-0.75, 0.0, 0.0), (0.3, 0.0, 0.0)];
+    for t in 1i32..=4 {
+        let gs = [0.3f32 * t as f32, -0.2 + 0.05 * t as f32, 0.7];
+        let ga = Mat::from_vec(1, 1, vec![gs[0]]);
+        let gb = Mat::from_vec(1, 2, vec![gs[1], gs[2]]);
+        let used_lr = opt.step(&mut [&mut pa, &mut pb], &[&ga, &gb]);
+        assert_eq!(used_lr, lr, "warmup 0 → constant lr");
+        let bc1 = 1.0 - b1.powi(t);
+        let bc2 = 1.0 - b2.powi(t);
+        for ((p, m, v), g) in refs.iter_mut().zip(gs) {
+            *m = b1 * *m + (1.0 - b1) * g;
+            *v = b2 * *v + (1.0 - b2) * g * g;
+            let mh = *m / bc1;
+            let vh = *v / bc2;
+            *p -= lr * (mh / (vh.sqrt() + eps) + wd * *p);
+        }
+        assert_eq!(pa.data[0].to_bits(), refs[0].0.to_bits(), "step {t} param a");
+        assert_eq!(pb.data[0].to_bits(), refs[1].0.to_bits(), "step {t} param b0");
+        assert_eq!(pb.data[1].to_bits(), refs[2].0.to_bits(), "step {t} param b1");
+    }
+    // first-step sanity: v̂ = g² ⇒ update ≈ lr·sign(g) (+ decay), the
+    // well-known AdamW step-1 magnitude
+    let mut o2 = Optimizer::new(cfg);
+    let mut p = Mat::from_vec(1, 1, vec![0.0f32]);
+    let g = Mat::from_vec(1, 1, vec![0.42f32]);
+    o2.step(&mut [&mut p], &[&g]);
+    assert!((p.data[0] + lr).abs() < 1e-4, "step 1 ≈ -lr·sign(g): {}", p.data[0]);
+}
+
+#[test]
+fn sgd_momentum_matches_closed_form_reference() {
+    let (lr, mu, wd) = (0.05f32, 0.9f32, 0.1f32);
+    let cfg = OptConfig {
+        algo: OptAlgo::SgdMomentum { momentum: mu },
+        lr,
+        weight_decay: wd,
+        warmup: 0,
+    };
+    let mut opt = Optimizer::new(cfg);
+    let mut p = Mat::from_vec(1, 1, vec![2.0f32]);
+    let (mut pr, mut buf) = (2.0f32, 0.0f32);
+    for t in 1i32..=5 {
+        let gv = 0.1 * t as f32;
+        let g = Mat::from_vec(1, 1, vec![gv]);
+        opt.step(&mut [&mut p], &[&g]);
+        buf = mu * buf + gv;
+        pr -= lr * (buf + wd * pr);
+        assert_eq!(p.data[0].to_bits(), pr.to_bits(), "step {t}");
+    }
+}
+
+#[test]
+fn warmup_schedule_is_applied_to_the_step() {
+    let cfg = OptConfig { warmup: 4, ..OptConfig::adamw(0.08) };
+    let mut opt = Optimizer::new(cfg);
+    let mut p = Mat::zeros(1, 1);
+    let g = Mat::from_vec(1, 1, vec![1.0f32]);
+    let lrs: Vec<f32> = (0..5).map(|_| opt.step(&mut [&mut p], &[&g])).collect();
+    assert_eq!(lrs[0], 0.08 * 0.25);
+    assert_eq!(lrs[1], 0.08 * 0.5);
+    assert_eq!(lrs[2], 0.08 * 0.75);
+    assert_eq!(lrs[3], 0.08);
+    assert_eq!(lrs[4], 0.08);
+}
+
+// ---------------------------------------------------------------------------
+// Requantize-then-prepare bit-identity (the single-quantization weight cast)
+// ---------------------------------------------------------------------------
+
+fn assert_fp8_eq(a: &Fp8Tensor, b: &Fp8Tensor, what: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{what}: shape");
+    assert_eq!(a.data, b.data, "{what}: codes");
+    assert_eq!(a.sexp, b.sexp, "{what}: scale exponents");
+    assert_eq!(a.scales.len(), b.scales.len(), "{what}: scale count");
+    for (k, (x, y)) in a.scales.iter().zip(&b.scales).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: scale {k}");
+    }
+}
+
+#[test]
+fn requantize_from_masters_bit_matches_fresh_prepare() {
+    let mut rng = Rng::seed_from(11);
+    // d spans a full tile plus a ragged tail (160 = 128 + 32)
+    let (d, h, e) = (160, 96, 3);
+    let w = MoeWeights::random(d, h, e, &mut rng);
+    for recipe in [Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow] {
+        let mut pw = PreparedWeights::new(w.clone(), recipe);
+        // simulate an optimizer update on the masters
+        for ws in [&mut pw.raw.w1, &mut pw.raw.w3, &mut pw.raw.w2] {
+            for m in ws.iter_mut() {
+                for (k, v) in m.data.iter_mut().enumerate() {
+                    *v += 0.01 * ((k % 7) as f32 - 3.0);
+                }
+            }
+        }
+        let stats = pw.requantize_from_masters();
+        assert_eq!(stats.requants, 0, "{recipe:?}: layouts must come from the masters");
+        let expected_quants = if recipe == Recipe::Bf16 { 0 } else { 6 * e };
+        assert_eq!(stats.weight_quants, expected_quants, "{recipe:?}");
+        let fresh = PreparedWeights::new(pw.raw.clone(), recipe);
+        for (name, got, want) in [
+            ("w1_t", &pw.w1_t, &fresh.w1_t),
+            ("w3_t", &pw.w3_t, &fresh.w3_t),
+            ("w2_t", &pw.w2_t, &fresh.w2_t),
+            ("w1_d", &pw.w1_d, &fresh.w1_d),
+            ("w3_d", &pw.w3_d, &fresh.w3_d),
+            ("w2_d", &pw.w2_d, &fresh.w2_d),
+        ] {
+            assert_eq!(got.len(), want.len(), "{recipe:?} {name}");
+            for (ex, (a, b)) in got.iter().zip(want.iter()).enumerate() {
+                assert_fp8_eq(a, b, &format!("{recipe:?} {name}[{ex}]"));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The executed Fig. 6 convergence assertions
+// ---------------------------------------------------------------------------
+
+/// Fixed-batch training run (full-batch descent on a deterministic
+/// synthetic task — the monotonicity testbed).
+fn fixed_batch_run(recipe: Recipe, steps: usize, seed: u64) -> (NativeTrainer, Vec<f32>) {
+    let cfg = TrainConfig::tiny();
+    let mut corpus = Corpus::new(cfg.vocab, seed, 10);
+    let tokens = corpus.next_batch(cfg.batch, cfg.seq);
+    let mut tr = NativeTrainer::new(cfg, recipe, seed);
+    let losses: Vec<f32> = (0..steps).map(|_| tr.step_batch(&tokens).loss).collect();
+    (tr, losses)
+}
+
+#[test]
+fn loss_decreases_over_50_plus_steps_for_all_three_recipes() {
+    let steps = 60;
+    let mut finals = Vec::new();
+    for recipe in [Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow] {
+        let (_, losses) = fixed_batch_run(recipe, steps, 7);
+        assert!(losses.iter().all(|l| l.is_finite()), "{recipe:?}: non-finite loss");
+        let tail: f32 = losses[steps - 10..].iter().sum::<f32>() / 10.0;
+        assert!(
+            losses[0] - tail > 1.5,
+            "{recipe:?}: insufficient learning: {} -> {tail}",
+            losses[0]
+        );
+        // windowed monotonicity: 10-step means must not rise beyond the
+        // late-training wiggle (exact-stream calibration: worst observed
+        // rise +0.038 across seeds — slack keeps ≥ 2× margin)
+        let windows: Vec<f32> = losses
+            .chunks(10)
+            .map(|c| c.iter().sum::<f32>() / c.len() as f32)
+            .collect();
+        for k in 1..windows.len() {
+            assert!(
+                windows[k] <= windows[k - 1] + 0.08,
+                "{recipe:?}: loss window rose: {:?}",
+                windows
+            );
+        }
+        finals.push((recipe, tail));
+    }
+    // Fp8Flow tracks the Bf16 oracle within tolerance (the Fig. 6 claim);
+    // exact-stream calibration: gap ≈ 0.015 at this seed, ≤ 0.041 across
+    // seeds — 0.10 nats on a ~3.4-nat drop keeps ≥ 2.5× margin
+    let get = |r: Recipe| finals.iter().find(|(x, _)| *x == r).unwrap().1;
+    let flow_gap = (get(Recipe::Fp8Flow) - get(Recipe::Bf16)).abs();
+    assert!(flow_gap < 0.10, "fp8flow final-loss gap vs bf16: {flow_gap}");
+}
+
+#[test]
+fn per_step_cast_audit_matches_the_train_step_graph() {
+    // three steps so the audit covers steady-state requantization too
+    let (tr, _) = fixed_batch_run(Recipe::Fp8Flow, 3, 3);
+    let g = build_train_step(Variant::Fp8Flow);
+    for m in &tr.metrics {
+        // the Fig. 2 headline survives the whole training step (tiny is
+        // top-1: one entry cast per direction)
+        assert_eq!(m.casts_fwd, g.explicit_casts_fwd(), "step {}", m.step);
+        assert_eq!(m.casts_bwd, g.explicit_casts_bwd(), "step {}", m.step);
+        assert_eq!(m.casts_fwd + m.casts_bwd, 2, "step {}", m.step);
+        assert_eq!(m.requants_bwd, 0, "step {}", m.step);
+        // the optimizer's weight requantization adds ZERO requant events,
+        // exactly as the graph's optimizer tail models
+        assert_eq!(m.opt_requants, g.requant_nodes_opt());
+        assert_eq!(m.opt_requants, 0, "step {}", m.step);
+        assert!(m.opt_weight_quants > 0, "weights are re-cast every step");
+    }
+    // the Blockwise foil requantizes every step, in the backward
+    let (trb, _) = fixed_batch_run(Recipe::Blockwise, 2, 3);
+    for m in &trb.metrics {
+        assert_eq!(m.requants_bwd, 5 * trb.cfg.n_experts * trb.cfg.top_k);
+        assert_eq!(m.opt_requants, 0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// EP-sharded and thread-budget bit-identity of the full training step
+// ---------------------------------------------------------------------------
+
+fn run_steps(mut cfg: TrainConfig, ranks: usize, threads: usize, steps: usize, seed: u64)
+    -> (Vec<u32>, NativeTrainer)
+{
+    cfg.ranks = ranks;
+    cfg.threads = threads;
+    let mut tr = NativeTrainer::new(cfg, Recipe::Fp8Flow, seed);
+    let mut corpus = Corpus::new(cfg.vocab, seed, 10);
+    let losses = (0..steps)
+        .map(|_| {
+            let toks = corpus.next_batch(cfg.batch, cfg.seq);
+            tr.step_batch(&toks).loss.to_bits()
+        })
+        .collect();
+    (losses, tr)
+}
+
+fn assert_trainers_bitwise_eq(a: &NativeTrainer, b: &NativeTrainer, what: &str) {
+    let bits = |m: &Mat| m.data.iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+    assert_eq!(bits(&a.embed), bits(&b.embed), "{what}: embed");
+    assert_eq!(bits(&a.head), bits(&b.head), "{what}: head");
+    assert_eq!(bits(&a.pw.raw.router), bits(&b.pw.raw.router), "{what}: router");
+    for e in 0..a.pw.raw.n_experts() {
+        assert_eq!(bits(&a.pw.raw.w1[e]), bits(&b.pw.raw.w1[e]), "{what}: w1[{e}]");
+        assert_eq!(bits(&a.pw.raw.w3[e]), bits(&b.pw.raw.w3[e]), "{what}: w3[{e}]");
+        assert_eq!(bits(&a.pw.raw.w2[e]), bits(&b.pw.raw.w2[e]), "{what}: w2[{e}]");
+        assert_eq!(a.pw.w1_t[e].data, b.pw.w1_t[e].data, "{what}: w1_t[{e}] codes");
+        assert_eq!(a.pw.w2_d[e].data, b.pw.w2_d[e].data, "{what}: w2_d[{e}] codes");
+    }
+}
+
+#[test]
+fn ep_sharded_training_step_is_bitwise_single_rank() {
+    let cfg = TrainConfig::tiny();
+    let (ref_losses, ref_tr) = run_steps(cfg, 1, 0, 3, 21);
+    for ranks in [1usize, 2, 4] {
+        let (losses, tr) = run_steps(cfg, ranks, 0, 3, 21);
+        assert_eq!(losses, ref_losses, "R={ranks}: loss trajectory");
+        assert_trainers_bitwise_eq(&tr, &ref_tr, &format!("R={ranks}"));
+    }
+}
+
+#[test]
+fn training_step_is_bitwise_invariant_across_thread_budgets() {
+    let cfg = TrainConfig::tiny();
+    let (ref_losses, ref_tr) = run_steps(cfg, 1, 1, 2, 22);
+    for threads in [2usize, 8] {
+        let (losses, tr) = run_steps(cfg, 1, threads, 2, 22);
+        assert_eq!(losses, ref_losses, "threads={threads}");
+        assert_trainers_bitwise_eq(&tr, &ref_tr, &format!("threads={threads}"));
+    }
+    // and the EP step under an explicit worker budget
+    for threads in [2usize, 8] {
+        let (losses, tr) = run_steps(cfg, 2, threads, 2, 22);
+        assert_eq!(losses, ref_losses, "R=2 threads={threads}");
+        assert_trainers_bitwise_eq(&tr, &ref_tr, &format!("R=2 threads={threads}"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Convergence audit of the richer config (top-2: live gate gradient)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn top2_config_learns_and_audits() {
+    let mut cfg = TrainConfig::small();
+    // shrink for test budget; keep top-2 routing and the no-drop capacity
+    cfg.vocab = 64;
+    cfg.d_model = 32;
+    cfg.ffn = 32;
+    cfg.n_experts = 4;
+    cfg.batch = 4;
+    cfg.seq = 12;
+    cfg.capacity = cfg.positions();
+    let mut corpus = Corpus::new(cfg.vocab, 5, 10);
+    let tokens = corpus.next_batch(cfg.batch, cfg.seq);
+    let mut tr = NativeTrainer::new(cfg, Recipe::Fp8Flow, 5);
+    let first = tr.step_batch(&tokens).loss;
+    let mut last = first;
+    for _ in 0..29 {
+        last = tr.step_batch(&tokens).loss;
+    }
+    assert!(last < first - 0.5, "top-2 run failed to learn: {first} -> {last}");
+    let m = tr.metrics.last().unwrap();
+    // executed audit generalizes: 1 entry cast fwd, one Q(dy) per slot bwd
+    assert_eq!(m.casts_fwd, 1);
+    assert_eq!(m.casts_bwd, cfg.top_k);
+    assert_eq!(m.requants_bwd, 0);
+    assert_eq!(m.opt_requants, 0);
+}

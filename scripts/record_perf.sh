@@ -21,6 +21,12 @@ bwd_bench_output="$(cargo bench --bench bwd 2>&1)"
 echo "running bwd (2 ranks, all recipes; backward per-stage JSON)..."
 bwd_output="$(cargo run --release -p fp8_flow_moe -- bwd --ranks 2 2>&1)"
 
+echo "running train_step bench (per-stage fwd/bwd/opt + step/fwd ratio)..."
+train_bench_output="$(cargo bench --bench train_step 2>&1)"
+
+echo "running native train (three recipes, 100 steps; convergence + steps/s)..."
+train_output="$(cargo run --release -p fp8_flow_moe -- train --recipe all --steps 100 --log-every 25 2>&1)"
+
 {
     echo ""
     echo "### §Perf run: ${label} ($(date -u +%Y-%m-%dT%H:%M:%SZ))"
@@ -53,6 +59,22 @@ bwd_output="$(cargo run --release -p fp8_flow_moe -- bwd --ranks 2 2>&1)"
     if [ -f rust/runs/bwd_r2.json ]; then
         echo ""
         echo "Backward per-stage JSON: \`rust/runs/bwd_r2.json\`"
+    fi
+    echo ""
+    echo "#### Native training step (bench train_step: fwd/bwd/opt + step/fwd ratio)"
+    echo ""
+    echo '```'
+    echo "${train_bench_output}" | grep -E '^(ROW|RATIO|train_step/|threads:)'
+    echo '```'
+    echo ""
+    echo "#### Native convergence run (train --recipe all, steps/s + final losses)"
+    echo ""
+    echo '```'
+    echo "${train_output}" | grep -E '^(native train|\[(bf16|blockwise|fp8flow)\]|==|  *(bf16|blockwise|fp8flow):|wrote)'
+    echo '```'
+    if [ -f rust/runs/train_fp8flow.json ]; then
+        echo ""
+        echo "Per-recipe run JSON: \`rust/runs/train_<recipe>.json\`"
     fi
 } >> "${out}"
 
