@@ -1,0 +1,357 @@
+//! The abstract interpreter: per-edge scale lineage.
+//!
+//! [`propagate`] walks a [`DataflowGraph`] in topological order (node ids
+//! are construction-ordered) and computes one [`Lineage`] per node output:
+//! the value's dtype, scale-tile axis, originating quantize node,
+//! quantization-generation count, sidecar presence, and the ordered list
+//! of quantization events it has been through. The transfer function is
+//! keyed on [`OpClass`], the coarse semantic class of each op.
+//!
+//! The central semantic choice is what survives a **dequantize**: the
+//! value returns to dense, but its quantization *history* does not reset —
+//! `qgen` is preserved. Quantizing a once-quantized-then-dequantized value
+//! compounds rounding exactly like requantizing FP8 directly (Eq. 4), so
+//! DeepSeek-V3's Q→wire→DQ→…→Q chains count as double quantization even
+//! though no kernel ever consumes FP8 twice. Plain compute ops, by
+//! contrast, produce *fresh* values (a GEMM output is new information, not
+//! a re-encoding), so their lineage resets.
+
+use crate::dataflow::graph::{DataflowGraph, Dtype, Node, OpKind, ScaleAxis, Stage};
+
+/// Coarse semantic class of an op — the key of the lineage transfer
+/// function (total over [`OpKind`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpClass {
+    /// Graph source ([`OpKind::Input`]): a fresh external value.
+    Source,
+    /// Explicit cast kernels (`Quantize`/`Dequantize`/`Cast`) — the
+    /// launches the Fig. 2 accounting counts.
+    Conversion,
+    /// Data movement (wire, permute/pad family): the value — and its
+    /// lineage — passes through unchanged.
+    Movement,
+    /// Code-space transpose (`DirectTranspose`): flips the scale axis
+    /// without touching the codes' values (no new generation).
+    Transpose,
+    /// `NaiveTransposeRequant`: dequantize→transpose→requantize in one
+    /// node — one generation added, axis flipped.
+    Requant,
+    /// Quantization fused into a compute kernel (`FusedSwiGlu*Quant`):
+    /// a fresh value born already quantized (generation 1).
+    FusedQuant,
+    /// Plain compute (GEMM, activation, scale/add, master update): the
+    /// output is a fresh value — lineage resets.
+    Compute,
+}
+
+/// Classify `op` into its [`OpClass`].
+pub fn classify(op: OpKind) -> OpClass {
+    use OpKind::*;
+    match op {
+        Input => OpClass::Source,
+        Quantize | Dequantize | Cast => OpClass::Conversion,
+        AllToAll | Permute | Pad | FusedPermutePad | Unpermute | Unpad | FusedUnpermuteUnpad => {
+            OpClass::Movement
+        }
+        DirectTranspose => OpClass::Transpose,
+        NaiveTransposeRequant => OpClass::Requant,
+        FusedSwiGluQuant | FusedSwiGluBwdQuant => OpClass::FusedQuant,
+        GroupedGemm | SwiGlu | SwiGluBwd | Scale | Add | MasterUpdate => OpClass::Compute,
+    }
+}
+
+/// One quantization-relevant event in a value's history — the material of
+/// the human-readable lineage trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantEvent {
+    /// First quantization of a dense value at `node`.
+    Quantized {
+        /// Node performing the quantization.
+        node: usize,
+        /// Scale-tile orientation it produced.
+        axis: ScaleAxis,
+    },
+    /// Re-quantization of an already-quantized value at `node` — a
+    /// double-quantization-error site (Eq. 4).
+    Requantized {
+        /// Node performing the requantization.
+        node: usize,
+        /// Scale-tile orientation it produced.
+        axis: ScaleAxis,
+    },
+    /// Dequantization back to dense at `node`. The value's quantization
+    /// history survives this — requantizing later still compounds error.
+    Dequantized {
+        /// Node performing the dequantization.
+        node: usize,
+    },
+}
+
+/// The abstract value flowing along one edge.
+#[derive(Clone, Debug)]
+pub struct Lineage {
+    /// Element type of the value (always the producing node's declared
+    /// `out_dtype`).
+    pub dtype: Dtype,
+    /// Scale-tile axis — `Some` once the value has been quantized (kept
+    /// through a dequantize as the last-known orientation).
+    pub axis: Option<ScaleAxis>,
+    /// The *first* quantize node in this value's history.
+    pub origin: Option<usize>,
+    /// Quantization-generation count: how many times this value has been
+    /// pushed through a quantizer. ≥ 2 means double quantization.
+    pub qgen: u32,
+    /// Is the scale sidecar travelling with the payload? (FP8 only.)
+    pub sidecar: bool,
+    /// Ordered quantization history (drives the lineage traces).
+    pub events: Vec<QuantEvent>,
+}
+
+impl Lineage {
+    /// A fresh, never-quantized value of type `dtype`.
+    fn fresh(dtype: Dtype) -> Lineage {
+        Lineage { dtype, axis: None, origin: None, qgen: 0, sidecar: false, events: Vec::new() }
+    }
+
+    /// A fresh value born quantized inside the kernel of `n` (fused
+    /// quantization, or a GEMM declared to emit FP8 directly).
+    fn fresh_quantized(n: &Node) -> Lineage {
+        let axis = n.axis.unwrap_or(ScaleAxis::RowWise);
+        Lineage {
+            dtype: n.out_dtype,
+            axis: Some(axis),
+            origin: Some(n.id),
+            qgen: 1,
+            sidecar: true,
+            events: vec![QuantEvent::Quantized { node: n.id, axis }],
+        }
+    }
+}
+
+/// Run the abstract interpreter over `g`: one [`Lineage`] per node,
+/// indexed by node id.
+pub fn propagate(g: &DataflowGraph) -> Vec<Lineage> {
+    let mut out: Vec<Lineage> = Vec::with_capacity(g.nodes.len());
+    for n in &g.nodes {
+        let input = n.inputs.first().map(|&i| out[i].clone());
+        out.push(transfer(n, input));
+    }
+    out
+}
+
+/// The per-node transfer function: lineage of `n`'s output given the
+/// lineage of its first input (rule checks inspect *all* input lineages
+/// separately; the output lineage follows the primary data operand).
+fn transfer(n: &Node, input: Option<Lineage>) -> Lineage {
+    let inherit = || input.clone().unwrap_or_else(|| Lineage::fresh(n.out_dtype));
+    match classify(n.op) {
+        OpClass::Source => {
+            let mut l = Lineage::fresh(n.out_dtype);
+            if n.out_dtype == Dtype::Fp8 {
+                // a pre-quantized external value: one generation, scales
+                // attached, quantized before the graph began
+                l.qgen = 1;
+                l.axis = n.axis.or(Some(ScaleAxis::RowWise));
+                l.sidecar = true;
+            }
+            l
+        }
+        OpClass::Conversion => match n.op {
+            OpKind::Quantize => {
+                let mut l = inherit();
+                let axis = n.axis.unwrap_or(ScaleAxis::RowWise);
+                l.events.push(if l.qgen >= 1 {
+                    QuantEvent::Requantized { node: n.id, axis }
+                } else {
+                    QuantEvent::Quantized { node: n.id, axis }
+                });
+                l.qgen += 1;
+                l.origin = l.origin.or(Some(n.id));
+                l.axis = Some(axis);
+                l.dtype = n.out_dtype;
+                l.sidecar = true;
+                l
+            }
+            OpKind::Dequantize => {
+                let mut l = inherit();
+                l.events.push(QuantEvent::Dequantized { node: n.id });
+                l.dtype = n.out_dtype;
+                l.sidecar = false;
+                l
+            }
+            // Cast (bf16↔f32): value-preserving precision change
+            _ => {
+                let mut l = inherit();
+                l.dtype = n.out_dtype;
+                l
+            }
+        },
+        OpClass::Movement => {
+            let mut l = inherit();
+            l.dtype = n.out_dtype;
+            if n.op == OpKind::AllToAll && n.out_dtype == Dtype::Fp8 {
+                // the wire either ships the sidecar or strands it
+                l.sidecar = n.sidecar;
+            }
+            l
+        }
+        OpClass::Transpose => {
+            let mut l = inherit();
+            l.dtype = n.out_dtype;
+            l.axis = n.axis.or(l.axis.map(ScaleAxis::flipped));
+            l
+        }
+        OpClass::Requant => {
+            let mut l = inherit();
+            let axis = n.axis.or(l.axis.map(ScaleAxis::flipped)).unwrap_or(ScaleAxis::ColWise);
+            l.events.push(QuantEvent::Dequantized { node: n.id });
+            l.events.push(QuantEvent::Requantized { node: n.id, axis });
+            l.qgen += 1;
+            l.origin = l.origin.or(Some(n.id));
+            l.axis = Some(axis);
+            l.dtype = n.out_dtype;
+            l.sidecar = true;
+            l
+        }
+        OpClass::FusedQuant => Lineage::fresh_quantized(n),
+        OpClass::Compute => {
+            if n.out_dtype == Dtype::Fp8 {
+                // a compute op declared to emit FP8 quantizes inside the
+                // kernel (e.g. Fp8Flow's fc1-dgrad feeding the FP8 wire)
+                Lineage::fresh_quantized(n)
+            } else {
+                Lineage::fresh(n.out_dtype)
+            }
+        }
+    }
+}
+
+/// Is `n` a requantization — an op whose transfer re-quantizes already-FP8
+/// data? Always true of the naive transpose (dequantize→requantize by
+/// construction), and of an explicit `Quantize` whose input lineage is
+/// still FP8. This is the lineage re-derivation of the graph's
+/// `requant_nodes_*` counters.
+pub fn is_requant(n: &Node, lineages: &[Lineage]) -> bool {
+    match n.op {
+        OpKind::NaiveTransposeRequant => true,
+        OpKind::Quantize => {
+            n.inputs.first().is_some_and(|&i| lineages[i].dtype == Dtype::Fp8)
+        }
+        _ => false,
+    }
+}
+
+/// The graph's cast/requant counters, re-derived as lineage queries. The
+/// counter methods on [`DataflowGraph`] delegate here, so the Fig. 2
+/// numbers the tests pin and the analyzer's view are one computation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CastSummary {
+    /// All explicit cast launches (conversion-class nodes).
+    pub casts_total: usize,
+    /// Explicit casts on the forward layer path (optimizer tail excluded).
+    pub casts_fwd: usize,
+    /// Explicit casts on the backward path.
+    pub casts_bwd: usize,
+    /// Explicit casts in the optimizer tail.
+    pub casts_opt: usize,
+    /// Backward requantizations of already-FP8 data ([`is_requant`]).
+    pub requants_bwd: usize,
+    /// Optimizer-tail requantizations of already-FP8 data.
+    pub requants_opt: usize,
+    /// Total Q/DQ events, counting the two hidden inside each naive
+    /// transpose (fused in-kernel quantizations are *not* standalone
+    /// events and are excluded, matching the executed accounting).
+    pub qdq_events: usize,
+}
+
+impl CastSummary {
+    /// Compute the summary for `g` from its propagated lineages.
+    pub fn of(g: &DataflowGraph) -> CastSummary {
+        let lin = propagate(g);
+        let mut s = CastSummary::default();
+        for n in &g.nodes {
+            if classify(n.op) == OpClass::Conversion {
+                s.casts_total += 1;
+                if !n.backward && n.stage != Stage::Optimizer {
+                    s.casts_fwd += 1;
+                }
+                if n.backward {
+                    s.casts_bwd += 1;
+                }
+                if n.stage == Stage::Optimizer {
+                    s.casts_opt += 1;
+                }
+            }
+            if is_requant(n, &lin) {
+                if n.backward {
+                    s.requants_bwd += 1;
+                }
+                if n.stage == Stage::Optimizer {
+                    s.requants_opt += 1;
+                }
+            }
+            s.qdq_events += n.op.internal_qdq()
+                + usize::from(matches!(n.op, OpKind::Quantize | OpKind::Dequantize));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::{build, Variant};
+
+    #[test]
+    fn dequantize_preserves_generation() {
+        let mut g = DataflowGraph::new("dq");
+        let x = g.add("x", OpKind::Input, Stage::Router, false, Dtype::Bf16, &[]);
+        let q = g.add("q", OpKind::Quantize, Stage::Dispatch, false, Dtype::Fp8, &[x]);
+        let d = g.add("d", OpKind::Dequantize, Stage::Dispatch, false, Dtype::Bf16, &[q]);
+        let q2 = g.add("q2", OpKind::Quantize, Stage::Fc1, false, Dtype::Fp8, &[d]);
+        let lin = propagate(&g);
+        assert_eq!(lin[q].qgen, 1);
+        assert_eq!(lin[d].qgen, 1, "DQ must not launder the history");
+        assert_eq!(lin[d].dtype, Dtype::Bf16);
+        assert_eq!(lin[q2].qgen, 2, "Q after DQ is a double quantization");
+        assert_eq!(lin[q2].origin, Some(q), "origin is the FIRST quantize");
+        assert!(matches!(lin[q2].events.last(), Some(QuantEvent::Requantized { .. })));
+    }
+
+    #[test]
+    fn compute_resets_lineage() {
+        let mut g = DataflowGraph::new("fresh");
+        let x = g.add("x", OpKind::Input, Stage::Router, false, Dtype::Bf16, &[]);
+        let q = g.add("q", OpKind::Quantize, Stage::Fc1, false, Dtype::Fp8, &[x]);
+        let mm = g.add("gemm", OpKind::GroupedGemm, Stage::Fc1, false, Dtype::Bf16, &[q]);
+        let lin = propagate(&g);
+        assert_eq!(lin[mm].qgen, 0, "a GEMM output is a fresh value");
+        assert!(lin[mm].events.is_empty());
+    }
+
+    #[test]
+    fn transposes_flip_the_axis() {
+        let mut g = DataflowGraph::new("axis");
+        let x = g.add("x", OpKind::Input, Stage::Router, false, Dtype::Bf16, &[]);
+        let q = g.add("q", OpKind::Quantize, Stage::Fc1, false, Dtype::Fp8, &[x]);
+        let dt = g.add("dt", OpKind::DirectTranspose, Stage::Fc1, true, Dtype::Fp8, &[q]);
+        let nt = g.add("nt", OpKind::NaiveTransposeRequant, Stage::Fc1, true, Dtype::Fp8, &[q]);
+        let lin = propagate(&g);
+        assert_eq!(lin[q].axis, Some(ScaleAxis::RowWise));
+        assert_eq!(lin[dt].axis, Some(ScaleAxis::ColWise));
+        assert_eq!(lin[dt].qgen, 1, "direct transpose adds no generation");
+        assert_eq!(lin[nt].axis, Some(ScaleAxis::ColWise));
+        assert_eq!(lin[nt].qgen, 2, "naive transpose requantizes");
+    }
+
+    #[test]
+    fn summary_matches_pinned_fig2_numbers() {
+        // the lineage re-derivation must reproduce the Fig. 2 headline
+        let s = CastSummary::of(&build(Variant::Fp8Flow));
+        assert_eq!((s.casts_total, s.casts_fwd, s.casts_bwd), (2, 1, 1));
+        assert_eq!(s.requants_bwd, 0);
+        let s = CastSummary::of(&build(Variant::DeepSeekV3));
+        assert_eq!((s.casts_total, s.casts_fwd, s.casts_bwd), (12, 6, 6));
+        assert_eq!(s.requants_bwd, 2);
+    }
+}

@@ -1,0 +1,35 @@
+//! Scale-lineage static analysis over the Fig. 2 dataflow graphs.
+//!
+//! The paper's core hazard — double quantization error from tensors
+//! quantized along inconsistent axes (Eq. 4) — is a *structural* property
+//! of the dataflow graph, so it can be caught before any kernel runs.
+//! This module is that gate, in three layers:
+//!
+//! * [`lineage`] — an abstract interpreter: one pass over the graph
+//!   propagating a per-edge [`Lineage`] (dtype, scale axis, originating
+//!   quantize node, quantization-generation count, sidecar presence, and
+//!   the ordered event history). [`CastSummary`] re-derives the graph's
+//!   cast/requant counters as lineage queries — the counter methods on
+//!   `DataflowGraph` delegate here, so the schematic numbers and the
+//!   lint verdicts are one computation.
+//! * [`rules`] — the rule engine (`SL001`–`SL009`): structured
+//!   [`Diagnostic`]s with stable ids, severities, and lineage traces like
+//!   "quantized row-wise at n5, requantized col-wise at n12". Errors mark
+//!   structurally invalid graphs (the lint gate); warnings mark the
+//!   numeric hazards the incumbent recipes knowingly ship. The Fp8Flow
+//!   graphs produce zero of either.
+//! * [`report`] — the static↔runtime bridge: [`ExecPrediction`] scales
+//!   each schematic node by its `units × Mult` multiplicity to predict
+//!   the executed cast/requant audits, and [`cross_check`] fails the
+//!   build (`SL009`) if the runtime disagrees with the 12→2 story.
+//!
+//! Entry points: [`lint_graph`] for one graph, the `lint` CLI subcommand
+//! for the full recipe sweep (`runs/lint.json`).
+
+pub mod lineage;
+pub mod report;
+pub mod rules;
+
+pub use lineage::{classify, is_requant, propagate, CastSummary, Lineage, OpClass, QuantEvent};
+pub use report::{cross_check, diagnostics_to_json, instance_ledger, ExecPrediction, ExecutedAudit};
+pub use rules::{lint_graph, tally, Diagnostic, RuleId, Severity};

@@ -1,0 +1,212 @@
+//! Executed-count prediction and the static↔runtime cross-check.
+//!
+//! The schematic graphs draw one node per logical op; the executed layer
+//! launches each once per routed slot and/or per expert. Every [`Node`]
+//! carries its multiplicity model (`units` × [`Mult`]), so the analyzer
+//! can *predict* the executed cast/requant audits — `FwdStash::cast_ops`,
+//! `BwdStats`, `WeightPrepStats`, `TrainMetrics` — from the graph alone.
+//! [`cross_check`] compares a prediction against an executed audit and
+//! emits an `SL009` error per divergent counter: the static pass and the
+//! runtime must agree on the 12→2 story or the lint gate fails.
+//!
+//! One deliberate asymmetry: the executed weight prep
+//! (`PreparedWeights::requantize_from_masters`) is **master-sourced for
+//! every FP8 recipe** — both GEMM layouts are quantized straight from the
+//! f32 masters, never derived by requantization. The incumbent *graphs*
+//! (TeBlockwise/DeepSeekV3) draw the storage-derived tail the recipes
+//! describe on paper (Q then naive-T). Executed audits are therefore
+//! checked against the master-sourced (Fp8Flow-tail) prediction for every
+//! FP8 recipe; the incumbent tails remain as schematic foils the lint
+//! flags (`SL001`).
+
+use crate::analysis::lineage::{classify, is_requant, propagate, OpClass};
+use crate::analysis::rules::{Diagnostic, RuleId};
+use crate::dataflow::graph::{DataflowGraph, Mult, Node, Stage};
+use crate::util::json::Json;
+
+/// Analyzer-predicted executed cast/requant counts for one graph at a
+/// given `(experts, top_k)` shape.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExecPrediction {
+    /// Forward-path explicit casts (`FwdStash::cast_ops`).
+    pub casts_fwd: usize,
+    /// Backward-path explicit casts (`BwdStats::casts`).
+    pub casts_bwd: usize,
+    /// Backward-path requantizations (`BwdStats::requants`).
+    pub requants_bwd: usize,
+    /// Optimizer-tail weight quantizations (`WeightPrepStats::weight_quants`).
+    pub opt_weight_quants: usize,
+    /// Optimizer-tail requantizations (`WeightPrepStats::requants`).
+    pub opt_requants: usize,
+}
+
+impl ExecPrediction {
+    /// Predict the executed audits of `g` for `experts` experts and
+    /// `top_k` routed slots: each node contributes
+    /// `units × mult.count(experts, top_k)` kernel instances to the
+    /// counter its lineage class lands in.
+    pub fn of(g: &DataflowGraph, experts: usize, top_k: usize) -> ExecPrediction {
+        let lin = propagate(g);
+        let mut p = ExecPrediction::default();
+        for n in &g.nodes {
+            let inst = n.units * n.mult.count(experts, top_k);
+            let requant = is_requant(n, &lin);
+            if requant {
+                if n.stage == Stage::Optimizer {
+                    p.opt_requants += inst;
+                } else if n.backward {
+                    p.requants_bwd += inst;
+                }
+            }
+            if classify(n.op) == OpClass::Conversion && !requant {
+                if n.stage == Stage::Optimizer {
+                    p.opt_weight_quants += inst;
+                } else if n.backward {
+                    p.casts_bwd += inst;
+                } else {
+                    p.casts_fwd += inst;
+                }
+            }
+        }
+        p
+    }
+
+    /// JSON rendering for `runs/lint.json`.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("casts_fwd", self.casts_fwd)
+            .set("casts_bwd", self.casts_bwd)
+            .set("requants_bwd", self.requants_bwd)
+            .set("opt_weight_quants", self.opt_weight_quants)
+            .set("opt_requants", self.opt_requants)
+    }
+}
+
+/// Counts observed by actually running the layer/trainer — the
+/// ground-truth side of [`cross_check`]. Same fields and units as
+/// [`ExecPrediction`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExecutedAudit {
+    /// Forward-path explicit casts (`FwdStash::cast_ops`).
+    pub casts_fwd: usize,
+    /// Backward-path explicit casts (`BwdStats::casts`).
+    pub casts_bwd: usize,
+    /// Backward-path requantizations (`BwdStats::requants`).
+    pub requants_bwd: usize,
+    /// Optimizer-tail weight quantizations (`WeightPrepStats::weight_quants`).
+    pub opt_weight_quants: usize,
+    /// Optimizer-tail requantizations (`WeightPrepStats::requants`).
+    pub opt_requants: usize,
+}
+
+/// Compare a static prediction against an executed audit; one `SL009`
+/// error diagnostic per divergent counter (empty when they agree).
+pub fn cross_check(
+    recipe: &str,
+    predicted: &ExecPrediction,
+    executed: &ExecutedAudit,
+) -> Vec<Diagnostic> {
+    let pairs = [
+        ("casts_fwd", predicted.casts_fwd, executed.casts_fwd),
+        ("casts_bwd", predicted.casts_bwd, executed.casts_bwd),
+        ("requants_bwd", predicted.requants_bwd, executed.requants_bwd),
+        ("opt_weight_quants", predicted.opt_weight_quants, executed.opt_weight_quants),
+        ("opt_requants", predicted.opt_requants, executed.opt_requants),
+    ];
+    pairs
+        .iter()
+        .filter(|(_, p, x)| p != x)
+        .map(|(field, p, x)| Diagnostic {
+            rule: RuleId::AuditDivergence,
+            severity: RuleId::AuditDivergence.severity(),
+            node: None,
+            node_name: String::new(),
+            stage: None,
+            backward: false,
+            message: format!(
+                "{recipe}: analyzer predicts {field} = {p} but the executed audit \
+                 reports {x} — the static pass and the runtime disagree"
+            ),
+            trace: String::new(),
+        })
+        .collect()
+}
+
+/// Render a diagnostic list as a JSON array (for `runs/lint.json`).
+pub fn diagnostics_to_json(diags: &[Diagnostic]) -> Json {
+    Json::Arr(
+        diags
+            .iter()
+            .map(|d| {
+                let mut j = Json::obj()
+                    .set("rule", d.rule.code())
+                    .set("name", d.rule.name())
+                    .set("severity", d.severity.word());
+                if let Some(id) = d.node {
+                    j = j
+                        .set("node", id)
+                        .set("node_name", d.node_name.as_str())
+                        .set("stage", format!("{:?}", d.stage.expect("anchored")))
+                        .set("backward", d.backward);
+                }
+                j = j.set("message", d.message.as_str());
+                if !d.trace.is_empty() {
+                    j = j.set("lineage", d.trace.as_str());
+                }
+                j
+            })
+            .collect(),
+    )
+}
+
+/// The analyzer's multiplicity ledger for one graph: per-node instance
+/// counts at a given shape (debugging aid for the `lint -v` listing).
+pub fn instance_ledger(g: &DataflowGraph, experts: usize, top_k: usize) -> Vec<(usize, usize)> {
+    g.nodes.iter().map(|n| (n.id, instances(n, experts, top_k))).collect()
+}
+
+fn instances(n: &Node, experts: usize, top_k: usize) -> usize {
+    n.units * n.mult.count(experts, top_k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::{build, build_train_step, Variant};
+
+    #[test]
+    fn predictions_reproduce_the_executed_algebra() {
+        let (e, k) = (8, 2);
+        let p = ExecPrediction::of(&build(Variant::TeBlockwise), e, k);
+        assert_eq!(p.casts_fwd, 2 * e * k, "Q(x) + Q(act) per expert per slot");
+        assert_eq!(p.casts_bwd, 3 * e * k, "Q(dy) + Q(d_gate) + Q(d_up)");
+        assert_eq!(p.requants_bwd, 5 * e * k, "five naive wgrad-operand transposes");
+        let p = ExecPrediction::of(&build(Variant::Fp8Flow), e, k);
+        assert_eq!((p.casts_fwd, p.casts_bwd, p.requants_bwd), (1, k, 0));
+        let p = ExecPrediction::of(&build(Variant::Bf16), e, k);
+        assert_eq!(p, ExecPrediction::default());
+    }
+
+    #[test]
+    fn train_tail_predictions() {
+        let e = 4;
+        let p = ExecPrediction::of(&build_train_step(Variant::Fp8Flow), e, 1);
+        assert_eq!((p.opt_weight_quants, p.opt_requants), (6 * e, 0));
+        let p = ExecPrediction::of(&build_train_step(Variant::TeBlockwise), e, 1);
+        assert_eq!((p.opt_weight_quants, p.opt_requants), (3 * e, 3 * e));
+        let p = ExecPrediction::of(&build_train_step(Variant::Bf16), e, 1);
+        assert_eq!((p.opt_weight_quants, p.opt_requants), (0, 0));
+    }
+
+    #[test]
+    fn cross_check_flags_each_divergent_field() {
+        let p = ExecPrediction { casts_fwd: 1, casts_bwd: 2, ..Default::default() };
+        let ok = ExecutedAudit { casts_fwd: 1, casts_bwd: 2, ..Default::default() };
+        assert!(cross_check("fp8flow", &p, &ok).is_empty());
+        let bad = ExecutedAudit { casts_fwd: 12, casts_bwd: 2, ..Default::default() };
+        let d = cross_check("fp8flow", &p, &bad);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, RuleId::AuditDivergence);
+        assert!(d[0].message.contains("casts_fwd"));
+    }
+}

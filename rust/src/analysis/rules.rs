@@ -1,0 +1,414 @@
+//! The rule engine: structured diagnostics over propagated lineages.
+//!
+//! Each rule has a stable id (`SL001`…), a fixed severity, and fires on a
+//! structural pattern in the graph + lineage. The severity split is
+//! deliberate:
+//!
+//! * **Error** — the graph is structurally invalid (undecodable wire
+//!   payloads, dequantizing dense data, orphan nodes, type-confused
+//!   kernels). No shipped variant contains one; the `lint` CLI exits
+//!   nonzero on any.
+//! * **Warning** — numerically hazardous but executable: the known
+//!   double-quantization sites the incumbent recipes knowingly ship
+//!   (naive transposes, re-quantization after a wire dequant, BF16
+//!   islands). The Fp8Flow graphs produce **zero** of either.
+
+use crate::analysis::lineage::{classify, propagate, Lineage, OpClass, QuantEvent};
+use crate::dataflow::graph::{DataflowGraph, Dtype, Node, OpKind, ScaleAxis, Stage};
+
+/// Diagnostic severity. `Error` fails the lint gate; `Warning` documents
+/// a numeric hazard without failing the build.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Numerically hazardous but executable.
+    Warning,
+    /// Structurally invalid — fails the lint gate.
+    Error,
+}
+
+impl Severity {
+    /// Lowercase display form ("warning"/"error").
+    pub fn word(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// Stable rule identifiers of the scale-lineage analyzer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RuleId {
+    /// SL001: (re)quantization of data whose lineage already carries a
+    /// quantization generation — the paper's double-quantization error.
+    DoubleQuant,
+    /// SL002: a GEMM consuming FP8 operands whose scale axes disagree
+    /// (e.g. a wgrad mixing a row-wise gradient with a requantized
+    /// col-wise operand).
+    AxisMismatchGemm,
+    /// SL003: a dequantize whose input is not FP8.
+    DequantNonFp8,
+    /// SL004: a dequantize directly consuming a quantize — a redundant
+    /// Q→DQ pair (pure rounding loss, no work in between).
+    RedundantQdq,
+    /// SL005: FP8 payload crossing an `AllToAll` without its scale
+    /// sidecar — undecodable on the receiving rank.
+    MissingSidecar,
+    /// SL006: an op applied to an input of the wrong element type
+    /// (quantizing FP8, activating FP8 codes, naive-transposing dense
+    /// data, a GEMM mixing FP8 and dense operands).
+    DtypeMismatch,
+    /// SL007: a dense compute op inside the Fc1→Act→Fc2 span of an FP8
+    /// graph — a BF16 island beyond the two legal GEMM-accumulator
+    /// exceptions of §3.2.
+    Bf16Island,
+    /// SL008: a non-source node with no inputs.
+    OrphanNode,
+    /// SL009: the static prediction and an executed audit disagree
+    /// (emitted by [`crate::analysis::cross_check`], not by the graph
+    /// walk).
+    AuditDivergence,
+}
+
+impl RuleId {
+    /// Stable code string (diagnostic listings, `runs/lint.json`).
+    pub fn code(self) -> &'static str {
+        match self {
+            RuleId::DoubleQuant => "SL001",
+            RuleId::AxisMismatchGemm => "SL002",
+            RuleId::DequantNonFp8 => "SL003",
+            RuleId::RedundantQdq => "SL004",
+            RuleId::MissingSidecar => "SL005",
+            RuleId::DtypeMismatch => "SL006",
+            RuleId::Bf16Island => "SL007",
+            RuleId::OrphanNode => "SL008",
+            RuleId::AuditDivergence => "SL009",
+        }
+    }
+
+    /// Short name used in listings.
+    pub fn name(self) -> &'static str {
+        match self {
+            RuleId::DoubleQuant => "double-quantization",
+            RuleId::AxisMismatchGemm => "gemm-axis-mismatch",
+            RuleId::DequantNonFp8 => "dequant-of-dense",
+            RuleId::RedundantQdq => "redundant-q-dq",
+            RuleId::MissingSidecar => "missing-scale-sidecar",
+            RuleId::DtypeMismatch => "dtype-mismatch",
+            RuleId::Bf16Island => "bf16-island",
+            RuleId::OrphanNode => "orphan-node",
+            RuleId::AuditDivergence => "audit-divergence",
+        }
+    }
+
+    /// Fixed severity of the rule.
+    pub fn severity(self) -> Severity {
+        match self {
+            RuleId::DoubleQuant
+            | RuleId::AxisMismatchGemm
+            | RuleId::RedundantQdq
+            | RuleId::Bf16Island => Severity::Warning,
+            RuleId::DequantNonFp8
+            | RuleId::MissingSidecar
+            | RuleId::DtypeMismatch
+            | RuleId::OrphanNode
+            | RuleId::AuditDivergence => Severity::Error,
+        }
+    }
+}
+
+/// One analyzer finding.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// Which rule fired.
+    pub rule: RuleId,
+    /// Severity (== `rule.severity()`, denormalized for rendering).
+    pub severity: Severity,
+    /// Offending node id, when the finding anchors to one node.
+    pub node: Option<usize>,
+    /// Offending node's display name (empty for graph-level findings).
+    pub node_name: String,
+    /// Stage of the offending node.
+    pub stage: Option<Stage>,
+    /// Was the offending node on the backward path?
+    pub backward: bool,
+    /// Human-readable explanation.
+    pub message: String,
+    /// Lineage trace of the offending value, e.g. "quantized row-wise at
+    /// n5 (Q(x) fc1-in), requantized col-wise at n12 (x naive-T)".
+    pub trace: String,
+}
+
+impl Diagnostic {
+    fn at(rule: RuleId, n: &Node, message: String, trace: String) -> Diagnostic {
+        Diagnostic {
+            rule,
+            severity: rule.severity(),
+            node: Some(n.id),
+            node_name: n.name.clone(),
+            stage: Some(n.stage),
+            backward: n.backward,
+            message,
+            trace,
+        }
+    }
+
+    /// One-line rendering: `SL001 warning [bwd Fc2 n17 'act naive-T'] …`.
+    pub fn render(&self) -> String {
+        let mut s = format!("{} {:<7}", self.rule.code(), self.severity.word());
+        if let Some(id) = self.node {
+            s.push_str(&format!(
+                " [{} {:<10} n{id} '{}']",
+                if self.backward { "bwd" } else { "fwd" },
+                format!("{:?}", self.stage.expect("anchored diagnostic has a stage")),
+                self.node_name
+            ));
+        }
+        s.push_str(&format!(" {}", self.message));
+        if !self.trace.is_empty() {
+            s.push_str(&format!("\n      lineage: {}", self.trace));
+        }
+        s
+    }
+}
+
+/// Render a lineage's event history as a trace string.
+fn trace_of(l: &Lineage, g: &DataflowGraph) -> String {
+    let step = |e: &QuantEvent| match *e {
+        QuantEvent::Quantized { node, axis } => {
+            format!("quantized {} at n{node} ({})", axis.word(), g.nodes[node].name)
+        }
+        QuantEvent::Requantized { node, axis } => {
+            format!("requantized {} at n{node} ({})", axis.word(), g.nodes[node].name)
+        }
+        QuantEvent::Dequantized { node } => {
+            format!("dequantized at n{node} ({})", g.nodes[node].name)
+        }
+    };
+    l.events.iter().map(step).collect::<Vec<_>>().join(", ")
+}
+
+/// Run every graph rule over `g` and return the findings in node order.
+pub fn lint_graph(g: &DataflowGraph) -> Vec<Diagnostic> {
+    let lin = propagate(g);
+    let uses_fp8 = g.nodes.iter().any(|n| n.out_dtype == Dtype::Fp8);
+    let mut out = Vec::new();
+    for n in &g.nodes {
+        let in_lin = n.inputs.first().map(|&i| &lin[i]);
+
+        // SL008 — a non-source node with nothing to consume
+        if n.op != OpKind::Input && n.inputs.is_empty() {
+            out.push(Diagnostic::at(
+                RuleId::OrphanNode,
+                n,
+                format!("non-source op {:?} has no inputs", n.op),
+                String::new(),
+            ));
+            continue; // every other rule needs an input lineage
+        }
+
+        // SL001 — explicit (re)quantization of already-quantized data
+        if matches!(n.op, OpKind::Quantize | OpKind::NaiveTransposeRequant) {
+            if let Some(l) = in_lin {
+                if l.qgen >= 1 {
+                    let new_axis = lin[n.id].axis.expect("quantizer output has an axis");
+                    let relation = match l.axis {
+                        Some(a) if a != new_axis => format!(
+                            "re-quantizes {} after {} — cross-axis double \
+                             quantization (the Eq. 4 error term)",
+                            new_axis.word(),
+                            a.word()
+                        ),
+                        _ => format!(
+                            "re-quantizes {} along the same axis — benign only \
+                             for exact power-of-two scales (Eq. 5–8)",
+                            new_axis.word()
+                        ),
+                    };
+                    out.push(Diagnostic::at(
+                        RuleId::DoubleQuant,
+                        n,
+                        format!(
+                            "input already carries quantization generation {}; {relation}",
+                            l.qgen
+                        ),
+                        trace_of(&lin[n.id], g),
+                    ));
+                }
+            }
+        }
+
+        // SL002 — GEMM operands with disagreeing scale axes
+        if n.op == OpKind::GroupedGemm {
+            let axes: Vec<(usize, ScaleAxis)> = n
+                .inputs
+                .iter()
+                .filter_map(|&i| {
+                    (lin[i].dtype == Dtype::Fp8).then(|| lin[i].axis.map(|a| (i, a))).flatten()
+                })
+                .collect();
+            if axes.len() >= 2 && axes.iter().any(|&(_, a)| a != axes[0].1) {
+                let desc = axes
+                    .iter()
+                    .map(|&(i, a)| format!("n{i} ({}) {}", g.nodes[i].name, a.word()))
+                    .collect::<Vec<_>>()
+                    .join(" vs ");
+                out.push(Diagnostic::at(
+                    RuleId::AxisMismatchGemm,
+                    n,
+                    format!("FP8 operands scaled along different axes: {desc}"),
+                    n.inputs
+                        .iter()
+                        .map(|&i| trace_of(&lin[i], g))
+                        .filter(|t| !t.is_empty())
+                        .collect::<Vec<_>>()
+                        .join(" | "),
+                ));
+            }
+        }
+
+        // SL003 / SL004 — dequantize sanity
+        if n.op == OpKind::Dequantize {
+            if let Some(l) = in_lin {
+                if l.dtype != Dtype::Fp8 {
+                    out.push(Diagnostic::at(
+                        RuleId::DequantNonFp8,
+                        n,
+                        format!("dequantize applied to {:?} input (expects FP8)", l.dtype),
+                        trace_of(l, g),
+                    ));
+                } else if n.inputs.first().is_some_and(|&i| g.nodes[i].op == OpKind::Quantize) {
+                    out.push(Diagnostic::at(
+                        RuleId::RedundantQdq,
+                        n,
+                        "dequantize directly consumes a quantize — a redundant Q→DQ \
+                         pair (pure rounding loss, no work in between)"
+                            .to_string(),
+                        trace_of(&lin[n.id], g),
+                    ));
+                }
+            }
+        }
+
+        // SL005 — FP8 on the wire without its scales
+        if n.op == OpKind::AllToAll && n.out_dtype == Dtype::Fp8 && !n.sidecar {
+            out.push(Diagnostic::at(
+                RuleId::MissingSidecar,
+                n,
+                "FP8 payload crosses the all-to-all without its scale sidecar — \
+                 undecodable on the receiving rank"
+                    .to_string(),
+                in_lin.map(|l| trace_of(l, g)).unwrap_or_default(),
+            ));
+        }
+
+        // SL006 — element-type confusion at op inputs
+        if let Some(l) = in_lin {
+            let bad = match n.op {
+                OpKind::Quantize
+                | OpKind::FusedSwiGluQuant
+                | OpKind::FusedSwiGluBwdQuant
+                | OpKind::SwiGlu
+                | OpKind::SwiGluBwd
+                | OpKind::Cast => (l.dtype == Dtype::Fp8)
+                    .then(|| format!("{:?} expects a dense input, got FP8 codes", n.op)),
+                OpKind::NaiveTransposeRequant => (l.dtype != Dtype::Fp8).then(|| {
+                    format!("naive transpose-requant expects FP8 input, got {:?}", l.dtype)
+                }),
+                OpKind::GroupedGemm => {
+                    let has_fp8 = n.inputs.iter().any(|&i| lin[i].dtype == Dtype::Fp8);
+                    let has_dense = n.inputs.iter().any(|&i| lin[i].dtype != Dtype::Fp8);
+                    (has_fp8 && has_dense).then(|| {
+                        "GEMM mixes FP8 and dense operands in one kernel".to_string()
+                    })
+                }
+                _ => None,
+            };
+            if let Some(msg) = bad {
+                out.push(Diagnostic::at(
+                    RuleId::DtypeMismatch,
+                    n,
+                    msg,
+                    trace_of(l, g),
+                ));
+            }
+        }
+
+        // SL007 — dense compute inside the quantized expert span
+        if uses_fp8
+            && matches!(n.stage, Stage::Fc1 | Stage::Activation | Stage::Fc2)
+            && n.out_dtype != Dtype::Fp8
+            && classify(n.op) == OpClass::Compute
+            && n.op != OpKind::GroupedGemm
+        {
+            out.push(Diagnostic::at(
+                RuleId::Bf16Island,
+                n,
+                format!(
+                    "dense {:?} inside the Fc1→Act→Fc2 span of an FP8 graph — a BF16 \
+                     island beyond the two legal GEMM-accumulator exceptions (§3.2)",
+                    n.op
+                ),
+                in_lin.map(|l| trace_of(l, g)).unwrap_or_default(),
+            ));
+        }
+    }
+    out
+}
+
+/// Count `(errors, warnings)` in a diagnostic set.
+pub fn tally(diags: &[Diagnostic]) -> (usize, usize) {
+    let errors = diags.iter().filter(|d| d.severity == Severity::Error).count();
+    (errors, diags.len() - errors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::{build, build_train_step, Variant};
+
+    fn codes(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.rule.code()).collect()
+    }
+
+    #[test]
+    fn fp8flow_and_bf16_are_clean() {
+        for v in [Variant::Fp8Flow, Variant::Bf16] {
+            assert!(lint_graph(&build(v)).is_empty(), "{} layer", v.name());
+            assert!(lint_graph(&build_train_step(v)).is_empty(), "{} train", v.name());
+        }
+    }
+
+    #[test]
+    fn blockwise_reproduces_known_findings() {
+        let diags = lint_graph(&build(Variant::TeBlockwise));
+        assert_eq!(
+            codes(&diags),
+            vec!["SL007", "SL001", "SL002", "SL007", "SL001", "SL002"],
+            "swiglu island, act naive-T, fc2-wgrad, swiglu-bwd island, x naive-T, fc1-wgrad"
+        );
+        assert_eq!(tally(&diags), (0, 6), "hazards, not structural errors");
+    }
+
+    #[test]
+    fn deepseek_flags_wire_requants_too() {
+        let diags = lint_graph(&build(Variant::DeepSeekV3));
+        let dq = diags.iter().filter(|d| d.rule == RuleId::DoubleQuant).count();
+        assert_eq!(dq, 4, "2 post-wire requants + 2 naive transposes");
+        assert_eq!(diags.len(), 8);
+        // the post-dispatch requant's trace tells the full story
+        let requant = diags.iter().find(|d| d.node_name == "Q(x) fc1-in").unwrap();
+        assert!(requant.trace.contains("quantized row-wise"), "{}", requant.trace);
+        assert!(requant.trace.contains("dequantized"), "{}", requant.trace);
+        assert!(requant.trace.contains("requantized"), "{}", requant.trace);
+    }
+
+    #[test]
+    fn incumbent_train_tail_adds_weight_requant_finding() {
+        let layer = lint_graph(&build(Variant::TeBlockwise)).len();
+        let step = lint_graph(&build_train_step(Variant::TeBlockwise));
+        assert_eq!(step.len(), layer + 1);
+        assert_eq!(step.last().unwrap().rule, RuleId::DoubleQuant);
+        assert_eq!(step.last().unwrap().node_name, "w naive-T dgrad-layout");
+    }
+}

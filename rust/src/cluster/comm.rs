@@ -13,22 +13,34 @@ use crate::cluster::topology::Layout;
 /// Wire precision of the all-to-all payload.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Wire {
+    /// 2-byte payload per element.
     Bf16,
+    /// 1-byte payload plus scale sidecar.
     Fp8,
 }
 
 /// One Table 1 measurement row.
 #[derive(Clone, Copy, Debug)]
 pub struct CommRow {
+    /// Token rows.
     pub m: usize,
+    /// Feature columns.
     pub n: usize,
+    /// EP group size.
     pub ep: usize,
+    /// BF16-wire all-to-all latency (ms).
     pub bf16_ms: f64,
+    /// Pre-wire quantize cost (ms).
     pub quant_ms: f64,
+    /// Post-wire dequantize cost (ms).
     pub dequant_ms: f64,
+    /// FP8-wire all-to-all latency alone (ms).
     pub fp8_comm_ms: f64,
+    /// FP8 end to end: quantize + wire + dequantize (ms).
     pub fp8_all_ms: f64,
+    /// BF16 over FP8, wire only.
     pub speedup_comm: f64,
+    /// BF16 over FP8, end to end.
     pub speedup_all: f64,
 }
 

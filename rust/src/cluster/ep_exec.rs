@@ -55,7 +55,9 @@ use crate::util::mat::Mat;
 pub struct EpConfig {
     /// Number of simulated ranks (expert shards).
     pub ranks: usize,
+    /// Routed experts per token.
     pub top_k: usize,
+    /// Per-expert row budget.
     pub capacity: usize,
     /// Total worker budget shared by all ranks (0 = resolve via
     /// [`crate::exec::threads`]). Each rank gets a disjoint share.
@@ -67,15 +69,22 @@ pub struct EpConfig {
 /// `epshard` CLI.
 #[derive(Clone, Copy, Debug)]
 pub struct EpShape {
+    /// Token rows.
     pub tokens: usize,
+    /// Model width.
     pub d_model: usize,
+    /// Per-expert FFN hidden size.
     pub ffn: usize,
+    /// Expert count.
     pub n_experts: usize,
+    /// Routed experts per token.
     pub top_k: usize,
+    /// Per-expert row budget.
     pub capacity: usize,
 }
 
 impl EpShape {
+    /// Derive the shape from an input/weights/config triple.
     pub fn of(x: &Mat, w: &PreparedWeights, cfg: &EpConfig) -> EpShape {
         EpShape {
             tokens: x.rows,
@@ -92,14 +101,20 @@ impl EpShape {
 /// top-k slots; route and entry-quant run once).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StageTimes {
+    /// Router seconds.
     pub route_s: f64,
+    /// Entry-quantization seconds.
     pub quant_s: f64,
+    /// Dispatch (permute + wire) seconds.
     pub dispatch_s: f64,
+    /// Expert GEMM seconds.
     pub expert_s: f64,
+    /// Combine (wire + unpermute) seconds.
     pub combine_s: f64,
 }
 
 impl StageTimes {
+    /// Sum of all stages.
     pub fn total_s(&self) -> f64 {
         self.route_s + self.quant_s + self.dispatch_s + self.expert_s + self.combine_s
     }
@@ -108,9 +123,13 @@ impl StageTimes {
 /// Result of one executed EP-sharded forward: the output plus the
 /// measurements the simulator can only model.
 pub struct EpForward {
+    /// Layer output `[t, d]`.
     pub y: Mat,
+    /// Load-balancing aux loss.
     pub aux_loss: f32,
+    /// Rank count the forward ran with.
     pub ranks: usize,
+    /// Per-stage wall-clock seconds.
     pub stages: StageTimes,
     /// Per-rank expert-stage seconds (summed over slots) — the load
     /// imbalance the capacity model hides.
@@ -303,7 +322,9 @@ pub fn ep_forward(x: &Mat, w: &PreparedWeights, cfg: &EpConfig) -> EpForward {
 /// Result of one executed EP-sharded backward: the gradients plus the
 /// wire measurements (the reverse-direction all-to-all).
 pub struct EpBackward {
+    /// The full layer gradients.
     pub grads: MoeGrads,
+    /// Rank count the backward ran with.
     pub ranks: usize,
     /// Per-rank expert-backward seconds (summed over slots).
     pub rank_expert_s: Vec<f64>,

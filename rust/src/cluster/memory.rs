@@ -38,27 +38,36 @@ pub struct Workload {
     pub n_micro: usize,
 }
 
+/// The paper's training workload: seq 4096, 64 microbatches.
 pub const DEFAULT_WORKLOAD: Workload = Workload { seq: 4096, micro_batch: 1, n_micro: 64 };
 
 /// Memory report (bytes).
 #[derive(Clone, Copy, Debug)]
 pub struct MemReport {
+    /// Parameter bytes.
     pub params: u64,
+    /// Optimizer-state bytes.
     pub optimizer: u64,
+    /// Gradient bytes.
     pub gradients: u64,
+    /// Activation bytes (checkpoint-aware).
     pub activations: u64,
+    /// Workspace and fragmentation bytes.
     pub workspace: u64,
 }
 
 impl MemReport {
+    /// Total bytes.
     pub fn total(&self) -> u64 {
         self.params + self.optimizer + self.gradients + self.activations + self.workspace
     }
 
+    /// Total in GiB.
     pub fn total_gb(&self) -> f64 {
         self.total() as f64 / (1u64 << 30) as f64
     }
 
+    /// Does the total exceed the layout's HBM capacity?
     pub fn oom(&self, l: &Layout) -> bool {
         self.total() > l.hw.hbm_bytes
     }

@@ -4,17 +4,23 @@
 /// Transformer/MoE shape parameters (decoder-only, MoE FFN).
 #[derive(Clone, Copy, Debug)]
 pub struct ModelCfg {
+    /// Model label.
     pub name: &'static str,
+    /// Total decoder layers.
     pub n_layers: usize,
     /// Layers with MoE FFN (the rest are dense).
     pub n_moe_layers: usize,
+    /// Model width.
     pub d_model: usize,
     /// Per-expert FFN hidden size.
     pub moe_ffn: usize,
     /// Dense-FFN hidden (first layers / shared).
     pub dense_ffn: usize,
+    /// Routed experts per MoE layer.
     pub n_experts: usize,
+    /// Always-active shared experts.
     pub n_shared_experts: usize,
+    /// Routed experts per token.
     pub top_k: usize,
     /// Total parameter count (for memory accounting), in billions.
     pub params_b: f64,

@@ -27,7 +27,9 @@ use std::time::Instant;
 /// What one rank body knows about itself.
 #[derive(Clone, Copy, Debug)]
 pub struct RankCtx {
+    /// This rank's index.
     pub rank: usize,
+    /// Total rank count.
     pub n_ranks: usize,
     /// Worker budget for kernels called inside this rank's body
     /// (pass to the `*_with_threads` kernel forms).
@@ -60,6 +62,7 @@ impl RankGroup {
         RankGroup { group: WorkerGroup::new(n_ranks, total) }
     }
 
+    /// Number of simulated ranks.
     pub fn n_ranks(&self) -> usize {
         self.group.len()
     }

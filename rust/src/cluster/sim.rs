@@ -23,18 +23,27 @@ use crate::moe::layer::Recipe;
 /// Result of one simulated configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct SimResult {
+    /// EP group size.
     pub ep: usize,
+    /// Pipeline stages.
     pub pp: usize,
     /// tokens / GPU / second.
     pub tgs: f64,
+    /// Modeled memory footprint (GiB).
     pub mem_gb: f64,
+    /// Does the footprint exceed HBM?
     pub oom: bool,
+    /// Modeled seconds per global step.
     pub step_s: f64,
+    /// Pipeline bubble fraction.
     pub bubble_frac: f64,
     /// per-microbatch stage decomposition (s)
     pub t_gemm: f64,
+    /// All-to-all seconds.
     pub t_comm: f64,
+    /// Data-movement (permute/pad) seconds.
     pub t_move: f64,
+    /// Explicit-cast seconds.
     pub t_cast: f64,
 }
 
@@ -201,8 +210,11 @@ pub fn simulate(m: &ModelCfg, ep: usize, pp: usize, recipe: Recipe, ac: AcMode) 
 /// plus the GEMM term for the per-rank expert work.
 #[derive(Clone, Copy, Debug)]
 pub struct ModeledEp {
+    /// Modeled dispatch all-to-all seconds.
     pub dispatch_s: f64,
+    /// Modeled per-rank expert GEMM seconds.
     pub expert_s: f64,
+    /// Modeled combine all-to-all seconds.
     pub combine_s: f64,
 }
 
@@ -316,6 +328,7 @@ pub const TABLE2_PAPER: [(&str, usize, f64, f64); 9] = [
     ("fp8flow", 32, 779.0, 49.0),
 ];
 
+/// Table 3 reference rows from the paper: `(recipe, EP, Some((TGS, MFU%)))`; `None` marks configurations the paper does not report.
 pub const TABLE3_PAPER: [(&str, usize, Option<(f64, f64)>); 9] = [
     ("bf16", 8, Some((1178.0, 64.0))),
     ("bf16", 16, Some((1055.0, 71.0))),

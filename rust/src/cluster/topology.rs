@@ -6,7 +6,9 @@
 /// Hardware parameters of the simulated cluster.
 #[derive(Clone, Copy, Debug)]
 pub struct Hardware {
+    /// GPUs per node.
     pub gpus_per_node: usize,
+    /// Node count.
     pub n_nodes: usize,
     /// HBM capacity per GPU (bytes).
     pub hbm_bytes: u64,
@@ -49,16 +51,21 @@ pub const H100_CLUSTER: Hardware = Hardware {
 /// An EP×PP parallel layout over the cluster.
 #[derive(Clone, Copy, Debug)]
 pub struct Layout {
+    /// Expert-parallel group size.
     pub ep: usize,
+    /// Pipeline-parallel stages.
     pub pp: usize,
+    /// Hardware parameters.
     pub hw: Hardware,
 }
 
 impl Layout {
+    /// Layout over the default H100-class cluster.
     pub fn new(ep: usize, pp: usize) -> Layout {
         Layout { ep, pp, hw: H100_CLUSTER }
     }
 
+    /// Total GPUs used.
     pub fn n_gpus(&self) -> usize {
         self.ep * self.pp
     }

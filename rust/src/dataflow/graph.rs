@@ -1,4 +1,11 @@
 //! Typed op-graph substrate for the Fig. 2 dataflow variants.
+//!
+//! Every [`Node`] carries scale-lineage metadata — declared scale axis,
+//! wire sidecar, and an execution-multiplicity model (`units` ×
+//! [`Mult`]) — consumed by the static analyzer in [`crate::analysis`].
+//! The cast/requant counters on [`DataflowGraph`] are thin wrappers over
+//! the analyzer's lineage queries ([`crate::analysis::CastSummary`]), so
+//! the schematic counts and the lint verdicts can never drift apart.
 
 use std::collections::BTreeMap;
 
@@ -13,20 +20,66 @@ pub enum Dtype {
     F32,
 }
 
-/// Pipeline stage of the MoE layer (§3.2 decomposition), plus the
-/// per-step optimizer tail of the training loop (master update + weight
-/// requantization — `dataflow::variants::build_train_step`).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
-pub enum Stage {
-    Router,
-    Dispatch,
-    Permute,
-    Fc1,
-    Activation,
-    Fc2,
-    Unperm,
-    Combine,
-    Optimizer,
+/// Scale-tile orientation of an FP8 value, mirroring the executed
+/// [`crate::fp8::tensor::TileLayout`]: `RowWise` scales tile along the
+/// rows (one scale per 1×128 row segment, the `quantize_rowwise` layout),
+/// `ColWise` along the columns (the orientation a transpose produces).
+/// `fp8_matmul` needs both operands tiled along the contraction axis —
+/// the invariant the analyzer's GEMM axis rule checks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleAxis {
+    /// Scale tiles run along rows (untransposed quantizer output).
+    RowWise,
+    /// Scale tiles run along columns (the transposed orientation).
+    ColWise,
+}
+
+impl ScaleAxis {
+    /// Orientation after a transpose (either kind — naive or direct).
+    pub fn flipped(self) -> ScaleAxis {
+        match self {
+            ScaleAxis::RowWise => ScaleAxis::ColWise,
+            ScaleAxis::ColWise => ScaleAxis::RowWise,
+        }
+    }
+
+    /// Human-readable form used in lineage traces ("row-wise"/"col-wise").
+    pub fn word(self) -> &'static str {
+        match self {
+            ScaleAxis::RowWise => "row-wise",
+            ScaleAxis::ColWise => "col-wise",
+        }
+    }
+}
+
+/// How many kernel instances one schematic node stands for when the
+/// graph executes with `E` experts and `K` routed slots (top-k). The
+/// Fig. 2 graphs draw one node per *logical* operation; the executed
+/// layer launches it once per slot and/or per expert — this is the
+/// bridge the analyzer uses to predict the executed
+/// `BwdStats`/`TrainMetrics` audits from the schematic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mult {
+    /// Fires once per layer pass (entry casts, wire ops).
+    Once,
+    /// Fires once per routed slot (`×K`) — per-slot backward entries.
+    PerSlot,
+    /// Fires once per expert per slot (`×E·K`) — expert-span kernels.
+    PerExpertSlot,
+    /// Fires once per expert (`×E`) — optimizer-tail weight casts.
+    PerExpert,
+}
+
+impl Mult {
+    /// Instance count for `experts` experts and `top_k` routed slots.
+    pub fn count(self, experts: usize, top_k: usize) -> usize {
+        match self {
+            Mult::Once => 1,
+            Mult::PerSlot => top_k,
+            Mult::PerExpertSlot => experts * top_k,
+            Mult::PerExpert => experts,
+        }
+    }
 }
 
 /// Operator kinds. `Quantize`/`Dequantize`/`Cast` are the *explicit* cast
@@ -34,27 +87,47 @@ pub enum Stage {
 /// compute kernel (not an explicit cast launch).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum OpKind {
+    /// Graph source: an external value entering the graph (layer input,
+    /// upstream gradient, master-weight gradient). The explicit source
+    /// marker [`DataflowGraph::validate`] keys on — never a kernel.
+    Input,
+    /// Standalone quantize launch (dense → FP8 codes + scales).
     Quantize,
+    /// Standalone dequantize launch (FP8 codes + scales → dense).
     Dequantize,
     /// bf16↔f32 boundary cast.
     Cast,
+    /// All-to-all wire exchange across EP ranks.
     AllToAll,
+    /// Token→expert-order gather.
     Permute,
+    /// Pad expert groups to capacity.
     Pad,
+    /// Fused permute+pad (single pass over the payload).
     FusedPermutePad,
+    /// Expert-order→token scatter.
     Unpermute,
+    /// Drop capacity padding.
     Unpad,
+    /// Fused unpermute+unpad (single pass).
     FusedUnpermuteUnpad,
+    /// Grouped (per-expert) GEMM.
     GroupedGemm,
+    /// Standalone SwiGLU activation.
     SwiGlu,
+    /// SwiGLU with the output quantization fused into the kernel.
     FusedSwiGluQuant,
+    /// Standalone SwiGLU backward.
     SwiGluBwd,
+    /// SwiGLU backward with the gradient quantization fused in.
     FusedSwiGluBwdQuant,
     /// dequantize→transpose→requantize (the naive Wgrad operand prep).
     NaiveTransposeRequant,
     /// the paper's scaling-aware direct transpose (code-space, no Q/DQ).
     DirectTranspose,
+    /// Gate scaling at the combine.
     Scale,
+    /// Elementwise accumulate.
     Add,
     /// f32 optimizer math over the master weights (AdamW / SGD-momentum) —
     /// stays in master precision, never a cast.
@@ -75,33 +148,107 @@ impl OpKind {
             _ => 0,
         }
     }
+
+    /// Does this op produce a (re)quantized value — explicitly, or fused
+    /// inside a compute/transpose kernel?
+    pub fn quantizes(self) -> bool {
+        matches!(
+            self,
+            OpKind::Quantize
+                | OpKind::NaiveTransposeRequant
+                | OpKind::FusedSwiGluQuant
+                | OpKind::FusedSwiGluBwdQuant
+        )
+    }
 }
 
-/// One node of the dataflow graph.
+/// One node of the dataflow graph, with the scale-lineage metadata the
+/// analyzer interprets. [`DataflowGraph::add`] derives sensible defaults
+/// for the metadata from `(op, stage, backward, out_dtype)`; builders
+/// override only where the schematic diverges from the default (e.g.
+/// `units` for nodes standing for several kernel instances), and the
+/// mutation tests override `axis`/`sidecar` to inject defects.
 #[derive(Clone, Debug)]
 pub struct Node {
+    /// Topological id (== index in [`DataflowGraph::nodes`]).
     pub id: usize,
+    /// Display name (audit listings, lineage traces).
     pub name: String,
+    /// Operator kind.
     pub op: OpKind,
+    /// Pipeline stage the node belongs to.
     pub stage: Stage,
+    /// True on the backward path.
     pub backward: bool,
+    /// Element type of the node's output edge.
     pub out_dtype: Dtype,
+    /// Producer node ids (empty only for [`OpKind::Input`] sources).
     pub inputs: Vec<usize>,
+    /// Declared scale axis of the output, when the op quantizes along a
+    /// known orientation. `None` lets the analyzer derive it (transposes
+    /// flip their input's axis; quantizers default row-wise).
+    pub axis: Option<ScaleAxis>,
+    /// For FP8 [`OpKind::AllToAll`] nodes: does the wire carry the scale
+    /// sidecar next to the payload? (FP8 codes without their scales are
+    /// undecodable — the analyzer's missing-sidecar rule.)
+    pub sidecar: bool,
+    /// Kernel instances this schematic node stands for *per firing* (e.g.
+    /// one `Q(dact)` node covers the d_gate and d_up quantizations: 2).
+    pub units: usize,
+    /// Firing multiplicity class under execution (`×1/×K/×E·K/×E`).
+    pub mult: Mult,
+}
+
+/// Pipeline stage of the MoE layer (§3.2 decomposition), plus the
+/// per-step optimizer tail of the training loop (master update + weight
+/// requantization — `dataflow::variants::build_train_step`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Stage {
+    /// Dense f32 gating (runs outside the quantized expert path).
+    Router,
+    /// Token dispatch across EP ranks.
+    Dispatch,
+    /// Expert-order permute/pad data movement.
+    Permute,
+    /// First grouped GEMM (gate+up projections).
+    Fc1,
+    /// SwiGLU activation between the GEMMs.
+    Activation,
+    /// Second grouped GEMM (down projection).
+    Fc2,
+    /// Unpermute/unpad back to token order.
+    Unperm,
+    /// Combine across EP ranks + gate scaling.
+    Combine,
+    /// Per-step optimizer tail (master update + weight casts).
+    Optimizer,
 }
 
 /// A dataflow graph for one MoE layer fwd+bwd.
 #[derive(Clone, Debug, Default)]
 pub struct DataflowGraph {
+    /// Variant name (display only).
     pub name: String,
+    /// Nodes in topological order (ids == indices).
     pub nodes: Vec<Node>,
 }
 
 impl DataflowGraph {
+    /// Create an empty graph named `name`.
     pub fn new(name: &str) -> Self {
         DataflowGraph { name: name.to_string(), nodes: Vec::new() }
     }
 
-    /// Add a node; returns its id.
+    /// Add a node; returns its id. Scale-lineage metadata defaults are
+    /// derived here (one site, so every builder gets them consistently):
+    ///
+    /// * `axis` — quantizers emit row-wise scales (the only executed
+    ///   quantizer orientation); transposes derive by flipping their
+    ///   input's axis at analysis time (`None` here);
+    /// * `sidecar` — FP8 all-to-alls ship the scale sidecar by default;
+    /// * `mult` — expert-span stages fire per expert per slot, the
+    ///   optimizer tail per expert, other backward nodes per slot, and
+    ///   everything else once per layer pass.
     pub fn add(
         &mut self,
         name: &str,
@@ -115,6 +262,19 @@ impl DataflowGraph {
         for &i in inputs {
             assert!(i < id, "forward reference in dataflow graph");
         }
+        let axis = match op {
+            OpKind::Quantize | OpKind::FusedSwiGluQuant | OpKind::FusedSwiGluBwdQuant => {
+                Some(ScaleAxis::RowWise)
+            }
+            _ => None,
+        };
+        let sidecar = op == OpKind::AllToAll && out_dtype == Dtype::Fp8;
+        let mult = match stage {
+            Stage::Fc1 | Stage::Activation | Stage::Fc2 => Mult::PerExpertSlot,
+            Stage::Optimizer => Mult::PerExpert,
+            _ if backward => Mult::PerSlot,
+            _ => Mult::Once,
+        };
         self.nodes.push(Node {
             id,
             name: name.to_string(),
@@ -123,39 +283,44 @@ impl DataflowGraph {
             backward,
             out_dtype,
             inputs: inputs.to_vec(),
+            axis,
+            sidecar,
+            units: 1,
+            mult,
         });
         id
     }
 
+    /// Declare that node `id` stands for `units` kernel instances per
+    /// firing (builder override; see [`Node::units`]).
+    pub fn set_units(&mut self, id: usize, units: usize) {
+        self.nodes[id].units = units;
+    }
+
     /// Count of *explicit* cast kernel launches (the Fig. 2 number).
+    /// Lineage-derived: [`crate::analysis::CastSummary`].
     pub fn explicit_casts(&self) -> usize {
-        self.nodes.iter().filter(|n| n.op.is_explicit_cast()).count()
+        crate::analysis::CastSummary::of(self).casts_total
     }
 
     /// Explicit casts on the forward layer path only (the optimizer tail
     /// is accounted separately — [`Self::explicit_casts_opt`]).
     pub fn explicit_casts_fwd(&self) -> usize {
-        self.nodes
-            .iter()
-            .filter(|n| !n.backward && n.stage != Stage::Optimizer && n.op.is_explicit_cast())
-            .count()
+        crate::analysis::CastSummary::of(self).casts_fwd
     }
 
     /// Explicit casts on the backward path only — what the executed
     /// backward's cast audit (`moe::backward::BwdStats::casts`) is checked
     /// against.
     pub fn explicit_casts_bwd(&self) -> usize {
-        self.nodes.iter().filter(|n| n.backward && n.op.is_explicit_cast()).count()
+        crate::analysis::CastSummary::of(self).casts_bwd
     }
 
     /// Explicit casts in the optimizer tail: the per-step weight
     /// quantizations from the f32 masters (weight prep, counted apart
     /// from the Fig. 2 activation-path numbers).
     pub fn explicit_casts_opt(&self) -> usize {
-        self.nodes
-            .iter()
-            .filter(|n| n.stage == Stage::Optimizer && n.op.is_explicit_cast())
-            .count()
+        crate::analysis::CastSummary::of(self).casts_opt
     }
 
     /// Optimizer-tail nodes that requantize already-FP8 data (deriving a
@@ -163,19 +328,13 @@ impl DataflowGraph {
     /// zero for the Fp8Flow train step by construction, the audit behind
     /// `PreparedWeights::requantize_from_masters`.
     pub fn requant_nodes_opt(&self) -> usize {
-        self.nodes
-            .iter()
-            .filter(|n| n.stage == Stage::Optimizer && n.op == OpKind::NaiveTransposeRequant)
-            .count()
+        crate::analysis::CastSummary::of(self).requants_opt
     }
 
     /// Backward nodes that requantize already-FP8 data (the naive wgrad
     /// transposes — the double-quantization site).
     pub fn requant_nodes_bwd(&self) -> usize {
-        self.nodes
-            .iter()
-            .filter(|n| n.backward && n.op == OpKind::NaiveTransposeRequant)
-            .count()
+        crate::analysis::CastSummary::of(self).requants_bwd
     }
 
     /// Is the wgrad operand prep casting-free? True iff every backward
@@ -191,19 +350,14 @@ impl DataflowGraph {
     /// Total quantization events including those hidden inside naive
     /// transposes (what the double-quantization analysis counts).
     pub fn total_qdq_events(&self) -> usize {
-        self.nodes
-            .iter()
-            .map(|n| {
-                n.op.internal_qdq()
-                    + usize::from(matches!(n.op, OpKind::Quantize | OpKind::Dequantize))
-            })
-            .sum()
+        crate::analysis::CastSummary::of(self).qdq_events
     }
 
     /// Number of kernel launches (every node is one kernel; fusion is the
     /// whole point — fused variants have fewer nodes for the same math).
+    /// Source nodes are values, not launches, and are excluded.
     pub fn kernel_launches(&self) -> usize {
-        self.nodes.len()
+        self.nodes.iter().filter(|n| n.op != OpKind::Input).count()
     }
 
     /// Ids of nodes whose output is BF16/F32 on the expert path
@@ -241,7 +395,10 @@ impl DataflowGraph {
     }
 
     /// Structural validation: edges resolve, at least one node per
-    /// mandatory stage, single terminal output per direction.
+    /// mandatory stage, every non-source node consumes something. Sources
+    /// are recognized by the explicit [`OpKind::Input`] marker, not by
+    /// name, so renaming an input cannot silently disable the orphan
+    /// check.
     pub fn validate(&self) -> Result<(), String> {
         if self.nodes.is_empty() {
             return Err("empty graph".into());
@@ -251,9 +408,11 @@ impl DataflowGraph {
                 return Err(format!("missing stage {s:?}"));
             }
         }
-        // every non-root node consumes something
         for n in &self.nodes {
-            if n.id > 0 && n.inputs.is_empty() && !n.name.contains("input") {
+            if n.op == OpKind::Input && !n.inputs.is_empty() {
+                return Err(format!("source node {} has inputs", n.name));
+            }
+            if n.op != OpKind::Input && n.inputs.is_empty() {
                 return Err(format!("orphan node {}", n.name));
             }
         }
@@ -291,7 +450,7 @@ mod tests {
     #[test]
     fn build_and_count() {
         let mut g = DataflowGraph::new("test");
-        let x = g.add("input", OpKind::Add, Stage::Router, false, Dtype::Bf16, &[]);
+        let x = g.add("input", OpKind::Input, Stage::Router, false, Dtype::Bf16, &[]);
         let q = g.add("quant", OpKind::Quantize, Stage::Dispatch, false, Dtype::Fp8, &[x]);
         let d = g.add("dequant", OpKind::Dequantize, Stage::Dispatch, false, Dtype::Bf16, &[q]);
         let n = g.add("naive-T", OpKind::NaiveTransposeRequant, Stage::Fc1, true, Dtype::Fp8, &[d]);
@@ -310,14 +469,14 @@ mod tests {
     #[test]
     fn validate_flags_missing_stages() {
         let mut g = DataflowGraph::new("incomplete");
-        g.add("input", OpKind::Add, Stage::Router, false, Dtype::Bf16, &[]);
+        g.add("input", OpKind::Input, Stage::Router, false, Dtype::Bf16, &[]);
         assert!(g.validate().is_err());
     }
 
     #[test]
     fn optimizer_stage_accounted_separately() {
         let mut g = DataflowGraph::new("opt");
-        let x = g.add("input", OpKind::Add, Stage::Router, false, Dtype::Bf16, &[]);
+        let x = g.add("input", OpKind::Input, Stage::Router, false, Dtype::Bf16, &[]);
         let q = g.add("Q(x)", OpKind::Quantize, Stage::Dispatch, false, Dtype::Fp8, &[x]);
         let u = g.add("update", OpKind::MasterUpdate, Stage::Optimizer, false, Dtype::F32, &[q]);
         g.add("Q(w)", OpKind::Quantize, Stage::Optimizer, false, Dtype::Fp8, &[u]);
@@ -327,5 +486,41 @@ mod tests {
         assert_eq!(g.explicit_casts_opt(), 1);
         assert_eq!(g.requant_nodes_opt(), 1);
         assert_eq!(g.requant_nodes_bwd(), 0);
+    }
+
+    #[test]
+    fn metadata_defaults_derived_in_add() {
+        let mut g = DataflowGraph::new("meta");
+        let x = g.add("x", OpKind::Input, Stage::Router, false, Dtype::Bf16, &[]);
+        let q = g.add("q", OpKind::Quantize, Stage::Dispatch, false, Dtype::Fp8, &[x]);
+        let a = g.add("a2a", OpKind::AllToAll, Stage::Dispatch, false, Dtype::Fp8, &[q]);
+        let t = g.add("t", OpKind::DirectTranspose, Stage::Fc1, true, Dtype::Fp8, &[a]);
+        let o = g.add("qw", OpKind::Quantize, Stage::Optimizer, false, Dtype::Fp8, &[x]);
+        assert_eq!(g.nodes[q].axis, Some(ScaleAxis::RowWise));
+        assert_eq!(g.nodes[q].mult, Mult::Once);
+        assert!(g.nodes[a].sidecar, "FP8 wire ships its sidecar by default");
+        assert_eq!(g.nodes[t].axis, None, "transposes derive their axis");
+        assert_eq!(g.nodes[t].mult, Mult::PerExpertSlot);
+        assert_eq!(g.nodes[o].mult, Mult::PerExpert);
+        assert_eq!(Mult::PerExpertSlot.count(8, 2), 16);
+        assert_eq!(ScaleAxis::RowWise.flipped(), ScaleAxis::ColWise);
+    }
+
+    #[test]
+    fn validate_uses_source_marker_not_name() {
+        // a renamed source still validates (the old name heuristic broke
+        // on this); a non-source without inputs is an orphan even at id 0
+        let mut g = DataflowGraph::new("marker");
+        let x = g.add("tokens", OpKind::Input, Stage::Router, false, Dtype::Bf16, &[]);
+        g.add("d", OpKind::AllToAll, Stage::Dispatch, false, Dtype::Bf16, &[x]);
+        g.add("f1", OpKind::GroupedGemm, Stage::Fc1, false, Dtype::Bf16, &[x]);
+        g.add("ac", OpKind::SwiGlu, Stage::Activation, false, Dtype::Bf16, &[x]);
+        g.add("f2", OpKind::GroupedGemm, Stage::Fc2, false, Dtype::Bf16, &[x]);
+        g.add("cm", OpKind::AllToAll, Stage::Combine, false, Dtype::Bf16, &[x]);
+        assert!(g.validate().is_ok());
+        // a node named "input" no longer gets a free pass
+        let mut bad = g.clone();
+        bad.add("input-like", OpKind::Scale, Stage::Combine, false, Dtype::Bf16, &[]);
+        assert!(bad.validate().unwrap_err().contains("orphan"));
     }
 }

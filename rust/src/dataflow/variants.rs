@@ -17,23 +17,42 @@ use crate::dataflow::graph::{DataflowGraph, Dtype, OpKind, Stage};
 /// Which Fig. 2 variant to build.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Variant {
+    /// The BF16 oracle: no quantization anywhere.
     Bf16,
+    /// TransformerEngine-style blockwise FP8: FP8 strictly inside GEMMs.
     TeBlockwise,
+    /// DeepSeek-V3 style: FP8 on the wire with Q/DQ around each all-to-all.
     DeepSeekV3,
+    /// The paper's casting-free recipe.
     Fp8Flow,
 }
 
 impl Variant {
+    /// Every variant, in Fig. 2 presentation order.
     pub fn all() -> [Variant; 4] {
         [Variant::Bf16, Variant::TeBlockwise, Variant::DeepSeekV3, Variant::Fp8Flow]
     }
 
+    /// Canonical display name.
     pub fn name(self) -> &'static str {
         match self {
             Variant::Bf16 => "bf16",
             Variant::TeBlockwise => "te-blockwise",
             Variant::DeepSeekV3 => "deepseek-v3",
             Variant::Fp8Flow => "fp8-flow-moe",
+        }
+    }
+
+    /// Parse a variant name (the `lint` CLI's `--recipe` values). Accepts
+    /// the canonical [`Variant::name`] forms plus the executed-recipe
+    /// spellings (`blockwise`, `fp8flow`, …).
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s {
+            "bf16" => Some(Variant::Bf16),
+            "te-blockwise" | "blockwise" => Some(Variant::TeBlockwise),
+            "deepseek-v3" | "deepseek" | "deepseekv3" => Some(Variant::DeepSeekV3),
+            "fp8-flow-moe" | "fp8flow" | "fp8-flow" | "fp8_flow" => Some(Variant::Fp8Flow),
+            _ => None,
         }
     }
 }
@@ -73,17 +92,24 @@ pub fn build_train_step(v: Variant) -> DataflowGraph {
     use OpKind::*;
     use Stage::Optimizer;
     let mut g = build(v);
-    let din = g.add("dw-master-input", Add, Optimizer, false, F32, &[]);
+    let din = g.add("dw-master-input", Input, Optimizer, false, F32, &[]);
     let upd = g.add("master-update", MasterUpdate, Optimizer, false, F32, &[din]);
+    // each Q(w)/naive-T node covers the three expert weight tensors
+    // (w1, w3, w2) — units 3, firing per expert
     match v {
         Variant::Bf16 => {}
         Variant::Fp8Flow => {
-            g.add("Q(w) fprop-layout", Quantize, Optimizer, false, Fp8, &[upd]);
-            g.add("Q(w) dgrad-layout", Quantize, Optimizer, false, Fp8, &[upd]);
+            let qf = g.add("Q(w) fprop-layout", Quantize, Optimizer, false, Fp8, &[upd]);
+            let qd = g.add("Q(w) dgrad-layout", Quantize, Optimizer, false, Fp8, &[upd]);
+            g.set_units(qf, 3);
+            g.set_units(qd, 3);
         }
         Variant::TeBlockwise | Variant::DeepSeekV3 => {
             let q = g.add("Q(w) fprop-layout", Quantize, Optimizer, false, Fp8, &[upd]);
-            g.add("w naive-T dgrad-layout", NaiveTransposeRequant, Optimizer, false, Fp8, &[q]);
+            let nt =
+                g.add("w naive-T dgrad-layout", NaiveTransposeRequant, Optimizer, false, Fp8, &[q]);
+            g.set_units(q, 3);
+            g.set_units(nt, 3);
         }
     }
     g
@@ -95,7 +121,7 @@ fn build_bf16() -> DataflowGraph {
     use Stage::*;
     let mut g = DataflowGraph::new("bf16");
     // forward
-    let x = g.add("input", Add, Router, false, Bf16, &[]);
+    let x = g.add("input", Input, Router, false, Bf16, &[]);
     let disp = g.add("dispatch-a2a", AllToAll, Dispatch, false, Bf16, &[x]);
     let perm = g.add("permute", OpKind::Permute, Stage::Permute, false, Bf16, &[disp]);
     let pad = g.add("pad", Pad, Stage::Permute, false, Bf16, &[perm]);
@@ -107,7 +133,7 @@ fn build_bf16() -> DataflowGraph {
     let comb = g.add("combine-a2a", AllToAll, Combine, false, Bf16, &[unpad]);
     let _y = g.add("gate-scale-add", Scale, Combine, false, Bf16, &[comb]);
     // backward
-    let dy = g.add("dy-input", Add, Combine, true, Bf16, &[]);
+    let dy = g.add("dy-input", Input, Combine, true, Bf16, &[]);
     let cb = g.add("combine-bwd-a2a", AllToAll, Combine, true, Bf16, &[dy]);
     let rp = g.add("re-pad", Pad, Stage::Permute, true, Bf16, &[cb]);
     let dg2 = g.add("fc2-dgrad", GroupedGemm, Fc2, true, Bf16, &[rp]);
@@ -128,7 +154,7 @@ fn build_blockwise() -> DataflowGraph {
     use Stage::*;
     let mut g = DataflowGraph::new("te-blockwise");
     // forward — comm & data movement all BF16; FP8 strictly inside GEMMs
-    let x = g.add("input", Add, Router, false, Bf16, &[]);
+    let x = g.add("input", Input, Router, false, Bf16, &[]);
     let disp = g.add("dispatch-a2a", AllToAll, Dispatch, false, Bf16, &[x]);
     let perm = g.add("permute", OpKind::Permute, Stage::Permute, false, Bf16, &[disp]);
     let pad = g.add("pad", Pad, Stage::Permute, false, Bf16, &[perm]);
@@ -142,7 +168,7 @@ fn build_blockwise() -> DataflowGraph {
     let comb = g.add("combine-a2a", AllToAll, Combine, false, Bf16, &[unpad]);
     let _y = g.add("gate-scale-add", Scale, Combine, false, Bf16, &[comb]);
     // backward
-    let dy = g.add("dy-input", Add, Combine, true, Bf16, &[]);
+    let dy = g.add("dy-input", Input, Combine, true, Bf16, &[]);
     let cb = g.add("combine-bwd-a2a", AllToAll, Combine, true, Bf16, &[dy]);
     let rp = g.add("re-pad", Pad, Stage::Permute, true, Bf16, &[cb]);
     let q3 = g.add("Q(dy) fc2-grads", Quantize, Fc2, true, Fp8, &[rp]);
@@ -156,6 +182,13 @@ fn build_blockwise() -> DataflowGraph {
     let _wg1 = g.add("fc1-wgrad", GroupedGemm, Fc1, true, F32, &[q4, xt]);
     let up = g.add("unpermute-bwd", Unpermute, Stage::Permute, true, Bf16, &[dg1]);
     let _dx = g.add("dispatch-bwd-a2a", AllToAll, Dispatch, true, Bf16, &[up]);
+    // executed-instance multiplicities (the schematic draws one node per
+    // logical op): Q(dact) covers Q(d_gate)+Q(d_up); the act transpose
+    // covers {act, dy}ᵀ and the x transpose {x, d_gate, d_up}ᵀ — matching
+    // the 3 casts + 5 requants per expert of `blockwise_expert_bwd`
+    g.set_units(q4, 2);
+    g.set_units(at, 2);
+    g.set_units(xt, 3);
     g
 }
 
@@ -165,7 +198,7 @@ fn build_deepseek() -> DataflowGraph {
     use Stage::*;
     let mut g = DataflowGraph::new("deepseek-v3");
     // forward — FP8 comm via DeepEP: Q before / DQ after each all-to-all
-    let x = g.add("input", Add, Router, false, Bf16, &[]);
+    let x = g.add("input", Input, Router, false, Bf16, &[]);
     let q1 = g.add("Q(x) pre-dispatch", Quantize, Dispatch, false, Fp8, &[x]);
     let disp = g.add("dispatch-a2a (fp8)", AllToAll, Dispatch, false, Fp8, &[q1]);
     let d1 = g.add("DQ post-dispatch", Dequantize, Dispatch, false, Bf16, &[disp]);
@@ -183,7 +216,7 @@ fn build_deepseek() -> DataflowGraph {
     let d2 = g.add("DQ post-combine", Dequantize, Combine, false, Bf16, &[comb]);
     let _y = g.add("gate-scale-add", Scale, Combine, false, Bf16, &[d2]);
     // backward — mirrored Q/DQ around both all-to-alls
-    let dy = g.add("dy-input", Add, Combine, true, Bf16, &[]);
+    let dy = g.add("dy-input", Input, Combine, true, Bf16, &[]);
     let q5 = g.add("Q(dy) pre-combine-bwd", Quantize, Combine, true, Fp8, &[dy]);
     let cb = g.add("combine-bwd-a2a (fp8)", AllToAll, Combine, true, Fp8, &[q5]);
     let d3 = g.add("DQ post-combine-bwd", Dequantize, Combine, true, Bf16, &[cb]);
@@ -201,6 +234,11 @@ fn build_deepseek() -> DataflowGraph {
     let q8 = g.add("Q(dx) pre-dispatch-bwd", Quantize, Dispatch, true, Fp8, &[up]);
     let db = g.add("dispatch-bwd-a2a (fp8)", AllToAll, Dispatch, true, Fp8, &[q8]);
     let _d4 = g.add("DQ post-dispatch-bwd", Dequantize, Dispatch, true, Bf16, &[db]);
+    // same schematic-to-instance multiplicities as the blockwise backward
+    // (the wgrad operand prep is identical)
+    g.set_units(q7, 2);
+    g.set_units(at, 2);
+    g.set_units(xt, 3);
     g
 }
 
@@ -210,7 +248,7 @@ fn build_fp8flow() -> DataflowGraph {
     use Stage::*;
     let mut g = DataflowGraph::new("fp8-flow-moe");
     // forward — ONE explicit cast at the MoE entry; FP8 persists
-    let x = g.add("input", Add, Router, false, Bf16, &[]);
+    let x = g.add("input", Input, Router, false, Bf16, &[]);
     let q1 = g.add("Q(x) entry", Quantize, Dispatch, false, Fp8, &[x]);
     let disp = g.add("dispatch-a2a (fp8)", AllToAll, Dispatch, false, Fp8, &[q1]);
     let perm = g.add("fused-permute-pad (fp8)", FusedPermutePad, Stage::Permute, false, Fp8, &[disp]);
@@ -225,7 +263,7 @@ fn build_fp8flow() -> DataflowGraph {
     let _y = g.add("gate-scale-add", Scale, Combine, false, Bf16, &[comb]);
     // backward — ONE explicit cast at the backward entry (island #2 is
     // between fc2-dgrad and combine-bwd)
-    let dy = g.add("dy-input", Add, Combine, true, Bf16, &[]);
+    let dy = g.add("dy-input", Input, Combine, true, Bf16, &[]);
     let q2 = g.add("Q(dy) bwd-entry", Quantize, Combine, true, Fp8, &[dy]);
     let cb = g.add("combine-bwd-a2a (fp8)", AllToAll, Combine, true, Fp8, &[q2]);
     let rp = g.add("fused-re-pad (fp8)", FusedPermutePad, Stage::Permute, true, Fp8, &[cb]);
@@ -242,6 +280,10 @@ fn build_fp8flow() -> DataflowGraph {
     let _wg1 = g.add("fc1-wgrad", GroupedGemm, Fc1, true, F32, &[sbt, xt]);
     let up = g.add("fused-unpermute-bwd (fp8)", FusedUnpermuteUnpad, Stage::Permute, true, Fp8, &[dg1]);
     let _dx = g.add("dispatch-bwd-a2a (fp8)", AllToAll, Dispatch, true, Fp8, &[up]);
+    // the dact transpose covers {d_gate, d_up}ᵀ — with the three unit
+    // transposes above, the five direct transposes of `flow_expert_bwd`
+    // (all code-space: zero casts, zero requants in the prediction)
+    g.set_units(sbt, 2);
     g
 }
 

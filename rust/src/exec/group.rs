@@ -35,6 +35,7 @@ impl WorkerGroup {
         self.budgets.len()
     }
 
+    /// True when there are no groups.
     pub fn is_empty(&self) -> bool {
         self.budgets.is_empty()
     }

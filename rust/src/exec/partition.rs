@@ -53,6 +53,7 @@ impl Partition {
         self.starts.len() - 1
     }
 
+    /// True when there are no parts.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -22,11 +22,13 @@ pub const INF_CODE: u8 = 0x7C;
 pub const NAN_CODE: u8 = 0x7E;
 
 #[inline]
+/// Is `c` one of the NaN codes?
 pub const fn is_nan(c: u8) -> bool {
     (c & 0x7C == 0x7C) && (c & 0x03 != 0)
 }
 
 #[inline]
+/// Is `c` one of the Inf codes?
 pub const fn is_inf(c: u8) -> bool {
     c & 0x7F == 0x7C
 }

@@ -14,14 +14,18 @@ use crate::util::mat::Mat;
 /// Elementwise error statistics between two same-shape matrices.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ErrStats {
+    /// Largest absolute difference.
     pub max_abs: f64,
+    /// Mean absolute difference.
     pub mean_abs: f64,
+    /// Relative Frobenius-norm difference.
     pub rel_fro: f64,
     /// Fraction of elements with a nonzero (bitwise) difference.
     pub frac_nonzero: f64,
 }
 
 impl ErrStats {
+    /// Compute stats between two same-shape matrices.
     pub fn between(a: &Mat, b: &Mat) -> ErrStats {
         assert_eq!((a.rows, a.cols), (b.rows, b.cols));
         let n = a.data.len().max(1);

@@ -42,6 +42,7 @@ impl Fp8Format {
         }
     }
 
+    /// Encode one f32 to this format's code.
     pub fn encode(self, x: f32) -> u8 {
         match self {
             Fp8Format::E4M3 => e4m3::encode(x),
@@ -49,6 +50,7 @@ impl Fp8Format {
         }
     }
 
+    /// Decode one code to f32.
     pub fn decode(self, c: u8) -> f32 {
         match self {
             Fp8Format::E4M3 => e4m3::decode(c),

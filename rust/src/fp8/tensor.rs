@@ -24,10 +24,15 @@ pub enum TileLayout {
 /// A quantized 2-D FP8 tensor (payload + scales).
 #[derive(Clone, Debug)]
 pub struct Fp8Tensor {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Payload format.
     pub fmt: Fp8Format,
+    /// Scale recipe the tensor was quantized with.
     pub mode: ScaleMode,
+    /// Which way the scale tiles run.
     pub layout: TileLayout,
     /// Row-major FP8 codes, `rows * cols`.
     pub data: Vec<u8>,
@@ -71,6 +76,7 @@ impl Fp8Tensor {
     }
 
     #[inline]
+    /// Raw FP8 code at `(i, j)`.
     pub fn code_at(&self, i: usize, j: usize) -> u8 {
         self.data[i * self.cols + j]
     }

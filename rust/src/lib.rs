@@ -23,13 +23,36 @@
 //! 2. [`dataflow`] — the casting-free FP8 dataflow: the MoE expert path
 //!    keeps FP8 end-to-end except two BF16 islands, reducing explicit cast
 //!    ops from 12 to 2 (Fig. 2).
+//!
+//! Both invariants are enforced *statically* by [`analysis`], the
+//! scale-lineage linter (`lint` subcommand), before anything executes.
 
+#![forbid(unsafe_code)]
+#![warn(missing_docs)]
+
+/// Scale-lineage static analyzer: lineage propagation, lint rules, and
+/// the static↔runtime cross-check over the [`dataflow`] graphs.
+pub mod analysis;
+/// Expert-parallel cluster: rank groups, wire format, the EP-sharded
+/// executed layer, and the measured-vs-modeled simulator.
 pub mod cluster;
+/// Run-artifact coordination: `runs/` JSON writers and the Table 1–3
+/// report generators.
 pub mod coordinator;
+/// The Fig. 2 dataflow graphs: typed op-graph substrate and the four
+/// recipe variants with cast accounting.
 pub mod dataflow;
+/// Execution substrate: the worker pool behind every native kernel.
 pub mod exec;
+/// FP8 numerics: formats, tile-scaled tensors, the scaling-aware direct
+/// transpose (Alg. 1), and the double-quantization error analysis.
 pub mod fp8;
+/// The MoE layer: routing, dispatch/combine, expert FFN recipes, and the
+/// executed backward with its cast audit.
 pub mod moe;
+/// PJRT-style runtime for the AOT-lowered HLO artifacts.
 pub mod runtime;
+/// Training loops: the native Fig. 6 trainer and the AOT-artifact driver.
 pub mod train;
+/// Shared utilities: matrices, RNG, CLI/JSON helpers, benchmarking.
 pub mod util;

@@ -10,6 +10,7 @@
 //! fp8-flow-moe epshard [--ranks R] [--recipe ...] [--tokens N]  # executed EP
 //! fp8-flow-moe bwd [--ranks R] [--recipe ...] [--tokens N]    # executed backward
 //! fp8-flow-moe dataflow                                       # Fig. 2 audit
+//! fp8-flow-moe lint [--recipe all|...] [--experts E] [--top-k K]  # static analyzer
 //! fp8-flow-moe dqe [--size N]                                 # Eq. 1 demo
 //! fp8-flow-moe artifacts                                      # list manifest
 //! ```
@@ -18,10 +19,14 @@
 //! nonzero; `--help` / `-h` / `help` print it to stdout and exit 0.
 
 use anyhow::{bail, ensure, Context, Result};
+use fp8_flow_moe::analysis::{
+    cross_check, diagnostics_to_json, lint_graph, tally, CastSummary, Diagnostic, ExecPrediction,
+    ExecutedAudit,
+};
 use fp8_flow_moe::cluster::ep_exec::{ep_backward, ep_forward, EpConfig, EpShape};
 use fp8_flow_moe::cluster::sim::ep_measured_vs_modeled;
 use fp8_flow_moe::coordinator::{reports, write_run_json};
-use fp8_flow_moe::dataflow::{build, Variant};
+use fp8_flow_moe::dataflow::{build, build_train_step, Variant};
 use fp8_flow_moe::exec;
 use fp8_flow_moe::fp8::error::dqe_report;
 use fp8_flow_moe::fp8::{Fp8Format, ScaleMode};
@@ -51,6 +56,11 @@ USAGE:
                        [--tokens N] [--experts E] [--top-k K] [--capacity C]
                        [--d-model D] [--ffn H] [--seed S]
   fp8-flow-moe dataflow
+  fp8-flow-moe lint    [--recipe <all|bf16|blockwise|deepseek|fp8flow>]
+                       [--experts E] [--top-k K]
+                       (scale-lineage static analyzer over the Fig. 2
+                        graphs + executed cross-check; writes runs/lint.json
+                        and exits nonzero on any error-severity finding)
   fp8-flow-moe dqe [--size N]
   fp8-flow-moe artifacts
   fp8-flow-moe help | --help | -h
@@ -91,6 +101,7 @@ fn main() -> Result<()> {
             }
             Ok(())
         }
+        Some("lint") => cmd_lint(&args),
         Some("dqe") => cmd_dqe(&args),
         Some("artifacts") => {
             let rt = Runtime::open(Runtime::default_dir())?;
@@ -125,7 +136,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     cfg.ranks = args.usize_or("ranks", 1);
     cfg.opt.lr = args.f64_or("lr", cfg.opt.lr as f64) as f32;
-    ensure!(cfg.ranks >= 1 && cfg.ranks <= cfg.n_experts, "--ranks must be in 1..=E");
+    ensure!((1..=cfg.n_experts).contains(&cfg.ranks), "--ranks must be in 1..=E");
     let steps = args.usize_or("steps", 200);
     ensure!(steps >= 1, "--steps must be at least 1");
     let seed = args.u64_or("seed", 42);
@@ -248,7 +259,7 @@ impl ShardArgs {
         ensure!(tokens >= 1, "--tokens must be at least 1");
         ensure!(capacity >= 1, "--capacity must be at least 1");
         ensure!(experts >= ranks, "need at least as many experts ({experts}) as ranks ({ranks})");
-        ensure!(top_k >= 1 && top_k <= experts, "--top-k must be in 1..=--experts");
+        ensure!((1..=experts).contains(&top_k), "--top-k must be in 1..=--experts");
         let recipes = match args.get_or("recipe", "all").as_str() {
             "all" => vec![Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow],
             other => match Recipe::parse(other) {
@@ -408,6 +419,156 @@ fn cmd_bwd(args: &Args) -> Result<()> {
     let path = write_run_json(&format!("bwd_r{ranks}"), &doc)?;
     println!("wrote {path:?}");
     Ok(())
+}
+
+/// The scale-lineage static analyzer: lint every requested recipe's layer
+/// and train-step graphs, print the analyzer-derived Fig. 2 cast table,
+/// cross-check predicted counts against the executed audits, write
+/// `runs/lint.json`, and exit nonzero if any error-severity diagnostic
+/// fired (see `rust/EXPERIMENTS.md` §Lint).
+fn cmd_lint(args: &Args) -> Result<()> {
+    let experts = args.usize_or("experts", 8);
+    let top_k = args.usize_or("top-k", 2);
+    ensure!(experts >= 1, "--experts must be at least 1");
+    ensure!((1..=experts).contains(&top_k), "--top-k must be in 1..=--experts");
+    let variants: Vec<Variant> = match args.get_or("recipe", "all").as_str() {
+        "all" => Variant::all().to_vec(),
+        other => match Variant::parse(other) {
+            Some(v) => vec![v],
+            None => bail!("unknown recipe {other:?} (want all|bf16|blockwise|deepseek|fp8flow)"),
+        },
+    };
+
+    println!("scale-lineage lint: E={experts}, K={top_k}\n");
+    let mut doc = Json::obj().set("experts", experts).set("top_k", top_k);
+    let (mut errors, mut warnings) = (0usize, 0usize);
+    // the executed weight prep is master-sourced for EVERY FP8 recipe
+    // (`requantize_from_masters` never derives a layout from FP8), so the
+    // casting-free optimizer tail is the reference prediction for all of
+    // them; the incumbent graphs' storage-derived tails stay as schematic
+    // foils the lint flags (SL001).
+    let master_tail = ExecPrediction::of(&build_train_step(Variant::Fp8Flow), experts, top_k);
+
+    for v in variants {
+        let mut vj = Json::obj();
+        for (phase, g) in [("layer", build(v)), ("train", build_train_step(v))] {
+            g.validate().map_err(|e| anyhow::anyhow!("{} {phase}: {e}", v.name()))?;
+            let diags = lint_graph(&g);
+            let (e, w) = tally(&diags);
+            errors += e;
+            warnings += w;
+            let s = CastSummary::of(&g);
+            println!(
+                "== {} {phase}: casts fwd/bwd/opt {}/{}/{}, requants bwd/opt {}/{} — {} \
+                 error(s), {} warning(s)",
+                v.name(), s.casts_fwd, s.casts_bwd, s.casts_opt, s.requants_bwd, s.requants_opt,
+                e, w
+            );
+            for d in &diags {
+                println!("  {}", d.render());
+            }
+            vj = vj.set(
+                phase,
+                Json::obj()
+                    .set("casts_fwd", s.casts_fwd)
+                    .set("casts_bwd", s.casts_bwd)
+                    .set("casts_opt", s.casts_opt)
+                    .set("requants_bwd", s.requants_bwd)
+                    .set("requants_opt", s.requants_opt)
+                    .set("errors", e)
+                    .set("warnings", w)
+                    .set("diagnostics", diagnostics_to_json(&diags)),
+            );
+        }
+
+        // static ↔ executed cross-check (DeepSeek-V3 is schematic-only)
+        let recipe = match v {
+            Variant::Bf16 => Some(Recipe::Bf16),
+            Variant::TeBlockwise => Some(Recipe::Blockwise),
+            Variant::Fp8Flow => Some(Recipe::Fp8Flow),
+            Variant::DeepSeekV3 => None,
+        };
+        if let Some(recipe) = recipe {
+            let layer = ExecPrediction::of(&build(v), experts, top_k);
+            let tail = if v == Variant::Bf16 {
+                ExecPrediction::of(&build_train_step(v), experts, top_k)
+            } else {
+                master_tail
+            };
+            let predicted = ExecPrediction {
+                opt_weight_quants: tail.opt_weight_quants,
+                opt_requants: tail.opt_requants,
+                ..layer
+            };
+            let executed = executed_audit(recipe, experts, top_k);
+            let divergences: Vec<Diagnostic> = cross_check(v.name(), &predicted, &executed);
+            errors += divergences.len();
+            println!(
+                "   cross-check vs executed: predicted {}+{} casts, {} bwd requants, \
+                 {}+{} opt quants/requants — {}",
+                predicted.casts_fwd,
+                predicted.casts_bwd,
+                predicted.requants_bwd,
+                predicted.opt_weight_quants,
+                predicted.opt_requants,
+                if divergences.is_empty() { "agrees" } else { "DIVERGES" }
+            );
+            for d in &divergences {
+                println!("  {}", d.render());
+            }
+            vj = vj.set(
+                "cross_check",
+                Json::obj()
+                    .set("predicted", predicted.to_json())
+                    .set(
+                        "executed",
+                        Json::obj()
+                            .set("casts_fwd", executed.casts_fwd)
+                            .set("casts_bwd", executed.casts_bwd)
+                            .set("requants_bwd", executed.requants_bwd)
+                            .set("opt_weight_quants", executed.opt_weight_quants)
+                            .set("opt_requants", executed.opt_requants),
+                    )
+                    .set("divergences", diagnostics_to_json(&divergences)),
+            );
+        } else {
+            println!("   cross-check: schematic-only variant (no executed recipe) — skipped");
+        }
+        println!();
+        doc = doc.set(v.name(), vj);
+    }
+
+    doc = doc.set("errors", errors).set("warnings", warnings);
+    let path = write_run_json("lint", &doc)?;
+    println!("lint: {errors} error(s), {warnings} warning(s); wrote {path:?}");
+    if errors > 0 {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
+/// Run the executed layer + weight prep at a small fixed shape and
+/// collect the runtime's own cast/requant audit for [`cmd_lint`]'s
+/// cross-check. Counts depend only on `(experts, top_k)`, not on the
+/// token/feature dims (`tests/prop_lint.rs` pins this).
+fn executed_audit(recipe: Recipe, experts: usize, top_k: usize) -> ExecutedAudit {
+    let tokens = 64.max(experts);
+    let capacity = (tokens * top_k).div_ceil(experts);
+    let mut rng = Rng::seed_from(42);
+    let x = Mat::randn(tokens, 32, 0.5, &mut rng);
+    let w = MoeWeights::random(32, 32, experts, &mut rng);
+    let dy = Mat::randn(tokens, 32, 1.0, &mut rng);
+    let mut pw = PreparedWeights::new(w, recipe);
+    let stash = forward_stash(&x, &pw, top_k, capacity);
+    let grads = moe_backward(&stash, &pw, &dy);
+    let prep = pw.requantize_from_masters();
+    ExecutedAudit {
+        casts_fwd: stash.cast_ops,
+        casts_bwd: grads.stats.casts,
+        requants_bwd: grads.stats.requants,
+        opt_weight_quants: prep.weight_quants,
+        opt_requants: prep.requants,
+    }
 }
 
 fn cmd_dqe(args: &Args) -> Result<()> {

@@ -46,8 +46,11 @@ use crate::util::mat::Mat;
 
 /// Gradients of one expert's weights (f32 master-gradient layout).
 pub struct ExpertGrads {
+    /// Gate-projection gradient `[d, h]`.
     pub dw1: Mat, // [d, h]
+    /// Up-projection gradient `[d, h]`.
     pub dw3: Mat, // [d, h]
+    /// Down-projection gradient `[h, d]`.
     pub dw2: Mat, // [h, d]
 }
 

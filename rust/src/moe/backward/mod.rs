@@ -61,6 +61,7 @@ pub struct BwdStats {
 }
 
 impl BwdStats {
+    /// Accumulate another audit into this one.
     pub fn add(&mut self, o: BwdStats) {
         self.casts += o.casts;
         self.requants += o.requants;
@@ -79,6 +80,7 @@ pub struct BwdStageTimes {
 }
 
 impl BwdStageTimes {
+    /// Sum of all stage times.
     pub fn total_s(&self) -> f64 {
         self.combine_bwd_s + self.expert_bwd_s + self.dispatch_bwd_s
     }
@@ -90,12 +92,17 @@ impl BwdStageTimes {
 pub struct MoeGrads {
     /// `[tokens, d]` input gradient.
     pub dx: Mat,
+    /// Per-expert gate-projection gradients, `E x [d, h]`.
     pub dw1: Vec<Mat>, // E × [d, h]
+    /// Per-expert up-projection gradients, `E x [d, h]`.
     pub dw3: Vec<Mat>, // E × [d, h]
+    /// Per-expert down-projection gradients, `E x [h, d]`.
     pub dw2: Vec<Mat>, // E × [h, d]
     /// `[d, E]` router weight gradient (router-aware path only).
     pub d_router: Option<Mat>,
+    /// Cast/requant audit of the backward.
     pub stats: BwdStats,
+    /// Per-stage wall-clock seconds.
     pub stages: BwdStageTimes,
 }
 

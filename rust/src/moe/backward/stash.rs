@@ -67,19 +67,27 @@ pub struct SlotStash {
 /// A completed stashing forward: output + accounting (bit-identical to
 /// [`crate::moe::layer::moe_forward`]) plus the per-slot backward stash.
 pub struct FwdStash {
+    /// The routing decision of the forward.
     pub routing: Routing,
+    /// Per-expert row budget used.
     pub capacity: usize,
+    /// Per-slot (top-k) stashed intermediates.
     pub slots: Vec<SlotStash>,
     /// The undisturbed layer input `[tokens, d]` — the router backward
     /// re-derives the softmax probabilities from it.
     pub x: Mat,
+    /// Forward output `[t, d]`.
     pub y: Mat,
+    /// Load-balancing aux loss of the forward.
     pub aux_loss: f32,
+    /// Bytes moved through dispatch.
     pub dispatch_bytes: usize,
+    /// Explicit casts the forward executed.
     pub cast_ops: usize,
 }
 
 impl FwdStash {
+    /// Routed slots per token.
     pub fn top_k(&self) -> usize {
         self.slots.len()
     }

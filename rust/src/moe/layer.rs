@@ -48,12 +48,16 @@ use crate::util::rng::Rng;
 /// Precision recipe (Fig. 2 variants).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Recipe {
+    /// No quantization anywhere (the convergence oracle).
     Bf16,
+    /// TE-style blockwise FP8: float scales, naive transposes.
     Blockwise,
+    /// The paper's casting-free FP8 recipe: Po2 scales, direct transposes.
     Fp8Flow,
 }
 
 impl Recipe {
+    /// Parse a recipe name as the CLI spells it.
     pub fn parse(s: &str) -> Option<Recipe> {
         match s {
             "bf16" => Some(Recipe::Bf16),
@@ -67,13 +71,18 @@ impl Recipe {
 /// MoE layer weights (f32 masters; quantized per-recipe on construction).
 #[derive(Clone, Debug)]
 pub struct MoeWeights {
+    /// Router projection `[d, E]` (dense f32 path).
     pub router: Mat,      // [d, E]
+    /// Gate projections, `E x [d, h]`.
     pub w1: Vec<Mat>,     // E × [d, h] (gate proj)
+    /// Up projections, `E x [d, h]`.
     pub w3: Vec<Mat>,     // E × [d, h] (up proj)
+    /// Down projections, `E x [h, d]`.
     pub w2: Vec<Mat>,     // E × [h, d] (down proj)
 }
 
 impl MoeWeights {
+    /// Random init (masters in f32).
     pub fn random(d: usize, h: usize, e: usize, rng: &mut Rng) -> MoeWeights {
         let s1 = 1.0 / (d as f32).sqrt();
         let s2 = 1.0 / (h as f32).sqrt();
@@ -85,6 +94,7 @@ impl MoeWeights {
         }
     }
 
+    /// Expert count.
     pub fn n_experts(&self) -> usize {
         self.w1.len()
     }
@@ -104,13 +114,21 @@ impl MoeWeights {
 /// every timed path, and real training touches both directions each step.
 /// Forward-only callers pay ~2× the (small) prep quantization for it.
 pub struct PreparedWeights {
+    /// Recipe these layouts serve.
     pub recipe: Recipe,
+    /// The f32 masters.
     pub raw: MoeWeights,
+    /// fprop layout: per-expert w1-transpose codes.
     pub w1_t: Vec<Fp8Tensor>, // E × [h, d] codes (w1ᵀ)
+    /// fprop layout: per-expert w3-transpose codes.
     pub w3_t: Vec<Fp8Tensor>,
+    /// fprop layout: per-expert w2-transpose codes.
     pub w2_t: Vec<Fp8Tensor>, // E × [d, h] codes (w2ᵀ)
+    /// dgrad layout: per-expert w1 codes.
     pub w1_d: Vec<Fp8Tensor>, // E × [d, h] codes (w1, dgrad layout)
+    /// dgrad layout: per-expert w3 codes.
     pub w3_d: Vec<Fp8Tensor>,
+    /// dgrad layout: per-expert w2 codes.
     pub w2_d: Vec<Fp8Tensor>, // E × [h, d] codes (w2, dgrad layout)
 }
 
@@ -129,6 +147,7 @@ pub struct WeightPrepStats {
 }
 
 impl PreparedWeights {
+    /// Prepare both GEMM layouts from `raw` for `recipe`.
     pub fn new(raw: MoeWeights, recipe: Recipe) -> PreparedWeights {
         let mut pw = PreparedWeights {
             recipe,
@@ -185,7 +204,9 @@ impl PreparedWeights {
 
 /// Forward output plus dataflow accounting.
 pub struct MoeOutput {
+    /// Layer output `[t, d]`.
     pub y: Mat,
+    /// Load-balancing aux loss.
     pub aux_loss: f32,
     /// Bytes moved through the dispatch (permute) stage — FP8 dispatch
     /// halves this vs BF16 (plus scale sidecar), the Table 1 effect.
@@ -216,15 +237,19 @@ pub struct RankLocalBatch {
     /// Global expert ids this batch covers (row block `i` holds expert
     /// `experts.start + i`).
     pub experts: Range<usize>,
+    /// Per-expert row budget.
     pub capacity: usize,
+    /// The wire payload, in the recipe's wire type.
     pub payload: WirePayload,
 }
 
 impl RankLocalBatch {
+    /// Number of experts this batch covers.
     pub fn n_experts(&self) -> usize {
         self.experts.len()
     }
 
+    /// Total row count (`experts x capacity`).
     pub fn rows(&self) -> usize {
         self.experts.len() * self.capacity
     }
@@ -245,7 +270,9 @@ impl RankLocalBatch {
 /// dispatch path.
 #[derive(Clone, Copy, Debug)]
 pub enum DispatchSource<'a> {
+    /// Dense rows (BF16-accounted wire).
     Dense(&'a Mat),
+    /// FP8 codes plus scale sidecar.
     Fp8(&'a Fp8Tensor),
 }
 

@@ -14,13 +14,18 @@ use anyhow::{bail, Context, Result};
 /// restricted to these — `f8e4m3fn` exists only *inside* graphs).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dtype {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer.
     S32,
+    /// 8-bit unsigned integer (packed FP8 codes at the boundary).
     U8,
+    /// 32-bit unsigned integer.
     U32,
 }
 
 impl Dtype {
+    /// Parse a manifest dtype string (`f32`/`s32`/`u8`/`u32`).
     pub fn parse(s: &str) -> Result<Dtype> {
         Ok(match s {
             "f32" => Dtype::F32,
@@ -31,6 +36,7 @@ impl Dtype {
         })
     }
 
+    /// Bytes per element.
     pub fn size_bytes(self) -> usize {
         match self {
             Dtype::U8 => 1,
@@ -42,11 +48,14 @@ impl Dtype {
 /// Shape + dtype of one boundary tensor.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorSpec {
+    /// Dimension sizes.
     pub shape: Vec<usize>,
+    /// Element type.
     pub dtype: Dtype,
 }
 
 impl TensorSpec {
+    /// Total element count.
     pub fn n_elements(&self) -> usize {
         self.shape.iter().product()
     }
@@ -55,8 +64,11 @@ impl TensorSpec {
 /// One artifact's manifest entry.
 #[derive(Clone, Debug)]
 pub struct ArtifactSpec {
+    /// HLO text filename within the artifacts directory.
     pub file: String,
+    /// Entry-parameter specs, in order.
     pub inputs: Vec<TensorSpec>,
+    /// Flattened output-tuple specs, in order.
     pub outputs: Vec<TensorSpec>,
 }
 
@@ -67,23 +79,28 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// Read and parse `manifest.json` under `path`.
     pub fn load(path: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
         Manifest::parse(&text)
     }
 
+    /// Spec of artifact `name`, if present.
     pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
         self.entries.get(name)
     }
 
+    /// All artifact names.
     pub fn names(&self) -> impl Iterator<Item = &str> {
         self.entries.keys().map(String::as_str)
     }
 
+    /// Number of artifacts.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// True when the manifest has no artifacts.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }

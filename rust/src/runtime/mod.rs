@@ -18,7 +18,9 @@ pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
 
 /// A compiled, loaded XLA executable plus its manifest entry.
 pub struct Executable {
+    /// Artifact name (manifest key).
     pub name: String,
+    /// Manifest entry this executable was compiled from.
     pub spec: ArtifactSpec,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -49,7 +51,9 @@ impl Executable {
 
 /// The runtime: one PJRT client plus the artifact registry.
 pub struct Runtime {
+    /// The PJRT client every executable compiles against.
     pub client: xla::PjRtClient,
+    /// Parsed artifact registry.
     pub manifest: Manifest,
     dir: PathBuf,
 }

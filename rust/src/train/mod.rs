@@ -26,10 +26,15 @@ use crate::util::json::Json;
 /// Outcome of a training run (shared by both drivers).
 #[derive(Clone, Debug)]
 pub struct TrainOutcome {
+    /// Recipe label (`bf16` / `blockwise` / `fp8flow`).
     pub recipe: String,
+    /// Per-step total loss.
     pub losses: Vec<f32>,
+    /// Steps taken.
     pub steps: usize,
+    /// Wall-clock seconds for the whole run.
     pub wall_s: f64,
+    /// Training throughput.
     pub tokens_per_s: f64,
 }
 

@@ -36,12 +36,19 @@ use crate::util::mat::Mat;
 /// Shape + hyperparameters of one native training run.
 #[derive(Clone, Copy, Debug)]
 pub struct TrainConfig {
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Model width.
     pub d_model: usize,
+    /// Per-expert FFN hidden size.
     pub ffn: usize,
+    /// Expert count.
     pub n_experts: usize,
+    /// Routed experts per token.
     pub top_k: usize,
+    /// Rows per step.
     pub batch: usize,
+    /// Tokens per row.
     pub seq: usize,
     /// Per-expert row budget of the dispatched buffer. The named configs
     /// set it to [`Self::positions`] so no token is ever capacity-dropped
@@ -49,6 +56,7 @@ pub struct TrainConfig {
     pub capacity: usize,
     /// Aux load-balancing loss coefficient (λ).
     pub aux_coef: f32,
+    /// Optimizer hyperparameters.
     pub opt: OptConfig,
     /// Simulated EP ranks for the training step (1 = single-rank;
     /// bit-identical either way — `tests/prop_train.rs`).
@@ -99,6 +107,7 @@ impl TrainConfig {
         }
     }
 
+    /// A named preset (`tiny` / `small`).
     pub fn named(name: &str) -> Option<TrainConfig> {
         match name {
             "tiny" => Some(TrainConfig::tiny()),
@@ -117,11 +126,15 @@ impl TrainConfig {
 /// Fig. 6 audit table.
 #[derive(Clone, Copy, Debug)]
 pub struct TrainMetrics {
+    /// 1-based step index.
     pub step: usize,
     /// Total loss (CE + λ·aux).
     pub loss: f32,
+    /// Cross-entropy part of the loss.
     pub ce: f32,
+    /// Load-balancing aux loss (pre-lambda).
     pub aux: f32,
+    /// Learning rate applied this step.
     pub lr: f32,
     /// Executed explicit casts, forward pass (entry quantization only for
     /// Fp8Flow).
@@ -136,12 +149,16 @@ pub struct TrainMetrics {
     /// Requantizations in the optimizer step — 0 for every recipe on the
     /// native substrate (layouts are regenerated from the f32 masters).
     pub opt_requants: usize,
+    /// Forward wall-clock seconds.
     pub fwd_s: f64,
+    /// Backward wall-clock seconds.
     pub bwd_s: f64,
+    /// Optimizer wall-clock seconds.
     pub opt_s: f64,
 }
 
 impl TrainMetrics {
+    /// Serialize one metrics row for `runs/*.json`.
     pub fn to_json(&self) -> Json {
         Json::obj()
             .set("step", self.step)
@@ -163,11 +180,15 @@ impl TrainMetrics {
 /// The native training driver: masters in f32 (`embed`, `head`,
 /// `pw.raw`), per-recipe FP8 layouts in `pw`, optimizer state in `opt`.
 pub struct NativeTrainer {
+    /// Run configuration.
     pub cfg: TrainConfig,
     recipe: Recipe,
     name: String,
+    /// f32 master embedding table `[vocab, d]`.
     pub embed: Mat,
+    /// f32 master output head `[d, vocab]`.
     pub head: Mat,
+    /// MoE weights: f32 masters plus per-recipe FP8 layouts.
     pub pw: PreparedWeights,
     opt: Optimizer,
     step: usize,
@@ -202,10 +223,12 @@ impl NativeTrainer {
         }
     }
 
+    /// The recipe being trained.
     pub fn recipe_enum(&self) -> Recipe {
         self.recipe
     }
 
+    /// Completed step count.
     pub fn steps_done(&self) -> usize {
         self.step
     }

@@ -35,6 +35,7 @@ impl NativeLm {
         }
     }
 
+    /// Vocabulary size (embedding row count).
     pub fn vocab(&self) -> usize {
         self.embed.rows
     }

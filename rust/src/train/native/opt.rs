@@ -27,6 +27,7 @@ pub enum OptAlgo {
 /// Optimizer hyperparameters.
 #[derive(Clone, Copy, Debug)]
 pub struct OptConfig {
+    /// Update rule.
     pub algo: OptAlgo,
     /// Peak learning rate (after warmup).
     pub lr: f32,
@@ -47,6 +48,7 @@ impl OptConfig {
         }
     }
 
+    /// SGD-momentum config (ablation baseline).
     pub fn sgd(lr: f32, momentum: f32) -> OptConfig {
         OptConfig { algo: OptAlgo::SgdMomentum { momentum }, lr, weight_decay: 0.0, warmup: 5 }
     }
@@ -56,6 +58,7 @@ impl OptConfig {
 /// lazily sized on the first step and keyed by position, so callers must
 /// pass the same tensors in the same order every step.
 pub struct Optimizer {
+    /// Hyperparameters.
     pub cfg: OptConfig,
     /// Completed steps (1-based inside the update math).
     t: usize,
@@ -64,6 +67,7 @@ pub struct Optimizer {
 }
 
 impl Optimizer {
+    /// Fresh optimizer state for `cfg`.
     pub fn new(cfg: OptConfig) -> Optimizer {
         Optimizer { cfg, t: 0, m: Vec::new(), v: Vec::new() }
     }

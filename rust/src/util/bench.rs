@@ -10,20 +10,27 @@ use std::time::{Duration, Instant};
 /// Result of one benchmark case.
 #[derive(Clone, Debug)]
 pub struct BenchStats {
+    /// Case label (table row).
     pub name: String,
+    /// Measured iterations.
     pub iters: usize,
+    /// Median iteration time.
     pub median: Duration,
+    /// 10th-percentile iteration time.
     pub p10: Duration,
+    /// 90th-percentile iteration time.
     pub p90: Duration,
     /// Optional throughput denominator (bytes processed per iteration).
     pub bytes: Option<u64>,
 }
 
 impl BenchStats {
+    /// Median in milliseconds.
     pub fn median_ms(&self) -> f64 {
         self.median.as_secs_f64() * 1e3
     }
 
+    /// Throughput in GiB/s when a byte count was declared.
     pub fn gib_per_s(&self) -> Option<f64> {
         self.bytes
             .map(|b| b as f64 / self.median.as_secs_f64() / (1u64 << 30) as f64)
@@ -34,9 +41,13 @@ impl BenchStats {
 /// `cargo test`-adjacent smoke runs stay fast.
 #[derive(Clone, Debug)]
 pub struct Bencher {
+    /// Warmup duration before measurement starts.
     pub warmup: Duration,
+    /// Measurement time budget.
     pub measure: Duration,
+    /// Minimum iterations regardless of budget.
     pub min_iters: usize,
+    /// Iteration cap.
     pub max_iters: usize,
 }
 
@@ -73,6 +84,7 @@ pub fn bencher_from_cli(default_threads: usize) -> (Bencher, crate::util::cli::A
 }
 
 impl Bencher {
+    /// Shrunk budgets for smoke runs (`BENCH_QUICK=1`).
     pub fn quick() -> Self {
         Bencher {
             warmup: Duration::from_millis(20),

@@ -8,7 +8,9 @@ use std::collections::BTreeMap;
 /// Parsed argument bag.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// Positional arguments, in order.
     pub positional: Vec<String>,
+    /// `--key value` / bare `--flag` pairs.
     pub flags: BTreeMap<String, String>,
 }
 
@@ -39,10 +41,12 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments.
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// True when `--key` was passed.
     pub fn flag(&self, key: &str) -> bool {
         matches!(self.flags.get(key).map(String::as_str), Some("true") | Some("1"))
     }
@@ -56,26 +60,31 @@ impl Args {
             || self.positional.iter().any(|p| p == "-h" || p == "help")
     }
 
+    /// Value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(String::as_str)
     }
 
+    /// Value of `--key`, or `default`.
     pub fn get_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// `--key` parsed as `usize`, or `default`.
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.get(key)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
             .unwrap_or(default)
     }
 
+    /// `--key` parsed as `u64`, or `default`.
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
         self.get(key)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
             .unwrap_or(default)
     }
 
+    /// `--key` parsed as `f64`, or `default`.
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.get(key)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))

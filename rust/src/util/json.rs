@@ -9,15 +9,22 @@ use std::fmt::Write as _;
 /// A JSON value tree.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number (integers render without a fraction).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (insertion-ordered key/value pairs).
     Obj(Vec<(String, Json)>),
 }
 
 impl Json {
+    /// An empty JSON object; build it up with [`Json::set`].
     pub fn obj() -> Json {
         Json::Obj(Vec::new())
     }
@@ -31,6 +38,7 @@ impl Json {
         self
     }
 
+    /// Serialize to a compact JSON string.
     pub fn render(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);

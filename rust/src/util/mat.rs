@@ -8,21 +8,27 @@ use crate::util::rng::Rng;
 /// Dense row-major `f32` matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row-major elements, `rows * cols` of them.
     pub data: Vec<f32>,
 }
 
 impl Mat {
+    /// All-zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Mat { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Wrap `data` (row-major, length `rows * cols`).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
         assert_eq!(rows * cols, data.len(), "shape/data mismatch");
         Mat { rows, cols, data }
     }
 
+    /// Build element `(i, j)` from `f(i, j)`.
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
         let mut data = Vec::with_capacity(rows * cols);
         for i in 0..rows {
@@ -47,22 +53,26 @@ impl Mat {
     }
 
     #[inline]
+    /// Element `(i, j)`.
     pub fn at(&self, i: usize, j: usize) -> f32 {
         debug_assert!(i < self.rows && j < self.cols);
         self.data[i * self.cols + j]
     }
 
     #[inline]
+    /// Mutable element `(i, j)`.
     pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
         debug_assert!(i < self.rows && j < self.cols);
         &mut self.data[i * self.cols + j]
     }
 
     #[inline]
+    /// Row `i` as a slice.
     pub fn row(&self, i: usize) -> &[f32] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Transposed copy.
     pub fn transpose(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);
         for i in 0..self.rows {
@@ -94,6 +104,7 @@ impl Mat {
         out
     }
 
+    /// Elementwise map.
     pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
         Mat {
             rows: self.rows,
@@ -102,10 +113,12 @@ impl Mat {
         }
     }
 
+    /// Largest absolute element.
     pub fn max_abs(&self) -> f32 {
         self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
     }
 
+    /// Frobenius norm.
     pub fn frobenius(&self) -> f64 {
         self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
     }

@@ -85,7 +85,9 @@ pub fn probe_indices(n: usize, count: usize) -> Vec<usize> {
 
 /// Case-level generator handed to each property execution.
 pub struct Gen {
+    /// Per-case RNG, already seeded.
     pub rng: Rng,
+    /// The case seed (printed on failure for replay).
     pub seed: u64,
 }
 

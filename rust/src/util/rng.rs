@@ -25,6 +25,7 @@ impl Rng {
     }
 
     #[inline]
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)
@@ -41,6 +42,7 @@ impl Rng {
     }
 
     #[inline]
+    /// Next raw 32-bit output.
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32
     }

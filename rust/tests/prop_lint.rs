@@ -1,0 +1,311 @@
+//! Property/mutation tests of the scale-lineage static analyzer.
+//!
+//! Three claims, each acceptance-gating:
+//!
+//! 1. **Clean graphs are clean.** The Fp8Flow layer and train graphs (and
+//!    the BF16 oracle) produce zero diagnostics; the incumbent graphs
+//!    reproduce exactly their known double-quantization findings.
+//! 2. **Each defect class is caught by its designated rule.** We inject
+//!    one defect at a time into an otherwise-clean Fp8Flow graph and
+//!    assert the analyzer fires exactly the expected rule.
+//! 3. **The static pass and the runtime agree.** Analyzer-predicted
+//!    cast/requant counts match the executed `FwdStash`/`BwdStats`/
+//!    `WeightPrepStats`/`TrainMetrics` audits for every recipe and
+//!    several shapes.
+
+use fp8_flow_moe::analysis::{
+    cross_check, lint_graph, CastSummary, ExecPrediction, ExecutedAudit, RuleId, Severity,
+};
+use fp8_flow_moe::dataflow::graph::{DataflowGraph, Dtype, OpKind, ScaleAxis, Stage};
+use fp8_flow_moe::dataflow::{build, build_train_step, Variant};
+use fp8_flow_moe::moe::backward::{forward_stash, moe_backward};
+use fp8_flow_moe::moe::layer::{MoeWeights, PreparedWeights, Recipe};
+use fp8_flow_moe::train::{Corpus, NativeTrainer, TrainConfig};
+use fp8_flow_moe::util::mat::Mat;
+use fp8_flow_moe::util::rng::Rng;
+
+fn codes(g: &DataflowGraph) -> Vec<&'static str> {
+    lint_graph(g).iter().map(|d| d.rule.code()).collect()
+}
+
+fn node_named(g: &DataflowGraph, name: &str) -> usize {
+    g.nodes.iter().find(|n| n.name == name).unwrap_or_else(|| panic!("no node '{name}'")).id
+}
+
+// ---------------------------------------------------------------------------
+// 1. clean vs known-dirty baselines
+// ---------------------------------------------------------------------------
+
+#[test]
+fn clean_graphs_produce_zero_diagnostics() {
+    for v in [Variant::Fp8Flow, Variant::Bf16] {
+        for (phase, g) in [("layer", build(v)), ("train", build_train_step(v))] {
+            let diags = lint_graph(&g);
+            assert!(diags.is_empty(), "{} {phase}: {:?}", v.name(), codes(&g));
+        }
+    }
+}
+
+#[test]
+fn blockwise_reproduces_known_requant_findings() {
+    // layer: two naive wgrad transposes (SL001), the axis mismatch they
+    // cause at each wgrad GEMM (SL002), and the two dense activation
+    // islands (SL007) — warnings all, no structural errors
+    let diags = lint_graph(&build(Variant::TeBlockwise));
+    let count = |r: RuleId| diags.iter().filter(|d| d.rule == r).count();
+    assert_eq!(count(RuleId::DoubleQuant), 2);
+    assert_eq!(count(RuleId::AxisMismatchGemm), 2);
+    assert_eq!(count(RuleId::Bf16Island), 2);
+    assert_eq!(diags.len(), 6);
+    assert!(diags.iter().all(|d| d.severity == Severity::Warning));
+    // train: +1 DoubleQuant for the storage-derived weight layout
+    assert_eq!(lint_graph(&build_train_step(Variant::TeBlockwise)).len(), 7);
+}
+
+#[test]
+fn deepseek_flags_wire_and_wgrad_requants() {
+    let diags = lint_graph(&build(Variant::DeepSeekV3));
+    let dq: Vec<&str> = diags
+        .iter()
+        .filter(|d| d.rule == RuleId::DoubleQuant)
+        .map(|d| d.node_name.as_str())
+        .collect();
+    // the two re-quantizations after the wire dequants plus the two naive
+    // wgrad transposes
+    assert_eq!(dq, vec!["Q(x) fc1-in", "Q(dy) fc2-grads", "act naive-T", "x naive-T"]);
+    assert_eq!(diags.len(), 8);
+}
+
+#[test]
+fn lineage_traces_tell_the_requant_story() {
+    let diags = lint_graph(&build(Variant::DeepSeekV3));
+    let d = diags.iter().find(|d| d.node_name == "Q(x) fc1-in").unwrap();
+    // "quantized row-wise at n1 (Q(x) pre-dispatch), dequantized at n3
+    //  (DQ post-dispatch), requantized row-wise at n6 (Q(x) fc1-in)"
+    assert!(d.trace.contains("quantized row-wise"), "{}", d.trace);
+    assert!(d.trace.contains("dequantized at"), "{}", d.trace);
+    assert!(d.trace.contains("requantized"), "{}", d.trace);
+    let nt = diags.iter().find(|d| d.node_name == "act naive-T").unwrap();
+    assert!(nt.trace.contains("requantized col-wise"), "{}", nt.trace);
+    assert!(nt.message.contains("cross-axis"), "{}", nt.message);
+}
+
+// ---------------------------------------------------------------------------
+// 2. mutation suite — one injected defect, one designated rule
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mutation_direct_to_naive_transpose_fires_double_quant() {
+    let mut g = build(Variant::Fp8Flow);
+    let at = node_named(&g, "act direct-T");
+    g.nodes[at].op = OpKind::NaiveTransposeRequant;
+    assert_eq!(codes(&g), vec!["SL001"]);
+    assert!(!g.casting_free_wgrad(), "the swap also kills the wgrad guarantee");
+    assert_eq!(g.requant_nodes_bwd(), 1, "…and shows up in the lineage-derived counter");
+}
+
+#[test]
+fn mutation_dropped_sidecar_fires_missing_sidecar() {
+    let mut g = build(Variant::Fp8Flow);
+    let disp = node_named(&g, "dispatch-a2a (fp8)");
+    g.nodes[disp].sidecar = false;
+    let diags = lint_graph(&g);
+    assert_eq!(codes(&g), vec!["SL005"]);
+    assert_eq!(diags[0].severity, Severity::Error, "undecodable wire payload is structural");
+}
+
+#[test]
+fn mutation_flipped_wgrad_axis_fires_gemm_mismatch() {
+    // declare the act transpose's output row-wise (as if its scales were
+    // never transposed): fc2-wgrad now mixes col-wise dy with row-wise act
+    let mut g = build(Variant::Fp8Flow);
+    let at = node_named(&g, "act direct-T");
+    g.nodes[at].axis = Some(ScaleAxis::RowWise);
+    let diags = lint_graph(&g);
+    assert_eq!(codes(&g), vec!["SL002"]);
+    assert_eq!(diags[0].node_name, "fc2-wgrad");
+    assert!(diags[0].message.contains("row-wise") && diags[0].message.contains("col-wise"));
+}
+
+#[test]
+fn mutation_orphaned_node_fires_orphan_rule() {
+    let mut g = build(Variant::Fp8Flow);
+    let comb = node_named(&g, "combine-a2a");
+    g.nodes[comb].inputs.clear();
+    assert_eq!(codes(&g), vec!["SL008"]);
+    assert!(g.validate().unwrap_err().contains("orphan"), "validate agrees");
+}
+
+#[test]
+fn mutation_stray_qdq_pair_fires_redundant_qdq() {
+    let mut g = build(Variant::Fp8Flow);
+    let y = node_named(&g, "gate-scale-add");
+    let q = g.add("stray Q", OpKind::Quantize, Stage::Combine, false, Dtype::Fp8, &[y]);
+    g.add("stray DQ", OpKind::Dequantize, Stage::Combine, false, Dtype::Bf16, &[q]);
+    assert_eq!(codes(&g), vec!["SL004"]);
+}
+
+#[test]
+fn mutation_dequant_of_dense_fires_error() {
+    let mut g = build(Variant::Fp8Flow);
+    let y = node_named(&g, "gate-scale-add");
+    g.add("bogus DQ", OpKind::Dequantize, Stage::Combine, false, Dtype::Bf16, &[y]);
+    let diags = lint_graph(&g);
+    assert_eq!(codes(&g), vec!["SL003"]);
+    assert_eq!(diags[0].severity, Severity::Error);
+}
+
+#[test]
+fn mutation_mixed_gemm_operands_fire_dtype_mismatch() {
+    let mut g = build(Variant::Fp8Flow);
+    let act = node_named(&g, "fused-swiglu-quant"); // FP8
+    let fc1 = node_named(&g, "fc1-grouped-gemm"); // BF16
+    g.add("mixed-gemm", OpKind::GroupedGemm, Stage::Fc2, false, Dtype::Bf16, &[act, fc1]);
+    assert_eq!(codes(&g), vec!["SL006"]);
+}
+
+#[test]
+fn mutation_dense_island_fires_bf16_island() {
+    // a standalone dense activation inside the expert span of an FP8
+    // graph (exactly what Fp8Flow's fused kernels exist to avoid)
+    let mut g = build(Variant::Fp8Flow);
+    let fc1 = node_named(&g, "fc1-grouped-gemm");
+    g.add("dense-swiglu", OpKind::SwiGlu, Stage::Activation, false, Dtype::Bf16, &[fc1]);
+    assert_eq!(codes(&g), vec!["SL007"]);
+}
+
+// ---------------------------------------------------------------------------
+// 3. static ↔ executed agreement
+// ---------------------------------------------------------------------------
+
+fn run_executed(recipe: Recipe, experts: usize, top_k: usize) -> ExecutedAudit {
+    let tokens = 48;
+    let capacity = (tokens * top_k).div_ceil(experts);
+    let mut rng = Rng::seed_from(9);
+    let x = Mat::randn(tokens, 16, 0.5, &mut rng);
+    let w = MoeWeights::random(16, 24, experts, &mut rng);
+    let dy = Mat::randn(tokens, 16, 1.0, &mut rng);
+    let mut pw = PreparedWeights::new(w, recipe);
+    let stash = forward_stash(&x, &pw, top_k, capacity);
+    let grads = moe_backward(&stash, &pw, &dy);
+    let prep = pw.requantize_from_masters();
+    ExecutedAudit {
+        casts_fwd: stash.cast_ops,
+        casts_bwd: grads.stats.casts,
+        requants_bwd: grads.stats.requants,
+        opt_weight_quants: prep.weight_quants,
+        opt_requants: prep.requants,
+    }
+}
+
+/// Predicted audit for an executed recipe: layer-path counts from the
+/// recipe's own graph, optimizer tail from the master-sourced (casting-
+/// free) tail that `requantize_from_masters` implements for every FP8
+/// recipe.
+fn predict(v: Variant, experts: usize, top_k: usize) -> ExecPrediction {
+    let layer = ExecPrediction::of(&build(v), experts, top_k);
+    let tail_variant = if v == Variant::Bf16 { v } else { Variant::Fp8Flow };
+    let tail = ExecPrediction::of(&build_train_step(tail_variant), experts, top_k);
+    ExecPrediction {
+        opt_weight_quants: tail.opt_weight_quants,
+        opt_requants: tail.opt_requants,
+        ..layer
+    }
+}
+
+#[test]
+fn predictions_match_executed_audits_for_every_recipe() {
+    for (v, recipe) in [
+        (Variant::Bf16, Recipe::Bf16),
+        (Variant::TeBlockwise, Recipe::Blockwise),
+        (Variant::Fp8Flow, Recipe::Fp8Flow),
+    ] {
+        for (experts, top_k) in [(4, 1), (6, 2), (8, 3)] {
+            let predicted = predict(v, experts, top_k);
+            let executed = run_executed(recipe, experts, top_k);
+            let div = cross_check(v.name(), &predicted, &executed);
+            assert!(
+                div.is_empty(),
+                "{} E={experts} K={top_k}: {:?}",
+                v.name(),
+                div.iter().map(|d| d.message.clone()).collect::<Vec<_>>()
+            );
+        }
+    }
+}
+
+#[test]
+fn cross_check_catches_a_seeded_divergence() {
+    let mut predicted = predict(Variant::Fp8Flow, 4, 2);
+    predicted.casts_bwd += 10; // sabotage
+    let executed = run_executed(Recipe::Fp8Flow, 4, 2);
+    let div = cross_check("fp8-flow-moe", &predicted, &executed);
+    assert_eq!(div.len(), 1);
+    assert_eq!(div[0].rule, RuleId::AuditDivergence);
+    assert_eq!(div[0].severity, Severity::Error);
+}
+
+#[test]
+fn predictions_match_one_executed_train_step() {
+    // TrainMetrics is the full-loop audit: forward + backward + optimizer
+    let cfg = TrainConfig::named("tiny").unwrap();
+    for (v, recipe) in [
+        (Variant::Bf16, Recipe::Bf16),
+        (Variant::TeBlockwise, Recipe::Blockwise),
+        (Variant::Fp8Flow, Recipe::Fp8Flow),
+    ] {
+        let mut trainer = NativeTrainer::new(cfg, recipe, 3);
+        let mut corpus = Corpus::new(cfg.vocab, 3, 10);
+        trainer.run(&mut corpus, 2, 0).unwrap();
+        let m = trainer.metrics.last().unwrap();
+        let p = predict(v, cfg.n_experts, cfg.top_k);
+        assert_eq!(m.casts_fwd, p.casts_fwd, "{} casts_fwd", v.name());
+        assert_eq!(m.casts_bwd, p.casts_bwd, "{} casts_bwd", v.name());
+        assert_eq!(m.requants_bwd, p.requants_bwd, "{} requants_bwd", v.name());
+        assert_eq!(m.opt_weight_quants, p.opt_weight_quants, "{} opt quants", v.name());
+        assert_eq!(m.opt_requants, p.opt_requants, "{} opt requants", v.name());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// counter parity: the lineage queries reproduce the legacy op-filters
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lineage_counters_equal_legacy_op_filters() {
+    for v in Variant::all() {
+        for g in [build(v), build_train_step(v)] {
+            let s = CastSummary::of(&g);
+            let casts =
+                g.nodes.iter().filter(|n| n.op.is_explicit_cast()).count();
+            let casts_fwd = g
+                .nodes
+                .iter()
+                .filter(|n| !n.backward && n.stage != Stage::Optimizer && n.op.is_explicit_cast())
+                .count();
+            let casts_bwd = g.nodes.iter().filter(|n| n.backward && n.op.is_explicit_cast()).count();
+            let casts_opt = g
+                .nodes
+                .iter()
+                .filter(|n| n.stage == Stage::Optimizer && n.op.is_explicit_cast())
+                .count();
+            let requants_bwd = g
+                .nodes
+                .iter()
+                .filter(|n| n.backward && n.op == OpKind::NaiveTransposeRequant)
+                .count();
+            let requants_opt = g
+                .nodes
+                .iter()
+                .filter(|n| n.stage == Stage::Optimizer && n.op == OpKind::NaiveTransposeRequant)
+                .count();
+            assert_eq!(s.casts_total, casts, "{}", v.name());
+            assert_eq!(s.casts_fwd, casts_fwd, "{}", v.name());
+            assert_eq!(s.casts_bwd, casts_bwd, "{}", v.name());
+            assert_eq!(s.casts_opt, casts_opt, "{}", v.name());
+            assert_eq!(s.requants_bwd, requants_bwd, "{}", v.name());
+            assert_eq!(s.requants_opt, requants_opt, "{}", v.name());
+            assert_eq!(s.casts_total, g.explicit_casts(), "{} delegation", v.name());
+        }
+    }
+}

@@ -5,6 +5,8 @@
 #   test    cargo test -q
 #   fmt     cargo fmt --check      (skipped with a warning if rustfmt is absent)
 #   clippy  cargo clippy -D warnings (skipped with a warning if clippy is absent)
+#   lint    cargo run -- lint --recipe all  (scale-lineage static analyzer;
+#           nonzero exit on any error-severity diagnostic, writes runs/lint.json)
 #
 # Run from the repository root or from rust/. Fails fast on the first error.
 
@@ -31,5 +33,9 @@ if cargo clippy --version >/dev/null 2>&1; then
 else
     echo "WARN: clippy not installed; skipping cargo clippy" >&2
 fi
+
+echo "== lint gate: scale-lineage static analyzer =="
+cargo run --release -q -p fp8_flow_moe -- lint --recipe all
+test -f rust/runs/lint.json
 
 echo "verify OK"
