@@ -3,11 +3,16 @@
 //! measured-vs-modeled report the simulator can be calibrated against.
 //!
 //! ```bash
-//! cargo bench --bench ep_shard [-- --tokens N --ranks-max R --quick]
+//! cargo bench --bench ep_shard [-- --tokens N --ranks-max R --chunks C --quick]
 //! ```
+//!
+//! Besides rank scaling, the max-rank point is re-run with the
+//! double-buffered slot pipeline (`--chunks`, default 2) and reported as
+//! a serialized-vs-overlapped pair plus the measured-vs-modeled overlap
+//! efficiency block.
 
 use fp8_flow_moe::cluster::ep_exec::{ep_forward, EpConfig, EpShape};
-use fp8_flow_moe::cluster::sim::ep_measured_vs_modeled;
+use fp8_flow_moe::cluster::sim::{ep_measured_vs_modeled, ep_overlap_report};
 use fp8_flow_moe::moe::layer::{MoeWeights, PreparedWeights, Recipe};
 use fp8_flow_moe::util::bench::{bencher_from_cli, print_speedup, print_table};
 use fp8_flow_moe::util::mat::Mat;
@@ -23,6 +28,7 @@ fn main() {
     let top_k = args.usize_or("top-k", 2);
     let capacity = args.usize_or("capacity", (tokens * top_k).div_ceil(experts));
     let ranks_max = args.usize_or("ranks-max", 4).min(experts);
+    let chunks = args.usize_or("chunks", 2);
 
     let mut rng = Rng::seed_from(42);
     let x = Mat::randn(tokens, d_model, 0.5, &mut rng);
@@ -38,7 +44,7 @@ fn main() {
         let pw = PreparedWeights::new(w.clone(), recipe);
         let mut rows = Vec::new();
         for &ranks in &rank_counts {
-            let cfg = EpConfig { ranks, top_k, capacity, threads: 0 };
+            let cfg = EpConfig::serial(ranks, top_k, capacity, 0);
             let bytes = (tokens * top_k * d_model * 2) as u64; // combine-wire bytes/iter
             rows.push(b.run_bytes(
                 &format!("ep_forward/{recipe:?}/R={ranks}"),
@@ -62,10 +68,37 @@ fn main() {
         }
         // one representative per-stage measured-vs-modeled report
         let ranks = *rank_counts.last().unwrap();
-        let cfg = EpConfig { ranks, top_k, capacity, threads: 0 };
+        let cfg = EpConfig::serial(ranks, top_k, capacity, 0);
         let shape = EpShape::of(&x, &pw, &cfg);
         let out = ep_forward(&x, &pw, &cfg);
         print!("{}", ep_measured_vs_modeled(recipe, ranks, &shape, &out));
+        println!();
+
+        // serialized vs double-buffered (C=2) at max ranks: measured
+        // overlap efficiency beside the modeled pipelined wall, plus a
+        // throughput row pair so the speedup is visible in bench units
+        let over_cfg = cfg.with_pipeline(chunks, true);
+        let mut pair = Vec::new();
+        for (label, c) in [("serialized", &cfg), ("overlapped", &over_cfg)] {
+            pair.push(b.run_bytes(
+                &format!("ep_forward/{recipe:?}/R={ranks}/{label}"),
+                (tokens * top_k * d_model * 2) as u64,
+                || {
+                    std::hint::black_box(ep_forward(
+                        std::hint::black_box(&x),
+                        std::hint::black_box(&pw),
+                        c,
+                    ));
+                },
+            ));
+        }
+        print_table(
+            &format!("ep_shard {recipe:?} overlap (R={ranks} C={chunks})"),
+            &pair,
+        );
+        print_speedup(&format!("{recipe:?} serialized -> overlapped"), &pair[0], &pair[1]);
+        let over = ep_forward(&x, &pw, &over_cfg);
+        print!("{}", ep_overlap_report(recipe, ranks, &shape, &out, &over));
         println!();
     }
 }

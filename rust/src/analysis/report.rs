@@ -71,6 +71,25 @@ impl ExecPrediction {
         p
     }
 
+    /// [`ExecPrediction::of`] with an explicit pipeline-chunk count —
+    /// the EP runtime's `--chunks C` knob. Cast/requant totals are
+    /// **chunk-invariant**: the entry quant runs once per batch and
+    /// `Q(dy)` once per slot (both outside the chunk loop), and every
+    /// per-expert counter fires once per expert regardless of how
+    /// experts are grouped into pipeline units — so the prediction is
+    /// `of(...)` for every `C`. Taking `chunks` explicitly (and
+    /// asserting it) keeps that invariance a stated contract the lint
+    /// runtime cross-check exercises at C > 1, not an accident.
+    pub fn of_chunked(
+        g: &DataflowGraph,
+        experts: usize,
+        top_k: usize,
+        chunks: usize,
+    ) -> ExecPrediction {
+        assert!(chunks >= 1, "need at least one pipeline chunk");
+        Self::of(g, experts, top_k)
+    }
+
     /// JSON rendering for `runs/lint.json`.
     pub fn to_json(&self) -> Json {
         Json::obj()
@@ -196,6 +215,23 @@ mod tests {
         assert_eq!((p.opt_weight_quants, p.opt_requants), (3 * e, 3 * e));
         let p = ExecPrediction::of(&build_train_step(Variant::Bf16), e, 1);
         assert_eq!((p.opt_weight_quants, p.opt_requants), (0, 0));
+    }
+
+    #[test]
+    fn chunked_prediction_is_chunk_invariant() {
+        let (e, k) = (8, 2);
+        for v in [Variant::Bf16, Variant::TeBlockwise, Variant::Fp8Flow] {
+            let base = ExecPrediction::of(&build(v), e, k);
+            for c in [1usize, 2, 4] {
+                assert_eq!(ExecPrediction::of_chunked(&build(v), e, k, c), base, "{v:?} C={c}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one pipeline chunk")]
+    fn chunked_prediction_rejects_zero_chunks() {
+        ExecPrediction::of_chunked(&build(Variant::Fp8Flow), 4, 1, 0);
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! **Executed** expert-parallel sharding — the measured counterpart of
-//! [`crate::cluster::sim`]'s analytic EP model.
+//! [`crate::cluster::sim`]'s analytic EP model, now with a slot-level
+//! double-buffered pipeline that overlaps comm and compute.
 //!
 //! [`ep_forward`] runs the MoE layer forward sharded across R simulated
 //! ranks ([`crate::cluster::rank::RankGroup`]): experts are partitioned
@@ -15,42 +16,55 @@
 //!   → combine (per-rank unpermute_unpad → reduce → gates)
 //! ```
 //!
-//! with wall-clock timers around every stage, so the comm/compute claims
-//! the simulator makes analytically become measurements
-//! ([`crate::cluster::sim::ep_measured_vs_modeled`] prints them side by
-//! side).
+//! **Chunked double buffering** ([`EpConfig::chunks`] = C): each rank's
+//! expert range is split into C contiguous chunks, and the pipeline runs
+//! per (rank, chunk) *unit*. With [`EpConfig::overlap`] the units are
+//! scheduled on a [`crate::exec::steps::StepGraph`] — per rank one
+//! **comm lane** (1 worker: pack, assemble, combine) and one **compute
+//! lane** (the remaining workers: expert FFN) — so while rank r's
+//! experts run chunk k, its comm lane packs and all-to-alls chunk k+1,
+//! in both directions (the backward mirrors this). Lane budgets are
+//! carved from the same process budget, so overlap never oversubscribes
+//! (a 1-worker rank degrades to one merged lane = serial execution).
+//! With `overlap = false` the same chunked units run bulk-synchronously,
+//! which is the measured baseline for the overlap-efficiency report
+//! ([`crate::cluster::sim::ep_overlap_report`]).
 //!
-//! **Bit-identity contract**: for any R, the output equals the
-//! single-rank [`crate::moe::layer::moe_forward`] bit for bit
+//! **Bit-identity contract**: for any R, C, overlap flag and thread
+//! budget, the output equals the single-rank
+//! [`crate::moe::layer::moe_forward`] bit for bit
 //! (`tests/prop_ep_shard.rs`). The pieces that make this hold:
-//! per-expert math reads only that expert's `capacity` rows; the UE8M0
-//! sidecar reproduces po2 scales exactly (`scale == 2^sexp`); each token
-//! appears at most once per top-k slot, so the per-rank combine partials
-//! sum (in ascending rank = ascending plan order) to the single-rank
-//! scatter result.
+//! per-expert math reads only that expert's `capacity` rows (so chunk
+//! boundaries — always on expert boundaries, in plan order — change
+//! nothing); the UE8M0 sidecar reproduces po2 scales exactly
+//! (`scale == 2^sexp`); each token appears at most once per top-k slot,
+//! so the combine reduce reads exactly one nonzero partial per served
+//! token regardless of how units interleave in wall-clock; and every
+//! kernel is thread-count-invariant (`tests/prop_parallel.rs`), so the
+//! comm/compute lane split is bit-neutral.
 
 use std::ops::Range;
 use std::time::Instant;
 
 use crate::cluster::rank::{all_to_all, RankGroup, WireBuf};
-use crate::exec::{self, Partition};
+use crate::exec::{self, Handoff, Partition, StepGraph, StepId, WorkerGroup};
 use crate::fp8::tensor::{n_tiles, Fp8Tensor, TileLayout};
 use crate::fp8::tile::quantize_rowwise_with_threads;
 use crate::fp8::{ue8m0, Fp8Format, ScaleMode};
 use crate::moe::backward::{
     expert_ffn_bwd, mat_add_assign, router_backward_from_stash, scale_by_gates_with_threads,
-    BwdStageTimes, BwdStats, FwdStash, MoeGrads,
+    BwdStageTimes, BwdStats, ExpertBwd, FwdStash, MoeGrads, SlotStash,
 };
 use crate::moe::layer::{
     combine, expert_ffn, PreparedWeights, RankLocalBatch, Recipe, WirePayload,
 };
 use crate::moe::permute::permute_pad_plan;
-use crate::moe::router::route;
+use crate::moe::router::{route, Routing};
 use crate::train::native::{NativeTrainer, TrainMetrics};
 use crate::util::json::Json;
 use crate::util::mat::Mat;
 
-/// Execution parameters for one EP-sharded forward.
+/// Execution parameters for one EP-sharded forward/backward.
 #[derive(Clone, Copy, Debug)]
 pub struct EpConfig {
     /// Number of simulated ranks (expert shards).
@@ -62,6 +76,30 @@ pub struct EpConfig {
     /// Total worker budget shared by all ranks (0 = resolve via
     /// [`crate::exec::threads`]). Each rank gets a disjoint share.
     pub threads: usize,
+    /// Pipeline chunks per rank (≥ 1; clamped to the rank's expert
+    /// count). `1` reproduces the original single-shot pipeline.
+    pub chunks: usize,
+    /// Overlap comm and compute: run the chunked units on a
+    /// [`crate::exec::steps::StepGraph`] with a dedicated comm lane per
+    /// rank, so chunk k+1's pack/all-to-all/assemble hides behind chunk
+    /// k's expert FFN. `false` = bulk-synchronous chunked schedule
+    /// (bitwise identical output either way).
+    pub overlap: bool,
+}
+
+impl EpConfig {
+    /// Serialized single-chunk config — the PR-2 pipeline.
+    pub fn serial(ranks: usize, top_k: usize, capacity: usize, threads: usize) -> EpConfig {
+        EpConfig { ranks, top_k, capacity, threads, chunks: 1, overlap: false }
+    }
+
+    /// The same config with a chunked (and optionally overlapped)
+    /// pipeline.
+    pub fn with_pipeline(mut self, chunks: usize, overlap: bool) -> EpConfig {
+        self.chunks = chunks;
+        self.overlap = overlap;
+        self
+    }
 }
 
 /// Shape of one executed EP forward — shared by the runtime, the
@@ -97,8 +135,11 @@ impl EpShape {
     }
 }
 
-/// Accumulated wall-clock seconds per pipeline stage (summed over the
-/// top-k slots; route and entry-quant run once).
+/// Accumulated seconds per pipeline stage (summed over the top-k slots;
+/// route and entry-quant run once). In the serialized schedule these are
+/// disjoint wall-clock intervals; in the overlapped schedule they are
+/// summed per-step **busy** times whose intervals overlap — compare
+/// [`EpForward::pipeline_wall_s`] for the real elapsed time.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StageTimes {
     /// Router seconds.
@@ -129,8 +170,21 @@ pub struct EpForward {
     pub aux_loss: f32,
     /// Rank count the forward ran with.
     pub ranks: usize,
-    /// Per-stage wall-clock seconds.
+    /// Effective pipeline chunks per rank (the configured count clamped
+    /// to the per-rank expert count).
+    pub chunks: usize,
+    /// Whether the overlapped (step-graph) schedule ran.
+    pub overlap: bool,
+    /// Per-stage seconds (busy-time semantics under overlap — see
+    /// [`StageTimes`]).
     pub stages: StageTimes,
+    /// Wall-clock seconds of the dispatch→FFN→combine pipeline, summed
+    /// over slots (excludes route and entry-quant, which run identically
+    /// outside the pipeline in both schedules) — the serialized-vs-
+    /// overlapped comparison the overlap-efficiency report is built on.
+    pub pipeline_wall_s: f64,
+    /// Per-slot pipeline wall-clock seconds (one entry per top-k slot).
+    pub slot_wall_s: Vec<f64>,
     /// Per-rank expert-stage seconds (summed over slots) — the load
     /// imbalance the capacity model hides.
     pub rank_expert_s: Vec<f64>,
@@ -140,7 +194,8 @@ pub struct EpForward {
     /// UE8M0 scale sidecar bytes (FP8 wire only).
     pub dispatch_sidecar_bytes: usize,
     /// Number of separate wire buffers (the synchronization-count proxy:
-    /// FP8 ships 2 per src→dst pair, BF16 ships 1).
+    /// FP8 ships 2 per src→dst-unit pair, BF16 ships 1; chunking
+    /// multiplies pairs, not bytes).
     pub dispatch_buffers: usize,
     /// Combine-path bytes (always BF16-accounted — §3.3 keeps the
     /// combine in BF16 for gradient safety).
@@ -152,12 +207,19 @@ impl EpForward {
     pub fn to_json(&self) -> Json {
         Json::obj()
             .set("ranks", self.ranks)
+            .set("chunks", self.chunks)
+            .set("overlap", self.overlap)
             .set("route_ms", self.stages.route_s * 1e3)
             .set("quant_ms", self.stages.quant_s * 1e3)
             .set("dispatch_ms", self.stages.dispatch_s * 1e3)
             .set("expert_ms", self.stages.expert_s * 1e3)
             .set("combine_ms", self.stages.combine_s * 1e3)
             .set("total_ms", self.stages.total_s() * 1e3)
+            .set("pipeline_wall_ms", self.pipeline_wall_s * 1e3)
+            .set(
+                "slot_wall_ms",
+                self.slot_wall_s.iter().map(|s| s * 1e3).collect::<Vec<f64>>(),
+            )
             .set(
                 "rank_expert_ms",
                 self.rank_expert_s.iter().map(|s| s * 1e3).collect::<Vec<f64>>(),
@@ -170,9 +232,398 @@ impl EpForward {
     }
 }
 
+// ---------------------------------------------------------------------
+// chunk layout + lanes
+// ---------------------------------------------------------------------
+
+/// One (rank, chunk) pipeline unit: a contiguous sub-range of the
+/// owning rank's experts, in plan order.
+#[derive(Clone, Debug)]
+struct Unit {
+    rank: usize,
+    chunk: usize,
+    experts: Range<usize>,
+}
+
+/// The chunked unit layout: rank-major units covering experts `0..E` in
+/// ascending order (chunk boundaries respect plan order, which is what
+/// keeps the combine reduce order — and therefore the bits — fixed).
+struct ChunkLayout {
+    units: Vec<Unit>,
+    /// Unit-index range per rank.
+    rank_units: Vec<Range<usize>>,
+    /// Max per-rank chunk count = pipeline round count.
+    c_max: usize,
+    /// Global expert id → unit id.
+    unit_of_expert: Vec<usize>,
+}
+
+impl ChunkLayout {
+    fn new(ex_part: &Partition, n_experts: usize, chunks: usize) -> ChunkLayout {
+        assert!(chunks >= 1, "need at least one pipeline chunk");
+        let mut units = Vec::new();
+        let mut rank_units = Vec::new();
+        let mut c_max = 0;
+        for er in ex_part.ranges() {
+            // `even` clamps to the expert count, so a 2-expert rank asked
+            // for 4 chunks runs 2 — never an empty unit.
+            let sub = Partition::even(er.len(), chunks);
+            let start = units.len();
+            for (c, sr) in sub.ranges().enumerate() {
+                units.push(Unit {
+                    rank: rank_units.len(),
+                    chunk: c,
+                    experts: er.start + sr.start..er.start + sr.end,
+                });
+            }
+            c_max = c_max.max(sub.len());
+            rank_units.push(start..units.len());
+        }
+        let mut unit_of_expert = vec![0usize; n_experts];
+        for (u, unit) in units.iter().enumerate() {
+            for ex in unit.experts.clone() {
+                unit_of_expert[ex] = u;
+            }
+        }
+        ChunkLayout { units, rank_units, c_max, unit_of_expert }
+    }
+
+    /// Unit id of `(rank, chunk)`, or `None` when the rank has fewer
+    /// chunks than the pipeline's round count.
+    fn unit_id(&self, rank: usize, chunk: usize) -> Option<usize> {
+        let ru = self.rank_units[rank].clone();
+        (chunk < ru.len()).then_some(ru.start + chunk)
+    }
+}
+
+/// Per-destination expert ranges for pipeline round `c` (empty range for
+/// ranks with fewer chunks — they get an empty, but present, wire
+/// buffer, keeping the mailbox square).
+fn chunk_dsts(layout: &ChunkLayout, c: usize, n_ranks: usize) -> Vec<Range<usize>> {
+    (0..n_ranks)
+        .map(|rk| layout.unit_id(rk, c).map_or(0..0, |u| layout.units[u].experts.clone()))
+        .collect()
+}
+
+/// Step-graph lane assignment for the overlapped schedule: per rank one
+/// comm lane (1 worker) and one compute lane (the rest), merged into a
+/// single serial lane when the rank's share is a single worker. Lane
+/// budgets sum to the rank's [`WorkerGroup`] share, so the overlapped
+/// schedule uses exactly the worker budget the serialized one does.
+struct Lanes {
+    n_lanes: usize,
+    /// Comm lane index per rank (pack / assemble / combine steps).
+    comm: Vec<usize>,
+    /// Compute lane index per rank (expert FFN steps).
+    compute: Vec<usize>,
+    /// Worker budget for compute-lane kernels, per rank.
+    compute_budget: Vec<usize>,
+}
+
+impl Lanes {
+    fn new(n_ranks: usize, total_workers: usize) -> Lanes {
+        let g = WorkerGroup::new(n_ranks, total_workers);
+        let (mut comm, mut compute, mut compute_budget) = (Vec::new(), Vec::new(), Vec::new());
+        let mut n_lanes = 0;
+        for rk in 0..n_ranks {
+            let w = g.budget(rk);
+            comm.push(n_lanes);
+            if w >= 2 {
+                compute.push(n_lanes + 1);
+                compute_budget.push(w - 1);
+                n_lanes += 2;
+            } else {
+                compute.push(n_lanes);
+                compute_budget.push(1);
+                n_lanes += 1;
+            }
+        }
+        Lanes { n_lanes, comm, compute, compute_budget }
+    }
+}
+
+/// Step classification for rolling [`crate::exec::steps::StepTime`]s up
+/// into [`StageTimes`] (and the backward's [`BwdStageTimes`]).
+#[derive(Clone, Copy)]
+enum StepKind {
+    Pack,
+    Assemble,
+    Ffn,
+    Combine,
+}
+
+// ---------------------------------------------------------------------
+// forward
+// ---------------------------------------------------------------------
+
+/// Everything one top-k slot's forward pipeline reads (shared by the
+/// serialized and overlapped drivers — their unit bodies are the same
+/// code, which is half of the bit-identity argument).
+struct FwdCtx<'a> {
+    x: &'a Mat,
+    x_q: Option<&'a Fp8Tensor>,
+    w: &'a PreparedWeights,
+    plan: &'a [i64],
+    layout: &'a ChunkLayout,
+    tok_part: &'a Partition,
+    token_owner: &'a [usize],
+    cap: usize,
+    t: usize,
+    d: usize,
+}
+
+/// One slot's pipeline output: per-unit combine partials plus timings.
+struct FwdSlotOut {
+    partials: Vec<Mat>,
+    dispatch_s: f64,
+    expert_s: f64,
+    combine_s: f64,
+    rank_expert_s: Vec<f64>,
+    wall_s: f64,
+}
+
+/// Bulk-synchronous chunked schedule: per round, all ranks pack →
+/// all-to-all → assemble → FFN → combine, with a barrier between
+/// stages. C = 1 is exactly the PR-2 pipeline.
+fn fwd_slot_serial(cx: &FwdCtx, group: &RankGroup) -> FwdSlotOut {
+    let r = group.n_ranks();
+    let layout = cx.layout;
+    let fmt = cx.x_q.map(|q| q.fmt);
+    let mut partials: Vec<Option<Mat>> = (0..layout.units.len()).map(|_| None).collect();
+    let (mut dispatch_s, mut expert_s, mut combine_s) = (0.0, 0.0, 0.0);
+    let mut rank_expert_s = vec![0.0f64; r];
+    let tw = Instant::now();
+    for c in 0..layout.c_max {
+        let dsts = chunk_dsts(layout, c, r);
+
+        // ---- dispatch: pack → all-to-all → assemble ----
+        let td = Instant::now();
+        let mailbox = group
+            .run_phase(|ctx| {
+                let tr = part_range(cx.tok_part, ctx.rank);
+                match cx.x_q {
+                    Some(xq) => pack_fp8(xq, cx.plan, &tr, &dsts, cx.cap),
+                    None => pack_dense(cx.x, cx.plan, &tr, &dsts, cx.cap),
+                }
+            })
+            .results;
+        let inbox = all_to_all(mailbox);
+        let batches = group
+            .run_phase(|ctx| {
+                layout.unit_id(ctx.rank, c).map(|u| {
+                    let er = layout.units[u].experts.clone();
+                    match fmt {
+                        Some(f) => assemble_fp8(
+                            &inbox[ctx.rank],
+                            cx.plan,
+                            er,
+                            cx.cap,
+                            cx.d,
+                            cx.token_owner,
+                            f,
+                        ),
+                        None => assemble_dense(
+                            &inbox[ctx.rank],
+                            cx.plan,
+                            er,
+                            cx.cap,
+                            cx.d,
+                            cx.token_owner,
+                        ),
+                    }
+                })
+            })
+            .results;
+        dispatch_s += td.elapsed().as_secs_f64();
+
+        // ---- expert FFN: each rank on its disjoint worker share ----
+        let te = Instant::now();
+        let ph = group
+            .run_phase(|ctx| batches[ctx.rank].as_ref().map(|b| expert_ffn(b, cx.w, ctx.workers)));
+        for (i, s) in ph.rank_s.iter().enumerate() {
+            rank_expert_s[i] += s;
+        }
+        let yks = ph.results;
+        expert_s += te.elapsed().as_secs_f64();
+
+        // ---- combine: per-rank unpermute into token-indexed partials ----
+        let tc = Instant::now();
+        let parts = group
+            .run_phase(|ctx| {
+                layout.unit_id(ctx.rank, c).map(|u| {
+                    let er = layout.units[u].experts.clone();
+                    let yk = yks[ctx.rank].as_ref().expect("unit produced a batch");
+                    combine(yk, cx.plan, er, cx.cap, cx.t, ctx.workers)
+                })
+            })
+            .results;
+        combine_s += tc.elapsed().as_secs_f64();
+        for (rk, p) in parts.into_iter().enumerate() {
+            if let Some(p) = p {
+                partials[layout.unit_id(rk, c).expect("partial implies unit")] = Some(p);
+            }
+        }
+    }
+    let wall_s = tw.elapsed().as_secs_f64();
+    FwdSlotOut {
+        partials: partials.into_iter().map(|p| p.expect("every unit yields a partial")).collect(),
+        dispatch_s,
+        expert_s,
+        combine_s,
+        rank_expert_s,
+        wall_s,
+    }
+}
+
+/// Overlapped schedule: the same unit bodies on a [`StepGraph`]. Per
+/// round the insertion order is `pack(·,c)`, `assemble(·,c)`,
+/// `ffn(·,c)`, **then** `combine(·,c-1)` — so each comm lane packs and
+/// assembles chunk c while its compute lane still runs chunk c-1's FFN,
+/// and the combine of c-1 rides the comm lane once that FFN lands. The
+/// all-to-all barrier is the dependency set (every assemble waits on all
+/// packs of its round); the wire itself is a [`Handoff`] per
+/// (src rank, dst unit).
+fn fwd_slot_overlap(cx: &FwdCtx, lanes: &Lanes) -> FwdSlotOut {
+    let r = lanes.comm.len();
+    let layout = cx.layout;
+    let n_units = layout.units.len();
+    let wire: Vec<Handoff<WireBuf>> = (0..r * n_units).map(|_| Handoff::new()).collect();
+    let batch_h: Vec<Handoff<RankLocalBatch>> = (0..n_units).map(|_| Handoff::new()).collect();
+    let yk_h: Vec<Handoff<Mat>> = (0..n_units).map(|_| Handoff::new()).collect();
+    let part_h: Vec<Handoff<Mat>> = (0..n_units).map(|_| Handoff::new()).collect();
+
+    let mut g = StepGraph::new(lanes.n_lanes);
+    let mut kinds: Vec<(StepKind, usize)> = Vec::new();
+    let mut asm_id: Vec<Option<StepId>> = vec![None; n_units];
+    let mut ffn_id: Vec<Option<StepId>> = vec![None; n_units];
+
+    // Insertion order per round c: pack(·,c), assemble(·,c), ffn(·,c),
+    // then combine(·,c-1) — so each comm lane packs and assembles chunk c
+    // while its compute lane still runs chunk c-1's FFN, and the combine
+    // of c-1 rides the comm lane once that FFN lands (the double buffer).
+    // The round `c == c_max` exists only to flush the last combines.
+    for c in 0..=layout.c_max {
+        if c < layout.c_max {
+            let dsts_c = chunk_dsts(layout, c, r);
+            let unit_ids: Vec<Option<usize>> = (0..r).map(|rk| layout.unit_id(rk, c)).collect();
+            // pack(·,c): one per src rank, no graph deps (pure function
+            // of the inputs; same-lane insertion order serializes it
+            // after the lane's earlier rounds)
+            let packs: Vec<StepId> = (0..r)
+                .map(|src| {
+                    let (dsts, units) = (dsts_c.clone(), unit_ids.clone());
+                    let tr = part_range(cx.tok_part, src);
+                    let wire = &wire;
+                    let id =
+                        g.add(lanes.comm[src], &[], format!("pack r{src} c{c}"), move || {
+                            let bufs = match cx.x_q {
+                                Some(xq) => pack_fp8(xq, cx.plan, &tr, &dsts, cx.cap),
+                                None => pack_dense(cx.x, cx.plan, &tr, &dsts, cx.cap),
+                            };
+                            for (dst, buf) in bufs.into_iter().enumerate() {
+                                if let Some(u) = units[dst] {
+                                    wire[src * n_units + u].put(buf);
+                                }
+                            }
+                        });
+                    kinds.push((StepKind::Pack, src));
+                    id
+                })
+                .collect();
+            // assemble(·,c): waits on every pack of round c (the a2a
+            // barrier)
+            for rk in 0..r {
+                if let Some(u) = unit_ids[rk] {
+                    let er = layout.units[u].experts.clone();
+                    let (wire, batch_h) = (&wire, &batch_h);
+                    let label = format!("assemble r{rk} c{c}");
+                    let id = g.add(lanes.comm[rk], &packs, label, move || {
+                        let inbox: Vec<WireBuf> =
+                            (0..r).map(|src| wire[src * n_units + u].take()).collect();
+                        let b = match cx.x_q {
+                            Some(xq) => assemble_fp8(
+                                &inbox,
+                                cx.plan,
+                                er,
+                                cx.cap,
+                                cx.d,
+                                cx.token_owner,
+                                xq.fmt,
+                            ),
+                            None => {
+                                assemble_dense(&inbox, cx.plan, er, cx.cap, cx.d, cx.token_owner)
+                            }
+                        };
+                        batch_h[u].put(b);
+                    });
+                    kinds.push((StepKind::Assemble, rk));
+                    asm_id[u] = Some(id);
+                }
+            }
+            // ffn(·,c): compute lane, on the rank's remaining workers
+            for rk in 0..r {
+                if let Some(u) = unit_ids[rk] {
+                    let (batch_h, yk_h) = (&batch_h, &yk_h);
+                    let threads = lanes.compute_budget[rk];
+                    let dep = asm_id[u].expect("ffn follows its unit's assemble");
+                    let id =
+                        g.add(lanes.compute[rk], &[dep], format!("ffn r{rk} c{c}"), move || {
+                            let b = batch_h[u].take();
+                            yk_h[u].put(expert_ffn(&b, cx.w, threads));
+                        });
+                    kinds.push((StepKind::Ffn, rk));
+                    ffn_id[u] = Some(id);
+                }
+            }
+        }
+        // combine(·,c-1), on the comm lane
+        if c >= 1 {
+            let cc = c - 1;
+            for rk in 0..r {
+                if let Some(u) = layout.unit_id(rk, cc) {
+                    let er = layout.units[u].experts.clone();
+                    let (yk_h, part_h) = (&yk_h, &part_h);
+                    let dep = ffn_id[u].expect("combine follows its unit's ffn");
+                    g.add(lanes.comm[rk], &[dep], format!("combine r{rk} c{cc}"), move || {
+                        let yk = yk_h[u].take();
+                        part_h[u].put(combine(&yk, cx.plan, er, cx.cap, cx.t, 1));
+                    });
+                    kinds.push((StepKind::Combine, rk));
+                }
+            }
+        }
+    }
+    debug_assert_eq!(kinds.len(), g.n_steps());
+
+    let times = g.run();
+    let (mut dispatch_s, mut expert_s, mut combine_s) = (0.0, 0.0, 0.0);
+    let mut rank_expert_s = vec![0.0f64; r];
+    let mut wall_s = 0.0f64;
+    for st in &times {
+        let (kind, rk) = kinds[st.id];
+        match kind {
+            StepKind::Pack | StepKind::Assemble => dispatch_s += st.dur_s(),
+            StepKind::Ffn => {
+                expert_s += st.dur_s();
+                rank_expert_s[rk] += st.dur_s();
+            }
+            StepKind::Combine => combine_s += st.dur_s(),
+        }
+        wall_s = wall_s.max(st.end_s);
+    }
+    FwdSlotOut {
+        partials: part_h.iter().map(|h| h.take()).collect(),
+        dispatch_s,
+        expert_s,
+        combine_s,
+        rank_expert_s,
+        wall_s,
+    }
+}
+
 /// Run the MoE forward sharded across `cfg.ranks` simulated ranks.
 /// Bit-identical to `moe_forward(x, w, cfg.top_k, cfg.capacity)` for any
-/// rank count.
+/// rank count, chunk count and overlap flag.
 pub fn ep_forward(x: &Mat, w: &PreparedWeights, cfg: &EpConfig) -> EpForward {
     let t = x.rows;
     let d = x.cols;
@@ -181,11 +632,14 @@ pub fn ep_forward(x: &Mat, w: &PreparedWeights, cfg: &EpConfig) -> EpForward {
     assert!(r >= 1, "need at least one rank");
     assert!(e >= r, "cannot shard {e} experts across {r} ranks");
     assert!(t >= 1 && cfg.capacity >= 1);
+    assert!(cfg.chunks >= 1, "need at least one pipeline chunk");
     let total_workers = if cfg.threads == 0 { exec::threads() } else { cfg.threads };
-    let group = RankGroup::new(r, total_workers);
     let ex_part = Partition::even(e, r);
     let tok_part = Partition::even(t, r);
     let token_owner = owner_map(&tok_part, t);
+    let layout = ChunkLayout::new(&ex_part, e, cfg.chunks);
+    let group = (!cfg.overlap).then(|| RankGroup::new(r, total_workers));
+    let lanes = cfg.overlap.then(|| Lanes::new(r, total_workers));
 
     let mut stages = StageTimes::default();
 
@@ -195,7 +649,9 @@ pub fn ep_forward(x: &Mat, w: &PreparedWeights, cfg: &EpConfig) -> EpForward {
 
     // Entry quantization (Fp8Flow's single cast). Row-independent, so
     // quantizing per token-owner rank would be bit-identical; run it
-    // once over the batch with the full worker budget.
+    // once over the batch with the full worker budget. Runs outside the
+    // chunk pipeline in both schedules — one cast per batch, whatever C
+    // is (the lint cross-check pins this chunk-invariance).
     let x_q = if w.recipe == Recipe::Fp8Flow {
         let tq = Instant::now();
         let q = quantize_rowwise_with_threads(x, Fp8Format::E4M3, ScaleMode::Po2, total_workers);
@@ -204,113 +660,87 @@ pub fn ep_forward(x: &Mat, w: &PreparedWeights, cfg: &EpConfig) -> EpForward {
     } else {
         None
     };
-    let fmt = x_q.as_ref().map(|q| q.fmt);
-
-    let expert_owner = owner_map(&ex_part, e);
 
     let mut y = Mat::zeros(t, d);
     let mut rank_expert_s = vec![0.0f64; r];
-    let (mut payload_b, mut sidecar_b, mut n_bufs, mut combine_b) = (0usize, 0usize, 0usize, 0usize);
+    let mut pipeline_wall_s = 0.0f64;
+    let mut slot_wall_s = Vec::with_capacity(cfg.top_k);
+    let (mut payload_b, mut sidecar_b) = (0usize, 0usize);
+    let (mut n_bufs, mut combine_b) = (0usize, 0usize);
 
     for kk in 0..cfg.top_k {
         let expert_of: Vec<usize> = routing.experts.iter().map(|ex| ex[kk]).collect();
         let plan = permute_pad_plan(&expert_of, e, cfg.capacity);
-        // Each token appears at most once per slot.
-        let serving = serving_map(&plan, &expert_owner, cfg.capacity, t);
+        // Each token appears at most once per slot: its serving unit.
+        let serving = serving_map(&plan, &layout.unit_of_expert, cfg.capacity, t);
 
-        // ---- dispatch: pack → all-to-all → assemble ----
-        let td = Instant::now();
-        let mailbox = group
-            .run_phase(|ctx| {
-                let tr = part_range(&tok_part, ctx.rank);
-                match &x_q {
-                    Some(xq) => pack_fp8(xq, &plan, &tr, &ex_part, cfg.capacity),
-                    None => pack_dense(x, &plan, &tr, &ex_part, cfg.capacity),
-                }
-            })
-            .results;
-        for row in &mailbox {
-            for b in row {
-                payload_b += b.payload_bytes();
-                sidecar_b += b.sidecar_bytes();
-                n_bufs += b.n_buffers();
-            }
-        }
-        let inbox = all_to_all(mailbox);
-        let batches = group
-            .run_phase(|ctx| {
-                let er = ex_part.range(ctx.rank);
-                match fmt {
-                    Some(f) => assemble_fp8(
-                        &inbox[ctx.rank],
-                        &plan,
-                        er,
-                        cfg.capacity,
-                        d,
-                        &token_owner,
-                        f,
-                    ),
-                    None => assemble_dense(&inbox[ctx.rank], &plan, er, cfg.capacity, d, &token_owner),
-                }
-            })
-            .results;
-        stages.dispatch_s += td.elapsed().as_secs_f64();
-
-        // ---- expert FFN: each rank on its disjoint worker share ----
-        let te = Instant::now();
-        let ph = group.run_phase(|ctx| expert_ffn(&batches[ctx.rank], w, ctx.workers));
-        for (i, s) in ph.rank_s.iter().enumerate() {
-            rank_expert_s[i] += s;
-        }
-        let yks = ph.results;
-        stages.expert_s += te.elapsed().as_secs_f64();
-
-        // Combine-wire accounting (BF16 rows back to token owners, §3.3)
-        // happens outside the timer: bookkeeping must not contaminate
-        // the measured combine stage (pack pre-sizes for the same reason).
+        // Wire accounting is analytic (sent_rows per src→dst-unit pair)
+        // and runs outside the timers: bookkeeping must not contaminate
+        // the measured stages, and the overlapped schedule consumes its
+        // buffers inside the graph where they can't be inspected.
+        let (p_b, s_b, b_b) = wire_accounting(
+            &plan,
+            &tok_part,
+            &layout,
+            cfg.capacity,
+            r,
+            d,
+            x_q.as_ref().map(|_| n_tiles(d)),
+        );
+        payload_b += p_b;
+        sidecar_b += s_b;
+        n_bufs += b_b;
         combine_b += plan.iter().filter(|&&s| s >= 0).count() * d * 2;
 
-        // ---- combine: per-rank unpermute → reduce → gates ----
-        let tc = Instant::now();
-        let partials = group
-            .run_phase(|ctx| {
-                let er = ex_part.range(ctx.rank);
-                combine(&yks[ctx.rank], &plan, er, cfg.capacity, t, ctx.workers)
-            })
-            .results;
+        let cx = FwdCtx {
+            x,
+            x_q: x_q.as_ref(),
+            w,
+            plan: &plan,
+            layout: &layout,
+            tok_part: &tok_part,
+            token_owner: &token_owner,
+            cap: cfg.capacity,
+            t,
+            d,
+        };
+        let out = match (&group, &lanes) {
+            (Some(g), _) => fwd_slot_serial(&cx, g),
+            (_, Some(l)) => fwd_slot_overlap(&cx, l),
+            _ => unreachable!("exactly one schedule is constructed"),
+        };
+        stages.dispatch_s += out.dispatch_s;
+        stages.expert_s += out.expert_s;
+        stages.combine_s += out.combine_s;
+        for (i, s) in out.rank_expert_s.iter().enumerate() {
+            rank_expert_s[i] += s;
+        }
+
         // Reduce + gate, one task per token shard (disjoint y rows).
-        // A token has at most one serving rank per slot, every other
+        // A token has at most one serving unit per slot, every other
         // partial holds exactly +0.0 there, and partial values are never
         // -0.0 (unpermute adds into zeros), so reading the serving
-        // partial directly equals the full ascending-rank sum — and the
+        // partial directly equals the full ascending-unit sum — and the
         // single-rank scatter — bit for bit. Dropped tokens contribute
         // g·(+0.0), which never changes y's bits (y is never -0.0).
-        let tasks: Vec<_> = exec::split_parts(&tok_part, d, &mut y.data)
-            .into_iter()
-            .zip(tok_part.ranges())
-            .collect();
-        exec::run_tasks(tasks, |(rows, trange)| {
-            for tt in trange.clone() {
-                let sr = serving[tt];
-                if sr == usize::MAX {
-                    continue; // dropped by capacity: back row is zero
-                }
-                let g = routing.gates[tt][kk];
-                let o = (tt - trange.start) * d;
-                let p = &partials[sr].data;
-                for j in 0..d {
-                    rows[o + j] += g * p[tt * d + j];
-                }
-            }
-        });
-        stages.combine_s += tc.elapsed().as_secs_f64();
+        let tr_ = Instant::now();
+        reduce_serving(&mut y, &out.partials, &serving, &tok_part, d, Some((&routing, kk)));
+        let red = tr_.elapsed().as_secs_f64();
+        stages.combine_s += red;
+        let wall = out.wall_s + red;
+        pipeline_wall_s += wall;
+        slot_wall_s.push(wall);
     }
 
     EpForward {
         y,
         aux_loss: routing.aux_loss,
         ranks: r,
+        chunks: layout.c_max,
+        overlap: cfg.overlap,
         stages,
+        pipeline_wall_s,
+        slot_wall_s,
         rank_expert_s,
         dispatch_payload_bytes: payload_b,
         dispatch_sidecar_bytes: sidecar_b,
@@ -319,6 +749,10 @@ pub fn ep_forward(x: &Mat, w: &PreparedWeights, cfg: &EpConfig) -> EpForward {
     }
 }
 
+// ---------------------------------------------------------------------
+// backward
+// ---------------------------------------------------------------------
+
 /// Result of one executed EP-sharded backward: the gradients plus the
 /// wire measurements (the reverse-direction all-to-all).
 pub struct EpBackward {
@@ -326,6 +760,17 @@ pub struct EpBackward {
     pub grads: MoeGrads,
     /// Rank count the backward ran with.
     pub ranks: usize,
+    /// Effective pipeline chunks per rank.
+    pub chunks: usize,
+    /// Whether the overlapped (step-graph) schedule ran.
+    pub overlap: bool,
+    /// Wall-clock seconds of the combine-bwd→expert-bwd→dispatch-bwd
+    /// pipeline, summed over slots (excludes the gate-scale and Q(dy)
+    /// preamble, which runs identically outside the pipeline in both
+    /// schedules).
+    pub pipeline_wall_s: f64,
+    /// Per-slot pipeline wall-clock seconds.
+    pub slot_wall_s: Vec<f64>,
     /// Per-rank expert-backward seconds (summed over slots).
     pub rank_expert_s: Vec<f64>,
     /// Combine-bwd payload bytes shipped (gate-scaled dy rows; FP8 codes
@@ -333,7 +778,8 @@ pub struct EpBackward {
     pub dy_payload_bytes: usize,
     /// UE8M0 scale sidecar bytes on the combine-bwd wire (FP8 only).
     pub dy_sidecar_bytes: usize,
-    /// Separate combine-bwd wire buffers (FP8 ships 2 per src→dst pair).
+    /// Separate combine-bwd wire buffers (FP8 ships 2 per src→dst-unit
+    /// pair).
     pub dy_buffers: usize,
     /// Dispatch-bwd bytes (dX rows back to token owners — accumulator
     /// precision, BF16-accounted, like the forward combine).
@@ -345,10 +791,17 @@ impl EpBackward {
     pub fn to_json(&self) -> Json {
         Json::obj()
             .set("ranks", self.ranks)
+            .set("chunks", self.chunks)
+            .set("overlap", self.overlap)
             .set("combine_bwd_ms", self.grads.stages.combine_bwd_s * 1e3)
             .set("expert_bwd_ms", self.grads.stages.expert_bwd_s * 1e3)
             .set("dispatch_bwd_ms", self.grads.stages.dispatch_bwd_s * 1e3)
             .set("total_ms", self.grads.stages.total_s() * 1e3)
+            .set("pipeline_wall_ms", self.pipeline_wall_s * 1e3)
+            .set(
+                "slot_wall_ms",
+                self.slot_wall_s.iter().map(|s| s * 1e3).collect::<Vec<f64>>(),
+            )
             .set(
                 "rank_expert_ms",
                 self.rank_expert_s.iter().map(|s| s * 1e3).collect::<Vec<f64>>(),
@@ -362,6 +815,264 @@ impl EpBackward {
     }
 }
 
+/// Everything one slot's backward pipeline reads.
+struct BwdCtx<'a> {
+    dyg: &'a Mat,
+    dy_q: Option<&'a Fp8Tensor>,
+    w: &'a PreparedWeights,
+    slot: &'a SlotStash,
+    plan: &'a [i64],
+    layout: &'a ChunkLayout,
+    tok_part: &'a Partition,
+    token_owner: &'a [usize],
+    cap: usize,
+    t: usize,
+    d: usize,
+}
+
+/// One slot's backward pipeline output: per-unit dX partials, the
+/// per-unit expert backward results (weight grads + cast stats, in
+/// ascending unit = ascending expert order), and timings.
+struct BwdSlotOut {
+    partials: Vec<Mat>,
+    ebs: Vec<ExpertBwd>,
+    combine_bwd_s: f64,
+    expert_bwd_s: f64,
+    dispatch_bwd_s: f64,
+    rank_expert_s: Vec<f64>,
+    wall_s: f64,
+}
+
+/// Bulk-synchronous chunked backward schedule (the forward's mirror).
+fn bwd_slot_serial(cx: &BwdCtx, group: &RankGroup) -> BwdSlotOut {
+    let r = group.n_ranks();
+    let layout = cx.layout;
+    let mut partials: Vec<Option<Mat>> = (0..layout.units.len()).map(|_| None).collect();
+    let mut ebs: Vec<Option<ExpertBwd>> = (0..layout.units.len()).map(|_| None).collect();
+    let (mut combine_bwd_s, mut expert_bwd_s, mut dispatch_bwd_s) = (0.0, 0.0, 0.0);
+    let mut rank_expert_s = vec![0.0f64; r];
+    let tw = Instant::now();
+    for c in 0..layout.c_max {
+        let dsts = chunk_dsts(layout, c, r);
+
+        // ---- combine-bwd: pack → a2a → assemble (dy rows to experts) ----
+        let tc = Instant::now();
+        let mailbox = group
+            .run_phase(|ctx| {
+                let tr = part_range(cx.tok_part, ctx.rank);
+                match cx.dy_q {
+                    Some(q) => pack_fp8(q, cx.plan, &tr, &dsts, cx.cap),
+                    None => pack_dense(cx.dyg, cx.plan, &tr, &dsts, cx.cap),
+                }
+            })
+            .results;
+        let inbox = all_to_all(mailbox);
+        let dyks = group
+            .run_phase(|ctx| {
+                layout.unit_id(ctx.rank, c).map(|u| {
+                    let er = layout.units[u].experts.clone();
+                    match cx.dy_q {
+                        Some(q) => assemble_fp8(
+                            &inbox[ctx.rank],
+                            cx.plan,
+                            er,
+                            cx.cap,
+                            cx.d,
+                            cx.token_owner,
+                            q.fmt,
+                        ),
+                        None => assemble_dense(
+                            &inbox[ctx.rank],
+                            cx.plan,
+                            er,
+                            cx.cap,
+                            cx.d,
+                            cx.token_owner,
+                        ),
+                    }
+                })
+            })
+            .results;
+        combine_bwd_s += tc.elapsed().as_secs_f64();
+
+        // ---- expert backward: dgrad + wgrad on the rank's share ----
+        let te = Instant::now();
+        let ph = group.run_phase(|ctx| {
+            dyks[ctx.rank].as_ref().map(|dyk| expert_ffn_bwd(dyk, cx.slot, cx.w, ctx.workers))
+        });
+        for (i, s) in ph.rank_s.iter().enumerate() {
+            rank_expert_s[i] += s;
+        }
+        let round_ebs = ph.results;
+        expert_bwd_s += te.elapsed().as_secs_f64();
+
+        // ---- dispatch-bwd: per-rank unpermute into dX partials ----
+        let td = Instant::now();
+        let parts = group
+            .run_phase(|ctx| {
+                layout.unit_id(ctx.rank, c).map(|u| {
+                    let er = layout.units[u].experts.clone();
+                    let eb = round_ebs[ctx.rank].as_ref().expect("unit produced a backward");
+                    combine(&eb.dxk, cx.plan, er, cx.cap, cx.t, ctx.workers)
+                })
+            })
+            .results;
+        dispatch_bwd_s += td.elapsed().as_secs_f64();
+        for (rk, (p, eb)) in parts.into_iter().zip(round_ebs).enumerate() {
+            if let Some(p) = p {
+                let u = layout.unit_id(rk, c).expect("partial implies unit");
+                partials[u] = Some(p);
+                ebs[u] = eb;
+            }
+        }
+    }
+    let wall_s = tw.elapsed().as_secs_f64();
+    BwdSlotOut {
+        partials: partials.into_iter().map(|p| p.expect("every unit yields a partial")).collect(),
+        ebs: ebs.into_iter().map(|e| e.expect("every unit yields a backward")).collect(),
+        combine_bwd_s,
+        expert_bwd_s,
+        dispatch_bwd_s,
+        rank_expert_s,
+        wall_s,
+    }
+}
+
+/// Overlapped backward schedule — the forward's step graph reversed in
+/// meaning but identical in shape: comm lanes pack/assemble gate-scaled
+/// dy for chunk k+1 while compute lanes run chunk k's expert backward,
+/// and the dX unpermute of chunk k-1 rides the comm lane.
+fn bwd_slot_overlap(cx: &BwdCtx, lanes: &Lanes) -> BwdSlotOut {
+    let r = lanes.comm.len();
+    let layout = cx.layout;
+    let n_units = layout.units.len();
+    let wire: Vec<Handoff<WireBuf>> = (0..r * n_units).map(|_| Handoff::new()).collect();
+    let dyk_h: Vec<Handoff<RankLocalBatch>> = (0..n_units).map(|_| Handoff::new()).collect();
+    let eb_h: Vec<Handoff<ExpertBwd>> = (0..n_units).map(|_| Handoff::new()).collect();
+    let out_h: Vec<Handoff<(Mat, ExpertBwd)>> = (0..n_units).map(|_| Handoff::new()).collect();
+
+    let mut g = StepGraph::new(lanes.n_lanes);
+    let mut kinds: Vec<(StepKind, usize)> = Vec::new();
+    let mut asm_id: Vec<Option<StepId>> = vec![None; n_units];
+    let mut ffn_id: Vec<Option<StepId>> = vec![None; n_units];
+
+    // Same round structure as the forward graph; stage meanings reversed.
+    for c in 0..=layout.c_max {
+        if c < layout.c_max {
+            let dsts_c = chunk_dsts(layout, c, r);
+            let unit_ids: Vec<Option<usize>> = (0..r).map(|rk| layout.unit_id(rk, c)).collect();
+            let packs: Vec<StepId> = (0..r)
+                .map(|src| {
+                    let (dsts, units) = (dsts_c.clone(), unit_ids.clone());
+                    let tr = part_range(cx.tok_part, src);
+                    let wire = &wire;
+                    let id =
+                        g.add(lanes.comm[src], &[], format!("pack r{src} c{c}"), move || {
+                            let bufs = match cx.dy_q {
+                                Some(q) => pack_fp8(q, cx.plan, &tr, &dsts, cx.cap),
+                                None => pack_dense(cx.dyg, cx.plan, &tr, &dsts, cx.cap),
+                            };
+                            for (dst, buf) in bufs.into_iter().enumerate() {
+                                if let Some(u) = units[dst] {
+                                    wire[src * n_units + u].put(buf);
+                                }
+                            }
+                        });
+                    kinds.push((StepKind::Pack, src));
+                    id
+                })
+                .collect();
+            for rk in 0..r {
+                if let Some(u) = unit_ids[rk] {
+                    let er = layout.units[u].experts.clone();
+                    let (wire, dyk_h) = (&wire, &dyk_h);
+                    let label = format!("assemble r{rk} c{c}");
+                    let id = g.add(lanes.comm[rk], &packs, label, move || {
+                        let inbox: Vec<WireBuf> =
+                            (0..r).map(|src| wire[src * n_units + u].take()).collect();
+                        let b = match cx.dy_q {
+                            Some(q) => assemble_fp8(
+                                &inbox,
+                                cx.plan,
+                                er,
+                                cx.cap,
+                                cx.d,
+                                cx.token_owner,
+                                q.fmt,
+                            ),
+                            None => {
+                                assemble_dense(&inbox, cx.plan, er, cx.cap, cx.d, cx.token_owner)
+                            }
+                        };
+                        dyk_h[u].put(b);
+                    });
+                    kinds.push((StepKind::Assemble, rk));
+                    asm_id[u] = Some(id);
+                }
+            }
+            for rk in 0..r {
+                if let Some(u) = unit_ids[rk] {
+                    let (dyk_h, eb_h) = (&dyk_h, &eb_h);
+                    let threads = lanes.compute_budget[rk];
+                    let dep = asm_id[u].expect("expert-bwd follows its unit's assemble");
+                    let label = format!("expert-bwd r{rk} c{c}");
+                    let id = g.add(lanes.compute[rk], &[dep], label, move || {
+                        let dyk = dyk_h[u].take();
+                        eb_h[u].put(expert_ffn_bwd(&dyk, cx.slot, cx.w, threads));
+                    });
+                    kinds.push((StepKind::Ffn, rk));
+                    ffn_id[u] = Some(id);
+                }
+            }
+        }
+        if c >= 1 {
+            let cc = c - 1;
+            for rk in 0..r {
+                if let Some(u) = layout.unit_id(rk, cc) {
+                    let er = layout.units[u].experts.clone();
+                    let (eb_h, out_h) = (&eb_h, &out_h);
+                    let dep = ffn_id[u].expect("unpermute follows its unit's expert backward");
+                    let label = format!("unpermute r{rk} c{cc}");
+                    g.add(lanes.comm[rk], &[dep], label, move || {
+                        let eb = eb_h[u].take();
+                        let p = combine(&eb.dxk, cx.plan, er, cx.cap, cx.t, 1);
+                        out_h[u].put((p, eb));
+                    });
+                    kinds.push((StepKind::Combine, rk));
+                }
+            }
+        }
+    }
+    debug_assert_eq!(kinds.len(), g.n_steps());
+
+    let times = g.run();
+    let (mut combine_bwd_s, mut expert_bwd_s, mut dispatch_bwd_s) = (0.0, 0.0, 0.0);
+    let mut rank_expert_s = vec![0.0f64; r];
+    let mut wall_s = 0.0f64;
+    for st in &times {
+        let (kind, rk) = kinds[st.id];
+        match kind {
+            StepKind::Pack | StepKind::Assemble => combine_bwd_s += st.dur_s(),
+            StepKind::Ffn => {
+                expert_bwd_s += st.dur_s();
+                rank_expert_s[rk] += st.dur_s();
+            }
+            StepKind::Combine => dispatch_bwd_s += st.dur_s(),
+        }
+        wall_s = wall_s.max(st.end_s);
+    }
+    let (partials, ebs) = out_h.iter().map(|h| h.take()).unzip();
+    BwdSlotOut {
+        partials,
+        ebs,
+        combine_bwd_s,
+        expert_bwd_s,
+        dispatch_bwd_s,
+        rank_expert_s,
+        wall_s,
+    }
+}
+
 /// Run the MoE backward sharded across `cfg.ranks` simulated ranks — the
 /// forward pipeline reversed, reusing the same rank group and wire:
 ///
@@ -370,15 +1081,19 @@ impl EpBackward {
 ///   → pack per token-owner rank → all-to-all → assemble per expert rank
 ///     (the combine-bwd a2a: same routing as the fwd dispatch)
 ///   → per-rank expert backward (dgrad + wgrad on its worker share)
-///   → per-rank unpermute → serving-rank reduce into the token shards
+///   → per-rank unpermute → serving-unit reduce into the token shards
 ///     (the dispatch-bwd direction; dX rides in accumulator precision)
 /// ```
 ///
+/// Chunking and overlap mirror [`ep_forward`] exactly (same unit layout,
+/// same step graph with the stage meanings reversed).
+///
 /// Bit-identical to the single-rank [`crate::moe::backward::moe_backward`]
-/// for any rank count (`tests/prop_ep_shard.rs`): per-expert math reads
-/// only that expert's rows, the UE8M0 sidecar reproduces po2 scales
-/// exactly, each expert's weight gradient is owned by exactly one rank,
-/// and per-slot each token receives at most one dX row.
+/// for any rank count, chunk count and overlap flag
+/// (`tests/prop_ep_shard.rs`): per-expert math reads only that expert's
+/// rows, the UE8M0 sidecar reproduces po2 scales exactly, each expert's
+/// weight gradient is owned by exactly one unit, and per-slot each token
+/// receives at most one dX row.
 pub fn ep_backward(
     stash: &FwdStash,
     w: &PreparedWeights,
@@ -391,15 +1106,17 @@ pub fn ep_backward(
     let r = cfg.ranks;
     assert!(r >= 1, "need at least one rank");
     assert!(e >= r, "cannot shard {e} experts across {r} ranks");
+    assert!(cfg.chunks >= 1, "need at least one pipeline chunk");
     assert_eq!(cfg.capacity, stash.capacity, "config/stash capacity mismatch");
     assert_eq!(cfg.top_k, stash.top_k(), "config/stash top_k mismatch");
     assert_eq!((t, d), (stash.y.rows, stash.y.cols), "dy must match the forward output");
     let total_workers = if cfg.threads == 0 { exec::threads() } else { cfg.threads };
-    let group = RankGroup::new(r, total_workers);
     let ex_part = Partition::even(e, r);
     let tok_part = Partition::even(t, r);
     let token_owner = owner_map(&tok_part, t);
-    let expert_owner = owner_map(&ex_part, e);
+    let layout = ChunkLayout::new(&ex_part, e, cfg.chunks);
+    let group = (!cfg.overlap).then(|| RankGroup::new(r, total_workers));
+    let lanes = cfg.overlap.then(|| Lanes::new(r, total_workers));
     let cap = cfg.capacity;
 
     let mut dx = Mat::zeros(t, d);
@@ -409,18 +1126,21 @@ pub fn ep_backward(
     let mut stats = BwdStats::default();
     let mut stages = BwdStageTimes::default();
     let mut rank_expert_s = vec![0.0f64; r];
+    let mut pipeline_wall_s = 0.0f64;
+    let mut slot_wall_s = Vec::with_capacity(stash.slots.len());
     let (mut dy_payload_b, mut dy_sidecar_b, mut dy_bufs, mut dx_b) = (0usize, 0, 0, 0usize);
 
     for (kk, slot) in stash.slots.iter().enumerate() {
         let plan = &slot.plan;
-        let serving = serving_map(plan, &expert_owner, cap, t);
+        let serving = serving_map(plan, &layout.unit_of_expert, cap, t);
 
-        // ---- combine-bwd: gate-scale (+ Q) → pack → a2a → assemble ----
-        let tc = Instant::now();
+        // Gate-scale + optional Q(dy): once per slot, outside the chunk
+        // pipeline in both schedules. Row-independent, so quantizing per
+        // token-owner rank would be bit-identical; run it once with the
+        // full budget. One cast per slot whatever C is — the chunk-
+        // invariance the lint cross-check pins.
+        let tg = Instant::now();
         let dyg = scale_by_gates_with_threads(dy, &stash.routing, kk, total_workers);
-        // Row-independent, so quantizing per token-owner rank would be
-        // bit-identical; run it once with the full budget (same structure
-        // as the forward's entry quantization).
         let dy_q = if w.recipe == Recipe::Fp8Flow {
             stats.casts += 1;
             Some(quantize_rowwise_with_threads(
@@ -432,96 +1152,81 @@ pub fn ep_backward(
         } else {
             None
         };
-        let mailbox = group
-            .run_phase(|ctx| {
-                let tr = part_range(&tok_part, ctx.rank);
-                match &dy_q {
-                    Some(q) => pack_fp8(q, plan, &tr, &ex_part, cap),
-                    None => pack_dense(&dyg, plan, &tr, &ex_part, cap),
-                }
-            })
-            .results;
-        for row in &mailbox {
-            for b in row {
-                dy_payload_b += b.payload_bytes();
-                dy_sidecar_b += b.sidecar_bytes();
-                dy_bufs += b.n_buffers();
-            }
-        }
-        let inbox = all_to_all(mailbox);
-        let dyks = group
-            .run_phase(|ctx| {
-                let er = ex_part.range(ctx.rank);
-                match dy_q.as_ref() {
-                    Some(q) => {
-                        assemble_fp8(&inbox[ctx.rank], plan, er, cap, d, &token_owner, q.fmt)
-                    }
-                    None => assemble_dense(&inbox[ctx.rank], plan, er, cap, d, &token_owner),
-                }
-            })
-            .results;
-        stages.combine_bwd_s += tc.elapsed().as_secs_f64();
+        stages.combine_bwd_s += tg.elapsed().as_secs_f64();
 
-        // ---- expert backward: each rank on its disjoint worker share ----
-        let te = Instant::now();
-        let ph = group.run_phase(|ctx| expert_ffn_bwd(&dyks[ctx.rank], slot, w, ctx.workers));
-        for (i, s) in ph.rank_s.iter().enumerate() {
-            rank_expert_s[i] += s;
-        }
-        let ebs = ph.results;
-        stages.expert_bwd_s += te.elapsed().as_secs_f64();
-
-        // Weight gradients stay with their expert's owning rank; the
-        // global Vec is just the shard union (ascending expert order, one
-        // owner per expert ⇒ bitwise the single-rank accumulation).
-        for eb in &ebs {
-            stats.add(eb.stats);
-            for (lx, g) in eb.grads.iter().enumerate() {
-                let ge = eb.experts.start + lx;
-                mat_add_assign(&mut dw1[ge], &g.dw1);
-                mat_add_assign(&mut dw3[ge], &g.dw3);
-                mat_add_assign(&mut dw2[ge], &g.dw2);
-            }
-        }
-        // dispatch-bwd wire accounting (real rows only, BF16-accounted;
-        // bookkeeping outside the timer, like the forward combine)
+        // Analytic wire accounting, outside the timers (same reasoning
+        // as the forward).
+        let (p_b, s_b, b_b) = wire_accounting(
+            plan,
+            &tok_part,
+            &layout,
+            cap,
+            r,
+            d,
+            dy_q.as_ref().map(|_| n_tiles(d)),
+        );
+        dy_payload_b += p_b;
+        dy_sidecar_b += s_b;
+        dy_bufs += b_b;
         dx_b += plan.iter().filter(|&&s| s >= 0).count() * d * 2;
 
-        // ---- dispatch-bwd: per-rank unpermute → serving-rank reduce ----
-        // Same bit-exactness argument as the forward combine: a token has
-        // at most one serving rank per slot, partials are never -0.0
-        // (unpermute adds into zeros), and dropped tokens contribute +0.0,
-        // which never changes dx's bits (dx is never -0.0).
-        let td = Instant::now();
-        let partials = group
-            .run_phase(|ctx| {
-                let er = ex_part.range(ctx.rank);
-                combine(&ebs[ctx.rank].dxk, plan, er, cap, t, ctx.workers)
-            })
-            .results;
-        let tasks: Vec<_> = exec::split_parts(&tok_part, d, &mut dx.data)
-            .into_iter()
-            .zip(tok_part.ranges())
-            .collect();
-        exec::run_tasks(tasks, |(rows, trange)| {
-            for tt in trange.clone() {
-                let sr = serving[tt];
-                if sr == usize::MAX {
-                    continue; // dropped by capacity: dX row is zero
-                }
-                let o = (tt - trange.start) * d;
-                let p = &partials[sr].data;
-                for j in 0..d {
-                    rows[o + j] += p[tt * d + j];
-                }
+        let cx = BwdCtx {
+            dyg: &dyg,
+            dy_q: dy_q.as_ref(),
+            w,
+            slot,
+            plan,
+            layout: &layout,
+            tok_part: &tok_part,
+            token_owner: &token_owner,
+            cap,
+            t,
+            d,
+        };
+        let out = match (&group, &lanes) {
+            (Some(g), _) => bwd_slot_serial(&cx, g),
+            (_, Some(l)) => bwd_slot_overlap(&cx, l),
+            _ => unreachable!("exactly one schedule is constructed"),
+        };
+        stages.combine_bwd_s += out.combine_bwd_s;
+        stages.expert_bwd_s += out.expert_bwd_s;
+        stages.dispatch_bwd_s += out.dispatch_bwd_s;
+        for (i, s) in out.rank_expert_s.iter().enumerate() {
+            rank_expert_s[i] += s;
+        }
+
+        // Weight gradients stay with their expert's owning unit; the
+        // global Vec is just the unit union (ascending unit = ascending
+        // expert order, one owner per expert ⇒ bitwise the single-rank
+        // accumulation).
+        for eb in &out.ebs {
+            stats.add(eb.stats);
+            for (lx, gr) in eb.grads.iter().enumerate() {
+                let ge = eb.experts.start + lx;
+                mat_add_assign(&mut dw1[ge], &gr.dw1);
+                mat_add_assign(&mut dw3[ge], &gr.dw3);
+                mat_add_assign(&mut dw2[ge], &gr.dw2);
             }
-        });
-        stages.dispatch_bwd_s += td.elapsed().as_secs_f64();
+        }
+
+        // Serving-unit reduce into the token shards — same bit-exactness
+        // argument as the forward combine reduce.
+        let tr_ = Instant::now();
+        reduce_serving(&mut dx, &out.partials, &serving, &tok_part, d, None);
+        let red = tr_.elapsed().as_secs_f64();
+        stages.dispatch_bwd_s += red;
+        let wall = out.wall_s + red;
+        pipeline_wall_s += wall;
+        slot_wall_s.push(wall);
     }
 
     EpBackward {
         grads: MoeGrads { dx, dw1, dw3, dw2, d_router: None, stats, stages },
         ranks: r,
+        chunks: layout.c_max,
+        overlap: cfg.overlap,
+        pipeline_wall_s,
+        slot_wall_s,
         rank_expert_s,
         dy_payload_bytes: dy_payload_b,
         dy_sidecar_bytes: dy_sidecar_b,
@@ -553,7 +1258,7 @@ pub fn ep_backward_with_router(
 /// stash is bitwise the sharded forward's, PR 2's invariance theorem),
 /// then per-rank backward → gradient reduce across the
 /// [`crate::cluster::rank::RankGroup`] ([`ep_backward_with_router`]: the
-/// dispatch-bwd serving-rank reduce for dX, the shard union for the
+/// dispatch-bwd serving-unit reduce for dX, the unit union for the
 /// expert weight grads, the replicated dense router path), then the
 /// **replicated optimizer step** — deterministic f32 over identical
 /// reduced gradients, so executing it once stands in for R identical
@@ -564,33 +1269,72 @@ pub fn ep_backward_with_router(
 /// and differ only in the MoE backward closure, whose EP invariance PR 3
 /// already proves.
 pub fn ep_train_step(tr: &mut NativeTrainer, tokens: &[i32]) -> TrainMetrics {
-    let cfg = EpConfig {
-        ranks: tr.cfg.ranks,
-        top_k: tr.cfg.top_k,
-        capacity: tr.cfg.capacity,
-        threads: tr.cfg.threads,
-    };
+    let cfg = EpConfig::serial(tr.cfg.ranks, tr.cfg.top_k, tr.cfg.capacity, tr.cfg.threads);
     tr.step_with_backward(tokens, move |stash, w, dy, aux_coef| {
         ep_backward_with_router(stash, w, dy, &cfg, aux_coef).grads
     })
 }
 
-/// Serving rank per token for one slot's plan (`usize::MAX` = dropped by
+// ---------------------------------------------------------------------
+// shared helpers
+// ---------------------------------------------------------------------
+
+/// Serving unit per token for one slot's plan (`usize::MAX` = dropped by
 /// capacity). Shared by the forward combine reduce and the backward
 /// dispatch-bwd reduce — both read exactly one partial per served token.
 fn serving_map(
     plan: &[i64],
-    expert_owner: &[usize],
+    unit_of_expert: &[usize],
     capacity: usize,
     n_tokens: usize,
 ) -> Vec<usize> {
     let mut serving = vec![usize::MAX; n_tokens];
     for (gd, &src) in plan.iter().enumerate() {
         if src >= 0 {
-            serving[src as usize] = expert_owner[gd / capacity];
+            serving[src as usize] = unit_of_expert[gd / capacity];
         }
     }
     serving
+}
+
+/// Add each served token's single nonzero partial row into its token
+/// shard (gated in the forward, plain in the backward), one task per
+/// shard over disjoint output rows.
+fn reduce_serving(
+    out: &mut Mat,
+    partials: &[Mat],
+    serving: &[usize],
+    tok_part: &Partition,
+    d: usize,
+    gates: Option<(&Routing, usize)>,
+) {
+    let tasks: Vec<_> = exec::split_parts(tok_part, d, &mut out.data)
+        .into_iter()
+        .zip(tok_part.ranges())
+        .collect();
+    exec::run_tasks(tasks, |(rows, trange)| {
+        for tt in trange.clone() {
+            let su = serving[tt];
+            if su == usize::MAX {
+                continue; // dropped by capacity: the row stays zero
+            }
+            let o = (tt - trange.start) * d;
+            let p = &partials[su].data;
+            match gates {
+                Some((routing, kk)) => {
+                    let g = routing.gates[tt][kk];
+                    for j in 0..d {
+                        rows[o + j] += g * p[tt * d + j];
+                    }
+                }
+                None => {
+                    for j in 0..d {
+                        rows[o + j] += p[tt * d + j];
+                    }
+                }
+            }
+        }
+    });
 }
 
 /// Item → owning rank, from a partition (tokens or experts).
@@ -623,25 +1367,60 @@ fn sent_rows(plan: &[i64], dr: &Range<usize>, capacity: usize, tok: &Range<usize
         .count()
 }
 
-/// Pack one source rank's FP8 sends: for each destination rank, its
-/// tokens' code rows (ascending plan order) plus the UE8M0 sidecar as a
-/// second buffer.
+/// Analytic wire totals for one slot: payload/sidecar bytes and buffer
+/// count over every src-rank → dst-unit pair. Bytes are chunk-invariant
+/// (the same real rows ship whatever C is); the buffer count scales with
+/// the pair count — chunking buys overlap by splitting the collective
+/// into more, smaller synchronization rounds.
+fn wire_accounting(
+    plan: &[i64],
+    tok_part: &Partition,
+    layout: &ChunkLayout,
+    capacity: usize,
+    n_ranks: usize,
+    cols: usize,
+    fp8_tiles: Option<usize>,
+) -> (usize, usize, usize) {
+    let (mut payload, mut sidecar, mut bufs) = (0usize, 0usize, 0usize);
+    for src in 0..n_ranks {
+        let tr = part_range(tok_part, src);
+        for unit in &layout.units {
+            let n = sent_rows(plan, &unit.experts, capacity, &tr);
+            match fp8_tiles {
+                Some(tpr) => {
+                    payload += n * cols;
+                    sidecar += n * tpr;
+                    bufs += 2;
+                }
+                None => {
+                    payload += n * cols * 2;
+                    bufs += 1;
+                }
+            }
+        }
+    }
+    (payload, sidecar, bufs)
+}
+
+/// Pack one source rank's FP8 sends: for each destination expert range,
+/// its tokens' code rows (ascending plan order) plus the UE8M0 sidecar
+/// as a second buffer. An empty range yields an empty (but present)
+/// buffer, keeping the mailbox square across chunk rounds.
 fn pack_fp8(
     xq: &Fp8Tensor,
     plan: &[i64],
     tok: &Range<usize>,
-    ex_part: &Partition,
+    dsts: &[Range<usize>],
     capacity: usize,
 ) -> Vec<WireBuf> {
     let h = xq.cols;
     let tpr = n_tiles(h);
     assert!(!xq.sexp.is_empty(), "FP8 wire needs po2 scale exponents");
-    (0..ex_part.len())
-        .map(|dst| {
-            let dr = ex_part.range(dst);
+    dsts.iter()
+        .map(|dr| {
             // size the buffers exactly up front: reallocation memmoves
             // would otherwise be charged to the timed dispatch stage
-            let n_rows = sent_rows(plan, &dr, capacity, tok);
+            let n_rows = sent_rows(plan, dr, capacity, tok);
             let mut codes = Vec::with_capacity(n_rows * h);
             let mut sidecar = Vec::with_capacity(n_rows * tpr);
             for gd in dr.start * capacity..dr.end * capacity {
@@ -672,14 +1451,13 @@ fn pack_dense(
     x: &Mat,
     plan: &[i64],
     tok: &Range<usize>,
-    ex_part: &Partition,
+    dsts: &[Range<usize>],
     capacity: usize,
 ) -> Vec<WireBuf> {
     let h = x.cols;
-    (0..ex_part.len())
-        .map(|dst| {
-            let dr = ex_part.range(dst);
-            let mut rows = Vec::with_capacity(sent_rows(plan, &dr, capacity, tok) * h);
+    dsts.iter()
+        .map(|dr| {
+            let mut rows = Vec::with_capacity(sent_rows(plan, dr, capacity, tok) * h);
             for gd in dr.start * capacity..dr.end * capacity {
                 let src = plan[gd];
                 if src >= 0 && tok.contains(&(src as usize)) {
@@ -691,7 +1469,7 @@ fn pack_dense(
         .collect()
 }
 
-/// Assemble one destination rank's `[E_local·capacity, d]` FP8 batch from
+/// Assemble one destination unit's `[E_unit·capacity, d]` FP8 batch from
 /// its received buffers. Padding rows stay zero codes with scale 1
 /// (= 2^0) — exactly `permute_pad_fp8`'s initialization, which the
 /// bit-identity contract relies on.
@@ -743,7 +1521,7 @@ fn assemble_fp8(
     RankLocalBatch { experts, capacity, payload }
 }
 
-/// Assemble one destination rank's dense batch.
+/// Assemble one destination unit's dense batch.
 fn assemble_dense(
     inbox: &[WireBuf],
     plan: &[i64],
@@ -793,7 +1571,7 @@ mod tests {
             let pw = PreparedWeights::new(w.clone(), recipe);
             let reference = moe_forward(&x, &pw, 2, 24);
             for ranks in [1usize, 2, 4] {
-                let cfg = EpConfig { ranks, top_k: 2, capacity: 24, threads: 0 };
+                let cfg = EpConfig::serial(ranks, 2, 24, 0);
                 let out = ep_forward(&x, &pw, &cfg);
                 assert_mat_bits_eq(&out.y, &reference.y, &format!("{recipe:?} R={ranks}"));
                 assert_eq!(out.aux_loss.to_bits(), reference.aux_loss.to_bits());
@@ -802,9 +1580,56 @@ mod tests {
     }
 
     #[test]
+    fn chunked_and_overlapped_match_single_rank_all_recipes() {
+        let (x, w) = setup(31);
+        for recipe in [Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow] {
+            let pw = PreparedWeights::new(w.clone(), recipe);
+            let reference = moe_forward(&x, &pw, 2, 24);
+            for chunks in [2usize, 3] {
+                for overlap in [false, true] {
+                    let cfg = EpConfig::serial(2, 2, 24, 0).with_pipeline(chunks, overlap);
+                    let out = ep_forward(&x, &pw, &cfg);
+                    let tag = format!("{recipe:?} C={chunks} overlap={overlap}");
+                    assert_mat_bits_eq(&out.y, &reference.y, &tag);
+                    // 4 experts over 2 ranks = 2 per rank: C clamps to 2
+                    assert_eq!(out.chunks, chunks.min(2), "{tag}");
+                    assert_eq!(out.overlap, overlap, "{tag}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_chunk_count_clamps_to_expert_share() {
+        // 4 experts over 2 ranks = 2 experts/rank: asking for 8 chunks
+        // must clamp to 2 per rank, not create empty units.
+        let (x, w) = setup(32);
+        let pw = PreparedWeights::new(w, Recipe::Fp8Flow);
+        let reference = moe_forward(&x, &pw, 2, 24);
+        let cfg = EpConfig::serial(2, 2, 24, 0).with_pipeline(8, true);
+        let out = ep_forward(&x, &pw, &cfg);
+        assert_eq!(out.chunks, 2);
+        assert_mat_bits_eq(&out.y, &reference.y, "ragged C clamp");
+    }
+
+    #[test]
+    fn wire_bytes_are_chunk_invariant_but_buffers_scale() {
+        let (x, w) = setup(33);
+        let pw = PreparedWeights::new(w, Recipe::Fp8Flow);
+        let c1 = ep_forward(&x, &pw, &EpConfig::serial(2, 1, 32, 2));
+        let c2 = ep_forward(&x, &pw, &EpConfig::serial(2, 1, 32, 2).with_pipeline(2, false));
+        // same real rows ship whatever C is
+        assert_eq!(c1.dispatch_payload_bytes, c2.dispatch_payload_bytes);
+        assert_eq!(c1.dispatch_sidecar_bytes, c2.dispatch_sidecar_bytes);
+        assert_eq!(c1.combine_bytes, c2.combine_bytes);
+        // but the collective splits into C× the src→dst-unit pairs
+        assert_eq!(c2.dispatch_buffers, 2 * c1.dispatch_buffers);
+    }
+
+    #[test]
     fn fp8_wire_is_lighter_and_doubles_buffer_count() {
         let (x, w) = setup(22);
-        let cfg = EpConfig { ranks: 2, top_k: 1, capacity: 32, threads: 2 };
+        let cfg = EpConfig::serial(2, 1, 32, 2);
         let flow = ep_forward(&x, &PreparedWeights::new(w.clone(), Recipe::Fp8Flow), &cfg);
         let bf16 = ep_forward(&x, &PreparedWeights::new(w, Recipe::Bf16), &cfg);
         // same real rows shipped → FP8 payload is exactly half the BF16 bytes
@@ -813,7 +1638,7 @@ mod tests {
         assert_eq!(bf16.dispatch_sidecar_bytes, 0);
         // two-buffer model: FP8 ships 2 buffers per src→dst pair, BF16 one
         assert_eq!(flow.dispatch_buffers, 2 * bf16.dispatch_buffers);
-        assert_eq!(bf16.dispatch_buffers, 2 * 2); // R² pairs, one slot
+        assert_eq!(bf16.dispatch_buffers, 2 * 2); // R² pairs, one slot, C=1
         // combine stays BF16 in both recipes
         assert_eq!(flow.combine_bytes, bf16.combine_bytes);
     }
@@ -821,7 +1646,7 @@ mod tests {
     #[test]
     fn stage_timers_are_populated() {
         let (x, w) = setup(23);
-        let cfg = EpConfig { ranks: 2, top_k: 1, capacity: 32, threads: 2 };
+        let cfg = EpConfig::serial(2, 1, 32, 2);
         let out = ep_forward(&x, &PreparedWeights::new(w, Recipe::Fp8Flow), &cfg);
         assert!(out.stages.route_s > 0.0);
         assert!(out.stages.quant_s > 0.0);
@@ -830,8 +1655,25 @@ mod tests {
         assert!(out.stages.combine_s > 0.0);
         assert_eq!(out.rank_expert_s.len(), 2);
         assert!(out.stages.total_s() >= out.stages.expert_s);
+        assert!(out.pipeline_wall_s > 0.0);
+        assert_eq!(out.slot_wall_s.len(), 1);
         let j = out.to_json().render();
         assert!(j.contains("\"dispatch_ms\""), "{j}");
+        assert!(j.contains("\"pipeline_wall_ms\""), "{j}");
+        assert!(j.contains("\"overlap\""), "{j}");
+    }
+
+    #[test]
+    fn overlapped_timers_are_populated_too() {
+        let (x, w) = setup(34);
+        let cfg = EpConfig::serial(2, 2, 24, 4).with_pipeline(2, true);
+        let out = ep_forward(&x, &PreparedWeights::new(w, Recipe::Fp8Flow), &cfg);
+        assert!(out.stages.dispatch_s > 0.0);
+        assert!(out.stages.expert_s > 0.0);
+        assert!(out.stages.combine_s > 0.0);
+        assert!(out.pipeline_wall_s > 0.0);
+        assert_eq!(out.slot_wall_s.len(), 2);
+        assert!(out.rank_expert_s.iter().all(|&s| s > 0.0));
     }
 
     #[test]
@@ -842,8 +1684,10 @@ mod tests {
         let w = MoeWeights::random(d, h, e, &mut rng);
         let pw = PreparedWeights::new(w, Recipe::Fp8Flow);
         let reference = moe_forward(&x, &pw, 1, 2);
-        let out = ep_forward(&x, &pw, &EpConfig { ranks: 4, top_k: 1, capacity: 2, threads: 3 });
+        let out = ep_forward(&x, &pw, &EpConfig::serial(4, 1, 2, 3));
         assert_mat_bits_eq(&out.y, &reference.y, "R>T");
+        let out = ep_forward(&x, &pw, &EpConfig::serial(4, 1, 2, 3).with_pipeline(2, true));
+        assert_mat_bits_eq(&out.y, &reference.y, "R>T overlapped");
     }
 
     #[test]
@@ -851,7 +1695,15 @@ mod tests {
     fn more_ranks_than_experts_rejected() {
         let (x, w) = setup(25);
         let pw = PreparedWeights::new(w, Recipe::Bf16);
-        ep_forward(&x, &pw, &EpConfig { ranks: 8, top_k: 1, capacity: 8, threads: 1 });
+        ep_forward(&x, &pw, &EpConfig::serial(8, 1, 8, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one pipeline chunk")]
+    fn zero_chunks_rejected() {
+        let (x, w) = setup(25);
+        let pw = PreparedWeights::new(w, Recipe::Bf16);
+        ep_forward(&x, &pw, &EpConfig::serial(2, 1, 8, 1).with_pipeline(0, false));
     }
 
     #[test]
@@ -865,16 +1717,46 @@ mod tests {
             let stash = forward_stash(&x, &pw, 2, 24);
             let reference = moe_backward(&stash, &pw, &dy);
             for ranks in [1usize, 2, 4] {
-                let cfg = EpConfig { ranks, top_k: 2, capacity: 24, threads: 0 };
+                let cfg = EpConfig::serial(ranks, 2, 24, 0);
                 let out = ep_backward(&stash, &pw, &dy, &cfg);
                 let tag = format!("{recipe:?} R={ranks}");
                 assert_mat_bits_eq(&out.grads.dx, &reference.dx, &format!("{tag} dx"));
                 for e in 0..w.n_experts() {
-                    assert_mat_bits_eq(&out.grads.dw1[e], &reference.dw1[e], &format!("{tag} dw1[{e}]"));
-                    assert_mat_bits_eq(&out.grads.dw3[e], &reference.dw3[e], &format!("{tag} dw3[{e}]"));
-                    assert_mat_bits_eq(&out.grads.dw2[e], &reference.dw2[e], &format!("{tag} dw2[{e}]"));
+                    let g = &out.grads;
+                    assert_mat_bits_eq(&g.dw1[e], &reference.dw1[e], &format!("{tag} dw1[{e}]"));
+                    assert_mat_bits_eq(&g.dw3[e], &reference.dw3[e], &format!("{tag} dw3[{e}]"));
+                    assert_mat_bits_eq(&g.dw2[e], &reference.dw2[e], &format!("{tag} dw2[{e}]"));
                 }
                 assert_eq!(out.grads.stats, reference.stats, "{tag} cast audit");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_and_overlapped_backward_match_single_rank() {
+        use crate::moe::backward::{forward_stash, moe_backward};
+        let (x, w) = setup(35);
+        let mut rng = Rng::seed_from(36);
+        let dy = Mat::randn(x.rows, x.cols, 1.0, &mut rng);
+        for recipe in [Recipe::Bf16, Recipe::Fp8Flow] {
+            let pw = PreparedWeights::new(w.clone(), recipe);
+            let stash = forward_stash(&x, &pw, 2, 24);
+            let reference = moe_backward(&stash, &pw, &dy);
+            for overlap in [false, true] {
+                let cfg = EpConfig::serial(2, 2, 24, 0).with_pipeline(2, overlap);
+                let out = ep_backward(&stash, &pw, &dy, &cfg);
+                let tag = format!("{recipe:?} C=2 overlap={overlap}");
+                assert_mat_bits_eq(&out.grads.dx, &reference.dx, &format!("{tag} dx"));
+                for e in 0..w.n_experts() {
+                    let g = &out.grads;
+                    assert_mat_bits_eq(&g.dw2[e], &reference.dw2[e], &format!("{tag} dw2[{e}]"));
+                }
+                // cast/requant totals are chunk-invariant (lint contract)
+                assert_eq!(out.grads.stats, reference.stats, "{tag} cast audit");
+                assert!(out.pipeline_wall_s > 0.0, "{tag}");
+                assert_eq!(out.slot_wall_s.len(), 2, "{tag}");
+                let j = out.to_json().render();
+                assert!(j.contains("\"pipeline_wall_ms\""), "{j}");
             }
         }
     }
@@ -885,7 +1767,7 @@ mod tests {
         let (x, w) = setup(28);
         let mut rng = Rng::seed_from(29);
         let dy = Mat::randn(x.rows, x.cols, 1.0, &mut rng);
-        let cfg = EpConfig { ranks: 2, top_k: 1, capacity: 32, threads: 2 };
+        let cfg = EpConfig::serial(2, 1, 32, 2);
         let pw_f = PreparedWeights::new(w.clone(), Recipe::Fp8Flow);
         let st_f = forward_stash(&x, &pw_f, 1, 32);
         let flow = ep_backward(&st_f, &pw_f, &dy, &cfg);

@@ -4,6 +4,14 @@
 //! Classic 1F1B: steady state interleaves one forward and one backward per
 //! stage; total step time ≈ (n_micro + pp − 1) slots where a slot is the
 //! per-stage fwd+bwd time of one microbatch, plus the warmup/drain bubble.
+//!
+//! [`one_f_one_b`] takes the slot as `fwd + bwd` — comm fully on the
+//! critical path. [`one_f_one_b_overlap`] splits each direction into a
+//! compute and a comm term and hides comm up to `max(comm, compute)` per
+//! direction — the double-buffered EP pipeline's steady state
+//! ([`crate::cluster::ep_exec`]), whose measured efficiency
+//! ([`crate::cluster::sim::ep_overlap_report`]) calibrates how much of
+//! that full-hiding assumption the executed step graph actually delivers.
 
 /// Pipeline timing summary (seconds).
 #[derive(Clone, Copy, Debug)]
@@ -16,14 +24,41 @@ pub struct PipelineTime {
     pub bubble_frac: f64,
 }
 
-/// Compute 1F1B step time given per-stage per-microbatch fwd and bwd times.
-pub fn one_f_one_b(fwd: f64, bwd: f64, pp: usize, n_micro: usize) -> PipelineTime {
+/// Roll a per-stage per-microbatch slot time up into the 1F1B step.
+fn from_slot(slot: f64, pp: usize, n_micro: usize) -> PipelineTime {
     assert!(pp >= 1 && n_micro >= 1);
-    let slot = fwd + bwd;
     // steady-state occupancy: n_micro slots, plus (pp-1) warmup+drain
     let step = slot * (n_micro as f64 + (pp as f64 - 1.0));
     let busy = slot * n_micro as f64;
     PipelineTime { slot, step, bubble_frac: 1.0 - busy / step }
+}
+
+/// Compute 1F1B step time given per-stage per-microbatch fwd and bwd times.
+pub fn one_f_one_b(fwd: f64, bwd: f64, pp: usize, n_micro: usize) -> PipelineTime {
+    from_slot(fwd + bwd, pp, n_micro)
+}
+
+/// 1F1B with comm/compute overlap inside each direction: the slot pays
+/// `max(compute, comm)` per direction instead of their sum — comm hides
+/// behind compute until it *becomes* the bottleneck, at which point the
+/// slot is comm-bound and further compute shrink buys nothing. With
+/// `overlap = false` this reproduces [`one_f_one_b`] on the summed
+/// times exactly.
+pub fn one_f_one_b_overlap(
+    compute_fwd: f64,
+    comm_fwd: f64,
+    compute_bwd: f64,
+    comm_bwd: f64,
+    pp: usize,
+    n_micro: usize,
+    overlap: bool,
+) -> PipelineTime {
+    let slot = if overlap {
+        compute_fwd.max(comm_fwd) + compute_bwd.max(comm_bwd)
+    } else {
+        (compute_fwd + comm_fwd) + (compute_bwd + comm_bwd)
+    };
+    from_slot(slot, pp, n_micro)
 }
 
 #[cfg(test)]
@@ -50,5 +85,43 @@ mod tests {
         let shallow = one_f_one_b(1.0, 2.0, 8, 64);
         let deep = one_f_one_b(1.0, 2.0, 32, 64);
         assert!(deep.bubble_frac > shallow.bubble_frac);
+    }
+
+    #[test]
+    fn overlap_off_reproduces_the_legacy_schedule() {
+        let legacy = one_f_one_b(3.0 + 1.0, 2.0 + 5.0, 4, 7);
+        let off = one_f_one_b_overlap(3.0, 1.0, 2.0, 5.0, 4, 7, false);
+        assert_eq!(off.slot, legacy.slot);
+        assert_eq!(off.step, legacy.step);
+        assert_eq!(off.bubble_frac, legacy.bubble_frac);
+    }
+
+    #[test]
+    fn compute_bound_slot_hides_all_comm() {
+        // comm smaller than compute in both directions: the slot is just
+        // the compute time — comm vanishes from the critical path
+        let t = one_f_one_b_overlap(3.0, 1.0, 6.0, 2.0, 1, 4, true);
+        assert_eq!(t.slot, 3.0 + 6.0);
+        assert_eq!(t.step, 9.0 * 4.0);
+    }
+
+    #[test]
+    fn comm_bound_slot_pays_comm() {
+        // comm dominates: hiding saturates at max(comm, compute) = comm
+        let t = one_f_one_b_overlap(1.0, 4.0, 2.0, 8.0, 1, 4, true);
+        assert_eq!(t.slot, 4.0 + 8.0);
+    }
+
+    #[test]
+    fn overlap_bounded_between_half_and_full_serial() {
+        // max(a,b) ∈ [ (a+b)/2, a+b ]: overlap never worse than serial,
+        // never better than halving it
+        for (cf, mf, cb, mb) in [(3.0, 1.0, 2.0, 5.0), (1.0, 1.0, 4.0, 4.0), (0.5, 6.0, 6.0, 0.5)]
+        {
+            let serial = one_f_one_b_overlap(cf, mf, cb, mb, 4, 8, false);
+            let over = one_f_one_b_overlap(cf, mf, cb, mb, 4, 8, true);
+            assert!(over.step <= serial.step + 1e-12);
+            assert!(over.step >= serial.step / 2.0 - 1e-12);
+        }
     }
 }

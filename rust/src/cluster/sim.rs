@@ -314,6 +314,94 @@ pub fn per_rank_imbalance(rank_s: &[f64]) -> f64 {
     }
 }
 
+/// Modeled wall-clock of a stage sequence split into `chunks` equal
+/// pieces and run through an ideal software pipeline: the fill/drain
+/// costs one chunk of every stage (`sum / C`), the steady state is
+/// bounded by the slowest stage (`max · (C-1) / C`). `C = 1` degenerates
+/// to the plain serial sum; `C → ∞` approaches the slowest stage —
+/// perfect hiding of everything else behind the bottleneck.
+pub fn pipelined_wall(stages: &[f64], chunks: usize) -> f64 {
+    assert!(chunks >= 1, "need at least one pipeline chunk");
+    let sum: f64 = stages.iter().sum();
+    let max = stages.iter().cloned().fold(0.0f64, f64::max);
+    let c = chunks as f64;
+    sum / c + max * (c - 1.0) / c
+}
+
+/// Measured-vs-modeled **overlap efficiency**: a serialized and an
+/// overlapped executed EP forward of the same configuration, side by
+/// side with the pipelined analytic model. Definitions (all from
+/// measured pipeline wall-clock, route/entry-quant excluded since they
+/// run identically in both schedules):
+///
+/// * `hideable  = min(dispatch + combine, expert)` from the serialized
+///   run — the most comm (or compute, whichever is smaller) a perfect
+///   overlap could hide;
+/// * `hidden    = serialized_wall - overlapped_wall` — what the step
+///   graph actually hid;
+/// * `efficiency = hidden / hideable` — 1.0 means the measured overlap
+///   achieves everything the sim's full-hiding assumption grants it.
+pub fn ep_overlap_report(
+    recipe: Recipe,
+    ranks: usize,
+    shape: &EpShape,
+    serial: &EpForward,
+    over: &EpForward,
+) -> String {
+    // modeled_ep_stages already totals over the top-k slots
+    let m = modeled_ep_stages(ranks, recipe, shape);
+    let model_stages = [m.dispatch_s, m.expert_s, m.combine_s];
+    let model_serial = model_stages.iter().sum::<f64>();
+    let model_over = pipelined_wall(&model_stages, over.chunks.max(1));
+    let meas_serial = serial.pipeline_wall_s;
+    let meas_over = over.pipeline_wall_s;
+
+    let comm = serial.stages.dispatch_s + serial.stages.combine_s;
+    let hideable = comm.min(serial.stages.expert_s);
+    let hidden = meas_serial - meas_over;
+    let efficiency = if hideable > 0.0 { hidden / hideable } else { 0.0 };
+
+    let mut s = String::new();
+    s.push_str(&format!(
+        "== overlap {recipe:?}: R={ranks} C={} tokens={} d={} E={} top_k={} ==\n",
+        over.chunks, shape.tokens, shape.d_model, shape.n_experts, shape.top_k
+    ));
+    s.push_str(&format!(
+        "{:<14} {:>13} {:>13}\n",
+        "schedule", "measured_ms", "modeled_ms"
+    ));
+    s.push_str(&format!(
+        "ROW serialized {:>13.4} {:>13.4}\n",
+        meas_serial * 1e3,
+        model_serial * 1e3
+    ));
+    s.push_str(&format!(
+        "ROW overlapped {:>13.4} {:>13.4}\n",
+        meas_over * 1e3,
+        model_over * 1e3
+    ));
+    s.push_str(&format!(
+        "ROW speedup    {:>12.3}x {:>12.3}x\n",
+        meas_serial / meas_over,
+        model_serial / model_over
+    ));
+    s.push_str(&format!(
+        "    hideable {:.4} ms, hidden {:.4} ms, overlap efficiency {:.3}\n",
+        hideable * 1e3,
+        hidden * 1e3,
+        efficiency
+    ));
+    let fmt_slots = |walls: &[f64]| {
+        walls.iter().map(|v| format!("{:.3}", v * 1e3)).collect::<Vec<_>>().join(", ")
+    };
+    s.push_str(&format!(
+        "    per-slot wall ms: serialized [{}], overlapped [{}]\n",
+        fmt_slots(&serial.slot_wall_s),
+        fmt_slots(&over.slot_wall_s)
+    ));
+    s
+}
+
 /// The paper's Tables 2–3 values for side-by-side reporting:
 /// (recipe, ep, tgs, mem_gb) — `None` = OOM.
 pub const TABLE2_PAPER: [(&str, usize, f64, f64); 9] = [
@@ -453,6 +541,57 @@ mod tests {
         assert_eq!(per_rank_imbalance(&[]), 1.0);
         assert_eq!(per_rank_imbalance(&[2.0, 2.0]), 1.0);
         assert_eq!(per_rank_imbalance(&[3.0, 1.0]), 1.5);
+    }
+
+    #[test]
+    fn pipelined_wall_closed_forms() {
+        let stages = [3.0, 6.0, 1.0];
+        // C = 1: the plain serial sum
+        assert_eq!(pipelined_wall(&stages, 1), 10.0);
+        // monotone non-increasing in C, bounded below by the slowest stage
+        let mut prev = f64::INFINITY;
+        for c in 1..=16 {
+            let w = pipelined_wall(&stages, c);
+            assert!(w <= prev + 1e-12, "C={c}: {w} > {prev}");
+            assert!(w >= 6.0, "C={c}: {w} below the bottleneck stage");
+            prev = w;
+        }
+        // exact closed form at C = 2: 10/2 + 6/2 = 8
+        assert_eq!(pipelined_wall(&stages, 2), 8.0);
+        // C → ∞ approaches max(stages)
+        assert!((pipelined_wall(&stages, 10_000) - 6.0).abs() < 1e-2);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one pipeline chunk")]
+    fn pipelined_wall_rejects_zero_chunks() {
+        pipelined_wall(&[1.0], 0);
+    }
+
+    #[test]
+    fn overlap_report_has_the_grepable_markers() {
+        use crate::moe::layer::{MoeWeights, PreparedWeights};
+        use crate::util::mat::Mat;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from(40);
+        let x = Mat::randn(64, 64, 0.5, &mut rng);
+        let w = PreparedWeights::new(MoeWeights::random(64, 48, 4, &mut rng), Recipe::Fp8Flow);
+        let cfg = crate::cluster::ep_exec::EpConfig::serial(2, 2, 24, 2);
+        let shape = EpShape::of(&x, &w, &cfg);
+        let serial = crate::cluster::ep_exec::ep_forward(&x, &w, &cfg);
+        let over = crate::cluster::ep_exec::ep_forward(&x, &w, &cfg.with_pipeline(2, true));
+        let rep = ep_overlap_report(Recipe::Fp8Flow, 2, &shape, &serial, &over);
+        for marker in [
+            "== overlap",
+            "ROW serialized",
+            "ROW overlapped",
+            "ROW speedup",
+            "    hideable",
+            "overlap efficiency",
+            "    per-slot wall ms",
+        ] {
+            assert!(rep.contains(marker), "missing {marker:?} in:\n{rep}");
+        }
     }
 
     #[test]

@@ -21,6 +21,11 @@
 //!   disjoint sub-pools, one per concurrently running coarse unit (e.g.
 //!   one per simulated expert-parallel rank), so nested kernel calls
 //!   never oversubscribe the machine.
+//! * [`steps`] — a small async step-graph runtime: a DAG of one-shot
+//!   steps over fixed lanes with per-step timers, used by the
+//!   double-buffered EP pipeline to overlap comm and compute
+//!   ([`crate::cluster::ep_exec`]). Lane budgets are carved from the
+//!   same process budget, so overlap never oversubscribes either.
 //!
 //! Thread-count resolution (highest wins): [`set_threads`] (CLI
 //! `--threads`), the `FP8_THREADS` environment variable, then
@@ -32,10 +37,12 @@
 pub mod group;
 pub mod partition;
 pub mod pool;
+pub mod steps;
 
 pub use group::WorkerGroup;
 pub use partition::Partition;
 pub use pool::{map_parts, run_tasks, split_parts};
+pub use steps::{Handoff, StepGraph, StepId, StepTime};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 

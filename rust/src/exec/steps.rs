@@ -1,0 +1,367 @@
+//! Async step-graph runtime — software-pipelined execution over disjoint
+//! worker lanes, for comm/compute overlap.
+//!
+//! [`StepGraph`] schedules a small DAG of one-shot steps onto a fixed set
+//! of **lanes** (one OS thread each, scoped — no detached threads). The
+//! expert-parallel pipeline ([`crate::cluster::ep_exec`]) uses one comm
+//! lane plus one compute lane per simulated rank, so packing/all-to-all
+//! of chunk k+1 runs while the expert FFN of chunk k is still in flight.
+//! Lane worker budgets are carved from the same process budget as
+//! [`crate::exec::WorkerGroup`] sub-pools, so nothing oversubscribes.
+//!
+//! **Deadlock freedom.** [`StepGraph::add`] asserts every dependency id
+//! is smaller than the new step's id, and each lane executes its steps in
+//! insertion order (= ascending id). Consider the lowest-id step not yet
+//! complete: all its dependencies have smaller ids and are therefore
+//! complete, and every earlier step on its own lane is complete too, so
+//! its lane is either running it or about to — it cannot be blocked. By
+//! induction every step completes, for **any** assignment of steps to
+//! lanes (including fully merged single-lane graphs, which degrade to
+//! plain serial execution — the property the bit-identity tests lean on).
+//!
+//! Steps communicate values over [`Handoff`] cells. A handoff carries no
+//! synchronization of its own: the graph dependency from producer to
+//! consumer *is* the synchronization, the cell just moves the value. A
+//! `take` on an empty cell is a wiring bug and panics loudly.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Instant;
+
+/// Opaque handle to a scheduled step; pass it to later
+/// [`StepGraph::add`] calls as a dependency.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StepId(usize);
+
+impl StepId {
+    /// The step's global insertion index (unique, ascending).
+    pub fn index(&self) -> usize {
+        self.0
+    }
+}
+
+/// Wall-clock record of one executed step (offsets in seconds from the
+/// [`StepGraph::run`] start).
+#[derive(Clone, Debug)]
+pub struct StepTime {
+    /// Insertion index of the step (= [`StepId::index`]).
+    pub id: usize,
+    /// Lane the step ran on.
+    pub lane: usize,
+    /// Display label given at [`StepGraph::add`].
+    pub label: String,
+    /// Start offset, seconds.
+    pub start_s: f64,
+    /// End offset, seconds.
+    pub end_s: f64,
+}
+
+impl StepTime {
+    /// Busy seconds of this step.
+    pub fn dur_s(&self) -> f64 {
+        self.end_s - self.start_s
+    }
+}
+
+struct Step<'env> {
+    id: usize,
+    deps: Vec<usize>,
+    label: String,
+    body: Box<dyn FnOnce() + Send + 'env>,
+}
+
+/// A DAG of one-shot steps scheduled onto fixed lanes.
+///
+/// Build with [`StepGraph::add`], execute with [`StepGraph::run`]; see
+/// the module docs for the ordering/deadlock contract.
+pub struct StepGraph<'env> {
+    lanes: Vec<Vec<Step<'env>>>,
+    next_id: usize,
+}
+
+impl<'env> StepGraph<'env> {
+    /// A graph with `n_lanes` execution lanes (≥ 1).
+    pub fn new(n_lanes: usize) -> StepGraph<'env> {
+        assert!(n_lanes >= 1, "need at least one lane");
+        StepGraph { lanes: (0..n_lanes).map(|_| Vec::new()).collect(), next_id: 0 }
+    }
+
+    /// Number of steps added so far.
+    pub fn n_steps(&self) -> usize {
+        self.next_id
+    }
+
+    /// Schedule `body` on `lane`, after all of `deps`. Returns the new
+    /// step's id (strictly greater than every id issued before, which is
+    /// what the deadlock-freedom argument needs).
+    pub fn add<F>(
+        &mut self,
+        lane: usize,
+        deps: &[StepId],
+        label: impl Into<String>,
+        body: F,
+    ) -> StepId
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        assert!(lane < self.lanes.len(), "lane {lane} out of range");
+        let id = self.next_id;
+        for d in deps {
+            assert!(
+                d.0 < id,
+                "step dependency must precede the step (dep {} >= id {id})",
+                d.0
+            );
+        }
+        self.lanes[lane].push(Step {
+            id,
+            deps: deps.iter().map(|d| d.0).collect(),
+            label: label.into(),
+            body: Box::new(body),
+        });
+        self.next_id += 1;
+        StepId(id)
+    }
+
+    /// Execute the whole graph: one scoped thread per non-empty lane
+    /// (the first non-empty lane runs on the calling thread), each lane
+    /// running its steps in insertion order and blocking on unfinished
+    /// dependencies. Returns per-step wall-clock records sorted by id.
+    pub fn run(self) -> Vec<StepTime> {
+        let n = self.next_id;
+        if n == 0 {
+            return Vec::new();
+        }
+        let done = Mutex::new(vec![false; n]);
+        let cv = Condvar::new();
+        let t0 = Instant::now();
+        let run_lane = |lane: usize, steps: Vec<Step<'env>>| -> Vec<StepTime> {
+            let mut times = Vec::with_capacity(steps.len());
+            for step in steps {
+                wait_for(&done, &cv, &step.deps);
+                let start_s = t0.elapsed().as_secs_f64();
+                // The guard marks the step done (and wakes waiters) even
+                // if the body panics, so sibling lanes unblock and the
+                // panic can propagate through the scope join instead of
+                // deadlocking the whole graph.
+                let guard = MarkDone { done: &done, cv: &cv, id: step.id };
+                (step.body)();
+                drop(guard);
+                times.push(StepTime {
+                    id: step.id,
+                    lane,
+                    label: step.label,
+                    start_s,
+                    end_s: t0.elapsed().as_secs_f64(),
+                });
+            }
+            times
+        };
+        let mut lanes: Vec<(usize, Vec<Step<'env>>)> = self
+            .lanes
+            .into_iter()
+            .enumerate()
+            .filter(|(_, steps)| !steps.is_empty())
+            .collect();
+        let first = lanes.remove(0);
+        let mut all = std::thread::scope(|s| {
+            let run_lane = &run_lane;
+            let handles: Vec<_> = lanes
+                .into_iter()
+                .map(|(lane, steps)| s.spawn(move || run_lane(lane, steps)))
+                .collect();
+            let mut all = run_lane(first.0, first.1);
+            for h in handles {
+                all.extend(h.join().expect("step-graph lane panicked"));
+            }
+            all
+        });
+        all.sort_by_key(|st| st.id);
+        all
+    }
+}
+
+fn lock<'a>(m: &'a Mutex<Vec<bool>>) -> MutexGuard<'a, Vec<bool>> {
+    // A poisoned lock means another lane panicked mid-step; the flag
+    // vector is still valid (bools only ever flip false→true), so keep
+    // going and let the panic surface at the scope join.
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn wait_for(done: &Mutex<Vec<bool>>, cv: &Condvar, deps: &[usize]) {
+    if deps.is_empty() {
+        return;
+    }
+    let mut g = lock(done);
+    while !deps.iter().all(|&d| g[d]) {
+        g = cv.wait(g).unwrap_or_else(|e| e.into_inner());
+    }
+}
+
+struct MarkDone<'a> {
+    done: &'a Mutex<Vec<bool>>,
+    cv: &'a Condvar,
+    id: usize,
+}
+
+impl Drop for MarkDone<'_> {
+    fn drop(&mut self) {
+        lock(self.done)[self.id] = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Single-use rendezvous cell moving one value from a producer step to a
+/// consumer step.
+///
+/// Deliberately unsynchronized beyond a mutex: the [`StepGraph`]
+/// dependency from producer to consumer already orders `put` before
+/// `take`; the cell only has to move the value across threads. Taking
+/// from an empty cell (missing dependency edge) or double-putting
+/// (duplicate producer) is a pipeline wiring bug and panics.
+pub struct Handoff<T> {
+    cell: Mutex<Option<T>>,
+}
+
+impl<T> Handoff<T> {
+    /// An empty cell.
+    pub fn new() -> Handoff<T> {
+        Handoff { cell: Mutex::new(None) }
+    }
+
+    /// Deposit the value. Panics if the cell is already occupied.
+    pub fn put(&self, v: T) {
+        let mut g = self.cell.lock().unwrap_or_else(|e| e.into_inner());
+        assert!(g.is_none(), "handoff already holds a value");
+        *g = Some(v);
+    }
+
+    /// Move the value out. Panics if the producer step has not run —
+    /// which the graph dependency must guarantee.
+    pub fn take(&self) -> T {
+        self.cell
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .take()
+            .expect("handoff is empty — producer step did not run before take")
+    }
+}
+
+impl<T> Default for Handoff<T> {
+    fn default() -> Handoff<T> {
+        Handoff::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex as StdMutex;
+
+    #[test]
+    fn steps_run_in_dependency_order_across_lanes() {
+        let order = StdMutex::new(Vec::new());
+        let mut g = StepGraph::new(3);
+        let a = g.add(0, &[], "a", || order.lock().unwrap().push('a'));
+        let b = g.add(1, &[a], "b", || order.lock().unwrap().push('b'));
+        let c = g.add(2, &[a], "c", || order.lock().unwrap().push('c'));
+        let d = g.add(0, &[b, c], "d", || order.lock().unwrap().push('d'));
+        assert_eq!(d.index(), 3);
+        let times = g.run();
+        assert_eq!(times.len(), 4);
+        for (i, st) in times.iter().enumerate() {
+            assert_eq!(st.id, i);
+            assert!(st.end_s >= st.start_s);
+        }
+        let ord = order.into_inner().unwrap();
+        let pos = |ch: char| ord.iter().position(|&x| x == ch).unwrap();
+        assert!(pos('a') < pos('b'));
+        assert!(pos('a') < pos('c'));
+        assert!(pos('b') < pos('d'));
+        assert!(pos('c') < pos('d'));
+    }
+
+    #[test]
+    fn single_lane_serializes_in_insertion_order_without_deps() {
+        let order = StdMutex::new(Vec::new());
+        let mut g = StepGraph::new(1);
+        for i in 0..5 {
+            g.add(0, &[], format!("s{i}"), || order.lock().unwrap().push(i));
+        }
+        g.run();
+        assert_eq!(order.into_inner().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn handoff_pipelines_values_between_lanes() {
+        let n = 4;
+        let cells: Vec<Handoff<usize>> = (0..n).map(|_| Handoff::new()).collect();
+        let out = StdMutex::new(vec![0usize; n]);
+        let mut g = StepGraph::new(2);
+        let produced: Vec<StepId> = (0..n)
+            .map(|c| {
+                let cells = &cells;
+                g.add(0, &[], format!("put{c}"), move || cells[c].put(c * 10))
+            })
+            .collect();
+        for c in 0..n {
+            let (cells, out) = (&cells, &out);
+            g.add(1, &[produced[c]], format!("take{c}"), move || {
+                out.lock().unwrap()[c] = cells[c].take() + 1;
+            });
+        }
+        g.run();
+        assert_eq!(out.into_inner().unwrap(), vec![1, 11, 21, 31]);
+    }
+
+    #[test]
+    fn merged_lane_assignment_also_completes() {
+        // Same shape as the pipelined test but everything on one lane —
+        // the w_r = 1 degenerate case of the EP overlap schedule.
+        let cells: Vec<Handoff<usize>> = (0..3).map(|_| Handoff::new()).collect();
+        let sum = StdMutex::new(0usize);
+        let mut g = StepGraph::new(1);
+        for c in 0..3 {
+            let cells = &cells;
+            let p = g.add(0, &[], format!("put{c}"), move || cells[c].put(c + 1));
+            let sum = &sum;
+            g.add(0, &[p], format!("take{c}"), move || {
+                *sum.lock().unwrap() += cells[c].take();
+            });
+        }
+        g.run();
+        assert_eq!(sum.into_inner().unwrap(), 6);
+    }
+
+    #[test]
+    fn empty_graph_runs_to_nothing() {
+        let g = StepGraph::new(2);
+        assert_eq!(g.n_steps(), 0);
+        assert!(g.run().is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "must precede")]
+    fn forward_dependency_rejected() {
+        let mut g1 = StepGraph::new(1);
+        let a = g1.add(0, &[], "a", || {});
+        // `a` has id 0; a fresh graph's first id is also 0, so using it
+        // as a dependency there violates dep < id.
+        let mut g2 = StepGraph::new(1);
+        g2.add(0, &[a], "b", || {});
+    }
+
+    #[test]
+    #[should_panic(expected = "already holds")]
+    fn double_put_rejected() {
+        let h = Handoff::new();
+        h.put(1);
+        h.put(2);
+    }
+
+    #[test]
+    #[should_panic(expected = "producer step did not run")]
+    fn take_from_empty_rejected() {
+        let h: Handoff<usize> = Handoff::new();
+        h.take();
+    }
+}

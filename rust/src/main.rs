@@ -24,7 +24,7 @@ use fp8_flow_moe::analysis::{
     ExecutedAudit,
 };
 use fp8_flow_moe::cluster::ep_exec::{ep_backward, ep_forward, EpConfig, EpShape};
-use fp8_flow_moe::cluster::sim::ep_measured_vs_modeled;
+use fp8_flow_moe::cluster::sim::{ep_measured_vs_modeled, ep_overlap_report};
 use fp8_flow_moe::coordinator::{reports, write_run_json};
 use fp8_flow_moe::dataflow::{build, build_train_step, Variant};
 use fp8_flow_moe::exec;
@@ -52,12 +52,17 @@ USAGE:
   fp8-flow-moe epshard [--ranks R] [--recipe <all|bf16|blockwise|fp8flow>]
                        [--tokens N] [--experts E] [--top-k K] [--capacity C]
                        [--d-model D] [--ffn H] [--seed S]
+                       [--overlap <on|off>] [--chunks C]
+                       (--overlap on runs the double-buffered pipeline next
+                        to the serialized baseline and reports measured
+                        overlap efficiency beside the sim's model)
   fp8-flow-moe bwd     [--ranks R] [--recipe <all|bf16|blockwise|fp8flow>]
                        [--tokens N] [--experts E] [--top-k K] [--capacity C]
                        [--d-model D] [--ffn H] [--seed S]
+                       [--overlap <on|off>] [--chunks C]
   fp8-flow-moe dataflow
   fp8-flow-moe lint    [--recipe <all|bf16|blockwise|deepseek|fp8flow>]
-                       [--experts E] [--top-k K]
+                       [--experts E] [--top-k K] [--ranks R] [--chunks C]
                        (scale-lineage static analyzer over the Fig. 2
                         graphs + executed cross-check; writes runs/lint.json
                         and exits nonzero on any error-severity finding)
@@ -242,6 +247,8 @@ struct ShardArgs {
     ffn: usize,
     capacity: usize,
     seed: u64,
+    chunks: usize,
+    overlap: bool,
     recipes: Vec<Recipe>,
 }
 
@@ -255,9 +262,16 @@ impl ShardArgs {
         let ffn = args.usize_or("ffn", 256);
         let capacity = args.usize_or("capacity", (tokens * top_k).div_ceil(experts));
         let seed = args.u64_or("seed", 42);
+        let chunks = args.usize_or("chunks", 1);
+        let overlap = match args.get_or("overlap", "off").as_str() {
+            "on" | "true" => true,
+            "off" | "false" => false,
+            other => bail!("unknown --overlap {other:?} (want on|off)"),
+        };
         ensure!(ranks >= 1, "--ranks must be at least 1");
         ensure!(tokens >= 1, "--tokens must be at least 1");
         ensure!(capacity >= 1, "--capacity must be at least 1");
+        ensure!(chunks >= 1, "--chunks must be at least 1");
         ensure!(experts >= ranks, "need at least as many experts ({experts}) as ranks ({ranks})");
         ensure!((1..=experts).contains(&top_k), "--top-k must be in 1..=--experts");
         let recipes = match args.get_or("recipe", "all").as_str() {
@@ -267,7 +281,25 @@ impl ShardArgs {
                 None => bail!("unknown recipe {other:?} (want all|bf16|blockwise|fp8flow)"),
             },
         };
-        Ok(ShardArgs { ranks, tokens, experts, top_k, d_model, ffn, capacity, seed, recipes })
+        Ok(ShardArgs {
+            ranks,
+            tokens,
+            experts,
+            top_k,
+            d_model,
+            ffn,
+            capacity,
+            seed,
+            chunks,
+            overlap,
+            recipes,
+        })
+    }
+
+    /// True when a chunked/overlapped pipeline run was requested next to
+    /// the serialized baseline.
+    fn pipeline_requested(&self) -> bool {
+        self.overlap || self.chunks > 1
     }
 
     /// The shared run-JSON header.
@@ -281,7 +313,15 @@ impl ShardArgs {
             .set("d_model", self.d_model)
             .set("ffn", self.ffn)
             .set("seed", self.seed)
+            .set("chunks", self.chunks)
+            .set("overlap", self.overlap)
     }
+}
+
+/// Bitwise equality of two f32 buffers (the CLI-level spot check of the
+/// bit-identity contract the property tests pin exhaustively).
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
 }
 
 /// Execute the EP-sharded forward and report measured vs modeled
@@ -303,7 +343,7 @@ fn cmd_epshard(args: &Args) -> Result<()> {
     let mut doc = sa.to_json();
     for recipe in sa.recipes.iter().copied() {
         let pw = PreparedWeights::new(w.clone(), recipe);
-        let cfg = EpConfig { ranks, top_k, capacity, threads: 0 };
+        let cfg = EpConfig::serial(ranks, top_k, capacity, 0);
         let shape = EpShape::of(&x, &pw, &cfg);
         let out = ep_forward(&x, &pw, &cfg);
         print!("{}", ep_measured_vs_modeled(recipe, ranks, &shape, &out));
@@ -314,6 +354,16 @@ fn cmd_epshard(args: &Args) -> Result<()> {
             Recipe::Fp8Flow => "fp8flow",
         };
         doc = doc.set(key, out.to_json());
+        if sa.pipeline_requested() {
+            let over = ep_forward(&x, &pw, &cfg.with_pipeline(sa.chunks, sa.overlap));
+            ensure!(
+                bits_eq(&over.y.data, &out.y.data),
+                "{key}: pipelined output diverged bitwise from the serialized baseline"
+            );
+            print!("{}", ep_overlap_report(recipe, ranks, &shape, &out, &over));
+            println!("    bit-identity: pipelined output == serialized baseline\n");
+            doc = doc.set(&format!("{key}_overlap"), over.to_json());
+        }
     }
     let path = write_run_json(&format!("epshard_r{ranks}"), &doc)?;
     println!("wrote {path:?}");
@@ -355,20 +405,37 @@ fn cmd_bwd(args: &Args) -> Result<()> {
         // Single-rank BF16 *is* the deviation reference — reuse it rather
         // than recomputing the identical forward+backward.
         let computed: Option<(FwdStash, MoeGrads, Option<Json>)> =
-            if recipe == Recipe::Bf16 && ranks == 1 {
+            if recipe == Recipe::Bf16 && ranks == 1 && !sa.pipeline_requested() {
                 None
             } else {
                 let pw = PreparedWeights::new(w.clone(), recipe);
                 let stash = forward_stash(&x, &pw, top_k, capacity);
-                let (grads, wj) = if ranks > 1 {
-                    let cfg = EpConfig { ranks, top_k, capacity, threads: 0 };
+                let (grads, wj) = if ranks > 1 || sa.pipeline_requested() {
+                    let cfg = EpConfig::serial(ranks, top_k, capacity, 0);
                     let out = ep_backward(&stash, &pw, &dy, &cfg);
-                    let j = out.to_json();
+                    let mut j = out.to_json();
                     println!(
                         "    combine-bwd wire {} B payload + {} B sidecar in {} buffers; \
                          dispatch-bwd {} B",
                         out.dy_payload_bytes, out.dy_sidecar_bytes, out.dy_buffers, out.dx_bytes
                     );
+                    if sa.pipeline_requested() {
+                        let pcfg = cfg.with_pipeline(sa.chunks, sa.overlap);
+                        let over = ep_backward(&stash, &pw, &dy, &pcfg);
+                        ensure!(
+                            bits_eq(&over.grads.dx.data, &out.grads.dx.data),
+                            "{key}: pipelined backward diverged bitwise from serialized"
+                        );
+                        println!(
+                            "ROW bwd-wall serialized {:>9.4} ms | overlapped (C={}) {:>9.4} ms \
+                             | speedup {:.3}x  [bit-identical grads]",
+                            out.pipeline_wall_s * 1e3,
+                            over.chunks,
+                            over.pipeline_wall_s * 1e3,
+                            out.pipeline_wall_s / over.pipeline_wall_s
+                        );
+                        j = j.set("overlap_run", over.to_json());
+                    }
                     (out.grads, Some(j))
                 } else {
                     (moe_backward(&stash, &pw, &dy), None)
@@ -429,8 +496,12 @@ fn cmd_bwd(args: &Args) -> Result<()> {
 fn cmd_lint(args: &Args) -> Result<()> {
     let experts = args.usize_or("experts", 8);
     let top_k = args.usize_or("top-k", 2);
+    let ranks = args.usize_or("ranks", 1);
+    let chunks = args.usize_or("chunks", 1);
     ensure!(experts >= 1, "--experts must be at least 1");
     ensure!((1..=experts).contains(&top_k), "--top-k must be in 1..=--experts");
+    ensure!((1..=experts).contains(&ranks), "--ranks must be in 1..=--experts");
+    ensure!(chunks >= 1, "--chunks must be at least 1");
     let variants: Vec<Variant> = match args.get_or("recipe", "all").as_str() {
         "all" => Variant::all().to_vec(),
         other => match Variant::parse(other) {
@@ -439,8 +510,12 @@ fn cmd_lint(args: &Args) -> Result<()> {
         },
     };
 
-    println!("scale-lineage lint: E={experts}, K={top_k}\n");
-    let mut doc = Json::obj().set("experts", experts).set("top_k", top_k);
+    println!("scale-lineage lint: E={experts}, K={top_k}, R={ranks}, C={chunks}\n");
+    let mut doc = Json::obj()
+        .set("experts", experts)
+        .set("top_k", top_k)
+        .set("ranks", ranks)
+        .set("chunks", chunks);
     let (mut errors, mut warnings) = (0usize, 0usize);
     // the executed weight prep is master-sourced for EVERY FP8 recipe
     // (`requantize_from_masters` never derives a layout from FP8), so the
@@ -489,7 +564,11 @@ fn cmd_lint(args: &Args) -> Result<()> {
             Variant::DeepSeekV3 => None,
         };
         if let Some(recipe) = recipe {
-            let layer = ExecPrediction::of(&build(v), experts, top_k);
+            // chunk multiplicity: the prediction is chunk-invariant by
+            // contract, and the executed audit below runs the actual
+            // chunked EP backward when R or C > 1 — so the cross-check
+            // fails loudly if chunking ever inflates a cast counter
+            let layer = ExecPrediction::of_chunked(&build(v), experts, top_k, chunks);
             let tail = if v == Variant::Bf16 {
                 ExecPrediction::of(&build_train_step(v), experts, top_k)
             } else {
@@ -500,7 +579,7 @@ fn cmd_lint(args: &Args) -> Result<()> {
                 opt_requants: tail.opt_requants,
                 ..layer
             };
-            let executed = executed_audit(recipe, experts, top_k);
+            let executed = executed_audit(recipe, experts, top_k, ranks, chunks);
             let divergences: Vec<Diagnostic> = cross_check(v.name(), &predicted, &executed);
             errors += divergences.len();
             println!(
@@ -550,8 +629,17 @@ fn cmd_lint(args: &Args) -> Result<()> {
 /// Run the executed layer + weight prep at a small fixed shape and
 /// collect the runtime's own cast/requant audit for [`cmd_lint`]'s
 /// cross-check. Counts depend only on `(experts, top_k)`, not on the
-/// token/feature dims (`tests/prop_lint.rs` pins this).
-fn executed_audit(recipe: Recipe, experts: usize, top_k: usize) -> ExecutedAudit {
+/// token/feature dims, the rank count, or the pipeline chunking
+/// (`tests/prop_lint.rs` pins this) — with `--ranks`/`--chunks` > 1 the
+/// backward runs through the chunked (and overlapped, when C > 1) EP
+/// pipeline so the invariance is checked against the real schedule.
+fn executed_audit(
+    recipe: Recipe,
+    experts: usize,
+    top_k: usize,
+    ranks: usize,
+    chunks: usize,
+) -> ExecutedAudit {
     let tokens = 64.max(experts);
     let capacity = (tokens * top_k).div_ceil(experts);
     let mut rng = Rng::seed_from(42);
@@ -560,7 +648,12 @@ fn executed_audit(recipe: Recipe, experts: usize, top_k: usize) -> ExecutedAudit
     let dy = Mat::randn(tokens, 32, 1.0, &mut rng);
     let mut pw = PreparedWeights::new(w, recipe);
     let stash = forward_stash(&x, &pw, top_k, capacity);
-    let grads = moe_backward(&stash, &pw, &dy);
+    let grads = if ranks > 1 || chunks > 1 {
+        let cfg = EpConfig::serial(ranks, top_k, capacity, 0).with_pipeline(chunks, chunks > 1);
+        ep_backward(&stash, &pw, &dy, &cfg).grads
+    } else {
+        moe_backward(&stash, &pw, &dy)
+    };
     let prep = pw.requantize_from_masters();
     ExecutedAudit {
         casts_fwd: stash.cast_ops,

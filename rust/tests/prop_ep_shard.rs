@@ -9,6 +9,13 @@
 //! space — must not change a single output bit, because per-expert math
 //! reads only its own `capacity` rows, the UE8M0 sidecar reproduces po2
 //! scales exactly, and per-rank combine partials sum in plan order.
+//!
+//! PR 7 widens the matrix with the pipeline dimensions: chunk counts
+//! C ∈ {1, 2, 4} and both schedules (bulk-synchronous chunked, and the
+//! overlapped step graph with a comm lane per rank) must all stay
+//! bitwise equal — overlapped == serialized == single-rank — because
+//! chunk boundaries land on expert boundaries in plan order and the
+//! combine reduce reads exactly one partial per served token.
 
 use fp8_flow_moe::cluster::ep_exec::{ep_backward, ep_forward, EpConfig};
 use fp8_flow_moe::moe::backward::{forward_stash, moe_backward, MoeGrads};
@@ -18,6 +25,11 @@ use fp8_flow_moe::util::prop::{assert_mat_bits_eq, props};
 use fp8_flow_moe::util::rng::Rng;
 
 const RANK_COUNTS: [usize; 3] = [1, 2, 4];
+const CHUNK_COUNTS: [usize; 3] = [1, 2, 4];
+
+/// The pipeline configurations every (R, C) point is checked under:
+/// serialized chunked, and the overlapped step graph.
+const SCHEDULES: [bool; 2] = [false, true];
 
 /// Random MoE problem with one *starved* expert: a constant input feature
 /// plus a router bias column guarantees expert `E-1` never lands in the
@@ -48,25 +60,35 @@ fn starved_setup(
 
 #[test]
 fn prop_ep_sharded_forward_bit_identical() {
-    props("ep sharded forward == single-rank", 10, |g| {
+    // R × C × schedule: overlapped == serialized == single-rank, with
+    // ragged loads and a zero-token expert in every draw
+    props("ep sharded forward == single-rank", 6, |g| {
         let (x, w, cap, top_k) = starved_setup(g);
         let e = w.n_experts();
         for recipe in [Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow] {
             let pw = PreparedWeights::new(w.clone(), recipe);
             let reference = moe_forward(&x, &pw, top_k, cap);
             for ranks in RANK_COUNTS {
-                let cfg = EpConfig { ranks, top_k, capacity: cap, threads: 0 };
-                let out = ep_forward(&x, &pw, &cfg);
-                assert_mat_bits_eq(
-                    &out.y,
-                    &reference.y,
-                    &format!("{recipe:?} R={ranks} E={e} cap={cap} top_k={top_k}"),
-                );
-                assert_eq!(
-                    out.aux_loss.to_bits(),
-                    reference.aux_loss.to_bits(),
-                    "{recipe:?} R={ranks}: aux_loss"
-                );
+                for chunks in CHUNK_COUNTS {
+                    for overlap in SCHEDULES {
+                        let cfg = EpConfig::serial(ranks, top_k, cap, 0)
+                            .with_pipeline(chunks, overlap);
+                        let out = ep_forward(&x, &pw, &cfg);
+                        assert_mat_bits_eq(
+                            &out.y,
+                            &reference.y,
+                            &format!(
+                                "{recipe:?} R={ranks} C={chunks} ov={overlap} E={e} \
+                                 cap={cap} top_k={top_k}"
+                            ),
+                        );
+                        assert_eq!(
+                            out.aux_loss.to_bits(),
+                            reference.aux_loss.to_bits(),
+                            "{recipe:?} R={ranks} C={chunks} ov={overlap}: aux_loss"
+                        );
+                    }
+                }
             }
         }
     });
@@ -88,10 +110,11 @@ fn prop_ep_sharded_backward_bit_identical() {
     // the reverse-direction analogue of the forward property: the
     // EP-sharded backward (combine-bwd a2a in FP8 code space, per-rank
     // dgrad/wgrad, dispatch-bwd reduce) must match the single-rank
-    // backward bit for bit — R ∈ {1,2,4}, all recipes, ragged loads
-    // including a zero-token expert (whose owning rank backprops through
-    // an all-padding slab)
-    props("ep sharded backward == single-rank", 8, |g| {
+    // backward bit for bit — R ∈ {1,2,4}, C ∈ {1,2,4}, both schedules,
+    // all recipes, ragged loads including a zero-token expert (whose
+    // owning rank backprops through an all-padding slab). The stats
+    // equality also pins chunk-invariance of the cast/requant audit.
+    props("ep sharded backward == single-rank", 5, |g| {
         let (x, w, cap, top_k) = starved_setup(g);
         let e = w.n_experts();
         let mut rng = Rng::seed_from(g.seed ^ 0x8B3D);
@@ -101,13 +124,21 @@ fn prop_ep_sharded_backward_bit_identical() {
             let stash = forward_stash(&x, &pw, top_k, cap);
             let reference = moe_backward(&stash, &pw, &dy);
             for ranks in RANK_COUNTS {
-                let cfg = EpConfig { ranks, top_k, capacity: cap, threads: 0 };
-                let out = ep_backward(&stash, &pw, &dy, &cfg);
-                assert_grads_bits_eq(
-                    &out.grads,
-                    &reference,
-                    &format!("{recipe:?} R={ranks} E={e} cap={cap} top_k={top_k}"),
-                );
+                for chunks in CHUNK_COUNTS {
+                    for overlap in SCHEDULES {
+                        let cfg = EpConfig::serial(ranks, top_k, cap, 0)
+                            .with_pipeline(chunks, overlap);
+                        let out = ep_backward(&stash, &pw, &dy, &cfg);
+                        assert_grads_bits_eq(
+                            &out.grads,
+                            &reference,
+                            &format!(
+                                "{recipe:?} R={ranks} C={chunks} ov={overlap} E={e} \
+                                 cap={cap} top_k={top_k}"
+                            ),
+                        );
+                    }
+                }
             }
         }
     });
@@ -126,12 +157,21 @@ fn ep_backward_fixed_shape_exhaustive_thread_budgets() {
         let reference = moe_backward(&stash, &pw, &dy);
         for ranks in RANK_COUNTS {
             for threads in [1usize, 2, 8] {
-                let cfg = EpConfig { ranks, top_k: 2, capacity: cap, threads };
+                let cfg = EpConfig::serial(ranks, 2, cap, threads);
                 let out = ep_backward(&stash, &pw, &dy, &cfg);
                 assert_grads_bits_eq(
                     &out.grads,
                     &reference,
                     &format!("{recipe:?} R={ranks} t={threads}"),
+                );
+                // the overlapped pipeline must be thread-budget-invariant
+                // too: a 1-worker rank degrades to a merged serial lane,
+                // an 8-worker rank to comm(1) + compute(7) — same bits
+                let out = ep_backward(&stash, &pw, &dy, &cfg.with_pipeline(2, true));
+                assert_grads_bits_eq(
+                    &out.grads,
+                    &reference,
+                    &format!("{recipe:?} R={ranks} t={threads} overlapped"),
                 );
             }
         }
@@ -155,11 +195,16 @@ fn starved_expert_really_receives_zero_tokens() {
         .filter(|&&ex| ex == e - 1)
         .count();
     assert_eq!(hits, 0, "expert {e}-1 should be starved");
-    // and the sharded forward still runs through the empty shard
+    // and the sharded forward still runs through the empty shard — in
+    // both schedules (the overlapped graph must handle the all-padding
+    // unit without deadlock or bit drift)
     let pw = PreparedWeights::new(w, Recipe::Fp8Flow);
     let reference = moe_forward(&x, &pw, top_k, cap);
-    let out = ep_forward(&x, &pw, &EpConfig { ranks: 4, top_k, capacity: cap, threads: 0 });
+    let out = ep_forward(&x, &pw, &EpConfig::serial(4, top_k, cap, 0));
     assert_mat_bits_eq(&out.y, &reference.y, "starved shard");
+    let cfg = EpConfig::serial(4, top_k, cap, 0).with_pipeline(2, true);
+    let out = ep_forward(&x, &pw, &cfg);
+    assert_mat_bits_eq(&out.y, &reference.y, "starved shard overlapped");
 }
 
 #[test]
@@ -176,9 +221,19 @@ fn fixed_shape_exhaustive_thread_budgets() {
         let reference = moe_forward(&x, &pw, 2, cap);
         for ranks in RANK_COUNTS {
             for threads in [1usize, 2, 8] {
-                let cfg = EpConfig { ranks, top_k: 2, capacity: cap, threads };
+                let cfg = EpConfig::serial(ranks, 2, cap, threads);
                 let out = ep_forward(&x, &pw, &cfg);
-                assert_mat_bits_eq(&out.y, &reference.y, &format!("{recipe:?} R={ranks} t={threads}"));
+                assert_mat_bits_eq(
+                    &out.y,
+                    &reference.y,
+                    &format!("{recipe:?} R={ranks} t={threads}"),
+                );
+                let out = ep_forward(&x, &pw, &cfg.with_pipeline(2, true));
+                assert_mat_bits_eq(
+                    &out.y,
+                    &reference.y,
+                    &format!("{recipe:?} R={ranks} t={threads} overlapped"),
+                );
             }
         }
     }

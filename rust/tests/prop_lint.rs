@@ -235,6 +235,60 @@ fn predictions_match_executed_audits_for_every_recipe() {
 }
 
 #[test]
+fn chunked_ep_backward_matches_chunk_invariant_prediction() {
+    // the `--chunks C` pipeline regroups experts into per-rank units but
+    // must not change a single cast/requant count: entry quant is once
+    // per batch, Q(dy) once per slot, per-expert counters once per
+    // expert. `ExecPrediction::of_chunked` pins that invariance on the
+    // static side; this test pins it on the executed side by running the
+    // EP-sharded chunked backward (both schedules) through the same
+    // cross-check the `lint` gate uses.
+    use fp8_flow_moe::cluster::ep_exec::{ep_backward, EpConfig};
+    let (experts, top_k, tokens) = (6usize, 2usize, 48usize);
+    let capacity = (tokens * top_k).div_ceil(experts);
+    let mut rng = Rng::seed_from(31);
+    let x = Mat::randn(tokens, 16, 0.5, &mut rng);
+    let w = MoeWeights::random(16, 24, experts, &mut rng);
+    let dy = Mat::randn(tokens, 16, 1.0, &mut rng);
+    for (v, recipe) in [
+        (Variant::Bf16, Recipe::Bf16),
+        (Variant::TeBlockwise, Recipe::Blockwise),
+        (Variant::Fp8Flow, Recipe::Fp8Flow),
+    ] {
+        let pw = PreparedWeights::new(w.clone(), recipe);
+        let stash = forward_stash(&x, &pw, top_k, capacity);
+        for (ranks, chunks, overlap) in
+            [(1, 2, false), (2, 2, true), (2, 4, false), (3, 2, true)]
+        {
+            let cfg = EpConfig::serial(ranks, top_k, capacity, 0)
+                .with_pipeline(chunks, overlap);
+            let out = ep_backward(&stash, &pw, &dy, &cfg);
+            let predicted =
+                ExecPrediction::of_chunked(&build(v), experts, top_k, chunks);
+            let executed = ExecutedAudit {
+                casts_fwd: stash.cast_ops,
+                casts_bwd: out.grads.stats.casts,
+                requants_bwd: out.grads.stats.requants,
+                ..Default::default()
+            };
+            // optimizer tail not exercised here: zero its prediction too
+            let predicted = ExecPrediction {
+                opt_weight_quants: 0,
+                opt_requants: 0,
+                ..predicted
+            };
+            let div = cross_check(v.name(), &predicted, &executed);
+            assert!(
+                div.is_empty(),
+                "{} R={ranks} C={chunks} ov={overlap}: {:?}",
+                v.name(),
+                div.iter().map(|d| d.message.clone()).collect::<Vec<_>>()
+            );
+        }
+    }
+}
+
+#[test]
 fn cross_check_catches_a_seeded_divergence() {
     let mut predicted = predict(Variant::Fp8Flow, 4, 2);
     predicted.casts_bwd += 10; // sabotage

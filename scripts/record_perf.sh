@@ -15,6 +15,10 @@ bench_output="$(cargo bench --bench perf_kernels 2>&1)"
 echo "running epshard (2 ranks, all recipes; per-stage JSON)..."
 epshard_output="$(cargo run --release -p fp8_flow_moe -- epshard --ranks 2 2>&1)"
 
+echo "running epshard overlapped (2 ranks, 2 chunks; overlap efficiency)..."
+overlap_output="$(cargo run --release -p fp8_flow_moe -- \
+    epshard --ranks 2 --overlap on --chunks 2 2>&1)"
+
 echo "running bwd bench (fwd/bwd wall-clock + bwd/fwd ratio)..."
 bwd_bench_output="$(cargo bench --bench bwd 2>&1)"
 
@@ -44,6 +48,12 @@ train_output="$(cargo run --release -p fp8_flow_moe -- train --recipe all --step
         echo ""
         echo "Per-stage JSON: \`rust/runs/epshard_r2.json\`"
     fi
+    echo ""
+    echo "#### Overlapped EP dispatch (epshard --overlap on --chunks 2, measured vs modeled)"
+    echo ""
+    echo '```'
+    echo "${overlap_output}" | grep -E '^(== overlap|ROW|    (hideable|per-slot|bit-identity)|wrote)'
+    echo '```'
     echo ""
     echo "#### Executed backward (bench bwd: fwd/bwd wall-clock + ratio)"
     echo ""

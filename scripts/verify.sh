@@ -38,4 +38,9 @@ echo "== lint gate: scale-lineage static analyzer =="
 cargo run --release -q -p fp8_flow_moe -- lint --recipe all
 test -f rust/runs/lint.json
 
+echo "== overlap smoke: epshard --overlap on --chunks 2 (bit-identity gated) =="
+cargo run --release -q -p fp8_flow_moe -- \
+    epshard --ranks 2 --recipe fp8flow --tokens 256 --overlap on --chunks 2
+test -f rust/runs/epshard_r2.json
+
 echo "verify OK"
