@@ -1,0 +1,120 @@
+//! **Serving-loop throughput** — wall-clock of the heavy-traffic path
+//! (seeded trace → SLO micro-batching → EP-sharded forward per tick) per
+//! recipe, across arrival modes and the capacity-factor axis, plus a
+//! serialized-vs-overlapped pair at the largest rank count.
+//!
+//! ```bash
+//! cargo bench --bench serve [-- --requests N --ranks R --quick]
+//! ```
+//!
+//! The `ROW serve/...` lines feed `rust/EXPERIMENTS.md` §Serving; the
+//! bit-identity and drop-ledger contracts these runs ride on are pinned
+//! by `tests/prop_serve.rs`, so this harness only measures.
+
+use fp8_flow_moe::moe::layer::{MoeWeights, PreparedWeights, Recipe};
+use fp8_flow_moe::serve::{
+    generate_requests, serve_trace, ArrivalMode, DropPolicy, GenConfig, ServeConfig, ServeEngine,
+    SloPolicy, TokenEmbed,
+};
+use fp8_flow_moe::util::bench::{bencher_from_cli, print_speedup, print_table};
+use fp8_flow_moe::util::rng::Rng;
+
+fn main() {
+    // default --threads 0 (auto): the tick forward shares the rank budget
+    let (b, args) = bencher_from_cli(0);
+    let n_requests = args.usize_or("requests", if args.flag("quick") { 32 } else { 128 });
+    let d_model = args.usize_or("d-model", 128);
+    let ffn = args.usize_or("ffn", 128);
+    let experts = args.usize_or("experts", 8);
+    let top_k = args.usize_or("top-k", 2);
+    let ranks = args.usize_or("ranks", 2).min(experts);
+    let chunks = args.usize_or("chunks", 2);
+    let seed = args.u64_or("seed", 42);
+
+    let mut rng = Rng::seed_from(seed);
+    let w = MoeWeights::random(d_model, ffn, experts, &mut rng);
+    let slo = SloPolicy { max_wait_s: 0.005, max_tokens: 128 };
+    let mk_engine = |recipe, ranks, cf, chunks, overlap| {
+        ServeEngine::new(
+            PreparedWeights::new(w.clone(), recipe),
+            TokenEmbed::new(64, d_model, seed),
+            ServeConfig {
+                ranks,
+                top_k,
+                capacity_factor: cf,
+                drop_policy: DropPolicy::Capacity,
+                threads: 0,
+                chunks,
+                overlap,
+            },
+        )
+    };
+
+    for recipe in [Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow] {
+        // arrival-mode axis at cf = 1.0
+        let mut rows = Vec::new();
+        for mode in [ArrivalMode::Poisson, ArrivalMode::Bursty] {
+            let reqs = generate_requests(&GenConfig { mode, seed, ..GenConfig::default() }, n_requests);
+            let tokens: usize = reqs.iter().map(|r| r.len()).sum();
+            let eng = mk_engine(recipe, ranks, 1.0, 1, false);
+            rows.push(b.run_bytes(
+                &format!("serve/{recipe:?}/R={ranks}/{}", mode.name()),
+                (tokens * 4 * d_model) as u64,
+                || {
+                    std::hint::black_box(serve_trace(
+                        std::hint::black_box(&eng),
+                        std::hint::black_box(&reqs),
+                        &slo,
+                    ));
+                },
+            ));
+        }
+        print_table(
+            &format!("serve {recipe:?} (requests={n_requests} R={ranks} E={experts})"),
+            &rows,
+        );
+
+        // capacity-factor axis: the throughput/drop trade under burst load
+        let reqs = generate_requests(
+            &GenConfig { mode: ArrivalMode::Bursty, seed, ..GenConfig::default() },
+            n_requests,
+        );
+        let tokens: usize = reqs.iter().map(|r| r.len()).sum();
+        let mut cf_rows = Vec::new();
+        for cf in [0.5, 1.0, 1.5] {
+            let eng = mk_engine(recipe, ranks, cf, 1, false);
+            cf_rows.push(b.run_bytes(
+                &format!("serve/{recipe:?}/cf={cf}"),
+                (tokens * 4 * d_model) as u64,
+                || {
+                    std::hint::black_box(serve_trace(
+                        std::hint::black_box(&eng),
+                        std::hint::black_box(&reqs),
+                        &slo,
+                    ));
+                },
+            ));
+        }
+        print_table(&format!("serve {recipe:?} capacity-factor sweep"), &cf_rows);
+
+        // serialized vs the PR 7 overlap pipeline on the same trace
+        let mut pair = Vec::new();
+        for (label, c, ov) in [("serialized", 1usize, false), ("overlapped", chunks, true)] {
+            let eng = mk_engine(recipe, ranks, 1.0, c, ov);
+            pair.push(b.run_bytes(
+                &format!("serve/{recipe:?}/R={ranks}/{label}"),
+                (tokens * 4 * d_model) as u64,
+                || {
+                    std::hint::black_box(serve_trace(
+                        std::hint::black_box(&eng),
+                        std::hint::black_box(&reqs),
+                        &slo,
+                    ));
+                },
+            ));
+        }
+        print_table(&format!("serve {recipe:?} overlap (R={ranks} C={chunks})"), &pair);
+        print_speedup(&format!("{recipe:?} serialized -> overlapped"), &pair[0], &pair[1]);
+        println!();
+    }
+}

@@ -300,6 +300,38 @@ pub fn ep_measured_vs_modeled(
     s
 }
 
+/// Modeled serving throughput (tokens/s) for one micro-batch `shape` on
+/// the H100 cluster model: the batch's tokens over the serialized
+/// dispatch + expert + combine stage total from [`modeled_ep_stages`].
+/// The serving loop is one EP forward per flush tick, so the modeled
+/// steady-state rate is exactly the per-tick rate at the mean tick shape.
+pub fn modeled_serve_tokens_per_s(ranks: usize, recipe: Recipe, shape: &EpShape) -> f64 {
+    let m = modeled_ep_stages(ranks, recipe, shape);
+    shape.tokens as f64 / (m.dispatch_s + m.expert_s + m.combine_s)
+}
+
+/// Measured-vs-modeled serving throughput row for the `serve` report.
+/// Same caveat as [`ep_measured_vs_modeled`]: measured is this machine's
+/// wall clock, modeled is the H100 cluster — the calibration signal is
+/// the relative shape across recipes/ranks, not the absolute ratio.
+pub fn serve_measured_vs_modeled(
+    recipe: Recipe,
+    ranks: usize,
+    shape: &EpShape,
+    measured_tokens_per_s: f64,
+) -> String {
+    let modeled = modeled_serve_tokens_per_s(ranks, recipe, shape);
+    format!(
+        "ROW serve-model {:<9} R={ranks} mean-batch {:>5} tok | measured {:>12.0} tok/s | \
+         modeled {:>12.0} tok/s | meas/model {:.3}x\n",
+        format!("{recipe:?}"),
+        shape.tokens,
+        measured_tokens_per_s,
+        modeled,
+        measured_tokens_per_s / modeled
+    )
+}
+
 /// Max/mean ratio of per-rank stage times (1.0 = perfectly balanced).
 pub fn per_rank_imbalance(rank_s: &[f64]) -> f64 {
     if rank_s.is_empty() {
@@ -534,6 +566,25 @@ mod tests {
         // expert work shrinks with more ranks
         let flow8 = modeled_ep_stages(8, Recipe::Fp8Flow, &shape);
         assert!(flow8.expert_s < flow.expert_s);
+    }
+
+    #[test]
+    fn modeled_serve_throughput_prefers_the_fp8_wire() {
+        let shape = EpShape {
+            tokens: 256,
+            d_model: 256,
+            ffn: 256,
+            n_experts: 8,
+            top_k: 2,
+            capacity: 64,
+        };
+        let flow = modeled_serve_tokens_per_s(2, Recipe::Fp8Flow, &shape);
+        let bf16 = modeled_serve_tokens_per_s(2, Recipe::Bf16, &shape);
+        assert!(flow > 0.0 && bf16 > 0.0);
+        // FP8 dispatch wire + faster expert GEMM ⇒ higher modeled rate
+        assert!(flow > bf16, "flow {flow} vs bf16 {bf16}");
+        let rep = serve_measured_vs_modeled(Recipe::Fp8Flow, 2, &shape, flow);
+        assert!(rep.starts_with("ROW serve-model"), "bad report row: {rep}");
     }
 
     #[test]

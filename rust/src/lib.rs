@@ -52,6 +52,9 @@ pub mod fp8;
 pub mod moe;
 /// PJRT-style runtime for the AOT-lowered HLO artifacts.
 pub mod runtime;
+/// Heavy-traffic serving: seeded request generation, SLO micro-batching,
+/// and the EP-sharded serving loop with exact drop accounting.
+pub mod serve;
 /// Training loops: the native Fig. 6 trainer and the AOT-artifact driver.
 pub mod train;
 /// Shared utilities: matrices, RNG, CLI/JSON helpers, benchmarking.

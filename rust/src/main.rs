@@ -11,12 +11,15 @@
 //! fp8-flow-moe bwd [--ranks R] [--recipe ...] [--tokens N]    # executed backward
 //! fp8-flow-moe dataflow                                       # Fig. 2 audit
 //! fp8-flow-moe lint [--recipe all|...] [--experts E] [--top-k K]  # static analyzer
+//! fp8-flow-moe serve [--requests N] [--ranks R] [--sweep]     # serving loop
 //! fp8-flow-moe dqe [--size N]                                 # Eq. 1 demo
 //! fp8-flow-moe artifacts                                      # list manifest
 //! ```
 //!
 //! Unknown or missing subcommands print usage to **stderr** and exit
-//! nonzero; `--help` / `-h` / `help` print it to stdout and exit 0.
+//! nonzero; `--help` / `-h` / `help` print it to stdout and exit 0. Every
+//! other failure follows the same error contract: one `error:` line on
+//! stderr and exit code 2 (never a panic).
 
 use anyhow::{bail, ensure, Context, Result};
 use fp8_flow_moe::analysis::{
@@ -24,15 +27,21 @@ use fp8_flow_moe::analysis::{
     ExecutedAudit,
 };
 use fp8_flow_moe::cluster::ep_exec::{ep_backward, ep_forward, EpConfig, EpShape};
-use fp8_flow_moe::cluster::sim::{ep_measured_vs_modeled, ep_overlap_report};
+use fp8_flow_moe::cluster::sim::{
+    ep_measured_vs_modeled, ep_overlap_report, per_rank_imbalance, serve_measured_vs_modeled,
+};
 use fp8_flow_moe::coordinator::{reports, write_run_json};
 use fp8_flow_moe::dataflow::{build, build_train_step, Variant};
 use fp8_flow_moe::exec;
 use fp8_flow_moe::fp8::error::dqe_report;
 use fp8_flow_moe::fp8::{Fp8Format, ScaleMode};
 use fp8_flow_moe::moe::backward::{forward_stash, moe_backward, FwdStash, MoeGrads};
-use fp8_flow_moe::moe::layer::{MoeWeights, PreparedWeights, Recipe};
+use fp8_flow_moe::moe::layer::{moe_forward, MoeWeights, PreparedWeights, Recipe};
 use fp8_flow_moe::runtime::Runtime;
+use fp8_flow_moe::serve::{
+    generate_requests, serve_trace, ArrivalMode, DropPolicy, GenConfig, ServeConfig, ServeEngine,
+    SloPolicy, TokenEmbed,
+};
 use fp8_flow_moe::train::{AotTrainer, Corpus, NativeTrainer, TrainConfig, TrainDriver, TrainOutcome};
 use fp8_flow_moe::util::cli::Args;
 use fp8_flow_moe::util::json::Json;
@@ -66,6 +75,16 @@ USAGE:
                        (scale-lineage static analyzer over the Fig. 2
                         graphs + executed cross-check; writes runs/lint.json
                         and exits nonzero on any error-severity finding)
+  fp8-flow-moe serve   [--requests N] [--ranks R] [--recipe <all|bf16|blockwise|fp8flow>]
+                       [--arrivals <poisson|bursty>] [--rate REQ_PER_S] [--burst X]
+                       [--zipf S] [--min-len N] [--max-len N] [--vocab V] [--noise PCT]
+                       [--max-wait-ms W] [--max-tokens T]
+                       [--capacity-factor F] [--drop <capacity|none>] [--sweep]
+                       [--experts E] [--top-k K] [--d-model D] [--ffn H] [--seed S]
+                       [--overlap <on|off>] [--chunks C]
+                       (heavy-traffic serving loop: seeded arrivals, SLO
+                        micro-batching, EP-sharded forward; --sweep runs a
+                        capacity-factor sweep; writes runs/serve_r<R>.json)
   fp8-flow-moe dqe [--size N]
   fp8-flow-moe artifacts
   fp8-flow-moe help | --help | -h
@@ -75,7 +94,16 @@ Global flags:
                 FP8_THREADS env var)
 ";
 
-fn main() -> Result<()> {
+fn main() {
+    if let Err(e) = run() {
+        // the uniform error contract: message on stderr, exit 2 (same
+        // path the unknown-subcommand branch takes)
+        eprintln!("error: {e:#}");
+        std::process::exit(2);
+    }
+}
+
+fn run() -> Result<()> {
     let args = Args::from_env();
     exec::set_threads(args.usize_or("threads", 0));
     if args.help_requested() {
@@ -108,10 +136,13 @@ fn main() -> Result<()> {
         }
         Some("lint") => cmd_lint(&args),
         Some("dqe") => cmd_dqe(&args),
+        Some("serve") => cmd_serve(&args),
         Some("artifacts") => {
             let rt = Runtime::open(Runtime::default_dir())?;
             for name in rt.manifest.names() {
-                let spec = rt.manifest.get(name).unwrap();
+                // fallible lookup, not unwrap: a registry naming a missing
+                // spec is an error-contract exit, not a panic
+                let spec = rt.manifest.lookup(name)?;
                 println!("{name}: {} in / {} out", spec.inputs.len(), spec.outputs.len());
             }
             Ok(())
@@ -662,6 +693,229 @@ fn executed_audit(
         opt_weight_quants: prep.weight_quants,
         opt_requants: prep.requants,
     }
+}
+
+/// The heavy-traffic serving loop: seeded arrivals → SLO micro-batching →
+/// EP-sharded forward per flush tick, with exact capacity-drop accounting
+/// and a CLI-level bit-identity gate — every fully served token must match
+/// one-shot [`moe_forward`] over the whole trace bit-for-bit (see
+/// `rust/EXPERIMENTS.md` §Serving). `--sweep` runs the capacity-factor
+/// sweep that maps the quality/throughput trade.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let ranks = args.usize_or("ranks", 2);
+    let n_requests = args.usize_or("requests", 64);
+    let experts = args.usize_or("experts", 8);
+    let top_k = args.usize_or("top-k", 2);
+    let d_model = args.usize_or("d-model", 128);
+    let ffn = args.usize_or("ffn", 128);
+    let seed = args.u64_or("seed", 42);
+    let chunks = args.usize_or("chunks", 1);
+    let overlap = match args.get_or("overlap", "off").as_str() {
+        "on" | "true" => true,
+        "off" | "false" => false,
+        other => bail!("unknown --overlap {other:?} (want on|off)"),
+    };
+    ensure!(ranks >= 1, "--ranks must be at least 1");
+    ensure!(n_requests >= 1, "--requests must be at least 1");
+    ensure!(experts >= ranks, "need at least as many experts ({experts}) as ranks ({ranks})");
+    ensure!((1..=experts).contains(&top_k), "--top-k must be in 1..=--experts");
+    ensure!(chunks >= 1, "--chunks must be at least 1");
+
+    let arrivals = args.get_or("arrivals", "poisson");
+    let Some(mode) = ArrivalMode::parse(&arrivals) else {
+        bail!("unknown --arrivals {arrivals:?} (want poisson|bursty)");
+    };
+    let gen = GenConfig {
+        seed,
+        mode,
+        rate: args.f64_or("rate", 200.0),
+        burst: args.f64_or("burst", 4.0),
+        burst_period_s: args.f64_or("burst-period-ms", 50.0) / 1e3,
+        zipf_s: args.f64_or("zipf", 1.1),
+        min_len: args.usize_or("min-len", 4),
+        max_len: args.usize_or("max-len", 64),
+        vocab: args.usize_or("vocab", 64),
+        noise_pct: args.usize_or("noise", 10),
+    };
+    // re-check the generator's invariants here so a bad flag takes the
+    // error contract (stderr + exit 2) instead of the library assert
+    ensure!(gen.rate > 0.0, "--rate must be positive");
+    ensure!(gen.burst >= 1.0, "--burst must be at least 1");
+    ensure!(gen.burst_period_s > 0.0, "--burst-period-ms must be positive");
+    ensure!(
+        1 <= gen.min_len && gen.min_len <= gen.max_len,
+        "need 1 <= --min-len <= --max-len"
+    );
+    ensure!(gen.vocab >= 1, "--vocab must be at least 1");
+
+    let slo = SloPolicy {
+        max_wait_s: args.f64_or("max-wait-ms", 5.0) / 1e3,
+        max_tokens: args.usize_or("max-tokens", 128),
+    };
+    ensure!(slo.max_wait_s >= 0.0, "--max-wait-ms must be non-negative");
+    ensure!(slo.max_tokens >= 1, "--max-tokens must be at least 1");
+
+    let drop_s = args.get_or("drop", "capacity");
+    let Some(drop_policy) = DropPolicy::parse(&drop_s) else {
+        bail!("unknown --drop {drop_s:?} (want capacity|none)");
+    };
+    let cf = args.f64_or("capacity-factor", 1.0);
+    ensure!(cf > 0.0, "--capacity-factor must be positive");
+    let cfs: Vec<f64> =
+        if args.flag("sweep") { vec![0.5, 0.75, 1.0, 1.25, 1.5] } else { vec![cf] };
+    let recipes = match args.get_or("recipe", "fp8flow").as_str() {
+        "all" => vec![Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow],
+        other => match Recipe::parse(other) {
+            Some(r) => vec![r],
+            None => bail!("unknown recipe {other:?} (want all|bf16|blockwise|fp8flow)"),
+        },
+    };
+
+    let requests = generate_requests(&gen, n_requests);
+    let total_tokens: usize = requests.iter().map(|r| r.len()).sum();
+    println!(
+        "serve: {n_requests} requests ({total_tokens} tokens), {} arrivals at {:.0} req/s, \
+         R={ranks}, E={experts}, top-{top_k}, drop={}, {} workers",
+        mode.name(),
+        gen.rate,
+        drop_policy.name(),
+        exec::threads()
+    );
+
+    let mut rng = Rng::seed_from(seed);
+    let w = MoeWeights::random(d_model, ffn, experts, &mut rng);
+    let all_ids: Vec<i32> = requests.iter().flat_map(|r| r.tokens.iter().copied()).collect();
+    let x_all = TokenEmbed::new(gen.vocab, d_model, seed).embed(&all_ids);
+
+    let mut doc = Json::obj()
+        .set("requests", n_requests)
+        .set("total_tokens", total_tokens)
+        .set("ranks", ranks)
+        .set("experts", experts)
+        .set("top_k", top_k)
+        .set("d_model", d_model)
+        .set("ffn", ffn)
+        .set("seed", seed)
+        .set("arrivals", mode.name())
+        .set("rate", gen.rate)
+        .set("drop", drop_policy.name())
+        .set("max_wait_ms", slo.max_wait_s * 1e3)
+        .set("max_tokens", slo.max_tokens)
+        .set("chunks", chunks)
+        .set("overlap", overlap);
+    for recipe in recipes {
+        let key = match recipe {
+            Recipe::Bf16 => "bf16",
+            Recipe::Blockwise => "blockwise",
+            Recipe::Fp8Flow => "fp8flow",
+        };
+        let pw = PreparedWeights::new(w.clone(), recipe);
+        // one-shot reference over the whole trace: capacity = token count,
+        // the drop-free upper bound, so every slot materializes
+        let one = moe_forward(&x_all, &pw, top_k, x_all.rows.max(1));
+        let mut engine = ServeEngine::new(
+            pw,
+            TokenEmbed::new(gen.vocab, d_model, seed),
+            ServeConfig {
+                ranks,
+                top_k,
+                capacity_factor: cfs[0],
+                drop_policy,
+                threads: 0,
+                chunks,
+                overlap,
+            },
+        );
+        println!(
+            "== serve {key}: R={ranks} arrivals={} drop={}{} ==",
+            mode.name(),
+            drop_policy.name(),
+            if engine.cfg.pipelined() { " [overlap pipeline]" } else { "" }
+        );
+        let mut rj = Json::obj();
+        for &cf in &cfs {
+            engine.cfg.capacity_factor = cf;
+            let s = serve_trace(&engine, &requests, &slo);
+            // the bit-identity gate: every fully served token must equal
+            // the one-shot forward bit-for-bit (prop_serve pins the same
+            // property across rank counts and arrival modes)
+            for (tt, &ok) in s.fully_served.iter().enumerate() {
+                if ok {
+                    ensure!(
+                        bits_eq(
+                            &s.y.data[tt * d_model..(tt + 1) * d_model],
+                            &one.y.data[tt * d_model..(tt + 1) * d_model]
+                        ),
+                        "{key} cf={cf}: served token {tt} diverged bitwise from one-shot \
+                         moe_forward"
+                    );
+                }
+            }
+            let rows_f: Vec<f64> = s.rank_rows.iter().map(|&r| r as f64).collect();
+            let imb = per_rank_imbalance(&rows_f);
+            println!(
+                "ROW serve cf {cf:>4.2} | {:>9.0} tok/s | p50 {:>8.3} ms | p99 {:>8.3} ms | \
+                 dropped {:>5.1}% | imbalance {imb:.3}x",
+                s.tokens_per_s,
+                s.p50_s * 1e3,
+                s.p99_s * 1e3,
+                s.drop_frac(top_k) * 100.0,
+            );
+            println!(
+                "    {} ticks, mean batch {:.1} tok, capacity {}..{}; served {} / degraded {} \
+                 tokens ({} slot drops)",
+                s.ticks,
+                s.mean_batch_tokens,
+                s.capacity_range.0,
+                s.capacity_range.1,
+                s.served_tokens,
+                s.degraded_tokens,
+                s.dropped_slots
+            );
+            println!(
+                "    per-rank dispatched rows [{}] | expert-time imbalance {:.3}x",
+                s.rank_rows.iter().map(|r| r.to_string()).collect::<Vec<_>>().join(", "),
+                per_rank_imbalance(&s.rank_expert_s),
+            );
+            let shape = EpShape {
+                tokens: (s.mean_batch_tokens.round() as usize).max(1),
+                d_model,
+                ffn,
+                n_experts: experts,
+                top_k,
+                capacity: s.capacity_range.1.max(1),
+            };
+            print!("{}", serve_measured_vs_modeled(recipe, ranks, &shape, s.tokens_per_s));
+            println!(
+                "    bit-identity: {} served rows == one-shot moe_forward\n",
+                s.served_tokens
+            );
+            rj = rj.set(
+                &format!("cf{cf:.2}"),
+                Json::obj()
+                    .set("capacity_factor", cf)
+                    .set("ticks", s.ticks)
+                    .set("tokens_per_s", s.tokens_per_s)
+                    .set("p50_ms", s.p50_s * 1e3)
+                    .set("p99_ms", s.p99_s * 1e3)
+                    .set("served_tokens", s.served_tokens)
+                    .set("degraded_tokens", s.degraded_tokens)
+                    .set("dropped_slots", s.dropped_slots)
+                    .set("drop_frac", s.drop_frac(top_k))
+                    .set("rank_rows", s.rank_rows.clone())
+                    .set("imbalance", imb)
+                    .set("mean_batch_tokens", s.mean_batch_tokens)
+                    .set("capacity_min", s.capacity_range.0)
+                    .set("capacity_max", s.capacity_range.1)
+                    .set("sim_elapsed_s", s.sim_elapsed_s)
+                    .set("busy_s", s.busy_s),
+            );
+        }
+        doc = doc.set(key, rj);
+    }
+    let path = write_run_json(&format!("serve_r{ranks}"), &doc)?;
+    println!("wrote {path:?}");
+    Ok(())
 }
 
 fn cmd_dqe(args: &Args) -> Result<()> {

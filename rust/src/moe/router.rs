@@ -64,10 +64,17 @@ fn aux_from(first_counts: &[usize], prob_sums: &[f64], n: f64) -> f32 {
 }
 
 /// Route `x [tokens, d]` through router weights `wr [d, E]`, top-k.
+///
+/// A zero-row `x` (an empty serving flush tick) routes to an empty
+/// decision with `aux_loss = 0.0` — without the early return,
+/// [`aux_from`] would divide by `n = 0` and poison the aux loss with NaN.
 pub fn route(x: &Mat, wr: &Mat, top_k: usize) -> Routing {
     assert_eq!(x.cols, wr.rows);
     let e = wr.cols;
     assert!(top_k <= e);
+    if x.rows == 0 {
+        return Routing { experts: Vec::new(), gates: Vec::new(), aux_loss: 0.0 };
+    }
     let probs = softmax_rows(&x.matmul(wr));
     let mut experts = Vec::with_capacity(x.rows);
     let mut gates = Vec::with_capacity(x.rows);
@@ -230,6 +237,16 @@ mod tests {
             assert!((gsum - 1.0).abs() < 1e-5);
             assert!(r.gates[t][0] >= r.gates[t][1]); // top-1 has larger gate
         }
+    }
+
+    #[test]
+    fn empty_batch_routes_to_empty_not_nan() {
+        let mut rng = Rng::seed_from(9);
+        let wr = Mat::randn(16, 4, 1.0, &mut rng);
+        let r = route(&Mat::zeros(0, 16), &wr, 2);
+        assert!(r.experts.is_empty() && r.gates.is_empty());
+        assert_eq!(r.aux_loss, 0.0);
+        assert!(!r.aux_loss.is_nan());
     }
 
     #[test]

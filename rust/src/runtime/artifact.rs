@@ -90,6 +90,16 @@ impl Manifest {
         self.entries.get(name)
     }
 
+    /// Spec of artifact `name`, or a reportable error naming it — the
+    /// fallible lookup every CLI path must use (an `unwrap` here turned
+    /// a registry inconsistency into a panic instead of the error
+    /// contract's stderr message + exit 2).
+    pub fn lookup(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("manifest has no spec for artifact {name:?}"))
+    }
+
     /// All artifact names.
     pub fn names(&self) -> impl Iterator<Item = &str> {
         self.entries.keys().map(String::as_str)
@@ -319,6 +329,17 @@ mod tests {
         let k = m.get("k_quantize_1024x2048").unwrap();
         assert_eq!(k.outputs[1].dtype, Dtype::F32);
         assert_eq!(k.outputs[2].dtype, Dtype::S32);
+    }
+
+    #[test]
+    fn lookup_is_fallible_not_panicking() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.lookup("init_tiny").is_ok());
+        let err = m.lookup("no_such_artifact").unwrap_err();
+        assert!(
+            err.to_string().contains("no_such_artifact"),
+            "error should name the missing spec: {err}"
+        );
     }
 
     #[test]

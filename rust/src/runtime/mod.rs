@@ -78,11 +78,7 @@ impl Runtime {
 
     /// Load + compile one artifact by manifest name.
     pub fn load(&self, name: &str) -> Result<Executable> {
-        let spec = self
-            .manifest
-            .get(name)
-            .with_context(|| format!("artifact {name:?} not in manifest"))?
-            .clone();
+        let spec = self.manifest.lookup(name)?.clone();
         let path = self.dir.join(&spec.file);
         let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
             .with_context(|| format!("parsing {path:?}"))?;

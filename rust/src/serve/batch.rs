@@ -1,0 +1,199 @@
+//! Continuous micro-batcher: coalesce pending requests into flush ticks
+//! under a latency SLO (max-wait + max-tokens), FIFO and deterministic.
+//!
+//! [`schedule`] is a **pure function of the arrival trace and the SLO** —
+//! flush decisions never look at measured service time, so the batch
+//! composition is reproducible across machines and worker budgets (the
+//! engine layers queueing delay on top when it falls behind;
+//! `serve::engine`). Capacity-factor and token-drop policy are the other
+//! two serving knobs; they live here as [`DropPolicy`] +
+//! [`effective_capacity`] so the engine and the tests share one
+//! definition.
+
+use super::gen::Request;
+
+/// The latency SLO the batcher flushes under.
+#[derive(Clone, Copy, Debug)]
+pub struct SloPolicy {
+    /// Longest a pending request may wait in the queue before its batch
+    /// is cut (virtual seconds).
+    pub max_wait_s: f64,
+    /// Token threshold: the batch is cut as soon as pending tokens reach
+    /// this count (the final request may overshoot by its own length).
+    pub max_tokens: usize,
+}
+
+/// What happens to tokens routed past an expert's capacity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DropPolicy {
+    /// Standard MoE capacity semantics: per-slot tokens beyond
+    /// `capacity_factor`-scaled capacity are dropped (and accounted).
+    Capacity,
+    /// No drops: capacity is raised to the batch token count, the upper
+    /// bound on any expert's per-slot load.
+    None,
+}
+
+impl DropPolicy {
+    /// Parse a policy name as the CLI spells it.
+    pub fn parse(s: &str) -> Option<DropPolicy> {
+        match s {
+            "capacity" | "drop" => Some(DropPolicy::Capacity),
+            "none" | "nodrop" => Some(DropPolicy::None),
+            _ => None,
+        }
+    }
+
+    /// The CLI spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            DropPolicy::Capacity => "capacity",
+            DropPolicy::None => "none",
+        }
+    }
+}
+
+/// Per-expert per-slot row budget for a flush of `batch_tokens` tokens:
+/// `ceil(cf · batch_tokens · top_k / E)` under [`DropPolicy::Capacity`]
+/// (the trainer's default capacity is exactly `cf = 1` of this), or the
+/// drop-free upper bound `batch_tokens` under [`DropPolicy::None`].
+/// Always ≥ 1 so the stage APIs' non-empty invariants hold.
+pub fn effective_capacity(
+    policy: DropPolicy,
+    capacity_factor: f64,
+    batch_tokens: usize,
+    top_k: usize,
+    n_experts: usize,
+) -> usize {
+    match policy {
+        DropPolicy::None => batch_tokens.max(1),
+        DropPolicy::Capacity => {
+            let raw = capacity_factor * (batch_tokens * top_k) as f64 / n_experts as f64;
+            (raw.ceil() as usize).max(1)
+        }
+    }
+}
+
+/// One flush: the requests coalesced into a single `RankLocalBatch`-bound
+/// micro-batch, cut at `flush_s` on the virtual timeline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tick {
+    /// Instant the batch was cut (virtual seconds).
+    pub flush_s: f64,
+    /// Indices into the request trace, in arrival (FIFO) order.
+    pub requests: Vec<usize>,
+    /// Total prompt tokens across `requests`.
+    pub tokens: usize,
+}
+
+/// Cut the arrival trace into flush ticks under `slo`. Requests must be
+/// sorted by arrival (the generator emits them sorted). Guarantees:
+///
+/// * every request lands in exactly one tick, in FIFO order;
+/// * no request waits in the queue longer than `max_wait_s`
+///   (`flush_s − arrival_s ≤ max_wait_s`);
+/// * a tick is cut early the moment pending tokens reach `max_tokens`;
+/// * no tick is empty.
+pub fn schedule(requests: &[Request], slo: &SloPolicy) -> Vec<Tick> {
+    assert!(slo.max_wait_s >= 0.0, "max_wait_s must be non-negative");
+    assert!(slo.max_tokens >= 1, "max_tokens must be at least 1");
+    debug_assert!(requests.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+
+    let mut ticks = Vec::new();
+    let mut pending: Vec<usize> = Vec::new();
+    let mut pend_tokens = 0usize;
+    let mut flush = |pending: &mut Vec<usize>, pend_tokens: &mut usize, at: f64| {
+        ticks.push(Tick { flush_s: at, requests: std::mem::take(pending), tokens: *pend_tokens });
+        *pend_tokens = 0;
+    };
+
+    for (i, r) in requests.iter().enumerate() {
+        if let Some(&oldest) = pending.first() {
+            let deadline = requests[oldest].arrival_s + slo.max_wait_s;
+            if deadline <= r.arrival_s {
+                flush(&mut pending, &mut pend_tokens, deadline);
+            }
+        }
+        pending.push(i);
+        pend_tokens += r.len();
+        if pend_tokens >= slo.max_tokens {
+            flush(&mut pending, &mut pend_tokens, r.arrival_s);
+        }
+    }
+    if let Some(&oldest) = pending.first() {
+        let deadline = requests[oldest].arrival_s + slo.max_wait_s;
+        flush(&mut pending, &mut pend_tokens, deadline);
+    }
+    ticks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::gen::{generate_requests, ArrivalMode, GenConfig};
+
+    fn trace(mode: ArrivalMode, n: usize) -> Vec<Request> {
+        generate_requests(&GenConfig { mode, ..GenConfig::default() }, n)
+    }
+
+    #[test]
+    fn ticks_partition_the_trace_in_order() {
+        for mode in [ArrivalMode::Poisson, ArrivalMode::Bursty] {
+            let reqs = trace(mode, 200);
+            let slo = SloPolicy { max_wait_s: 0.02, max_tokens: 128 };
+            let ticks = schedule(&reqs, &slo);
+            let flat: Vec<usize> = ticks.iter().flat_map(|t| t.requests.clone()).collect();
+            assert_eq!(flat, (0..reqs.len()).collect::<Vec<_>>());
+            for t in &ticks {
+                assert!(!t.requests.is_empty());
+                assert_eq!(t.tokens, t.requests.iter().map(|&i| reqs[i].len()).sum::<usize>());
+            }
+        }
+    }
+
+    #[test]
+    fn no_request_waits_past_the_slo() {
+        let reqs = trace(ArrivalMode::Bursty, 300);
+        let slo = SloPolicy { max_wait_s: 0.015, max_tokens: 256 };
+        for t in schedule(&reqs, &slo) {
+            for &i in &t.requests {
+                let wait = t.flush_s - reqs[i].arrival_s;
+                assert!(
+                    (0.0..=slo.max_wait_s + 1e-12).contains(&wait),
+                    "req {i} waited {wait}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn token_threshold_cuts_early() {
+        let reqs = trace(ArrivalMode::Poisson, 300);
+        let slo = SloPolicy { max_wait_s: 10.0, max_tokens: 96 };
+        let ticks = schedule(&reqs, &slo);
+        // with a huge max-wait every tick but the trailing one is cut by
+        // the token threshold, overshooting by less than one request
+        let max_len = reqs.iter().map(Request::len).max().unwrap();
+        for t in &ticks[..ticks.len() - 1] {
+            assert!(t.tokens >= slo.max_tokens);
+            assert!(t.tokens < slo.max_tokens + max_len);
+        }
+    }
+
+    #[test]
+    fn effective_capacity_matches_trainer_default_at_cf1() {
+        // trainer default: (tokens * top_k).div_ceil(experts)
+        for (t, k, e) in [(512usize, 2usize, 8usize), (96, 3, 4), (7, 1, 8)] {
+            assert_eq!(
+                effective_capacity(DropPolicy::Capacity, 1.0, t, k, e),
+                (t * k).div_ceil(e)
+            );
+        }
+        assert_eq!(effective_capacity(DropPolicy::None, 0.25, 40, 2, 8), 40);
+        // cf scales the budget down
+        assert!(
+            effective_capacity(DropPolicy::Capacity, 0.5, 512, 2, 8)
+                < effective_capacity(DropPolicy::Capacity, 1.0, 512, 2, 8)
+        );
+    }
+}

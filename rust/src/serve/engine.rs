@@ -1,0 +1,491 @@
+//! EP-sharded serving loop over the MoE stage APIs.
+//!
+//! Each flush tick from the micro-batcher becomes one forward through
+//! route → per-rank [`dispatch`] → [`expert_ffn`] → [`combine`], sharded
+//! over `ranks` contiguous expert ranges exactly like
+//! [`crate::cluster::ep_exec`] (which can also drive the tick when the
+//! PR 7 overlap pipeline is requested). The engine owns the per-slot
+//! dispatch plans, so capacity drops are accounted **exactly**: a
+//! (token, slot) pair is dropped iff its plan entry never materializes,
+//! and `Σ_rank real_rows + dropped_slots = tokens · top_k` per tick.
+//!
+//! **Bit-identity contract** (the serving extension of the repo-wide
+//! story): a token's served output is bitwise identical to one-shot
+//! [`moe_forward`] over any token set containing it, provided no slot of
+//! the token was capacity-dropped. This holds because every per-token
+//! path is batch-independent — routing (row-wise softmax + top-k), the
+//! Fp8Flow entry quantization (row-wise tiles), the FP8 GEMMs (fixed
+//! per-element k-tile accumulation per output row), and the gated
+//! combine (per-token) — and per-rank combine partials sum to the
+//! single-rank combine bit-for-bit (`moe::layer` pins that).
+//! `tests/prop_serve.rs` pins the end-to-end property; the `serve` CLI
+//! gates on it every run.
+
+use std::time::Instant;
+
+use crate::cluster::ep_exec::{ep_forward, EpConfig};
+use crate::exec::{self, Partition};
+use crate::fp8::tile::quantize_rowwise;
+use crate::fp8::{Fp8Format, ScaleMode};
+use crate::moe::layer::{combine, dispatch, expert_ffn, DispatchSource, PreparedWeights, Recipe};
+use crate::moe::permute::permute_pad_plan;
+use crate::moe::router::route;
+use crate::util::mat::Mat;
+use crate::util::rng::Rng;
+
+use super::batch::{effective_capacity, schedule, DropPolicy, SloPolicy, Tick};
+use super::gen::Request;
+
+/// Fixed seeded token-id → activation-row embedding. One table per
+/// engine, deterministic in the seed, so a token id always routes the
+/// same way — skewed id frequencies in the corpus become skewed expert
+/// load.
+pub struct TokenEmbed {
+    table: Mat, // [vocab, d_model]
+}
+
+impl TokenEmbed {
+    /// Build the `[vocab, d_model]` table from `seed`.
+    pub fn new(vocab: usize, d_model: usize, seed: u64) -> TokenEmbed {
+        let mut rng = Rng::seed_from(seed ^ 0xE3BED);
+        TokenEmbed { table: Mat::randn(vocab, d_model, 0.5, &mut rng) }
+    }
+
+    /// Gather `ids` into an activation matrix `[ids.len(), d_model]`.
+    pub fn embed(&self, ids: &[i32]) -> Mat {
+        let d = self.table.cols;
+        let mut x = Mat::zeros(ids.len(), d);
+        for (i, &id) in ids.iter().enumerate() {
+            let id = id as usize % self.table.rows;
+            x.data[i * d..(i + 1) * d].copy_from_slice(self.table.row(id));
+        }
+        x
+    }
+}
+
+/// Serving-loop configuration (the knobs of one engine run).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Number of simulated EP ranks sharding the expert range.
+    pub ranks: usize,
+    /// Router top-k.
+    pub top_k: usize,
+    /// Capacity factor under [`DropPolicy::Capacity`].
+    pub capacity_factor: f64,
+    /// Token-drop policy.
+    pub drop_policy: DropPolicy,
+    /// Worker budget per stage call (0 = the global [`exec::threads`]).
+    pub threads: usize,
+    /// Per-rank pipeline chunks (> 1 enables the PR 7 overlap pipeline).
+    pub chunks: usize,
+    /// Run the tick through the overlapped EP pipeline
+    /// ([`EpConfig::with_pipeline`]) instead of the serialized stage loop.
+    pub overlap: bool,
+}
+
+impl ServeConfig {
+    /// True when the tick forward should run the PR 7 overlap pipeline.
+    pub fn pipelined(&self) -> bool {
+        self.overlap || self.chunks > 1
+    }
+}
+
+/// Result of one flush-tick forward.
+pub struct TickResult {
+    /// Batch output `[tokens, d]` (rows of dropped slots miss that
+    /// expert's contribution).
+    pub y: Mat,
+    /// Per-row flag: true iff the token survived in **every** top-k slot.
+    pub fully_served: Vec<bool>,
+    /// Dropped (token, slot) pairs in this tick.
+    pub dropped_slots: usize,
+    /// Real (non-pad) dispatched rows per rank, summed over slots.
+    pub rank_rows: Vec<usize>,
+    /// Per-rank expert-FFN seconds, summed over slots.
+    pub rank_expert_s: Vec<f64>,
+    /// Wall-clock of the whole tick forward (route + quant + stages).
+    pub service_s: f64,
+    /// Effective per-expert per-slot capacity used.
+    pub capacity: usize,
+}
+
+/// The EP-sharded serving engine: prepared weights + embedding + config.
+pub struct ServeEngine {
+    /// Per-recipe prepared weights the expert stages run on.
+    pub weights: PreparedWeights,
+    /// The fixed token embedding.
+    pub embed: TokenEmbed,
+    /// Engine knobs.
+    pub cfg: ServeConfig,
+}
+
+impl ServeEngine {
+    /// Build an engine. Panics unless `1 ≤ ranks ≤ E` and
+    /// `1 ≤ top_k ≤ E` (the stage-API invariants).
+    pub fn new(weights: PreparedWeights, embed: TokenEmbed, cfg: ServeConfig) -> ServeEngine {
+        let e = weights.raw.n_experts();
+        assert!(cfg.ranks >= 1 && e >= cfg.ranks, "need 1 <= ranks <= E");
+        assert!(cfg.top_k >= 1 && cfg.top_k <= e, "need 1 <= top_k <= E");
+        assert!(cfg.chunks >= 1, "need at least one pipeline chunk");
+        ServeEngine { weights, embed, cfg }
+    }
+
+    fn threads(&self) -> usize {
+        if self.cfg.threads == 0 {
+            exec::threads()
+        } else {
+            self.cfg.threads
+        }
+    }
+
+    /// Per-expert per-slot capacity for a batch of `t` tokens.
+    pub fn capacity_for(&self, t: usize) -> usize {
+        effective_capacity(
+            self.cfg.drop_policy,
+            self.cfg.capacity_factor,
+            t,
+            self.cfg.top_k,
+            self.weights.raw.n_experts(),
+        )
+    }
+
+    /// Run one micro-batch through the EP-sharded forward. `x` may have
+    /// zero rows (an empty flush tick): the result is empty, no panic —
+    /// the zero-row edge the empty-batch property tests pin.
+    pub fn forward_batch(&self, x: &Mat) -> TickResult {
+        let t0 = Instant::now();
+        let t = x.rows;
+        let e = self.weights.raw.n_experts();
+        let (ranks, top_k) = (self.cfg.ranks, self.cfg.top_k);
+        let threads = self.threads();
+        let cap = self.capacity_for(t);
+        let shard = Partition::even(e, ranks);
+
+        let routing = route(x, &self.weights.raw.router, top_k);
+        let plans: Vec<Vec<i64>> = (0..top_k)
+            .map(|kk| {
+                let expert_of: Vec<usize> = routing.experts.iter().map(|ex| ex[kk]).collect();
+                permute_pad_plan(&expert_of, e, cap)
+            })
+            .collect();
+
+        // exact drop accounting straight off the plans
+        let mut fully_served = vec![true; t];
+        let mut dropped_slots = 0usize;
+        let mut rank_rows = vec![0usize; ranks];
+        for plan in &plans {
+            let mut present = vec![false; t];
+            for (r, er) in shard.ranges().enumerate() {
+                for &p in &plan[er.start * cap..er.end * cap] {
+                    if p >= 0 {
+                        present[p as usize] = true;
+                        rank_rows[r] += 1;
+                    }
+                }
+            }
+            for (tt, &ok) in present.iter().enumerate() {
+                if !ok {
+                    fully_served[tt] = false;
+                    dropped_slots += 1;
+                }
+            }
+        }
+
+        let (y, rank_expert_s) = if self.cfg.pipelined() && t >= 1 {
+            // the PR 7 double-buffered pipeline; bit-identical to the
+            // serialized stage loop below (prop_ep_shard pins it)
+            let cfg = EpConfig::serial(ranks, top_k, cap, self.cfg.threads)
+                .with_pipeline(self.cfg.chunks, self.cfg.overlap);
+            let out = ep_forward(x, &self.weights, &cfg);
+            (out.y, out.rank_expert_s)
+        } else {
+            self.staged_forward(x, &routing.gates, &plans, cap, threads)
+        };
+
+        TickResult {
+            y,
+            fully_served,
+            dropped_slots,
+            rank_rows,
+            rank_expert_s,
+            service_s: t0.elapsed().as_secs_f64(),
+            capacity: cap,
+        }
+    }
+
+    /// The serialized per-rank stage loop: for each top-k slot, dispatch /
+    /// expert-FFN / combine each rank's expert range and sum the per-rank
+    /// combine partials (bitwise equal to the full-range combine).
+    fn staged_forward(
+        &self,
+        x: &Mat,
+        gates: &[Vec<f32>],
+        plans: &[Vec<i64>],
+        cap: usize,
+        threads: usize,
+    ) -> (Mat, Vec<f64>) {
+        let t = x.rows;
+        let e = self.weights.raw.n_experts();
+        let ranks = self.cfg.ranks;
+        let shard = Partition::even(e, ranks);
+        let x_q = (self.weights.recipe == Recipe::Fp8Flow)
+            .then(|| quantize_rowwise(x, Fp8Format::E4M3, ScaleMode::Po2));
+        let mut y = Mat::zeros(t, x.cols);
+        let mut rank_expert_s = vec![0.0f64; ranks];
+        for (kk, plan) in plans.iter().enumerate() {
+            let mut slot = Mat::zeros(t, x.cols);
+            for (r, er) in shard.ranges().enumerate() {
+                let src = match &x_q {
+                    Some(xq) => DispatchSource::Fp8(xq),
+                    None => DispatchSource::Dense(x),
+                };
+                let batch = dispatch(src, plan, er.clone(), cap, threads);
+                let te = Instant::now();
+                let yk = expert_ffn(&batch, &self.weights, threads);
+                rank_expert_s[r] += te.elapsed().as_secs_f64();
+                let part = combine(&yk, plan, er, cap, t, threads);
+                for (acc, v) in slot.data.iter_mut().zip(&part.data) {
+                    *acc += v;
+                }
+            }
+            for tt in 0..t {
+                let g = gates[tt][kk];
+                for j in 0..x.cols {
+                    y.data[tt * x.cols + j] += g * slot.data[tt * x.cols + j];
+                }
+            }
+        }
+        (y, rank_expert_s)
+    }
+}
+
+/// Aggregate result of serving one request trace end to end.
+pub struct ServeSummary {
+    /// Requests served.
+    pub requests: usize,
+    /// Flush ticks executed.
+    pub ticks: usize,
+    /// Total prompt tokens through the engine.
+    pub total_tokens: usize,
+    /// Tokens that survived every top-k slot (bit-identical to one-shot).
+    pub served_tokens: usize,
+    /// Tokens that lost at least one slot to a capacity drop.
+    pub degraded_tokens: usize,
+    /// Dropped (token, slot) pairs, summed over ticks.
+    pub dropped_slots: usize,
+    /// Real dispatched rows per rank, summed over ticks and slots.
+    pub rank_rows: Vec<usize>,
+    /// Per-rank expert seconds, summed over ticks and slots.
+    pub rank_expert_s: Vec<f64>,
+    /// Throughput: `total_tokens / sim_elapsed_s`.
+    pub tokens_per_s: f64,
+    /// Median request latency (arrival → batch completion), seconds.
+    pub p50_s: f64,
+    /// 99th-percentile request latency, seconds.
+    pub p99_s: f64,
+    /// Simulated makespan: last batch completion on the virtual clock.
+    pub sim_elapsed_s: f64,
+    /// Measured compute seconds (sum of tick service times).
+    pub busy_s: f64,
+    /// Smallest / largest effective capacity across ticks.
+    pub capacity_range: (usize, usize),
+    /// Mean tokens per tick.
+    pub mean_batch_tokens: f64,
+    /// Engine outputs, one row per token in request order.
+    pub y: Mat,
+    /// Per-token fully-served flags, aligned with `y` rows.
+    pub fully_served: Vec<bool>,
+}
+
+impl ServeSummary {
+    /// Fraction of (token, slot) dispatch entries dropped.
+    pub fn drop_frac(&self, top_k: usize) -> f64 {
+        if self.total_tokens == 0 {
+            return 0.0;
+        }
+        self.dropped_slots as f64 / (self.total_tokens * top_k) as f64
+    }
+}
+
+/// Drive the full serving loop: schedule the trace under `slo`, run each
+/// tick through `engine`, and merge latency/throughput/drop accounting.
+///
+/// Time model: batch **composition** is a pure function of the trace and
+/// the SLO ([`schedule`]); the completion clock then replays the ticks
+/// against measured service time — a tick starts at
+/// `max(flush_s, engine_free)` and completes `service_s` later, so
+/// queueing delay shows up in p50/p99 exactly when the engine falls
+/// behind the offered load.
+pub fn serve_trace(engine: &ServeEngine, requests: &[Request], slo: &SloPolicy) -> ServeSummary {
+    let ticks: Vec<Tick> = schedule(requests, slo);
+    let d = engine.embed.table.cols;
+    let total_tokens: usize = requests.iter().map(Request::len).sum();
+    let offsets: Vec<usize> = requests
+        .iter()
+        .scan(0usize, |acc, r| {
+            let o = *acc;
+            *acc += r.len();
+            Some(o)
+        })
+        .collect();
+
+    let mut y = Mat::zeros(total_tokens, d);
+    let mut fully_served = vec![false; total_tokens];
+    let mut rank_rows = vec![0usize; engine.cfg.ranks];
+    let mut rank_expert_s = vec![0.0f64; engine.cfg.ranks];
+    let mut dropped_slots = 0usize;
+    let mut latencies = Vec::with_capacity(requests.len());
+    let mut engine_free = 0.0f64;
+    let mut busy_s = 0.0f64;
+    let (mut cap_min, mut cap_max) = (usize::MAX, 0usize);
+
+    for tick in &ticks {
+        let ids: Vec<i32> =
+            tick.requests.iter().flat_map(|&i| requests[i].tokens.iter().copied()).collect();
+        let x = engine.embed.embed(&ids);
+        let res = engine.forward_batch(&x);
+
+        let start = engine_free.max(tick.flush_s);
+        let done = start + res.service_s;
+        engine_free = done;
+        busy_s += res.service_s;
+        for &i in &tick.requests {
+            latencies.push(done - requests[i].arrival_s);
+        }
+
+        // scatter tick rows back to the global token stream
+        let mut row = 0usize;
+        for &i in &tick.requests {
+            let o = offsets[i];
+            for k in 0..requests[i].len() {
+                y.data[(o + k) * d..(o + k + 1) * d]
+                    .copy_from_slice(&res.y.data[(row + k) * d..(row + k + 1) * d]);
+                fully_served[o + k] = res.fully_served[row + k];
+            }
+            row += requests[i].len();
+        }
+
+        dropped_slots += res.dropped_slots;
+        for (acc, v) in rank_rows.iter_mut().zip(&res.rank_rows) {
+            *acc += v;
+        }
+        for (acc, v) in rank_expert_s.iter_mut().zip(&res.rank_expert_s) {
+            *acc += v;
+        }
+        cap_min = cap_min.min(res.capacity);
+        cap_max = cap_max.max(res.capacity);
+    }
+
+    latencies.sort_by(f64::total_cmp);
+    let pick = |q: f64| {
+        if latencies.is_empty() {
+            0.0
+        } else {
+            latencies[((latencies.len() - 1) as f64 * q) as usize]
+        }
+    };
+    let served_tokens = fully_served.iter().filter(|&&s| s).count();
+    ServeSummary {
+        requests: requests.len(),
+        ticks: ticks.len(),
+        total_tokens,
+        served_tokens,
+        degraded_tokens: total_tokens - served_tokens,
+        dropped_slots,
+        rank_rows,
+        rank_expert_s,
+        tokens_per_s: if engine_free > 0.0 { total_tokens as f64 / engine_free } else { 0.0 },
+        p50_s: pick(0.5),
+        p99_s: pick(0.99),
+        sim_elapsed_s: engine_free,
+        busy_s,
+        capacity_range: if cap_min == usize::MAX { (0, 0) } else { (cap_min, cap_max) },
+        mean_batch_tokens: if ticks.is_empty() {
+            0.0
+        } else {
+            total_tokens as f64 / ticks.len() as f64
+        },
+        y,
+        fully_served,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::layer::{moe_forward, MoeWeights};
+    use crate::serve::gen::{generate_requests, ArrivalMode, GenConfig};
+
+    fn engine(recipe: Recipe, ranks: usize, cf: f64, policy: DropPolicy) -> ServeEngine {
+        let mut rng = Rng::seed_from(11);
+        let w = MoeWeights::random(32, 24, 4, &mut rng);
+        ServeEngine::new(
+            PreparedWeights::new(w, recipe),
+            TokenEmbed::new(64, 32, 11),
+            ServeConfig {
+                ranks,
+                top_k: 2,
+                capacity_factor: cf,
+                drop_policy: policy,
+                threads: 1,
+                chunks: 1,
+                overlap: false,
+            },
+        )
+    }
+
+    #[test]
+    fn empty_tick_is_defined() {
+        let eng = engine(Recipe::Fp8Flow, 2, 1.0, DropPolicy::Capacity);
+        let res = eng.forward_batch(&Mat::zeros(0, 32));
+        assert_eq!(res.y.rows, 0);
+        assert_eq!(res.dropped_slots, 0);
+        assert!(res.fully_served.is_empty());
+        assert_eq!(res.rank_rows, vec![0, 0]);
+    }
+
+    #[test]
+    fn drop_accounting_reconciles_per_tick() {
+        // cf = 0.25 → cap = ceil(t/8) < the pigeonhole max-load bound t/4,
+        // so drops are guaranteed, not just likely under skew
+        let eng = engine(Recipe::Fp8Flow, 2, 0.25, DropPolicy::Capacity);
+        let reqs = generate_requests(&GenConfig::default(), 48);
+        let ids: Vec<i32> = reqs.iter().flat_map(|r| r.tokens.iter().copied()).collect();
+        let x = eng.embed.embed(&ids);
+        let res = eng.forward_batch(&x);
+        let real: usize = res.rank_rows.iter().sum();
+        assert_eq!(real + res.dropped_slots, x.rows * eng.cfg.top_k);
+        assert!(res.dropped_slots > 0, "cf=0.25 must drop by pigeonhole");
+    }
+
+    #[test]
+    fn nodrop_policy_serves_everything_bit_identically() {
+        let eng = engine(Recipe::Fp8Flow, 2, 0.25, DropPolicy::None);
+        let reqs = generate_requests(&GenConfig::default(), 32);
+        let slo = SloPolicy { max_wait_s: 0.01, max_tokens: 64 };
+        let s = serve_trace(&eng, &reqs, &slo);
+        assert_eq!(s.dropped_slots, 0);
+        assert_eq!(s.served_tokens, s.total_tokens);
+        // one-shot over the same token stream, capacity = t (no drops)
+        let ids: Vec<i32> = reqs.iter().flat_map(|r| r.tokens.iter().copied()).collect();
+        let x = eng.embed.embed(&ids);
+        let one = moe_forward(&x, &eng.weights, eng.cfg.top_k, x.rows);
+        for (a, b) in s.y.data.iter().zip(&one.y.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn latencies_and_throughput_are_populated() {
+        for mode in [ArrivalMode::Poisson, ArrivalMode::Bursty] {
+            let eng = engine(Recipe::Bf16, 1, 1.0, DropPolicy::Capacity);
+            let reqs = generate_requests(&GenConfig { mode, ..GenConfig::default() }, 40);
+            let slo = SloPolicy { max_wait_s: 0.005, max_tokens: 96 };
+            let s = serve_trace(&eng, &reqs, &slo);
+            assert_eq!(s.requests, 40);
+            assert!(s.ticks >= 1);
+            assert!(s.tokens_per_s > 0.0);
+            assert!(s.p50_s > 0.0 && s.p99_s >= s.p50_s);
+        }
+    }
+}

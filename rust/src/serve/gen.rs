@@ -1,0 +1,233 @@
+//! Seeded request generator for the serving workload: Poisson or bursty
+//! arrival times on a **virtual timeline**, Zipf-skewed prompt lengths,
+//! prompt content drawn from the existing [`Corpus`] Markov stream.
+//!
+//! Everything is a pure function of the seed — no wall clock, no thread
+//! interaction — so a request trace is reproducible across machines and
+//! worker budgets (`tests/prop_serve.rs` pins this). The Markov content
+//! stream is deliberately non-uniform: with a fixed per-token-id
+//! embedding the router's choice is a function of the id, so skewed id
+//! frequencies become skewed expert load — the serving condition where
+//! capacity-factor and token-drop policies start to matter.
+
+use crate::train::data::Corpus;
+use crate::util::rng::Rng;
+
+/// Arrival-process shape of the generated trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalMode {
+    /// Homogeneous Poisson process: exponential inter-arrivals at `rate`.
+    Poisson,
+    /// On/off modulated Poisson: the timeline alternates between burst
+    /// windows (arrivals at `burst × rate`) and quiet windows (arrivals
+    /// at `rate / burst`), each window `burst_period_s` long.
+    Bursty,
+}
+
+impl ArrivalMode {
+    /// Parse a mode name as the CLI spells it.
+    pub fn parse(s: &str) -> Option<ArrivalMode> {
+        match s {
+            "poisson" => Some(ArrivalMode::Poisson),
+            "bursty" => Some(ArrivalMode::Bursty),
+            _ => None,
+        }
+    }
+
+    /// The CLI spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            ArrivalMode::Poisson => "poisson",
+            ArrivalMode::Bursty => "bursty",
+        }
+    }
+}
+
+/// Generator configuration. All fields are knobs of the seeded trace;
+/// two configs that compare equal generate bitwise-identical traces.
+#[derive(Clone, Debug)]
+pub struct GenConfig {
+    /// Master seed (drives arrivals, lengths, and the corpus stream).
+    pub seed: u64,
+    /// Arrival-process shape.
+    pub mode: ArrivalMode,
+    /// Mean arrival rate in requests per virtual second.
+    pub rate: f64,
+    /// Burst intensity for [`ArrivalMode::Bursty`] (≥ 1; 1 = Poisson).
+    pub burst: f64,
+    /// Window length of each burst/quiet phase (virtual seconds).
+    pub burst_period_s: f64,
+    /// Zipf exponent for the prompt-length distribution (0 = uniform).
+    pub zipf_s: f64,
+    /// Shortest prompt length (tokens).
+    pub min_len: usize,
+    /// Longest prompt length (tokens).
+    pub max_len: usize,
+    /// Corpus vocabulary size.
+    pub vocab: usize,
+    /// Corpus noise percentage (see [`Corpus::new`]).
+    pub noise_pct: usize,
+}
+
+impl Default for GenConfig {
+    fn default() -> GenConfig {
+        GenConfig {
+            seed: 42,
+            mode: ArrivalMode::Poisson,
+            rate: 200.0,
+            burst: 4.0,
+            burst_period_s: 0.05,
+            zipf_s: 1.1,
+            min_len: 4,
+            max_len: 64,
+            vocab: 64,
+            noise_pct: 10,
+        }
+    }
+}
+
+/// One generated request: an arrival instant on the virtual timeline plus
+/// the prompt token ids.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    /// Sequential request id (also the arrival order).
+    pub id: usize,
+    /// Arrival instant (virtual seconds from trace start).
+    pub arrival_s: f64,
+    /// Prompt token ids (length is the Zipf-skewed prompt length).
+    pub tokens: Vec<i32>,
+}
+
+impl Request {
+    /// Prompt length in tokens.
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// True when the prompt is empty (never produced by the generator).
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+/// Generate a seeded trace of `n` requests, sorted by arrival time (the
+/// arrival process emits them in order by construction).
+pub fn generate_requests(cfg: &GenConfig, n: usize) -> Vec<Request> {
+    assert!(cfg.rate > 0.0, "arrival rate must be positive");
+    assert!(cfg.burst >= 1.0, "burst intensity must be >= 1");
+    assert!(
+        1 <= cfg.min_len && cfg.min_len <= cfg.max_len,
+        "need 1 <= min_len <= max_len"
+    );
+    let mut rng = Rng::seed_from(cfg.seed ^ 0x5E21E);
+    let mut corpus = Corpus::new(cfg.vocab, cfg.seed, cfg.noise_pct);
+    let zipf = ZipfLengths::new(cfg.min_len, cfg.max_len, cfg.zipf_s);
+
+    let mut now = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    for id in 0..n {
+        now += sample_interarrival(cfg, now, &mut rng);
+        let len = zipf.sample(&mut rng);
+        out.push(Request { id, arrival_s: now, tokens: corpus.next_batch(1, len) });
+    }
+    out
+}
+
+/// Draw the next inter-arrival gap at virtual time `now`.
+fn sample_interarrival(cfg: &GenConfig, now: f64, rng: &mut Rng) -> f64 {
+    let rate = match cfg.mode {
+        ArrivalMode::Poisson => cfg.rate,
+        ArrivalMode::Bursty => {
+            let phase = (now / cfg.burst_period_s) as u64;
+            if phase % 2 == 0 {
+                cfg.rate * cfg.burst
+            } else {
+                cfg.rate / cfg.burst
+            }
+        }
+    };
+    // exponential via inverse CDF; uniform() < 1 so the log argument > 0
+    -(1.0 - rng.uniform() as f64).ln() / rate
+}
+
+/// Zipf-skewed length sampler over `[min_len, max_len]`: rank 1 (the
+/// shortest prompt) is most probable, `P(rank r) ∝ r^{-s}`. `s = 0`
+/// degenerates to uniform. Sampling is inverse-CDF over the precomputed
+/// cumulative weights, one `uniform()` draw per request.
+struct ZipfLengths {
+    min_len: usize,
+    cdf: Vec<f64>,
+}
+
+impl ZipfLengths {
+    fn new(min_len: usize, max_len: usize, s: f64) -> ZipfLengths {
+        let n = max_len - min_len + 1;
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for r in 1..=n {
+            acc += (r as f64).powf(-s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        ZipfLengths { min_len, cdf }
+    }
+
+    fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.uniform() as f64;
+        let idx = self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1);
+        self.min_len + idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_seeded_and_sorted() {
+        let cfg = GenConfig::default();
+        let a = generate_requests(&cfg, 64);
+        let b = generate_requests(&cfg, 64);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s));
+        assert!(a.iter().all(|r| (cfg.min_len..=cfg.max_len).contains(&r.len())));
+        assert!(a.iter().all(|r| r.tokens.iter().all(|&t| (t as usize) < cfg.vocab)));
+    }
+
+    #[test]
+    fn zipf_skews_short() {
+        // s > 0 must make the shortest quartile more common than the longest
+        let cfg = GenConfig { zipf_s: 1.5, min_len: 4, max_len: 64, ..GenConfig::default() };
+        let reqs = generate_requests(&cfg, 512);
+        let q = (cfg.max_len - cfg.min_len) / 4;
+        let short = reqs.iter().filter(|r| r.len() <= cfg.min_len + q).count();
+        let long = reqs.iter().filter(|r| r.len() >= cfg.max_len - q).count();
+        assert!(short > 4 * long.max(1), "short {short} vs long {long}");
+    }
+
+    #[test]
+    fn bursty_clusters_more_than_poisson() {
+        // coefficient of variation of inter-arrivals: bursty > poisson (≈1)
+        let cv = |mode: ArrivalMode| {
+            let cfg = GenConfig { mode, burst: 8.0, ..GenConfig::default() };
+            let reqs = generate_requests(&cfg, 2048);
+            let gaps: Vec<f64> =
+                reqs.windows(2).map(|w| w[1].arrival_s - w[0].arrival_s).collect();
+            let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let var =
+                gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+            var.sqrt() / mean
+        };
+        assert!(cv(ArrivalMode::Bursty) > cv(ArrivalMode::Poisson) * 1.2);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = generate_requests(&GenConfig::default(), 32);
+        let b = generate_requests(&GenConfig { seed: 43, ..GenConfig::default() }, 32);
+        assert_ne!(a, b);
+    }
+}

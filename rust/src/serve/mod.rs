@@ -1,0 +1,28 @@
+//! Heavy-traffic serving path (the ROADMAP's "millions of users"
+//! workload): seeded request generation → SLO micro-batching → the
+//! EP-sharded casting-free forward, with capacity-factor and token-drop
+//! policies as first-class knobs.
+//!
+//! Three layers, each pure/deterministic where it can be:
+//!
+//! * [`gen`] — seeded Poisson/bursty arrivals, Zipf-skewed prompt
+//!   lengths, prompt content from the [`crate::train::Corpus`] Markov
+//!   stream (skewed token frequencies ⇒ skewed expert load);
+//! * [`batch`] — the continuous micro-batcher: a pure function of the
+//!   trace and the SLO (max-wait + max-tokens), so batch composition is
+//!   reproducible across machines and worker budgets;
+//! * [`engine`] — the EP-sharded serving loop over the
+//!   [`crate::moe::layer`] stage APIs (optionally the overlapped EP
+//!   pipeline), with exact per-(token, slot) drop accounting and the
+//!   bit-identity contract vs one-shot `moe_forward`.
+//!
+//! Driven by the `serve` CLI subcommand; protocol and report schema in
+//! `rust/EXPERIMENTS.md` §Serving.
+
+pub mod batch;
+pub mod engine;
+pub mod gen;
+
+pub use batch::{effective_capacity, schedule, DropPolicy, SloPolicy, Tick};
+pub use engine::{serve_trace, ServeConfig, ServeEngine, ServeSummary, TickResult, TokenEmbed};
+pub use gen::{generate_requests, ArrivalMode, GenConfig, Request};

@@ -18,8 +18,13 @@
 //! combine reduce reads exactly one partial per served token.
 
 use fp8_flow_moe::cluster::ep_exec::{ep_backward, ep_forward, EpConfig};
+use fp8_flow_moe::fp8::tile::quantize_rowwise;
+use fp8_flow_moe::fp8::{Fp8Format, ScaleMode};
 use fp8_flow_moe::moe::backward::{forward_stash, moe_backward, MoeGrads};
-use fp8_flow_moe::moe::layer::{moe_forward, MoeWeights, PreparedWeights, Recipe};
+use fp8_flow_moe::moe::layer::{
+    combine, dispatch, expert_ffn, moe_forward, DispatchSource, MoeWeights, PreparedWeights,
+    Recipe,
+};
 use fp8_flow_moe::util::mat::Mat;
 use fp8_flow_moe::util::prop::{assert_mat_bits_eq, props};
 use fp8_flow_moe::util::rng::Rng;
@@ -205,6 +210,39 @@ fn starved_expert_really_receives_zero_tokens() {
     let cfg = EpConfig::serial(4, top_k, cap, 0).with_pipeline(2, true);
     let out = ep_forward(&x, &pw, &cfg);
     assert_mat_bits_eq(&out.y, &reference.y, "starved shard overlapped");
+}
+
+#[test]
+fn all_dropped_plan_is_defined_across_thread_budgets() {
+    // a capacity-starved serving tick can drop EVERY (token, slot) pair:
+    // the plan is all padding, dispatch carries zero real rows, and the
+    // combine must come back as exact zeros — no panic, no stale data —
+    // for every recipe, both wire types, and worker budgets {1, 2, 8}
+    let (t, d, h, e, cap) = (12usize, 32usize, 24usize, 4usize, 3usize);
+    let mut rng = Rng::seed_from(0xD0);
+    let x = Mat::randn(t, d, 0.5, &mut rng);
+    let w = MoeWeights::random(d, h, e, &mut rng);
+    let plan = vec![-1i64; e * cap];
+    for recipe in [Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow] {
+        let pw = PreparedWeights::new(w.clone(), recipe);
+        let xq = (recipe == Recipe::Fp8Flow)
+            .then(|| quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2));
+        for threads in [1usize, 2, 8] {
+            let src = match &xq {
+                Some(q) => DispatchSource::Fp8(q),
+                None => DispatchSource::Dense(&x),
+            };
+            let batch = dispatch(src, &plan, 0..e, cap, threads);
+            let yk = expert_ffn(&batch, &pw, threads);
+            assert_eq!(yk.rows, e * cap, "{recipe:?} t={threads}: padded slab shape");
+            let back = combine(&yk, &plan, 0..e, cap, t, threads);
+            assert_eq!((back.rows, back.cols), (t, d), "{recipe:?} t={threads}");
+            assert!(
+                back.data.iter().all(|&v| v.to_bits() == 0),
+                "{recipe:?} t={threads}: all-dropped combine must be exact +0.0"
+            );
+        }
+    }
 }
 
 #[test]

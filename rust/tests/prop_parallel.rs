@@ -214,6 +214,30 @@ fn prop_moe_backward_parallel_bit_exact() {
 }
 
 #[test]
+fn zero_row_edges_are_defined_across_thread_budgets() {
+    // the serving loop can flush a micro-batch with zero tokens, so the
+    // M = 0 edge of the quantizer and the GEMM must return empty results
+    // — never panic, never a bogus shape — for every worker budget
+    let (k, n) = (96usize, 24usize);
+    let mut rng = Rng::seed_from(0xE0);
+    let w = Mat::randn(n, k, 1.0, &mut rng);
+    let qb = quantize_rowwise(&w, Fp8Format::E4M3, ScaleMode::Po2);
+    let x0 = Mat::zeros(0, k);
+    for t in [1usize, 2, 8] {
+        for mode in [ScaleMode::Po2, ScaleMode::Float] {
+            let qa = quantize_rowwise_with_threads(&x0, Fp8Format::E4M3, mode, t);
+            assert_eq!((qa.rows, qa.cols), (0, k), "quantize {mode:?} t={t}");
+            assert!(qa.data.is_empty(), "quantize payload {mode:?} t={t}");
+            assert!(qa.scales.is_empty(), "quantize scales {mode:?} t={t}");
+        }
+        let qa = quantize_rowwise(&x0, Fp8Format::E4M3, ScaleMode::Po2);
+        let y = fp8_matmul_with_threads(&qa, &qb, t);
+        assert_eq!((y.rows, y.cols), (0, n), "matmul t={t}");
+        assert!(y.data.is_empty(), "matmul payload t={t}");
+    }
+}
+
+#[test]
 fn prop_permute_family_parallel_bit_exact() {
     props("permute/unpermute parallel == serial", 24, |g| {
         let tokens = g.usize_in(1, 300);

@@ -1,0 +1,169 @@
+//! End-to-end serving properties: the heavy-traffic loop must be (a)
+//! **deterministic** — the seeded trace, the SLO schedule, and the served
+//! outputs are bitwise identical across worker budgets {1, 2, 8} — and
+//! (b) **bit-faithful** — every fully served token equals one-shot
+//! [`moe_forward`] over the whole trace bit for bit, across rank counts
+//! {1, 2, 4}, both arrival modes, and the overlapped pipeline, with
+//! capacity drops accounted **exactly** against the per-rank load report.
+//!
+//! Determinism holds because trace generation and batch composition are
+//! pure functions of (seed, SLO) — no wall clock, no thread interaction —
+//! and every kernel underneath is thread-invariant (`prop_parallel.rs`).
+//! Bit-identity holds because every per-token path is batch-independent
+//! and per-rank combine partials sum to the single-rank combine
+//! (`moe::layer` pins that); serving only ever *removes* (token, slot)
+//! pairs, and removal is exactly what the drop accounting counts.
+
+use fp8_flow_moe::moe::layer::{moe_forward, MoeWeights, PreparedWeights, Recipe};
+use fp8_flow_moe::serve::{
+    generate_requests, schedule, serve_trace, ArrivalMode, DropPolicy, GenConfig, ServeConfig,
+    ServeEngine, SloPolicy, TokenEmbed,
+};
+use fp8_flow_moe::util::rng::Rng;
+
+const THREAD_BUDGETS: [usize; 3] = [1, 2, 8];
+const RANK_COUNTS: [usize; 3] = [1, 2, 4];
+
+const D: usize = 32;
+const FFN: usize = 24;
+const EXPERTS: usize = 4;
+const TOP_K: usize = 2;
+const VOCAB: usize = 64;
+const SEED: u64 = 42;
+
+fn gen_cfg(mode: ArrivalMode) -> GenConfig {
+    GenConfig { mode, vocab: VOCAB, seed: SEED, ..GenConfig::default() }
+}
+
+fn engine(
+    recipe: Recipe,
+    ranks: usize,
+    threads: usize,
+    cf: f64,
+    policy: DropPolicy,
+    chunks: usize,
+    overlap: bool,
+) -> ServeEngine {
+    let mut rng = Rng::seed_from(SEED);
+    let w = MoeWeights::random(D, FFN, EXPERTS, &mut rng);
+    ServeEngine::new(
+        PreparedWeights::new(w, recipe),
+        TokenEmbed::new(VOCAB, D, SEED),
+        ServeConfig {
+            ranks,
+            top_k: TOP_K,
+            capacity_factor: cf,
+            drop_policy: policy,
+            threads,
+            chunks,
+            overlap,
+        },
+    )
+}
+
+#[test]
+fn trace_schedule_and_outputs_deterministic_across_thread_budgets() {
+    let slo = SloPolicy { max_wait_s: 0.005, max_tokens: 96 };
+    for mode in [ArrivalMode::Poisson, ArrivalMode::Bursty] {
+        let cfg = gen_cfg(mode);
+        let reqs = generate_requests(&cfg, 96);
+        // the trace and its schedule are pure functions of (seed, SLO)
+        assert_eq!(reqs, generate_requests(&cfg, 96), "{mode:?}: trace must be seeded");
+        assert_eq!(
+            schedule(&reqs, &slo),
+            schedule(&reqs, &slo),
+            "{mode:?}: schedule must be deterministic"
+        );
+        // and the served outputs are bitwise invariant to the worker budget
+        let eng = engine(Recipe::Fp8Flow, 2, 1, 0.5, DropPolicy::Capacity, 1, false);
+        let reference = serve_trace(&eng, &reqs, &slo);
+        for t in THREAD_BUDGETS {
+            let eng = engine(Recipe::Fp8Flow, 2, t, 0.5, DropPolicy::Capacity, 1, false);
+            let s = serve_trace(&eng, &reqs, &slo);
+            assert_eq!(s.ticks, reference.ticks, "{mode:?} t={t}: tick count");
+            assert_eq!(s.dropped_slots, reference.dropped_slots, "{mode:?} t={t}: drops");
+            assert_eq!(s.fully_served, reference.fully_served, "{mode:?} t={t}: served flags");
+            for (i, (a, b)) in s.y.data.iter().zip(&reference.y.data).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{mode:?} t={t}: y[{i}]");
+            }
+        }
+    }
+}
+
+#[test]
+fn no_token_dropped_under_capacity_and_drops_reconcile_exactly() {
+    let slo = SloPolicy { max_wait_s: 0.01, max_tokens: 64 };
+    let reqs = generate_requests(&gen_cfg(ArrivalMode::Bursty), 64);
+    let total: usize = reqs.iter().map(|r| r.len()).sum();
+    for ranks in RANK_COUNTS {
+        // DropPolicy::None raises capacity to the batch bound: zero drops
+        let s = serve_trace(
+            &engine(Recipe::Fp8Flow, ranks, 1, 0.25, DropPolicy::None, 1, false),
+            &reqs,
+            &slo,
+        );
+        assert_eq!(s.dropped_slots, 0, "R={ranks}: nodrop policy dropped");
+        assert_eq!(s.served_tokens, s.total_tokens, "R={ranks}: nodrop degraded");
+        assert_eq!(
+            s.rank_rows.iter().sum::<usize>(),
+            total * TOP_K,
+            "R={ranks}: nodrop rank load must carry every (token, slot) pair"
+        );
+        // under a starving capacity factor the ledger still balances:
+        // Σ_rank dispatched rows + dropped slots = tokens · top_k
+        let s = serve_trace(
+            &engine(Recipe::Fp8Flow, ranks, 1, 0.25, DropPolicy::Capacity, 1, false),
+            &reqs,
+            &slo,
+        );
+        assert_eq!(
+            s.rank_rows.iter().sum::<usize>() + s.dropped_slots,
+            total * TOP_K,
+            "R={ranks}: drop ledger must reconcile with the per-rank load report"
+        );
+        assert!(s.dropped_slots > 0, "R={ranks}: cf=0.25 must drop by pigeonhole");
+        assert_eq!(s.served_tokens + s.degraded_tokens, s.total_tokens, "R={ranks}");
+    }
+}
+
+#[test]
+fn served_rows_bitwise_equal_one_shot_moe_forward() {
+    // the tentpole contract: micro-batched serving == one-shot forward on
+    // every fully served token, modulo dropped tokens (accounted above) —
+    // across rank counts, arrival modes, recipes, and both schedules
+    // (serialized stage loop, and the PR 7 overlap pipeline)
+    let slo = SloPolicy { max_wait_s: 0.004, max_tokens: 48 };
+    for mode in [ArrivalMode::Poisson, ArrivalMode::Bursty] {
+        let reqs = generate_requests(&gen_cfg(mode), 48);
+        let ids: Vec<i32> = reqs.iter().flat_map(|r| r.tokens.iter().copied()).collect();
+        for recipe in [Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow] {
+            // one-shot reference: capacity = token count → nothing drops
+            let eng0 = engine(recipe, 1, 1, 1.0, DropPolicy::None, 1, false);
+            let x_all = eng0.embed.embed(&ids);
+            let one = moe_forward(&x_all, &eng0.weights, TOP_K, x_all.rows);
+            for ranks in RANK_COUNTS {
+                for (chunks, overlap) in [(1usize, false), (2, true)] {
+                    let s = serve_trace(
+                        &engine(recipe, ranks, 1, 0.5, DropPolicy::Capacity, chunks, overlap),
+                        &reqs,
+                        &slo,
+                    );
+                    let tag = format!("{recipe:?} {mode:?} R={ranks} C={chunks} ov={overlap}");
+                    assert!(s.served_tokens > 0, "{tag}: nothing served");
+                    for (tt, &ok) in s.fully_served.iter().enumerate() {
+                        if !ok {
+                            continue;
+                        }
+                        for j in 0..D {
+                            assert_eq!(
+                                s.y.data[tt * D + j].to_bits(),
+                                one.y.data[tt * D + j].to_bits(),
+                                "{tag}: token {tt} col {j}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

@@ -31,6 +31,10 @@ train_bench_output="$(cargo bench --bench train_step 2>&1)"
 echo "running native train (three recipes, 100 steps; convergence + steps/s)..."
 train_output="$(cargo run --release -p fp8_flow_moe -- train --recipe all --steps 100 --log-every 25 2>&1)"
 
+echo "running serve (2 ranks, capacity-factor sweep, bursty arrivals)..."
+serve_output="$(cargo run --release -p fp8_flow_moe -- \
+    serve --ranks 2 --recipe all --arrivals bursty --sweep 2>&1)"
+
 {
     echo ""
     echo "### §Perf run: ${label} ($(date -u +%Y-%m-%dT%H:%M:%SZ))"
@@ -85,6 +89,16 @@ train_output="$(cargo run --release -p fp8_flow_moe -- train --recipe all --step
     if [ -f rust/runs/train_fp8flow.json ]; then
         echo ""
         echo "Per-recipe run JSON: \`rust/runs/train_<recipe>.json\`"
+    fi
+    echo ""
+    echo "#### Serving (serve --ranks 2 --sweep: tokens/s, p50/p99, drop/imbalance per cf)"
+    echo ""
+    echo '```'
+    echo "${serve_output}" | grep -E '^(== serve|ROW|    (per-rank|bit-identity)|serve:|wrote)'
+    echo '```'
+    if [ -f rust/runs/serve_r2.json ]; then
+        echo ""
+        echo "Serving sweep JSON: \`rust/runs/serve_r2.json\`"
     fi
 } >> "${out}"
 

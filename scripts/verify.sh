@@ -43,4 +43,11 @@ cargo run --release -q -p fp8_flow_moe -- \
     epshard --ranks 2 --recipe fp8flow --tokens 256 --overlap on --chunks 2
 test -f rust/runs/epshard_r2.json
 
+echo "== serve smoke: tiny config, 2 ranks, both arrival modes (bit-identity gated) =="
+cargo run --release -q -p fp8_flow_moe -- \
+    serve --ranks 2 --requests 24 --arrivals poisson --d-model 64 --ffn 64
+cargo run --release -q -p fp8_flow_moe -- \
+    serve --ranks 2 --requests 24 --arrivals bursty --d-model 64 --ffn 64
+test -f rust/runs/serve_r2.json
+
 echo "verify OK"
