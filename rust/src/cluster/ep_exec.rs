@@ -60,6 +60,7 @@ use crate::moe::layer::{
 };
 use crate::moe::permute::permute_pad_plan;
 use crate::moe::router::{route, Routing};
+use crate::obs::{self, Counter};
 use crate::train::native::{NativeTrainer, TrainMetrics};
 use crate::util::json::Json;
 use crate::util::mat::Mat;
@@ -178,6 +179,17 @@ pub struct EpForward {
     /// Per-stage seconds (busy-time semantics under overlap — see
     /// [`StageTimes`]).
     pub stages: StageTimes,
+    /// Dispatch-stage **wall** seconds: the interval-union length of all
+    /// pack/assemble step intervals, summed over slots. Equal to the
+    /// busy time in the serialized schedule (disjoint intervals); under
+    /// overlap strictly ≤ busy — reporting both is what makes the two
+    /// schedules' stage records comparable without footnotes.
+    pub dispatch_wall_s: f64,
+    /// Expert-stage wall seconds (interval union of FFN steps).
+    pub expert_wall_s: f64,
+    /// Combine-stage wall seconds (interval union of combine steps plus
+    /// the serving reduce, which is always driver-serial).
+    pub combine_wall_s: f64,
     /// Wall-clock seconds of the dispatch→FFN→combine pipeline, summed
     /// over slots (excludes route and entry-quant, which run identically
     /// outside the pipeline in both schedules) — the serialized-vs-
@@ -214,6 +226,9 @@ impl EpForward {
             .set("dispatch_ms", self.stages.dispatch_s * 1e3)
             .set("expert_ms", self.stages.expert_s * 1e3)
             .set("combine_ms", self.stages.combine_s * 1e3)
+            .set("dispatch_wall_ms", self.dispatch_wall_s * 1e3)
+            .set("expert_wall_ms", self.expert_wall_s * 1e3)
+            .set("combine_wall_ms", self.combine_wall_s * 1e3)
             .set("total_ms", self.stages.total_s() * 1e3)
             .set("pipeline_wall_ms", self.pipeline_wall_s * 1e3)
             .set(
@@ -352,6 +367,50 @@ enum StepKind {
     Combine,
 }
 
+impl StepKind {
+    /// Wall-accounting group: pack+assemble share the dispatch interval
+    /// union, FFN and combine get their own.
+    fn wall_group(self) -> usize {
+        match self {
+            StepKind::Pack | StepKind::Assemble => 0,
+            StepKind::Ffn => 1,
+            StepKind::Combine => 2,
+        }
+    }
+}
+
+/// Length of the union of (start, end) intervals, in the intervals'
+/// time unit — the per-stage **wall** under overlap, where summed busy
+/// times double-count concurrent lanes.
+fn union_s(iv: &mut [(f64, f64)]) -> f64 {
+    iv.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let (mut total, mut cur) = (0.0f64, None::<(f64, f64)>);
+    for &(s, e) in iv.iter() {
+        cur = match cur {
+            Some((cs, ce)) if s <= ce => Some((cs, ce.max(e))),
+            Some((cs, ce)) => {
+                total += ce - cs;
+                Some((s, e))
+            }
+            None => Some((s, e)),
+        };
+    }
+    if let Some((cs, ce)) = cur {
+        total += ce - cs;
+    }
+    total
+}
+
+/// Per-StepKind wall seconds (interval unions) from an executed step
+/// graph's times.
+fn step_walls(times: &[crate::exec::StepTime], kinds: &[(StepKind, usize)]) -> [f64; 3] {
+    let mut iv: [Vec<(f64, f64)>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+    for st in times {
+        iv[kinds[st.id].0.wall_group()].push((st.start_s, st.end_s));
+    }
+    [union_s(&mut iv[0]), union_s(&mut iv[1]), union_s(&mut iv[2])]
+}
+
 // ---------------------------------------------------------------------
 // forward
 // ---------------------------------------------------------------------
@@ -370,6 +429,8 @@ struct FwdCtx<'a> {
     cap: usize,
     t: usize,
     d: usize,
+    /// Top-k slot index (span `step` coordinate).
+    kk: usize,
 }
 
 /// One slot's pipeline output: per-unit combine partials plus timings.
@@ -378,6 +439,9 @@ struct FwdSlotOut {
     dispatch_s: f64,
     expert_s: f64,
     combine_s: f64,
+    /// Per-stage wall seconds `[dispatch, expert, combine]` (interval
+    /// unions; == the busy times in the serialized schedule).
+    walls: [f64; 3],
     rank_expert_s: Vec<f64>,
     wall_s: f64,
 }
@@ -400,6 +464,12 @@ fn fwd_slot_serial(cx: &FwdCtx, group: &RankGroup) -> FwdSlotOut {
         let td = Instant::now();
         let mailbox = group
             .run_phase(|ctx| {
+                let _sp = obs::enabled().then(|| {
+                    obs::span(
+                        format!("pack r{} c{c}", ctx.rank),
+                        obs::SpanMeta::stage("pack").rank(ctx.rank).step(cx.kk).chunk(c),
+                    )
+                });
                 let tr = part_range(cx.tok_part, ctx.rank);
                 match cx.x_q {
                     Some(xq) => pack_fp8(xq, cx.plan, &tr, &dsts, cx.cap),
@@ -407,10 +477,23 @@ fn fwd_slot_serial(cx: &FwdCtx, group: &RankGroup) -> FwdSlotOut {
                 }
             })
             .results;
+        let sa = obs::enabled().then(|| {
+            obs::span(format!("a2a c{c}"), obs::SpanMeta::stage("a2a").step(cx.kk).chunk(c))
+        });
         let inbox = all_to_all(mailbox);
+        drop(sa);
         let batches = group
             .run_phase(|ctx| {
                 layout.unit_id(ctx.rank, c).map(|u| {
+                    let _ss = obs::enabled().then(|| {
+                        obs::span(
+                            format!("assemble r{} c{c}", ctx.rank),
+                            obs::SpanMeta::stage("assemble")
+                                .rank(ctx.rank)
+                                .step(cx.kk)
+                                .chunk(c),
+                        )
+                    });
                     let er = layout.units[u].experts.clone();
                     match fmt {
                         Some(f) => assemble_fp8(
@@ -438,8 +521,17 @@ fn fwd_slot_serial(cx: &FwdCtx, group: &RankGroup) -> FwdSlotOut {
 
         // ---- expert FFN: each rank on its disjoint worker share ----
         let te = Instant::now();
-        let ph = group
-            .run_phase(|ctx| batches[ctx.rank].as_ref().map(|b| expert_ffn(b, cx.w, ctx.workers)));
+        let ph = group.run_phase(|ctx| {
+            batches[ctx.rank].as_ref().map(|b| {
+                let _sf = obs::enabled().then(|| {
+                    obs::span(
+                        format!("ffn r{} c{c}", ctx.rank),
+                        obs::SpanMeta::stage("ffn").rank(ctx.rank).step(cx.kk).chunk(c),
+                    )
+                });
+                expert_ffn(b, cx.w, ctx.workers)
+            })
+        });
         for (i, s) in ph.rank_s.iter().enumerate() {
             rank_expert_s[i] += s;
         }
@@ -451,6 +543,15 @@ fn fwd_slot_serial(cx: &FwdCtx, group: &RankGroup) -> FwdSlotOut {
         let parts = group
             .run_phase(|ctx| {
                 layout.unit_id(ctx.rank, c).map(|u| {
+                    let _sc = obs::enabled().then(|| {
+                        obs::span(
+                            format!("combine r{} c{c}", ctx.rank),
+                            obs::SpanMeta::stage("combine")
+                                .rank(ctx.rank)
+                                .step(cx.kk)
+                                .chunk(c),
+                        )
+                    });
                     let er = layout.units[u].experts.clone();
                     let yk = yks[ctx.rank].as_ref().expect("unit produced a batch");
                     combine(yk, cx.plan, er, cx.cap, cx.t, ctx.workers)
@@ -470,6 +571,8 @@ fn fwd_slot_serial(cx: &FwdCtx, group: &RankGroup) -> FwdSlotOut {
         dispatch_s,
         expert_s,
         combine_s,
+        // Bulk-synchronous phases are disjoint wall intervals: wall == busy.
+        walls: [dispatch_s, expert_s, combine_s],
         rank_expert_s,
         wall_s,
     }
@@ -514,8 +617,12 @@ fn fwd_slot_overlap(cx: &FwdCtx, lanes: &Lanes) -> FwdSlotOut {
                     let (dsts, units) = (dsts_c.clone(), unit_ids.clone());
                     let tr = part_range(cx.tok_part, src);
                     let wire = &wire;
-                    let id =
-                        g.add(lanes.comm[src], &[], format!("pack r{src} c{c}"), move || {
+                    let id = g.add_with_meta(
+                        lanes.comm[src],
+                        &[],
+                        format!("pack r{src} c{c}"),
+                        obs::SpanMeta::stage("pack").rank(src).step(cx.kk).chunk(c),
+                        move || {
                             let bufs = match cx.x_q {
                                 Some(xq) => pack_fp8(xq, cx.plan, &tr, &dsts, cx.cap),
                                 None => pack_dense(cx.x, cx.plan, &tr, &dsts, cx.cap),
@@ -525,7 +632,8 @@ fn fwd_slot_overlap(cx: &FwdCtx, lanes: &Lanes) -> FwdSlotOut {
                                     wire[src * n_units + u].put(buf);
                                 }
                             }
-                        });
+                        },
+                    );
                     kinds.push((StepKind::Pack, src));
                     id
                 })
@@ -537,7 +645,8 @@ fn fwd_slot_overlap(cx: &FwdCtx, lanes: &Lanes) -> FwdSlotOut {
                     let er = layout.units[u].experts.clone();
                     let (wire, batch_h) = (&wire, &batch_h);
                     let label = format!("assemble r{rk} c{c}");
-                    let id = g.add(lanes.comm[rk], &packs, label, move || {
+                    let meta = obs::SpanMeta::stage("assemble").rank(rk).step(cx.kk).chunk(c);
+                    let id = g.add_with_meta(lanes.comm[rk], &packs, label, meta, move || {
                         let inbox: Vec<WireBuf> =
                             (0..r).map(|src| wire[src * n_units + u].take()).collect();
                         let b = match cx.x_q {
@@ -566,11 +675,16 @@ fn fwd_slot_overlap(cx: &FwdCtx, lanes: &Lanes) -> FwdSlotOut {
                     let (batch_h, yk_h) = (&batch_h, &yk_h);
                     let threads = lanes.compute_budget[rk];
                     let dep = asm_id[u].expect("ffn follows its unit's assemble");
-                    let id =
-                        g.add(lanes.compute[rk], &[dep], format!("ffn r{rk} c{c}"), move || {
+                    let id = g.add_with_meta(
+                        lanes.compute[rk],
+                        &[dep],
+                        format!("ffn r{rk} c{c}"),
+                        obs::SpanMeta::stage("ffn").rank(rk).step(cx.kk).chunk(c),
+                        move || {
                             let b = batch_h[u].take();
                             yk_h[u].put(expert_ffn(&b, cx.w, threads));
-                        });
+                        },
+                    );
                     kinds.push((StepKind::Ffn, rk));
                     ffn_id[u] = Some(id);
                 }
@@ -584,10 +698,16 @@ fn fwd_slot_overlap(cx: &FwdCtx, lanes: &Lanes) -> FwdSlotOut {
                     let er = layout.units[u].experts.clone();
                     let (yk_h, part_h) = (&yk_h, &part_h);
                     let dep = ffn_id[u].expect("combine follows its unit's ffn");
-                    g.add(lanes.comm[rk], &[dep], format!("combine r{rk} c{cc}"), move || {
-                        let yk = yk_h[u].take();
-                        part_h[u].put(combine(&yk, cx.plan, er, cx.cap, cx.t, 1));
-                    });
+                    g.add_with_meta(
+                        lanes.comm[rk],
+                        &[dep],
+                        format!("combine r{rk} c{cc}"),
+                        obs::SpanMeta::stage("combine").rank(rk).step(cx.kk).chunk(cc),
+                        move || {
+                            let yk = yk_h[u].take();
+                            part_h[u].put(combine(&yk, cx.plan, er, cx.cap, cx.t, 1));
+                        },
+                    );
                     kinds.push((StepKind::Combine, rk));
                 }
             }
@@ -611,11 +731,13 @@ fn fwd_slot_overlap(cx: &FwdCtx, lanes: &Lanes) -> FwdSlotOut {
         }
         wall_s = wall_s.max(st.end_s);
     }
+    let walls = step_walls(&times, &kinds);
     FwdSlotOut {
         partials: part_h.iter().map(|h| h.take()).collect(),
         dispatch_s,
         expert_s,
         combine_s,
+        walls,
         rank_expert_s,
         wall_s,
     }
@@ -644,7 +766,9 @@ pub fn ep_forward(x: &Mat, w: &PreparedWeights, cfg: &EpConfig) -> EpForward {
     let mut stages = StageTimes::default();
 
     let ts = Instant::now();
+    let sr = obs::enabled().then(|| obs::span("route", obs::SpanMeta::stage("route")));
     let routing = route(x, &w.raw.router, cfg.top_k);
+    drop(sr);
     stages.route_s = ts.elapsed().as_secs_f64();
 
     // Entry quantization (Fp8Flow's single cast). Row-independent, so
@@ -654,7 +778,10 @@ pub fn ep_forward(x: &Mat, w: &PreparedWeights, cfg: &EpConfig) -> EpForward {
     // is (the lint cross-check pins this chunk-invariance).
     let x_q = if w.recipe == Recipe::Fp8Flow {
         let tq = Instant::now();
+        let sq = obs::enabled().then(|| obs::span("entry quant", obs::SpanMeta::stage("quant")));
         let q = quantize_rowwise_with_threads(x, Fp8Format::E4M3, ScaleMode::Po2, total_workers);
+        drop(sq);
+        obs::count(Counter::CastsFwd, 1); // Fp8Flow's single forward cast
         stages.quant_s = tq.elapsed().as_secs_f64();
         Some(q)
     } else {
@@ -664,6 +791,7 @@ pub fn ep_forward(x: &Mat, w: &PreparedWeights, cfg: &EpConfig) -> EpForward {
     let mut y = Mat::zeros(t, d);
     let mut rank_expert_s = vec![0.0f64; r];
     let mut pipeline_wall_s = 0.0f64;
+    let mut walls = [0.0f64; 3];
     let mut slot_wall_s = Vec::with_capacity(cfg.top_k);
     let (mut payload_b, mut sidecar_b) = (0usize, 0usize);
     let (mut n_bufs, mut combine_b) = (0usize, 0usize);
@@ -703,6 +831,7 @@ pub fn ep_forward(x: &Mat, w: &PreparedWeights, cfg: &EpConfig) -> EpForward {
             cap: cfg.capacity,
             t,
             d,
+            kk,
         };
         let out = match (&group, &lanes) {
             (Some(g), _) => fwd_slot_serial(&cx, g),
@@ -712,6 +841,9 @@ pub fn ep_forward(x: &Mat, w: &PreparedWeights, cfg: &EpConfig) -> EpForward {
         stages.dispatch_s += out.dispatch_s;
         stages.expert_s += out.expert_s;
         stages.combine_s += out.combine_s;
+        for (w, s) in walls.iter_mut().zip(out.walls) {
+            *w += s;
+        }
         for (i, s) in out.rank_expert_s.iter().enumerate() {
             rank_expert_s[i] += s;
         }
@@ -724,9 +856,14 @@ pub fn ep_forward(x: &Mat, w: &PreparedWeights, cfg: &EpConfig) -> EpForward {
         // single-rank scatter — bit for bit. Dropped tokens contribute
         // g·(+0.0), which never changes y's bits (y is never -0.0).
         let tr_ = Instant::now();
+        let sv = obs::enabled().then(|| {
+            obs::span(format!("reduce k{kk}"), obs::SpanMeta::stage("combine").step(kk))
+        });
         reduce_serving(&mut y, &out.partials, &serving, &tok_part, d, Some((&routing, kk)));
+        drop(sv);
         let red = tr_.elapsed().as_secs_f64();
         stages.combine_s += red;
+        walls[2] += red;
         let wall = out.wall_s + red;
         pipeline_wall_s += wall;
         slot_wall_s.push(wall);
@@ -739,6 +876,9 @@ pub fn ep_forward(x: &Mat, w: &PreparedWeights, cfg: &EpConfig) -> EpForward {
         chunks: layout.c_max,
         overlap: cfg.overlap,
         stages,
+        dispatch_wall_s: walls[0],
+        expert_wall_s: walls[1],
+        combine_wall_s: walls[2],
         pipeline_wall_s,
         slot_wall_s,
         rank_expert_s,
@@ -764,6 +904,16 @@ pub struct EpBackward {
     pub chunks: usize,
     /// Whether the overlapped (step-graph) schedule ran.
     pub overlap: bool,
+    /// Combine-bwd **wall** seconds: interval union of pack/assemble
+    /// step intervals plus the driver-serial gate-scale/Q(dy) preamble
+    /// (== busy in the serialized schedule; ≤ busy under overlap — the
+    /// same busy/wall pairing as the forward's stage records).
+    pub combine_bwd_wall_s: f64,
+    /// Expert-backward wall seconds (interval union).
+    pub expert_bwd_wall_s: f64,
+    /// Dispatch-bwd wall seconds (interval union of the unpermute steps
+    /// plus the driver-serial serving reduce).
+    pub dispatch_bwd_wall_s: f64,
     /// Wall-clock seconds of the combine-bwd→expert-bwd→dispatch-bwd
     /// pipeline, summed over slots (excludes the gate-scale and Q(dy)
     /// preamble, which runs identically outside the pipeline in both
@@ -796,6 +946,9 @@ impl EpBackward {
             .set("combine_bwd_ms", self.grads.stages.combine_bwd_s * 1e3)
             .set("expert_bwd_ms", self.grads.stages.expert_bwd_s * 1e3)
             .set("dispatch_bwd_ms", self.grads.stages.dispatch_bwd_s * 1e3)
+            .set("combine_bwd_wall_ms", self.combine_bwd_wall_s * 1e3)
+            .set("expert_bwd_wall_ms", self.expert_bwd_wall_s * 1e3)
+            .set("dispatch_bwd_wall_ms", self.dispatch_bwd_wall_s * 1e3)
             .set("total_ms", self.grads.stages.total_s() * 1e3)
             .set("pipeline_wall_ms", self.pipeline_wall_s * 1e3)
             .set(
@@ -828,6 +981,8 @@ struct BwdCtx<'a> {
     cap: usize,
     t: usize,
     d: usize,
+    /// Top-k slot index (span `step` coordinate).
+    kk: usize,
 }
 
 /// One slot's backward pipeline output: per-unit dX partials, the
@@ -839,6 +994,8 @@ struct BwdSlotOut {
     combine_bwd_s: f64,
     expert_bwd_s: f64,
     dispatch_bwd_s: f64,
+    /// Per-stage wall seconds `[combine-bwd, expert-bwd, dispatch-bwd]`.
+    walls: [f64; 3],
     rank_expert_s: Vec<f64>,
     wall_s: f64,
 }
@@ -859,6 +1016,12 @@ fn bwd_slot_serial(cx: &BwdCtx, group: &RankGroup) -> BwdSlotOut {
         let tc = Instant::now();
         let mailbox = group
             .run_phase(|ctx| {
+                let _sp = obs::enabled().then(|| {
+                    obs::span(
+                        format!("pack r{} c{c}", ctx.rank),
+                        obs::SpanMeta::stage("pack").rank(ctx.rank).step(cx.kk).chunk(c),
+                    )
+                });
                 let tr = part_range(cx.tok_part, ctx.rank);
                 match cx.dy_q {
                     Some(q) => pack_fp8(q, cx.plan, &tr, &dsts, cx.cap),
@@ -866,10 +1029,23 @@ fn bwd_slot_serial(cx: &BwdCtx, group: &RankGroup) -> BwdSlotOut {
                 }
             })
             .results;
+        let sa = obs::enabled().then(|| {
+            obs::span(format!("a2a c{c}"), obs::SpanMeta::stage("a2a").step(cx.kk).chunk(c))
+        });
         let inbox = all_to_all(mailbox);
+        drop(sa);
         let dyks = group
             .run_phase(|ctx| {
                 layout.unit_id(ctx.rank, c).map(|u| {
+                    let _ss = obs::enabled().then(|| {
+                        obs::span(
+                            format!("assemble r{} c{c}", ctx.rank),
+                            obs::SpanMeta::stage("assemble")
+                                .rank(ctx.rank)
+                                .step(cx.kk)
+                                .chunk(c),
+                        )
+                    });
                     let er = layout.units[u].experts.clone();
                     match cx.dy_q {
                         Some(q) => assemble_fp8(
@@ -898,7 +1074,18 @@ fn bwd_slot_serial(cx: &BwdCtx, group: &RankGroup) -> BwdSlotOut {
         // ---- expert backward: dgrad + wgrad on the rank's share ----
         let te = Instant::now();
         let ph = group.run_phase(|ctx| {
-            dyks[ctx.rank].as_ref().map(|dyk| expert_ffn_bwd(dyk, cx.slot, cx.w, ctx.workers))
+            dyks[ctx.rank].as_ref().map(|dyk| {
+                let _se = obs::enabled().then(|| {
+                    obs::span(
+                        format!("expert-bwd r{} c{c}", ctx.rank),
+                        obs::SpanMeta::stage("expert-bwd")
+                            .rank(ctx.rank)
+                            .step(cx.kk)
+                            .chunk(c),
+                    )
+                });
+                expert_ffn_bwd(dyk, cx.slot, cx.w, ctx.workers)
+            })
         });
         for (i, s) in ph.rank_s.iter().enumerate() {
             rank_expert_s[i] += s;
@@ -911,6 +1098,15 @@ fn bwd_slot_serial(cx: &BwdCtx, group: &RankGroup) -> BwdSlotOut {
         let parts = group
             .run_phase(|ctx| {
                 layout.unit_id(ctx.rank, c).map(|u| {
+                    let _sd = obs::enabled().then(|| {
+                        obs::span(
+                            format!("unpermute r{} c{c}", ctx.rank),
+                            obs::SpanMeta::stage("dispatch-bwd")
+                                .rank(ctx.rank)
+                                .step(cx.kk)
+                                .chunk(c),
+                        )
+                    });
                     let er = layout.units[u].experts.clone();
                     let eb = round_ebs[ctx.rank].as_ref().expect("unit produced a backward");
                     combine(&eb.dxk, cx.plan, er, cx.cap, cx.t, ctx.workers)
@@ -933,6 +1129,8 @@ fn bwd_slot_serial(cx: &BwdCtx, group: &RankGroup) -> BwdSlotOut {
         combine_bwd_s,
         expert_bwd_s,
         dispatch_bwd_s,
+        // Bulk-synchronous phases are disjoint wall intervals: wall == busy.
+        walls: [combine_bwd_s, expert_bwd_s, dispatch_bwd_s],
         rank_expert_s,
         wall_s,
     }
@@ -966,8 +1164,12 @@ fn bwd_slot_overlap(cx: &BwdCtx, lanes: &Lanes) -> BwdSlotOut {
                     let (dsts, units) = (dsts_c.clone(), unit_ids.clone());
                     let tr = part_range(cx.tok_part, src);
                     let wire = &wire;
-                    let id =
-                        g.add(lanes.comm[src], &[], format!("pack r{src} c{c}"), move || {
+                    let id = g.add_with_meta(
+                        lanes.comm[src],
+                        &[],
+                        format!("pack r{src} c{c}"),
+                        obs::SpanMeta::stage("pack").rank(src).step(cx.kk).chunk(c),
+                        move || {
                             let bufs = match cx.dy_q {
                                 Some(q) => pack_fp8(q, cx.plan, &tr, &dsts, cx.cap),
                                 None => pack_dense(cx.dyg, cx.plan, &tr, &dsts, cx.cap),
@@ -977,7 +1179,8 @@ fn bwd_slot_overlap(cx: &BwdCtx, lanes: &Lanes) -> BwdSlotOut {
                                     wire[src * n_units + u].put(buf);
                                 }
                             }
-                        });
+                        },
+                    );
                     kinds.push((StepKind::Pack, src));
                     id
                 })
@@ -987,7 +1190,8 @@ fn bwd_slot_overlap(cx: &BwdCtx, lanes: &Lanes) -> BwdSlotOut {
                     let er = layout.units[u].experts.clone();
                     let (wire, dyk_h) = (&wire, &dyk_h);
                     let label = format!("assemble r{rk} c{c}");
-                    let id = g.add(lanes.comm[rk], &packs, label, move || {
+                    let meta = obs::SpanMeta::stage("assemble").rank(rk).step(cx.kk).chunk(c);
+                    let id = g.add_with_meta(lanes.comm[rk], &packs, label, meta, move || {
                         let inbox: Vec<WireBuf> =
                             (0..r).map(|src| wire[src * n_units + u].take()).collect();
                         let b = match cx.dy_q {
@@ -1016,7 +1220,9 @@ fn bwd_slot_overlap(cx: &BwdCtx, lanes: &Lanes) -> BwdSlotOut {
                     let threads = lanes.compute_budget[rk];
                     let dep = asm_id[u].expect("expert-bwd follows its unit's assemble");
                     let label = format!("expert-bwd r{rk} c{c}");
-                    let id = g.add(lanes.compute[rk], &[dep], label, move || {
+                    let meta =
+                        obs::SpanMeta::stage("expert-bwd").rank(rk).step(cx.kk).chunk(c);
+                    let id = g.add_with_meta(lanes.compute[rk], &[dep], label, meta, move || {
                         let dyk = dyk_h[u].take();
                         eb_h[u].put(expert_ffn_bwd(&dyk, cx.slot, cx.w, threads));
                     });
@@ -1033,7 +1239,9 @@ fn bwd_slot_overlap(cx: &BwdCtx, lanes: &Lanes) -> BwdSlotOut {
                     let (eb_h, out_h) = (&eb_h, &out_h);
                     let dep = ffn_id[u].expect("unpermute follows its unit's expert backward");
                     let label = format!("unpermute r{rk} c{cc}");
-                    g.add(lanes.comm[rk], &[dep], label, move || {
+                    let meta =
+                        obs::SpanMeta::stage("dispatch-bwd").rank(rk).step(cx.kk).chunk(cc);
+                    g.add_with_meta(lanes.comm[rk], &[dep], label, meta, move || {
                         let eb = eb_h[u].take();
                         let p = combine(&eb.dxk, cx.plan, er, cx.cap, cx.t, 1);
                         out_h[u].put((p, eb));
@@ -1061,6 +1269,7 @@ fn bwd_slot_overlap(cx: &BwdCtx, lanes: &Lanes) -> BwdSlotOut {
         }
         wall_s = wall_s.max(st.end_s);
     }
+    let walls = step_walls(&times, &kinds);
     let (partials, ebs) = out_h.iter().map(|h| h.take()).unzip();
     BwdSlotOut {
         partials,
@@ -1068,6 +1277,7 @@ fn bwd_slot_overlap(cx: &BwdCtx, lanes: &Lanes) -> BwdSlotOut {
         combine_bwd_s,
         expert_bwd_s,
         dispatch_bwd_s,
+        walls,
         rank_expert_s,
         wall_s,
     }
@@ -1126,6 +1336,7 @@ pub fn ep_backward(
     let mut stats = BwdStats::default();
     let mut stages = BwdStageTimes::default();
     let mut rank_expert_s = vec![0.0f64; r];
+    let mut walls = [0.0f64; 3];
     let mut pipeline_wall_s = 0.0f64;
     let mut slot_wall_s = Vec::with_capacity(stash.slots.len());
     let (mut dy_payload_b, mut dy_sidecar_b, mut dy_bufs, mut dx_b) = (0usize, 0, 0, 0usize);
@@ -1140,19 +1351,30 @@ pub fn ep_backward(
         // full budget. One cast per slot whatever C is — the chunk-
         // invariance the lint cross-check pins.
         let tg = Instant::now();
+        let sg = obs::enabled().then(|| {
+            obs::span(format!("gate-scale k{kk}"), obs::SpanMeta::stage("combine-bwd").step(kk))
+        });
         let dyg = scale_by_gates_with_threads(dy, &stash.routing, kk, total_workers);
+        drop(sg);
         let dy_q = if w.recipe == Recipe::Fp8Flow {
             stats.casts += 1;
-            Some(quantize_rowwise_with_threads(
+            obs::count(Counter::CastsBwd, 1); // Fp8Flow's one Q(dy) per slot
+            let sq = obs::enabled().then(|| {
+                obs::span(format!("qdy k{kk}"), obs::SpanMeta::stage("quant").step(kk))
+            });
+            let q = quantize_rowwise_with_threads(
                 &dyg,
                 Fp8Format::E4M3,
                 ScaleMode::Po2,
                 total_workers,
-            ))
+            );
+            drop(sq);
+            Some(q)
         } else {
             None
         };
-        stages.combine_bwd_s += tg.elapsed().as_secs_f64();
+        let preamble = tg.elapsed().as_secs_f64();
+        stages.combine_bwd_s += preamble;
 
         // Analytic wire accounting, outside the timers (same reasoning
         // as the forward).
@@ -1182,6 +1404,7 @@ pub fn ep_backward(
             cap,
             t,
             d,
+            kk,
         };
         let out = match (&group, &lanes) {
             (Some(g), _) => bwd_slot_serial(&cx, g),
@@ -1191,6 +1414,9 @@ pub fn ep_backward(
         stages.combine_bwd_s += out.combine_bwd_s;
         stages.expert_bwd_s += out.expert_bwd_s;
         stages.dispatch_bwd_s += out.dispatch_bwd_s;
+        walls[0] += out.walls[0] + preamble;
+        walls[1] += out.walls[1];
+        walls[2] += out.walls[2];
         for (i, s) in out.rank_expert_s.iter().enumerate() {
             rank_expert_s[i] += s;
         }
@@ -1212,9 +1438,14 @@ pub fn ep_backward(
         // Serving-unit reduce into the token shards — same bit-exactness
         // argument as the forward combine reduce.
         let tr_ = Instant::now();
+        let sv = obs::enabled().then(|| {
+            obs::span(format!("reduce k{kk}"), obs::SpanMeta::stage("dispatch-bwd").step(kk))
+        });
         reduce_serving(&mut dx, &out.partials, &serving, &tok_part, d, None);
+        drop(sv);
         let red = tr_.elapsed().as_secs_f64();
         stages.dispatch_bwd_s += red;
+        walls[2] += red;
         let wall = out.wall_s + red;
         pipeline_wall_s += wall;
         slot_wall_s.push(wall);
@@ -1225,6 +1456,9 @@ pub fn ep_backward(
         ranks: r,
         chunks: layout.c_max,
         overlap: cfg.overlap,
+        combine_bwd_wall_s: walls[0],
+        expert_bwd_wall_s: walls[1],
+        dispatch_bwd_wall_s: walls[2],
         pipeline_wall_s,
         slot_wall_s,
         rank_expert_s,
@@ -1308,6 +1542,13 @@ fn reduce_serving(
     d: usize,
     gates: Option<(&Routing, usize)>,
 ) {
+    if obs::enabled() {
+        // One BF16-accounted partial row is reduced per served token —
+        // the measured counterpart of the drivers' `combine_bytes` /
+        // `dx_bytes` analytic accounting.
+        let served = serving.iter().filter(|&&su| su != usize::MAX).count();
+        obs::count(Counter::CombineBytes, (served * d * 2) as u64);
+    }
     let tasks: Vec<_> = exec::split_parts(tok_part, d, &mut out.data)
         .into_iter()
         .zip(tok_part.ranges())
@@ -1441,6 +1682,16 @@ fn pack_fp8(
                     }
                 }
             }
+            // Counters read the *actual* packed buffers — an independent
+            // measurement the analytic `wire_accounting` is checked
+            // against (live cross-check + `tests/prop_obs.rs`). Empty
+            // `dr` means "no unit at this round for that rank": no
+            // buffer ships, so it must not count.
+            if obs::enabled() && !dr.is_empty() {
+                obs::count(Counter::WirePayloadBytes, codes.len() as u64);
+                obs::count(Counter::WireSidecarBytes, sidecar.len() as u64);
+                obs::count(Counter::WireBuffers, 2);
+            }
             WireBuf::Fp8 { codes, sidecar }
         })
         .collect()
@@ -1463,6 +1714,12 @@ fn pack_dense(
                 if src >= 0 && tok.contains(&(src as usize)) {
                     rows.extend_from_slice(x.row(src as usize));
                 }
+            }
+            // BF16-accounted dense wire: 2 bytes per f32-carried element,
+            // one buffer per src→dst-unit pair (see pack_fp8's note).
+            if obs::enabled() && !dr.is_empty() {
+                obs::count(Counter::WirePayloadBytes, (rows.len() * 2) as u64);
+                obs::count(Counter::WireBuffers, 1);
             }
             WireBuf::Dense(rows)
         })
@@ -1674,6 +1931,102 @@ mod tests {
         assert!(out.pipeline_wall_s > 0.0);
         assert_eq!(out.slot_wall_s.len(), 2);
         assert!(out.rank_expert_s.iter().all(|&s| s > 0.0));
+    }
+
+    #[test]
+    fn recorded_counters_match_analytic_wire_accounting() {
+        let (x, w) = setup(40);
+        let pw = PreparedWeights::new(w, Recipe::Fp8Flow);
+        for (chunks, overlap) in [(1, false), (2, false), (2, true)] {
+            let rec = obs::Recorder::new(1);
+            let out = {
+                let _g = obs::install(rec.clone());
+                ep_forward(&x, &pw, &EpConfig::serial(2, 2, 24, 2).with_pipeline(chunks, overlap))
+            };
+            let tag = format!("C={chunks} overlap={overlap}");
+            let t = rec.totals();
+            assert_eq!(
+                t[Counter::WirePayloadBytes as usize] as usize,
+                out.dispatch_payload_bytes,
+                "{tag} payload"
+            );
+            assert_eq!(
+                t[Counter::WireSidecarBytes as usize] as usize,
+                out.dispatch_sidecar_bytes,
+                "{tag} sidecar"
+            );
+            assert_eq!(
+                t[Counter::WireBuffers as usize] as usize,
+                out.dispatch_buffers,
+                "{tag} buffers"
+            );
+            assert_eq!(
+                t[Counter::CombineBytes as usize] as usize,
+                out.combine_bytes,
+                "{tag} combine"
+            );
+            // Fp8Flow forward: exactly one explicit cast (the entry quant)
+            assert_eq!(t[Counter::CastsFwd as usize], 1, "{tag}");
+            assert_eq!(t[Counter::CastsBwd as usize], 0, "{tag}");
+            // spans cover every forward stage
+            let spans = rec.spans();
+            let stages: Vec<&str> = spans.iter().map(|s| s.meta.stage).collect();
+            for st in ["route", "quant", "pack", "assemble", "ffn", "combine"] {
+                assert!(stages.contains(&st), "{tag}: missing stage {st}");
+            }
+            if !overlap {
+                assert!(stages.contains(&"a2a"), "{tag}: serialized trace has a2a spans");
+            }
+        }
+    }
+
+    #[test]
+    fn stage_walls_are_populated_and_bounded_by_busy() {
+        let (x, w) = setup(41);
+        let pw = PreparedWeights::new(w, Recipe::Fp8Flow);
+        let serial = ep_forward(&x, &pw, &EpConfig::serial(2, 2, 24, 4).with_pipeline(2, false));
+        // serialized: wall == busy by construction
+        assert_eq!(serial.dispatch_wall_s, serial.stages.dispatch_s);
+        assert_eq!(serial.expert_wall_s, serial.stages.expert_s);
+        assert!(serial.combine_wall_s > 0.0);
+        let over = ep_forward(&x, &pw, &EpConfig::serial(2, 2, 24, 4).with_pipeline(2, true));
+        // overlapped: interval union can never exceed summed busy
+        let eps = 1e-9;
+        assert!(over.dispatch_wall_s > 0.0);
+        assert!(over.dispatch_wall_s <= over.stages.dispatch_s + eps);
+        assert!(over.expert_wall_s <= over.stages.expert_s + eps);
+        assert!(over.combine_wall_s <= over.stages.combine_s + eps);
+        let j = over.to_json().render();
+        assert!(j.contains("\"dispatch_wall_ms\""), "{j}");
+        assert!(j.contains("\"expert_wall_ms\""), "{j}");
+        assert!(j.contains("\"combine_wall_ms\""), "{j}");
+    }
+
+    #[test]
+    fn backward_counters_and_walls() {
+        use crate::moe::backward::forward_stash;
+        let (x, w) = setup(42);
+        let mut rng = Rng::seed_from(43);
+        let dy = Mat::randn(x.rows, x.cols, 1.0, &mut rng);
+        let pw = PreparedWeights::new(w, Recipe::Fp8Flow);
+        let stash = forward_stash(&x, &pw, 2, 24);
+        let rec = obs::Recorder::new(1);
+        let out = {
+            let _g = obs::install(rec.clone());
+            ep_backward(&stash, &pw, &dy, &EpConfig::serial(2, 2, 24, 2).with_pipeline(2, true))
+        };
+        let t = rec.totals();
+        assert_eq!(t[Counter::WirePayloadBytes as usize] as usize, out.dy_payload_bytes);
+        assert_eq!(t[Counter::WireSidecarBytes as usize] as usize, out.dy_sidecar_bytes);
+        assert_eq!(t[Counter::WireBuffers as usize] as usize, out.dy_buffers);
+        assert_eq!(t[Counter::CombineBytes as usize] as usize, out.dx_bytes);
+        // Fp8Flow backward: one Q(dy) per top-k slot
+        assert_eq!(t[Counter::CastsBwd as usize], 2);
+        assert!(out.combine_bwd_wall_s > 0.0);
+        assert!(out.expert_bwd_wall_s > 0.0);
+        assert!(out.dispatch_bwd_wall_s > 0.0);
+        let j = out.to_json().render();
+        assert!(j.contains("\"combine_bwd_wall_ms\""), "{j}");
     }
 
     #[test]

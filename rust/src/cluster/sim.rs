@@ -218,6 +218,89 @@ pub struct ModeledEp {
     pub combine_s: f64,
 }
 
+/// Per-op unit costs fitted from recorded traces — the `calibrate`
+/// subcommand's output ([`crate::obs::calibrate`]), persisted in
+/// `runs/calibrate.json`. Where [`modeled_ep_stages`] costs stages from
+/// hand-set H100 constants, a `CostTable` costs them from *this
+/// machine's measured spans*, which is what turns the projection sweeps
+/// from illustrative into predictive.
+///
+/// Unit convention: every cost multiplies an analytic op count (tokens
+/// routed, bytes moved, FLOPs executed) into **total busy seconds summed
+/// across simulated ranks** — the same aggregation the trace's per-stage
+/// span sums use, so fit residuals are an apples-to-apples comparison.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CostTable {
+    /// Router seconds per routed token.
+    pub route_s_per_token: f64,
+    /// Entry-quantization seconds per input byte (Fp8Flow only).
+    pub quant_s_per_byte: f64,
+    /// Wire-pack seconds per wire byte (payload + sidecar).
+    pub pack_s_per_byte: f64,
+    /// All-to-all seconds per wire byte.
+    pub a2a_s_per_byte: f64,
+    /// Assemble (unpack) seconds per wire byte.
+    pub assemble_s_per_byte: f64,
+    /// Expert grouped-GEMM seconds per FLOP.
+    pub gemm_s_per_flop: f64,
+    /// Combine-reduce seconds per combined byte.
+    pub combine_s_per_byte: f64,
+}
+
+impl CostTable {
+    /// Analytic dispatch wire bytes for one EP forward at `shape`
+    /// (per-slot sent rows bounded by total capacity; FP8 wire ships
+    /// 1 B/element + a 1 B/128-element UE8M0 sidecar, dense ships
+    /// BF16-accounted rows).
+    pub fn dispatch_wire_bytes(recipe: Recipe, shape: &EpShape) -> f64 {
+        let rows = shape.tokens.min(shape.n_experts * shape.capacity) as f64;
+        let d = shape.d_model as f64;
+        let per_slot = if recipe == Recipe::Fp8Flow {
+            rows * d + rows * (shape.d_model as f64 / 128.0).ceil()
+        } else {
+            rows * d * 2.0
+        };
+        shape.top_k as f64 * per_slot
+    }
+
+    /// Analytic expert FLOPs for one EP forward at `shape`: every slot
+    /// runs the padded `E·capacity` rows through fc1(gate+up)+fc2.
+    pub fn expert_flops(shape: &EpShape) -> f64 {
+        let rows = (shape.n_experts * shape.capacity) as f64;
+        shape.top_k as f64 * rows * 6.0 * shape.d_model as f64 * shape.ffn as f64
+    }
+
+    /// Predict the stage costs of one EP forward at `shape` from the
+    /// fitted table (total busy seconds across ranks; `dispatch_s` is
+    /// pack + a2a + assemble, entry quant excluded — same stage split as
+    /// [`modeled_ep_stages`]).
+    pub fn predict_ep_stages(&self, recipe: Recipe, shape: &EpShape) -> ModeledEp {
+        let wire = Self::dispatch_wire_bytes(recipe, shape);
+        let combine_bytes = (shape.tokens.min(shape.n_experts * shape.capacity)
+            * shape.top_k
+            * shape.d_model
+            * 2) as f64;
+        ModeledEp {
+            dispatch_s: (self.pack_s_per_byte + self.a2a_s_per_byte + self.assemble_s_per_byte)
+                * wire,
+            expert_s: self.gemm_s_per_flop * Self::expert_flops(shape),
+            combine_s: self.combine_s_per_byte * combine_bytes,
+        }
+    }
+
+    /// JSON rendering for `runs/calibrate.json`.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj()
+            .set("route_s_per_token", self.route_s_per_token)
+            .set("quant_s_per_byte", self.quant_s_per_byte)
+            .set("pack_s_per_byte", self.pack_s_per_byte)
+            .set("a2a_s_per_byte", self.a2a_s_per_byte)
+            .set("assemble_s_per_byte", self.assemble_s_per_byte)
+            .set("gemm_s_per_flop", self.gemm_s_per_flop)
+            .set("combine_s_per_byte", self.combine_s_per_byte)
+    }
+}
+
 /// Cost the stages of an executed EP forward with the same model that
 /// generates Tables 1–3, at the executed shape. The executed runtime
 /// pays one dispatch + combine all-to-all **per top-k slot** (each slot
@@ -423,6 +506,43 @@ pub fn ep_overlap_report(
         hidden * 1e3,
         efficiency
     ));
+    // Satellite of the obs layer: every stage reports BOTH summed busy
+    // time (rank-seconds of work) and wall time (interval union of that
+    // stage's spans). Serialized schedules have busy == wall by
+    // construction; overlapped schedules show wall < busy exactly where
+    // the step graph interleaved ranks/chunks.
+    let stage_rows: [(&str, f64, f64, f64, f64); 3] = [
+        (
+            "dispatch",
+            serial.stages.dispatch_s,
+            serial.dispatch_wall_s,
+            over.stages.dispatch_s,
+            over.dispatch_wall_s,
+        ),
+        (
+            "expert",
+            serial.stages.expert_s,
+            serial.expert_wall_s,
+            over.stages.expert_s,
+            over.expert_wall_s,
+        ),
+        (
+            "combine",
+            serial.stages.combine_s,
+            serial.combine_wall_s,
+            over.stages.combine_s,
+            over.combine_wall_s,
+        ),
+    ];
+    for (name, sb, sw, ob, ow) in stage_rows {
+        s.push_str(&format!(
+            "    stage {name:<8} busy/wall ms: serialized {:.4}/{:.4}, overlapped {:.4}/{:.4}\n",
+            sb * 1e3,
+            sw * 1e3,
+            ob * 1e3,
+            ow * 1e3
+        ));
+    }
     let fmt_slots = |walls: &[f64]| {
         walls.iter().map(|v| format!("{:.3}", v * 1e3)).collect::<Vec<_>>().join(", ")
     };
@@ -639,9 +759,63 @@ mod tests {
             "ROW speedup",
             "    hideable",
             "overlap efficiency",
+            "    stage dispatch",
+            "    stage expert",
+            "    stage combine",
+            "busy/wall ms",
             "    per-slot wall ms",
         ] {
             assert!(rep.contains(marker), "missing {marker:?} in:\n{rep}");
+        }
+    }
+
+    #[test]
+    fn cost_table_predicts_linearly_in_its_costs() {
+        let shape = EpShape {
+            tokens: 64,
+            d_model: 64,
+            ffn: 48,
+            n_experts: 4,
+            top_k: 2,
+            capacity: 24,
+        };
+        let unit = CostTable {
+            route_s_per_token: 1.0,
+            quant_s_per_byte: 1.0,
+            pack_s_per_byte: 1.0,
+            a2a_s_per_byte: 1.0,
+            assemble_s_per_byte: 1.0,
+            gemm_s_per_flop: 1.0,
+            combine_s_per_byte: 1.0,
+        };
+        let p = unit.predict_ep_stages(Recipe::Fp8Flow, &shape);
+        let wire = CostTable::dispatch_wire_bytes(Recipe::Fp8Flow, &shape);
+        // dispatch = (pack + a2a + assemble) × wire bytes at unit costs
+        assert!((p.dispatch_s - 3.0 * wire).abs() < 1e-6);
+        assert!((p.expert_s - CostTable::expert_flops(&shape)).abs() < 1e-3);
+        assert!(p.combine_s > 0.0);
+        // doubling every cost doubles every prediction
+        let double = CostTable {
+            route_s_per_token: 2.0,
+            quant_s_per_byte: 2.0,
+            pack_s_per_byte: 2.0,
+            a2a_s_per_byte: 2.0,
+            assemble_s_per_byte: 2.0,
+            gemm_s_per_flop: 2.0,
+            combine_s_per_byte: 2.0,
+        };
+        let q = double.predict_ep_stages(Recipe::Fp8Flow, &shape);
+        assert!((q.dispatch_s - 2.0 * p.dispatch_s).abs() < 1e-6);
+        assert!((q.expert_s - 2.0 * p.expert_s).abs() < 1e-3);
+        assert!((q.combine_s - 2.0 * p.combine_s).abs() < 1e-6);
+        // dense wire costs more than FP8 wire (2 B/elt vs 1 B + sidecar)
+        assert!(
+            CostTable::dispatch_wire_bytes(Recipe::Bf16, &shape)
+                > CostTable::dispatch_wire_bytes(Recipe::Fp8Flow, &shape)
+        );
+        let j = unit.to_json().render();
+        for key in ["route_s_per_token", "gemm_s_per_flop", "combine_s_per_byte"] {
+            assert!(j.contains(key), "{j}");
         }
     }
 

@@ -62,12 +62,16 @@ impl WorkerGroup {
         if n == 1 {
             return vec![f(0, self.budgets[0])];
         }
+        let tok = crate::obs::session_token();
         std::thread::scope(|s| {
             let f = &f;
             let handles: Vec<_> = (1..n)
                 .map(|g| {
                     let b = self.budgets[g];
-                    s.spawn(move || f(g, b))
+                    s.spawn(move || {
+                        tok.adopt();
+                        f(g, b)
+                    })
                 })
                 .collect();
             let mut out = Vec::with_capacity(n);

@@ -1,7 +1,13 @@
 //! Scoped-thread worker pool: one worker per partition part, part 0 on the
 //! calling thread, disjoint output sub-slices via `split_at_mut`.
+//!
+//! At [`crate::obs`] detail ≥ 2 (`--trace-detail 2`), [`map_parts`]
+//! records one span per partition part so kernel-level load imbalance is
+//! visible in the trace; at the default detail these sites cost one
+//! relaxed atomic load each.
 
 use crate::exec::partition::Partition;
+use crate::obs;
 
 /// Split `data` into per-part mutable sub-slices at the partition's item
 /// boundaries, where each item owns `stride` consecutive elements.
@@ -35,10 +41,14 @@ pub fn run_tasks<T: Send, F: Fn(T) + Sync>(tasks: Vec<T>, f: F) {
         f(first);
         return;
     }
+    let tok = obs::session_token();
     std::thread::scope(|s| {
         let f = &f;
         for t in rest {
-            s.spawn(move || f(t));
+            s.spawn(move || {
+                tok.adopt();
+                f(t)
+            });
         }
         f(first);
     });
@@ -52,18 +62,26 @@ where
     R: Send,
     F: Fn(usize) -> R + Sync,
 {
+    let run_part = |w: usize| -> Vec<R> {
+        let _s = (obs::detail() >= 2)
+            .then(|| obs::span(format!("part {w}"), obs::SpanMeta::stage("part").lane(w)));
+        p.range(w).map(&f).collect()
+    };
     if p.len() <= 1 {
-        return p.range(0).map(f).collect();
+        return run_part(0);
     }
+    let tok = obs::session_token();
     std::thread::scope(|s| {
-        let f = &f;
+        let run_part = &run_part;
         let handles: Vec<_> = (1..p.len())
             .map(|w| {
-                let r = p.range(w);
-                s.spawn(move || r.map(f).collect::<Vec<R>>())
+                s.spawn(move || {
+                    tok.adopt();
+                    run_part(w)
+                })
             })
             .collect();
-        let mut out: Vec<R> = p.range(0).map(f).collect();
+        let mut out: Vec<R> = run_part(0);
         for h in handles {
             out.extend(h.join().expect("worker panicked"));
         }

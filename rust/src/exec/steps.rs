@@ -24,6 +24,7 @@
 //! consumer *is* the synchronization, the cell just moves the value. A
 //! `take` on an empty cell is a wiring bug and panics loudly.
 
+use crate::obs;
 use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::Instant;
 
@@ -66,6 +67,7 @@ struct Step<'env> {
     id: usize,
     deps: Vec<usize>,
     label: String,
+    meta: Option<obs::SpanMeta>,
     body: Box<dyn FnOnce() + Send + 'env>,
 }
 
@@ -103,6 +105,36 @@ impl<'env> StepGraph<'env> {
     where
         F: FnOnce() + Send + 'env,
     {
+        self.push_step(lane, deps, label.into(), None, Box::new(body))
+    }
+
+    /// Like [`StepGraph::add`], but also attaches [`obs`] span coordinates:
+    /// when a recorder is installed, the step body is wrapped in a span
+    /// named after the label, with the meta's lane overwritten by the
+    /// executing lane. Steps added without meta record no span, so purely
+    /// internal orchestration stays out of the trace.
+    pub fn add_with_meta<F>(
+        &mut self,
+        lane: usize,
+        deps: &[StepId],
+        label: impl Into<String>,
+        meta: obs::SpanMeta,
+        body: F,
+    ) -> StepId
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        self.push_step(lane, deps, label.into(), Some(meta), Box::new(body))
+    }
+
+    fn push_step(
+        &mut self,
+        lane: usize,
+        deps: &[StepId],
+        label: String,
+        meta: Option<obs::SpanMeta>,
+        body: Box<dyn FnOnce() + Send + 'env>,
+    ) -> StepId {
         assert!(lane < self.lanes.len(), "lane {lane} out of range");
         let id = self.next_id;
         for d in deps {
@@ -115,8 +147,9 @@ impl<'env> StepGraph<'env> {
         self.lanes[lane].push(Step {
             id,
             deps: deps.iter().map(|d| d.0).collect(),
-            label: label.into(),
-            body: Box::new(body),
+            label,
+            meta,
+            body,
         });
         self.next_id += 1;
         StepId(id)
@@ -144,7 +177,16 @@ impl<'env> StepGraph<'env> {
                 // panic can propagate through the scope join instead of
                 // deadlocking the whole graph.
                 let guard = MarkDone { done: &done, cv: &cv, id: step.id };
+                // enabled() gate first so the label clone is never paid
+                // on the no-op path (non-perturbation contract).
+                let span = match step.meta {
+                    Some(m) if obs::enabled() => {
+                        Some(obs::span(step.label.clone(), m.lane(lane)))
+                    }
+                    _ => None,
+                };
                 (step.body)();
+                drop(span);
                 drop(guard);
                 times.push(StepTime {
                     id: step.id,
@@ -163,11 +205,17 @@ impl<'env> StepGraph<'env> {
             .filter(|(_, steps)| !steps.is_empty())
             .collect();
         let first = lanes.remove(0);
+        let tok = crate::obs::session_token();
         let mut all = std::thread::scope(|s| {
             let run_lane = &run_lane;
             let handles: Vec<_> = lanes
                 .into_iter()
-                .map(|(lane, steps)| s.spawn(move || run_lane(lane, steps)))
+                .map(|(lane, steps)| {
+                    s.spawn(move || {
+                        tok.adopt();
+                        run_lane(lane, steps)
+                    })
+                })
                 .collect();
             let mut all = run_lane(first.0, first.1);
             for h in handles {
@@ -330,6 +378,38 @@ mod tests {
         }
         g.run();
         assert_eq!(sum.into_inner().unwrap(), 6);
+    }
+
+    #[test]
+    fn steps_with_meta_record_spans_on_their_executing_lane() {
+        let rec = obs::Recorder::new(1);
+        {
+            let _g = obs::install(rec.clone());
+            let mut g = StepGraph::new(2);
+            let a = g.add_with_meta(
+                0,
+                &[],
+                "pack c0",
+                obs::SpanMeta::stage("pack").rank(3).chunk(0),
+                || {},
+            );
+            g.add_with_meta(
+                1,
+                &[a],
+                "ffn c0",
+                obs::SpanMeta::stage("ffn").rank(3).chunk(0),
+                || {},
+            );
+            g.add(0, &[], "internal", || {}); // no meta ⇒ no span
+            g.run();
+        }
+        let spans = rec.spans();
+        assert_eq!(spans.len(), 2, "meta-less steps stay out of the trace");
+        let pack = spans.iter().find(|s| s.name == "pack c0").unwrap();
+        let ffn = spans.iter().find(|s| s.name == "ffn c0").unwrap();
+        assert_eq!((pack.meta.stage, pack.meta.rank, pack.meta.lane), ("pack", 3, 0));
+        assert_eq!((ffn.meta.stage, ffn.meta.rank, ffn.meta.lane), ("ffn", 3, 1));
+        assert!(ffn.t0_s >= pack.t0_s, "dependency order carries into span starts");
     }
 
     #[test]

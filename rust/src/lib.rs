@@ -50,6 +50,9 @@ pub mod fp8;
 /// The MoE layer: routing, dispatch/combine, expert FFN recipes, and the
 /// executed backward with its cast audit.
 pub mod moe;
+/// Observability: span/counter recorder, Chrome-trace export, live
+/// counter cross-checks, and the calibrated sim cost-table feed.
+pub mod obs;
 /// PJRT-style runtime for the AOT-lowered HLO artifacts.
 pub mod runtime;
 /// Heavy-traffic serving: seeded request generation, SLO micro-batching,

@@ -26,9 +26,12 @@ use fp8_flow_moe::analysis::{
     cross_check, diagnostics_to_json, lint_graph, tally, CastSummary, Diagnostic, ExecPrediction,
     ExecutedAudit,
 };
-use fp8_flow_moe::cluster::ep_exec::{ep_backward, ep_forward, EpConfig, EpShape};
+use fp8_flow_moe::cluster::ep_exec::{
+    ep_backward, ep_forward, EpBackward, EpConfig, EpForward, EpShape,
+};
 use fp8_flow_moe::cluster::sim::{
     ep_measured_vs_modeled, ep_overlap_report, per_rank_imbalance, serve_measured_vs_modeled,
+    CostTable,
 };
 use fp8_flow_moe::coordinator::{reports, write_run_json};
 use fp8_flow_moe::dataflow::{build, build_train_step, Variant};
@@ -37,6 +40,7 @@ use fp8_flow_moe::fp8::error::dqe_report;
 use fp8_flow_moe::fp8::{Fp8Format, ScaleMode};
 use fp8_flow_moe::moe::backward::{forward_stash, moe_backward, FwdStash, MoeGrads};
 use fp8_flow_moe::moe::layer::{moe_forward, MoeWeights, PreparedWeights, Recipe};
+use fp8_flow_moe::obs::{self, Counter};
 use fp8_flow_moe::runtime::Runtime;
 use fp8_flow_moe::serve::{
     generate_requests, serve_trace, ArrivalMode, DropPolicy, GenConfig, ServeConfig, ServeEngine,
@@ -44,7 +48,7 @@ use fp8_flow_moe::serve::{
 };
 use fp8_flow_moe::train::{AotTrainer, Corpus, NativeTrainer, TrainConfig, TrainDriver, TrainOutcome};
 use fp8_flow_moe::util::cli::Args;
-use fp8_flow_moe::util::json::Json;
+use fp8_flow_moe::util::json::{Json, RUN_SCHEMA_VERSION};
 use fp8_flow_moe::util::mat::Mat;
 use fp8_flow_moe::util::rng::Rng;
 
@@ -86,12 +90,25 @@ USAGE:
                         micro-batching, EP-sharded forward; --sweep runs a
                         capacity-factor sweep; writes runs/serve_r<R>.json)
   fp8-flow-moe dqe [--size N]
+  fp8-flow-moe trace <file.json> [<file.json> ...]
+                       (validate + summarize trace / runs documents:
+                        schema-version gate, event well-formedness, counter
+                        sanity, and the embedded cross-check verdict)
+  fp8-flow-moe calibrate <trace.json> [<trace.json> ...]
+                       (fit the sim's per-op CostTable from recorded spans;
+                        writes runs/calibrate.json with per-stage residuals)
   fp8-flow-moe artifacts
   fp8-flow-moe help | --help | -h
 
 Global flags:
   --threads N   worker count for the native kernels (0 = auto; also
                 FP8_THREADS env var)
+  --trace PATH  (train | epshard | bwd | serve) record spans + counters and
+                write a Chrome trace-event JSON at PATH (open in Perfetto);
+                the embedded counter cross-check against the analytic
+                accounting hard-fails the run on any divergence
+  --trace-detail N   span detail level 0..=2 with --trace (default 1;
+                2 adds per-worker kernel part spans)
 ";
 
 fn main() {
@@ -137,6 +154,8 @@ fn run() -> Result<()> {
         Some("lint") => cmd_lint(&args),
         Some("dqe") => cmd_dqe(&args),
         Some("serve") => cmd_serve(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("calibrate") => cmd_calibrate(&args),
         Some("artifacts") => {
             let rt = Runtime::open(Runtime::default_dir())?;
             for name in rt.manifest.names() {
@@ -196,12 +215,25 @@ fn cmd_train(args: &Args) -> Result<()> {
         exec::threads()
     );
 
+    let mut ts = TraceSession::start(args)?;
     let mut outcomes: Vec<(Recipe, TrainOutcome)> = Vec::new();
     for recipe in recipes {
         // identical init seed + identical corpus stream per recipe
         let mut trainer = NativeTrainer::new(cfg, recipe, seed);
         let mut corpus = Corpus::new(cfg.vocab, seed, noise);
         let out = trainer.run(&mut corpus, steps, log_every)?;
+        if let Some(ts) = ts.as_mut() {
+            // trainer construction quantized the initial weight layouts,
+            // then each step's own audit fields predict the counters
+            ts.expect_weight_prep(recipe, cfg.n_experts);
+            for m in &trainer.metrics {
+                ts.expect(Counter::CastsFwd, m.casts_fwd as u64);
+                ts.expect(Counter::CastsBwd, m.casts_bwd as u64);
+                ts.expect(Counter::RequantsBwd, m.requants_bwd as u64);
+                ts.expect(Counter::OptWeightQuants, m.opt_weight_quants as u64);
+                ts.expect(Counter::OptRequants, m.opt_requants as u64);
+            }
+        }
         let m = trainer.metrics.last().unwrap();
         println!(
             "[{}] first {:.4} → tail-mean {:.4}  ({:.0} tokens/s; per step: \
@@ -233,6 +265,16 @@ fn cmd_train(args: &Args) -> Result<()> {
             );
         }
     }
+    if let Some(ts) = ts {
+        let config = Json::obj()
+            .set("cfg", cfg_name.as_str())
+            .set("steps", steps)
+            .set("ranks", cfg.ranks)
+            .set("experts", cfg.n_experts)
+            .set("top_k", cfg.top_k)
+            .set("seed", seed);
+        ts.finish("train", config)?;
+    }
     Ok(())
 }
 
@@ -261,7 +303,11 @@ fn cmd_train_aot(args: &Args) -> Result<()> {
         out.tail_mean(10),
         out.tokens_per_s
     );
-    let path = write_run_json(&format!("train_{recipe}_{cfg}_s{seed}"), &out.to_json())?;
+    let doc = out
+        .to_json()
+        .set("schema_version", RUN_SCHEMA_VERSION)
+        .set("kind", "train_aot");
+    let path = write_run_json(&format!("train_{recipe}_{cfg}_s{seed}"), &doc)?;
     println!("wrote {path:?}");
     Ok(())
 }
@@ -333,9 +379,10 @@ impl ShardArgs {
         self.overlap || self.chunks > 1
     }
 
-    /// The shared run-JSON header.
-    fn to_json(&self) -> Json {
-        Json::obj()
+    /// The shared run-JSON header under the unified `runs/` schema
+    /// (`schema_version` + `kind` first, then the shape/flag fields).
+    fn to_json(&self, kind: &str) -> Json {
+        Json::run_doc(kind)
             .set("ranks", self.ranks)
             .set("tokens", self.tokens)
             .set("experts", self.experts)
@@ -355,6 +402,231 @@ fn bits_eq(a: &[f32], b: &[f32]) -> bool {
     a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
 }
 
+/// A `--trace <path>` session: installs a fresh [`obs::Recorder`] for the
+/// duration of a subcommand, accumulates the analytically expected totals
+/// of every counter the command can predict exactly, and on [`finish`]
+/// writes the Chrome-trace document with the cross-check verdict embedded
+/// — then enforces that verdict through the error contract. The file is
+/// written *before* any bail so a failing trace can still be inspected.
+///
+/// [`finish`]: TraceSession::finish
+struct TraceSession {
+    rec: std::sync::Arc<obs::Recorder>,
+    _guard: obs::InstallGuard,
+    path: String,
+    exp: obs::CounterTotals,
+    checked: Vec<Counter>,
+    /// Analytic per-stage op counts for `calibrate` (see
+    /// `obs::calibrate::FITTED_STAGES`): tokens through the router, bytes
+    /// through explicit entry/Q(dy) quants, FLOPs through the expert FFNs.
+    feat_tokens_routed: f64,
+    feat_quant_bytes: f64,
+    feat_ffn_flops: f64,
+}
+
+impl TraceSession {
+    /// Open a session when `--trace <path>` was given; `--trace-detail N`
+    /// picks the span detail level (default 1, 2 adds kernel part spans).
+    fn start(args: &Args) -> Result<Option<TraceSession>> {
+        let Some(path) = args.get("trace") else { return Ok(None) };
+        ensure!(!path.is_empty(), "--trace needs a file path");
+        let detail = args.usize_or("trace-detail", 1);
+        ensure!(detail <= 2, "--trace-detail must be 0, 1, or 2");
+        let rec = obs::Recorder::new(detail as u8);
+        let guard = obs::install(rec.clone());
+        Ok(Some(TraceSession {
+            rec,
+            _guard: guard,
+            path: path.to_string(),
+            exp: Default::default(),
+            checked: Vec::new(),
+            feat_tokens_routed: 0.0,
+            feat_quant_bytes: 0.0,
+            feat_ffn_flops: 0.0,
+        }))
+    }
+
+    /// Record that the command's own analytic accounting expects counter
+    /// `c` to end the session `n` higher, and enroll `c` in the
+    /// cross-check (an `expect(c, 0)` pins a counter at zero).
+    fn expect(&mut self, c: Counter, n: u64) {
+        self.exp[c as usize] += n;
+        if !self.checked.contains(&c) {
+            self.checked.push(c);
+        }
+    }
+
+    /// Expected optimizer-tail quants of one `PreparedWeights::new` /
+    /// `requantize_from_masters` under the recorder: 6 master-sourced
+    /// layouts per expert for either FP8 recipe, none for BF16, and zero
+    /// requants for all three (the casting-free tail, §3.4).
+    fn expect_weight_prep(&mut self, recipe: Recipe, experts: usize) {
+        let quants = if recipe == Recipe::Bf16 { 0 } else { 6 * experts as u64 };
+        self.expect(Counter::OptWeightQuants, quants);
+        self.expect(Counter::OptRequants, 0);
+    }
+
+    /// Account one executed EP forward: cast counts from the variant's
+    /// lint graph (`ExecPrediction`), wire counts from the run's own
+    /// exact byte accounting — two independent derivations the recorded
+    /// counters must both agree with.
+    fn expect_ep_forward(
+        &mut self,
+        variant: Variant,
+        experts: usize,
+        top_k: usize,
+        shape: &EpShape,
+        out: &EpForward,
+    ) {
+        let pred = ExecPrediction::of(&build(variant), experts, top_k);
+        self.expect(Counter::CastsFwd, pred.casts_fwd as u64);
+        self.expect(Counter::CastsBwd, 0);
+        self.expect(Counter::RequantsBwd, 0);
+        self.expect(Counter::WirePayloadBytes, out.dispatch_payload_bytes as u64);
+        self.expect(Counter::WireSidecarBytes, out.dispatch_sidecar_bytes as u64);
+        self.expect(Counter::WireBuffers, out.dispatch_buffers as u64);
+        self.expect(Counter::CombineBytes, out.combine_bytes as u64);
+        self.feat_tokens_routed += shape.tokens as f64;
+        if variant == Variant::Fp8Flow {
+            // the single entry quant is the only explicit fwd cast
+            self.feat_quant_bytes += (shape.tokens * shape.d_model) as f64;
+        }
+        self.feat_ffn_flops += CostTable::expert_flops(shape);
+    }
+
+    /// Account one executed EP backward (same split: casts/requants from
+    /// the lint graph, wire bytes from the run).
+    fn expect_ep_backward(&mut self, pred: &ExecPrediction, out: &EpBackward) {
+        self.expect(Counter::CastsBwd, pred.casts_bwd as u64);
+        self.expect(Counter::RequantsBwd, pred.requants_bwd as u64);
+        self.expect(Counter::WirePayloadBytes, out.dy_payload_bytes as u64);
+        self.expect(Counter::WireSidecarBytes, out.dy_sidecar_bytes as u64);
+        self.expect(Counter::WireBuffers, out.dy_buffers as u64);
+        self.expect(Counter::CombineBytes, out.dx_bytes as u64);
+    }
+
+    /// Build the trace document, embed the cross-check verdict, write the
+    /// file, and enforce the verdict.
+    fn finish(self, command: &str, config: Json) -> Result<()> {
+        let config = config
+            .set("feat_tokens_routed", self.feat_tokens_routed)
+            .set("feat_quant_bytes", self.feat_quant_bytes)
+            .set("feat_ffn_flops", self.feat_ffn_flops);
+        let totals = self.rec.totals();
+        let mut rows = Json::obj();
+        let mut ok = true;
+        for &c in &self.checked {
+            let (want, got) = (self.exp[c as usize], totals[c as usize]);
+            ok &= want == got;
+            rows = rows.set(
+                c.name(),
+                Json::obj().set("expected", want).set("recorded", got).set("ok", want == got),
+            );
+        }
+        let doc = obs::trace::trace_doc(command, config, &self.rec)
+            .set("cross_check", Json::obj().set("ok", ok).set("counters", rows));
+        std::fs::write(&self.path, doc.render())
+            .with_context(|| format!("writing trace to {:?}", self.path))?;
+        println!("wrote trace {:?} ({} spans)", self.path, self.rec.n_spans());
+        if !ok {
+            for &c in &self.checked {
+                let (want, got) = (self.exp[c as usize], totals[c as usize]);
+                if want != got {
+                    eprintln!("cross-check: {} recorded {got} != expected {want}", c.name());
+                }
+            }
+            bail!("trace counter cross-check failed (trace kept at {:?})", self.path);
+        }
+        println!(
+            "    counter cross-check: {} counters agree with the analytic accounting",
+            self.checked.len()
+        );
+        Ok(())
+    }
+}
+
+/// Validate and summarize trace / runs documents.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let files = &args.positional[1..];
+    ensure!(!files.is_empty(), "usage: fp8-flow-moe trace <file.json> [<file.json> ...]");
+    for f in files {
+        let text = std::fs::read_to_string(f).with_context(|| format!("reading {f:?}"))?;
+        let doc = Json::parse(&text).map_err(|e| anyhow::anyhow!("{f}: not JSON: {e}"))?;
+        let s = obs::trace::validate(&doc).map_err(|e| anyhow::anyhow!("{f}: invalid: {e}"))?;
+        println!("{f}: OK — kind {:?}, {} event(s)", s.kind, s.n_events);
+        if s.kind == "trace" {
+            println!(
+                "    command {:?}, {} rank(s), wall {:.3} ms{}",
+                s.command,
+                s.n_ranks,
+                s.wall_s * 1e3,
+                match s.cross_check_ok {
+                    Some(true) => ", cross-check ok",
+                    Some(false) => ", cross-check FAILED",
+                    None => "",
+                }
+            );
+            for (stage, busy) in s.busy_by_stage.iter().take(8) {
+                println!("    busy {stage:<12} {:>10.3} ms", busy * 1e3);
+            }
+            let nz: Vec<String> = s
+                .counters
+                .iter()
+                .filter(|(_, v)| *v > 0)
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect();
+            if !nz.is_empty() {
+                println!("    counters: {}", nz.join(", "));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Fit the sim's per-op [`CostTable`] from recorded traces and write
+/// `runs/calibrate.json` (see `obs::calibrate`).
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let files = &args.positional[1..];
+    ensure!(!files.is_empty(), "usage: fp8-flow-moe calibrate <trace.json> [<trace.json> ...]");
+    let mut traces: Vec<(String, Json)> = Vec::new();
+    for f in files {
+        let text = std::fs::read_to_string(f).with_context(|| format!("reading {f:?}"))?;
+        let doc = Json::parse(&text).map_err(|e| anyhow::anyhow!("{f}: not JSON: {e}"))?;
+        traces.push((f.clone(), doc));
+    }
+    let report = obs::calibrate::fit(&traces).map_err(|e| anyhow::anyhow!("calibrate: {e}"))?;
+    println!("calibrate: fitted per-op costs from {} trace(s):", report.n_traces);
+    let t = &report.table;
+    for (name, unit, v) in [
+        ("route", "s/token", t.route_s_per_token),
+        ("quant", "s/byte", t.quant_s_per_byte),
+        ("pack", "s/byte", t.pack_s_per_byte),
+        ("a2a", "s/byte", t.a2a_s_per_byte),
+        ("assemble", "s/byte", t.assemble_s_per_byte),
+        ("ffn", "s/flop", t.gemm_s_per_flop),
+        ("combine", "s/byte", t.combine_s_per_byte),
+    ] {
+        println!("    {name:<8} {v:>12.3e} {unit}");
+    }
+    let mut worst: Vec<&fp8_flow_moe::obs::calibrate::ResidualRow> = report.rows.iter().collect();
+    worst.sort_by(|a, b| {
+        b.residual_s().abs().partial_cmp(&a.residual_s().abs()).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    for r in worst.iter().take(5) {
+        println!(
+            "    residual {:<8} {:>10.4} ms (busy {:.4} ms, predicted {:.4} ms) [{}]",
+            r.stage,
+            r.residual_s() * 1e3,
+            r.busy_s * 1e3,
+            r.predicted_s * 1e3,
+            r.trace
+        );
+    }
+    let path = write_run_json("calibrate", &report.to_json())?;
+    println!("wrote {path:?}");
+    Ok(())
+}
+
 /// Execute the EP-sharded forward and report measured vs modeled
 /// per-stage times (see `rust/EXPERIMENTS.md` §"Measured vs modeled EP
 /// dispatch").
@@ -370,23 +642,33 @@ fn cmd_epshard(args: &Args) -> Result<()> {
         "epshard: {ranks} simulated ranks sharing {} workers (--threads to change)",
         exec::threads()
     );
+    let mut ts = TraceSession::start(args)?;
 
-    let mut doc = sa.to_json();
+    let mut doc = sa.to_json("epshard");
     for recipe in sa.recipes.iter().copied() {
+        let (key, variant) = match recipe {
+            Recipe::Bf16 => ("bf16", Variant::Bf16),
+            Recipe::Blockwise => ("blockwise", Variant::TeBlockwise),
+            Recipe::Fp8Flow => ("fp8flow", Variant::Fp8Flow),
+        };
         let pw = PreparedWeights::new(w.clone(), recipe);
+        if let Some(ts) = ts.as_mut() {
+            ts.expect_weight_prep(recipe, experts);
+        }
         let cfg = EpConfig::serial(ranks, top_k, capacity, 0);
         let shape = EpShape::of(&x, &pw, &cfg);
         let out = ep_forward(&x, &pw, &cfg);
+        if let Some(ts) = ts.as_mut() {
+            ts.expect_ep_forward(variant, experts, top_k, &shape, &out);
+        }
         print!("{}", ep_measured_vs_modeled(recipe, ranks, &shape, &out));
         println!();
-        let key = match recipe {
-            Recipe::Bf16 => "bf16",
-            Recipe::Blockwise => "blockwise",
-            Recipe::Fp8Flow => "fp8flow",
-        };
         doc = doc.set(key, out.to_json());
         if sa.pipeline_requested() {
             let over = ep_forward(&x, &pw, &cfg.with_pipeline(sa.chunks, sa.overlap));
+            if let Some(ts) = ts.as_mut() {
+                ts.expect_ep_forward(variant, experts, top_k, &shape, &over);
+            }
             ensure!(
                 bits_eq(&over.y.data, &out.y.data),
                 "{key}: pipelined output diverged bitwise from the serialized baseline"
@@ -398,6 +680,9 @@ fn cmd_epshard(args: &Args) -> Result<()> {
     }
     let path = write_run_json(&format!("epshard_r{ranks}"), &doc)?;
     println!("wrote {path:?}");
+    if let Some(ts) = ts {
+        ts.finish("epshard", sa.to_json("config"))?;
+    }
     Ok(())
 }
 
@@ -420,12 +705,16 @@ fn cmd_bwd(args: &Args) -> Result<()> {
         exec::threads()
     );
 
-    // BF16 reference gradients for the deviation report
+    let mut ts = TraceSession::start(args)?;
+
+    // BF16 reference gradients for the deviation report (contributes
+    // nothing to any checked counter: BF16 executes zero casts and the
+    // single-rank backward never touches the wire)
     let pw_ref = PreparedWeights::new(w.clone(), Recipe::Bf16);
     let stash_ref = forward_stash(&x, &pw_ref, top_k, capacity);
     let ref_grads = moe_backward(&stash_ref, &pw_ref, &dy);
 
-    let mut doc = sa.to_json();
+    let mut doc = sa.to_json("bwd");
     for recipe in sa.recipes.iter().copied() {
         let (key, variant) = match recipe {
             Recipe::Bf16 => ("bf16", Variant::Bf16),
@@ -433,6 +722,7 @@ fn cmd_bwd(args: &Args) -> Result<()> {
             Recipe::Fp8Flow => ("fp8flow", Variant::Fp8Flow),
         };
         println!("== bwd {key}: R={ranks} ==");
+        let pred = ExecPrediction::of_chunked(&build(variant), experts, top_k, sa.chunks);
         // Single-rank BF16 *is* the deviation reference — reuse it rather
         // than recomputing the identical forward+backward.
         let computed: Option<(FwdStash, MoeGrads, Option<Json>)> =
@@ -441,9 +731,16 @@ fn cmd_bwd(args: &Args) -> Result<()> {
             } else {
                 let pw = PreparedWeights::new(w.clone(), recipe);
                 let stash = forward_stash(&x, &pw, top_k, capacity);
+                if let Some(ts) = ts.as_mut() {
+                    ts.expect_weight_prep(recipe, experts);
+                    ts.expect(Counter::CastsFwd, pred.casts_fwd as u64);
+                }
                 let (grads, wj) = if ranks > 1 || sa.pipeline_requested() {
                     let cfg = EpConfig::serial(ranks, top_k, capacity, 0);
                     let out = ep_backward(&stash, &pw, &dy, &cfg);
+                    if let Some(ts) = ts.as_mut() {
+                        ts.expect_ep_backward(&pred, &out);
+                    }
                     let mut j = out.to_json();
                     println!(
                         "    combine-bwd wire {} B payload + {} B sidecar in {} buffers; \
@@ -453,6 +750,9 @@ fn cmd_bwd(args: &Args) -> Result<()> {
                     if sa.pipeline_requested() {
                         let pcfg = cfg.with_pipeline(sa.chunks, sa.overlap);
                         let over = ep_backward(&stash, &pw, &dy, &pcfg);
+                        if let Some(ts) = ts.as_mut() {
+                            ts.expect_ep_backward(&pred, &over);
+                        }
                         ensure!(
                             bits_eq(&over.grads.dx.data, &out.grads.dx.data),
                             "{key}: pipelined backward diverged bitwise from serialized"
@@ -469,6 +769,10 @@ fn cmd_bwd(args: &Args) -> Result<()> {
                     }
                     (out.grads, Some(j))
                 } else {
+                    if let Some(ts) = ts.as_mut() {
+                        ts.expect(Counter::CastsBwd, pred.casts_bwd as u64);
+                        ts.expect(Counter::RequantsBwd, pred.requants_bwd as u64);
+                    }
                     (moe_backward(&stash, &pw, &dy), None)
                 };
                 Some((stash, grads, wj))
@@ -516,6 +820,9 @@ fn cmd_bwd(args: &Args) -> Result<()> {
     }
     let path = write_run_json(&format!("bwd_r{ranks}"), &doc)?;
     println!("wrote {path:?}");
+    if let Some(ts) = ts {
+        ts.finish("bwd", sa.to_json("config"))?;
+    }
     Ok(())
 }
 
@@ -542,7 +849,7 @@ fn cmd_lint(args: &Args) -> Result<()> {
     };
 
     println!("scale-lineage lint: E={experts}, K={top_k}, R={ranks}, C={chunks}\n");
-    let mut doc = Json::obj()
+    let mut doc = Json::run_doc("lint")
         .set("experts", experts)
         .set("top_k", top_k)
         .set("ranks", ranks)
@@ -782,12 +1089,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         exec::threads()
     );
 
+    let mut ts = TraceSession::start(args)?;
     let mut rng = Rng::seed_from(seed);
     let w = MoeWeights::random(d_model, ffn, experts, &mut rng);
     let all_ids: Vec<i32> = requests.iter().flat_map(|r| r.tokens.iter().copied()).collect();
     let x_all = TokenEmbed::new(gen.vocab, d_model, seed).embed(&all_ids);
 
-    let mut doc = Json::obj()
+    let mut doc = Json::run_doc("serve")
         .set("requests", n_requests)
         .set("total_tokens", total_tokens)
         .set("ranks", ranks)
@@ -804,15 +1112,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .set("chunks", chunks)
         .set("overlap", overlap);
     for recipe in recipes {
-        let key = match recipe {
-            Recipe::Bf16 => "bf16",
-            Recipe::Blockwise => "blockwise",
-            Recipe::Fp8Flow => "fp8flow",
+        let (key, variant) = match recipe {
+            Recipe::Bf16 => ("bf16", Variant::Bf16),
+            Recipe::Blockwise => ("blockwise", Variant::TeBlockwise),
+            Recipe::Fp8Flow => ("fp8flow", Variant::Fp8Flow),
         };
+        // per-layer-invocation cast count: both serve paths (staged and
+        // pipelined) execute the same explicit casts as one moe_forward,
+        // independent of batch occupancy, so each flush tick adds exactly
+        // one prediction's worth
+        let pred = ExecPrediction::of(&build(variant), experts, top_k);
         let pw = PreparedWeights::new(w.clone(), recipe);
+        if let Some(ts) = ts.as_mut() {
+            ts.expect_weight_prep(recipe, experts);
+        }
         // one-shot reference over the whole trace: capacity = token count,
         // the drop-free upper bound, so every slot materializes
         let one = moe_forward(&x_all, &pw, top_k, x_all.rows.max(1));
+        if let Some(ts) = ts.as_mut() {
+            ts.expect(Counter::CastsFwd, pred.casts_fwd as u64);
+        }
         let mut engine = ServeEngine::new(
             pw,
             TokenEmbed::new(gen.vocab, d_model, seed),
@@ -836,6 +1155,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         for &cf in &cfs {
             engine.cfg.capacity_factor = cf;
             let s = serve_trace(&engine, &requests, &slo);
+            if let Some(ts) = ts.as_mut() {
+                ts.expect(Counter::CastsFwd, (pred.casts_fwd * s.ticks) as u64);
+                ts.expect(Counter::ServedTokens, s.served_tokens as u64);
+                ts.expect(Counter::DegradedTokens, s.degraded_tokens as u64);
+                ts.expect(Counter::DroppedSlots, s.dropped_slots as u64);
+                ts.feat_tokens_routed += s.mean_batch_tokens * s.ticks as f64;
+            }
             // the bit-identity gate: every fully served token must equal
             // the one-shot forward bit-for-bit (prop_serve pins the same
             // property across rank counts and arrival modes)
@@ -915,6 +1241,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let path = write_run_json(&format!("serve_r{ranks}"), &doc)?;
     println!("wrote {path:?}");
+    if let Some(ts) = ts {
+        let config = Json::obj()
+            .set("requests", n_requests)
+            .set("total_tokens", total_tokens)
+            .set("ranks", ranks)
+            .set("experts", experts)
+            .set("top_k", top_k)
+            .set("d_model", d_model)
+            .set("ffn", ffn)
+            .set("seed", seed)
+            .set("chunks", chunks)
+            .set("overlap", overlap);
+        ts.finish("serve", config)?;
+    }
     Ok(())
 }
 
@@ -923,7 +1263,7 @@ fn cmd_dqe(args: &Args) -> Result<()> {
     let mut rng = Rng::seed_from(7);
     let x = Mat::rand_log_uniform(n, n, -6.0, 6.0, &mut rng);
     println!("double-quantization error (Eq. 1) on a [{n},{n}] log-uniform tensor:\n");
-    let mut doc = Json::obj();
+    let mut doc = Json::run_doc("dqe");
     for (label, mode) in
         [("float scales (incumbent)", ScaleMode::Float), ("po2 scales (ours)", ScaleMode::Po2)]
     {

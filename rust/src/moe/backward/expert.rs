@@ -42,6 +42,7 @@ use crate::moe::backward::BwdStats;
 use crate::moe::gemm::fp8_matmul_with_threads;
 use crate::moe::layer::{PreparedWeights, RankLocalBatch, Recipe, WirePayload};
 use crate::moe::swiglu::{swiglu_bwd_quant_with_threads, swiglu_bwd_with_threads};
+use crate::obs::{self, Counter};
 use crate::util::mat::Mat;
 
 /// Gradients of one expert's weights (f32 master-gradient layout).
@@ -106,6 +107,12 @@ pub fn expert_ffn_bwd(
         dxk.data[lx * cap * d..(lx + 1) * cap * d].copy_from_slice(&dxe.data);
         grads.push(g);
         stats.add(s);
+    }
+    // The audit above IS the counter semantics: Fp8Flow contributes (0, 0)
+    // here, Blockwise (3, 5) per expert — same algebra as ExecPrediction.
+    if obs::enabled() {
+        obs::count(Counter::CastsBwd, stats.casts as u64);
+        obs::count(Counter::RequantsBwd, stats.requants as u64);
     }
     ExpertBwd { experts: er, dxk, grads, stats }
 }

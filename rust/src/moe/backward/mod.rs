@@ -47,6 +47,7 @@ use crate::moe::layer::{
     combine, dispatch, DispatchSource, PreparedWeights, RankLocalBatch, Recipe,
 };
 use crate::moe::router::{route_backward, RouterBwd, Routing};
+use crate::obs::{self, Counter};
 use crate::util::mat::Mat;
 
 /// Executed cast accounting for one backward pass — the measured side of
@@ -191,21 +192,29 @@ pub fn moe_backward_with_threads(
     for (kk, slot) in stash.slots.iter().enumerate() {
         // ---- combine-bwd: gate-scale (+ entry quant) → permute+pad ----
         let tc = Instant::now();
+        let sc = obs::enabled().then(|| {
+            obs::span(format!("combine-bwd k{kk}"), obs::SpanMeta::stage("combine-bwd").step(kk))
+        });
         let dyg = scale_by_gates_with_threads(dy, &stash.routing, kk, threads);
         let dyk = if w.recipe == Recipe::Fp8Flow {
             // Q(dy): the recipe's single explicit backward cast (§3.2 —
             // everything downstream stays in FP8 code space)
             stats.casts += 1;
+            obs::count(Counter::CastsBwd, 1);
             let dyq =
                 quantize_rowwise_with_threads(&dyg, Fp8Format::E4M3, ScaleMode::Po2, threads);
             combine_bwd(DispatchSource::Fp8(&dyq), &slot.plan, 0..e, cap, threads)
         } else {
             combine_bwd(DispatchSource::Dense(&dyg), &slot.plan, 0..e, cap, threads)
         };
+        drop(sc);
         stages.combine_bwd_s += tc.elapsed().as_secs_f64();
 
         // ---- expert backward: dgrad + wgrad, experts parallel ----
         let te = Instant::now();
+        let se = obs::enabled().then(|| {
+            obs::span(format!("expert-bwd k{kk}"), obs::SpanMeta::stage("expert-bwd").step(kk))
+        });
         let eb = expert_ffn_bwd(&dyk, slot, w, threads);
         stats.add(eb.stats);
         for (lx, g) in eb.grads.iter().enumerate() {
@@ -213,14 +222,19 @@ pub fn moe_backward_with_threads(
             mat_add_assign(&mut dw3[lx], &g.dw3);
             mat_add_assign(&mut dw2[lx], &g.dw2);
         }
+        drop(se);
         stages.expert_bwd_s += te.elapsed().as_secs_f64();
 
         // ---- dispatch-bwd: scatter dX back to token order ----
         let td = Instant::now();
+        let sd = obs::enabled().then(|| {
+            obs::span(format!("dispatch-bwd k{kk}"), obs::SpanMeta::stage("dispatch-bwd").step(kk))
+        });
         let dxs = dispatch_bwd(&eb.dxk, &slot.plan, 0..e, cap, t, threads);
         for (a, b) in dx.data.iter_mut().zip(&dxs.data) {
             *a += b;
         }
+        drop(sd);
         stages.dispatch_bwd_s += td.elapsed().as_secs_f64();
     }
     MoeGrads { dx, dw1, dw3, dw2, d_router: None, stats, stages }

@@ -30,6 +30,7 @@ use crate::moe::layer::{
 use crate::moe::permute::permute_pad_plan;
 use crate::moe::router::{route, Routing};
 use crate::moe::swiglu::{swiglu_quant_with_threads, swiglu_with_threads};
+use crate::obs::{self, Counter};
 use crate::util::mat::Mat;
 
 /// The stashed fc2 input: exactly what the forward fc2 GEMM consumed.
@@ -126,6 +127,7 @@ pub fn forward_stash_with_routing(
     // fp8flow: ONE entry quantization (same call as moe_forward's)
     let x_q = if w.recipe == Recipe::Fp8Flow {
         cast_ops += 1;
+        obs::count(Counter::CastsFwd, 1);
         Some(quantize_rowwise(x, Fp8Format::E4M3, ScaleMode::Po2))
     } else {
         None
@@ -209,6 +211,8 @@ fn expert_ffn_stash(batch: &RankLocalBatch, w: &PreparedWeights, threads: usize)
             let per: Vec<((Mat, Mat, Mat, Fp8Tensor), Fp8Tensor)> = exec::map_parts(&p, |lx| {
                 let ge = er.start + lx;
                 let xe = mat_rows(xg, lx * cap, cap);
+                // same 2-casts-per-expert audit as layer::expert_ffn
+                obs::count(Counter::CastsFwd, 2);
                 let xq = quantize_rowwise_with_threads(&xe, Fp8Format::E4M3, ScaleMode::Float, 1);
                 let gate = fp8_matmul_with_threads(&xq, &w.w1_t[ge], 1);
                 let up = fp8_matmul_with_threads(&xq, &w.w3_t[ge], 1);

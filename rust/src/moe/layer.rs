@@ -42,6 +42,7 @@ use crate::moe::permute::{
 };
 use crate::moe::router::route;
 use crate::moe::swiglu::{swiglu_quant_with_threads, swiglu_with_threads};
+use crate::obs::{self, Counter};
 use crate::util::mat::Mat;
 use crate::util::rng::Rng;
 
@@ -198,6 +199,7 @@ impl PreparedWeights {
         self.w1_d = quant_d(&self.raw.w1);
         self.w3_d = quant_d(&self.raw.w3);
         self.w2_d = quant_d(&self.raw.w2);
+        obs::count(Counter::OptWeightQuants, (6 * self.raw.n_experts()) as u64);
         WeightPrepStats { weight_quants: 6 * self.raw.n_experts(), requants: 0 }
     }
 }
@@ -323,6 +325,7 @@ pub fn expert_ffn(batch: &RankLocalBatch, w: &PreparedWeights, threads: usize) -
             // TE-style: dispatched BF16; quantize at each GEMM boundary
             // (2 explicit casts per expert: Q(x) for fc1, Q(act) for fc2).
             dense_expert_loop(xg, er, cap, threads, |ge, xe| {
+                obs::count(Counter::CastsFwd, 2);
                 // Q(x) for fc1 (one cast), DQ after GEMM is implicit in
                 // f32 accumulation; fc1 runs twice (gate+up) on the same
                 // quantized activation.
@@ -458,6 +461,7 @@ pub fn moe_forward(x: &Mat, w: &PreparedWeights, top_k: usize, capacity: usize) 
     // fp8flow: ONE entry quantization (the recipe's single entry cast)
     let x_q = if w.recipe == Recipe::Fp8Flow {
         cast_ops += 1;
+        obs::count(Counter::CastsFwd, 1);
         Some(quantize_rowwise(x, Fp8Format::E4M3, ScaleMode::Po2))
     } else {
         None

@@ -1,0 +1,284 @@
+//! Fit [`crate::cluster::sim::CostTable`] per-op costs from recorded
+//! traces — the back end of the `calibrate` subcommand.
+//!
+//! Each trace contributes one observation per pipeline stage: the
+//! stage's **measured busy seconds** (summed span durations, straight
+//! from [`crate::obs::trace::validate`]'s per-`cat` totals) paired with
+//! an **analytic op count** for that stage. Wire-bound stages (`pack`,
+//! `a2a`, `assemble`, `combine`) take their op counts from the
+//! recorder's own byte counters — the very numbers the live cross-check
+//! pins against `analysis` — while compute stages take them from
+//! `feat_*` keys the driver writes into the trace `config` block
+//! (`feat_tokens_routed`, `feat_quant_bytes`, `feat_ffn_flops`).
+//!
+//! The fit is per-stage scalar least squares through the origin:
+//! `cost = Σ busyᵢ·xᵢ / Σ xᵢ²` over all traces, which for a single
+//! trace degenerates to the exact ratio `busy / x`. A stage whose op
+//! count is zero everywhere (e.g. `quant` in a BF16-only trace) fits to
+//! zero rather than poisoning the table with 0/0. Residual rows report
+//! `fitted·x − busy` per (trace, stage) so a bad fit is visible in
+//! `runs/calibrate.json` instead of silently mispredicting sweeps.
+
+use crate::cluster::sim::CostTable;
+use crate::obs::trace::{validate, TraceSummary};
+use crate::util::json::Json;
+
+/// The stages `calibrate` knows how to cost, with the op-count feature
+/// each one is regressed against. Stages in a trace outside this set
+/// (e.g. backward-pass stages) are ignored by the fit but preserved in
+/// the trace itself.
+pub const FITTED_STAGES: [&str; 7] =
+    ["route", "quant", "pack", "a2a", "assemble", "ffn", "combine"];
+
+fn counter(sum: &TraceSummary, name: &str) -> f64 {
+    sum.counters.iter().find(|(k, _)| k == name).map_or(0.0, |(_, v)| *v as f64)
+}
+
+fn busy(sum: &TraceSummary, stage: &str) -> f64 {
+    sum.busy_by_stage.iter().find(|(c, _)| c == stage).map_or(0.0, |(_, b)| *b)
+}
+
+fn feat(doc: &Json, key: &str) -> f64 {
+    doc.get("config").and_then(|c| c.get(key)).and_then(Json::as_f64).unwrap_or(0.0)
+}
+
+/// One (trace, stage) observation after fitting: how far the fitted
+/// cost's prediction lands from the measured busy time.
+#[derive(Clone, Debug)]
+pub struct ResidualRow {
+    /// Trace label (file path as given to [`fit`]).
+    pub trace: String,
+    /// Stage name (member of [`FITTED_STAGES`]).
+    pub stage: String,
+    /// Analytic op count regressed against (tokens, bytes, or FLOPs).
+    pub feature: f64,
+    /// Measured busy seconds (summed span durations across ranks).
+    pub busy_s: f64,
+    /// `fitted_cost · feature`.
+    pub predicted_s: f64,
+}
+
+impl ResidualRow {
+    /// Signed prediction error in seconds.
+    pub fn residual_s(&self) -> f64 {
+        self.predicted_s - self.busy_s
+    }
+}
+
+/// A completed calibration: the fitted cost table plus its per-stage
+/// residuals against every input trace.
+#[derive(Clone, Debug)]
+pub struct CalibrationReport {
+    /// Fitted per-op costs, ready for [`CostTable::predict_ep_stages`].
+    pub table: CostTable,
+    /// One row per (trace, stage) with a nonzero feature or busy time.
+    pub rows: Vec<ResidualRow>,
+    /// Number of traces the fit consumed.
+    pub n_traces: usize,
+}
+
+impl CalibrationReport {
+    /// Render as the `runs/calibrate.json` document (unified schema,
+    /// kind `calibrate`).
+    pub fn to_json(&self) -> Json {
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::obj()
+                    .set("trace", r.trace.as_str())
+                    .set("stage", r.stage.as_str())
+                    .set("feature", r.feature)
+                    .set("busy_s", r.busy_s)
+                    .set("predicted_s", r.predicted_s)
+                    .set("residual_s", r.residual_s())
+            })
+            .collect();
+        Json::run_doc("calibrate")
+            .set("n_traces", self.n_traces)
+            .set("fitted", self.table.to_json())
+            .set("stages", Json::Arr(rows))
+    }
+}
+
+/// Per-stage op count for one validated trace. Wire stages read the
+/// recorder's byte counters; compute stages read the driver-written
+/// `feat_*` config keys.
+fn feature_of(stage: &str, doc: &Json, sum: &TraceSummary) -> f64 {
+    let wire = counter(sum, "wire_payload_bytes") + counter(sum, "wire_sidecar_bytes");
+    match stage {
+        "route" => feat(doc, "feat_tokens_routed"),
+        "quant" => feat(doc, "feat_quant_bytes"),
+        "pack" | "a2a" | "assemble" => wire,
+        "ffn" => feat(doc, "feat_ffn_flops"),
+        "combine" => counter(sum, "combine_bytes"),
+        _ => 0.0,
+    }
+}
+
+/// Fit a [`CostTable`] from one or more parsed trace documents. Every
+/// document must validate and be of kind `trace`; anything else is an
+/// error naming the offending file.
+pub fn fit(traces: &[(String, Json)]) -> Result<CalibrationReport, String> {
+    if traces.is_empty() {
+        return Err("calibrate needs at least one trace file".to_string());
+    }
+    let mut obs: Vec<(String, TraceSummary, &Json)> = Vec::with_capacity(traces.len());
+    for (path, doc) in traces {
+        let sum = validate(doc).map_err(|e| format!("{path}: {e}"))?;
+        if sum.kind != "trace" {
+            return Err(format!(
+                "{path}: kind `{}` is a runs document, not a trace — re-run with --trace",
+                sum.kind
+            ));
+        }
+        obs.push((path.clone(), sum, doc));
+    }
+
+    // Per-stage least squares through the origin over all traces.
+    let mut costs = [0.0f64; FITTED_STAGES.len()];
+    for (si, stage) in FITTED_STAGES.iter().enumerate() {
+        let (mut sum_bx, mut sum_xx) = (0.0f64, 0.0f64);
+        for (_, sum, doc) in &obs {
+            let x = feature_of(stage, doc, sum);
+            sum_bx += busy(sum, stage) * x;
+            sum_xx += x * x;
+        }
+        if sum_xx > 0.0 {
+            costs[si] = sum_bx / sum_xx;
+        }
+    }
+    let table = CostTable {
+        route_s_per_token: costs[0],
+        quant_s_per_byte: costs[1],
+        pack_s_per_byte: costs[2],
+        a2a_s_per_byte: costs[3],
+        assemble_s_per_byte: costs[4],
+        gemm_s_per_flop: costs[5],
+        combine_s_per_byte: costs[6],
+    };
+
+    let mut rows = Vec::new();
+    for (path, sum, doc) in &obs {
+        for (si, stage) in FITTED_STAGES.iter().enumerate() {
+            let x = feature_of(stage, doc, sum);
+            let b = busy(sum, stage);
+            if x == 0.0 && b == 0.0 {
+                continue; // stage absent from this trace
+            }
+            rows.push(ResidualRow {
+                trace: path.clone(),
+                stage: (*stage).to_string(),
+                feature: x,
+                busy_s: b,
+                predicted_s: costs[si] * x,
+            });
+        }
+    }
+    Ok(CalibrationReport { table, rows, n_traces: obs.len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-build a valid trace doc with exact per-stage busy times (µs
+    /// event durations), byte counters, and config features.
+    fn synthetic(
+        stage_busy_us: &[(&str, f64)],
+        wire_bytes: u64,
+        combine_bytes: u64,
+        feats: &[(&str, f64)],
+    ) -> Json {
+        let events = stage_busy_us
+            .iter()
+            .map(|(stage, us)| {
+                Json::obj()
+                    .set("name", *stage)
+                    .set("cat", *stage)
+                    .set("ph", "X")
+                    .set("ts", 0.0)
+                    .set("dur", *us)
+                    .set("pid", 0u64)
+                    .set("tid", 0u64)
+            })
+            .collect();
+        let mut config = Json::obj();
+        for (k, v) in feats {
+            config = config.set(k, *v);
+        }
+        Json::run_doc("trace")
+            .set("command", "epshard")
+            .set("config", config)
+            .set(
+                "counters",
+                Json::obj()
+                    .set("wire_payload_bytes", wire_bytes)
+                    .set("wire_sidecar_bytes", 0u64)
+                    .set("combine_bytes", combine_bytes),
+            )
+            .set("traceEvents", Json::Arr(events))
+    }
+
+    #[test]
+    fn single_trace_fit_is_the_exact_ratio() {
+        // 2 s of ffn busy over 1e12 FLOPs → 2e-12 s/FLOP, residual 0.
+        let doc = synthetic(
+            &[("ffn", 2e6), ("a2a", 1e6), ("combine", 5e5)],
+            1_000_000,
+            500_000,
+            &[("feat_ffn_flops", 1e12)],
+        );
+        let rep = fit(&[("t.json".to_string(), doc)]).expect("fit");
+        assert!((rep.table.gemm_s_per_flop - 2e-12).abs() < 1e-24);
+        assert!((rep.table.a2a_s_per_byte - 1e-6).abs() < 1e-18);
+        assert!((rep.table.combine_s_per_byte - 1e-6).abs() < 1e-18);
+        for r in &rep.rows {
+            assert!(r.residual_s().abs() < 1e-12, "{}: {}", r.stage, r.residual_s());
+        }
+    }
+
+    #[test]
+    fn two_consistent_traces_recover_the_common_cost() {
+        // Both traces generated from cost 3e-7 s/byte on a2a.
+        let a = synthetic(&[("a2a", 0.3e6)], 1_000_000, 0, &[]);
+        let b = synthetic(&[("a2a", 1.2e6)], 4_000_000, 0, &[]);
+        let rep =
+            fit(&[("a.json".to_string(), a), ("b.json".to_string(), b)]).expect("fit");
+        assert!((rep.table.a2a_s_per_byte - 3e-7).abs() < 1e-18);
+        assert_eq!(rep.n_traces, 2);
+    }
+
+    #[test]
+    fn zero_feature_stage_fits_to_zero_without_nan() {
+        let doc = synthetic(&[("quant", 1e6)], 0, 0, &[]);
+        let rep = fit(&[("t.json".to_string(), doc)]).expect("fit");
+        assert_eq!(rep.table.quant_s_per_byte, 0.0);
+        assert!(rep.table.quant_s_per_byte.is_finite());
+        // the mismatch is still visible as a residual row
+        assert!(rep
+            .rows
+            .iter()
+            .any(|r| r.stage == "quant" && r.busy_s > 0.0 && r.predicted_s == 0.0));
+    }
+
+    #[test]
+    fn rejects_runs_docs_and_empty_input() {
+        assert!(fit(&[]).is_err());
+        let runs = Json::run_doc("epshard");
+        let err = fit(&[("r.json".to_string(), runs)]).unwrap_err();
+        assert!(err.contains("not a trace"), "{err}");
+    }
+
+    #[test]
+    fn report_json_carries_schema_header_and_fitted_table() {
+        let doc = synthetic(&[("route", 1e5)], 0, 0, &[("feat_tokens_routed", 1024.0)]);
+        let rep = fit(&[("t.json".to_string(), doc)]).expect("fit");
+        let j = rep.to_json();
+        assert_eq!(j.get("kind").and_then(Json::as_str), Some("calibrate"));
+        assert!(j.get("schema_version").is_some());
+        let fitted = j.get("fitted").expect("fitted block");
+        let c = fitted.get("route_s_per_token").and_then(Json::as_f64).unwrap();
+        assert!((c - 0.1 / 1024.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,33 @@
+//! Unified tracing & metrics: span recorder, Chrome-trace export,
+//! counter cross-checks, and the calibrated sim feed.
+//!
+//! The repo's measurement claims (throughput, casts, wire bytes) used to
+//! flow through four ad-hoc stopwatch piles; this module replaces them
+//! with one structured stream:
+//!
+//! * [`recorder`] — a thread-safe global [`recorder::Recorder`] of
+//!   hierarchical spans (step → rank → lane → stage → chunk), monotonic
+//!   counters, and scalar sample series. When no recorder is installed
+//!   every hook is a single relaxed atomic load — provably
+//!   non-perturbing, pinned bitwise by `tests/prop_obs.rs`.
+//! * [`trace`] — renders a recording as a Chrome trace-event JSON file
+//!   (Perfetto-loadable) under the unified `runs/` schema, and validates
+//!   / summarizes such files for the `trace` subcommand.
+//! * [`calibrate`] — fits [`crate::cluster::sim::CostTable`] per-op
+//!   costs from recorded spans, closing the loop from measurement back
+//!   into the analytic model.
+//!
+//! Counter semantics deliberately mirror [`crate::analysis`]'s
+//! `ExecPrediction` algebra: drivers snapshot-diff the recorder around
+//! each run and hard-fail on any divergence, so a trace that validates
+//! is also a trace whose cast/requant/wire accounting is proven against
+//! the static analyzer.
+
+pub mod calibrate;
+pub mod recorder;
+pub mod trace;
+
+pub use recorder::{
+    count, detail, enabled, install, sample, session_token, span, Counter, CounterTotals,
+    InstallGuard, Recorder, SessionToken, SpanGuard, SpanMeta, SpanRec, DRIVER_RANK,
+};

@@ -1,0 +1,515 @@
+//! The span/counter/histogram recorder and its process-global install
+//! point.
+//!
+//! **Non-perturbation contract.** When no recorder is installed (the
+//! default), every instrumentation call — [`span`], [`count`],
+//! [`sample`] — is a single relaxed atomic load followed by an immediate
+//! return: no allocation, no lock, no clock read. Instrumentation sits
+//! *around* kernels, never inside their arithmetic, so recording on vs.
+//! off cannot change a single output bit; `tests/prop_obs.rs` pins that
+//! bitwise across thread budgets and rank counts.
+//!
+//! **Threading.** Counters are per-recorder atomics (lock-free
+//! increments from any lane); spans and samples append under a mutex
+//! (spans are recorded at stage granularity, so contention is cold).
+//! [`install`] holds a process-wide session lock for the lifetime of the
+//! returned [`InstallGuard`] — concurrent recording sessions (e.g.
+//! parallel `cargo test` threads) serialize instead of polluting each
+//! other's counters.
+//!
+//! **Session scoping.** Recording is additionally scoped to the
+//! installing thread's *thread tree*: a thread participates only if it
+//! installed the recorder or was spawned by a participating thread
+//! through one of the `exec` spawn sites (which propagate a
+//! [`SessionToken`]). An unrelated concurrent workload in the same
+//! process — another test running instrumented code while a session is
+//! active — therefore cannot cross-count into the installed recorder,
+//! which is what makes exact-totals assertions deterministic under a
+//! parallel test harness.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+/// Number of distinct [`Counter`]s.
+pub const N_COUNTERS: usize = 12;
+
+/// Monotonic event counters, incremented at the executed op sites
+/// (quantize launches, wire packing, serving drop accounting). The five
+/// cast/requant counters use the exact counting convention of the
+/// `analysis::ExecPrediction` audit fields, which is what makes the live
+/// trace↔lint cross-check an equality, not an approximation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// Forward-path explicit casts (entry quant; blockwise per-expert Q).
+    CastsFwd = 0,
+    /// Backward-path explicit casts (Q(dy); blockwise per-expert Qs).
+    CastsBwd = 1,
+    /// Backward requantizations of already-FP8 tensors (naive transposes).
+    RequantsBwd = 2,
+    /// Optimizer-tail weight quantizations from the f32 masters.
+    OptWeightQuants = 3,
+    /// Optimizer-tail requantizations (zero for every executed recipe).
+    OptRequants = 4,
+    /// All-to-all payload bytes actually packed onto the wire.
+    WirePayloadBytes = 5,
+    /// Scale-sidecar bytes actually packed onto the wire.
+    WireSidecarBytes = 6,
+    /// Wire buffers shipped (FP8 ships codes + sidecar = 2 per message).
+    WireBuffers = 7,
+    /// Bytes reduced in the combine stage (BF16-accounted partial rows).
+    CombineBytes = 8,
+    /// Serving: slots dropped by capacity truncation.
+    DroppedSlots = 9,
+    /// Serving: tokens served with all top-k slots intact.
+    ServedTokens = 10,
+    /// Serving: tokens served with at least one dropped slot.
+    DegradedTokens = 11,
+}
+
+impl Counter {
+    /// Every counter, in index order.
+    pub const ALL: [Counter; N_COUNTERS] = [
+        Counter::CastsFwd,
+        Counter::CastsBwd,
+        Counter::RequantsBwd,
+        Counter::OptWeightQuants,
+        Counter::OptRequants,
+        Counter::WirePayloadBytes,
+        Counter::WireSidecarBytes,
+        Counter::WireBuffers,
+        Counter::CombineBytes,
+        Counter::DroppedSlots,
+        Counter::ServedTokens,
+        Counter::DegradedTokens,
+    ];
+
+    /// Stable snake_case name (JSON key in the trace `counters` block).
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::CastsFwd => "casts_fwd",
+            Counter::CastsBwd => "casts_bwd",
+            Counter::RequantsBwd => "requants_bwd",
+            Counter::OptWeightQuants => "opt_weight_quants",
+            Counter::OptRequants => "opt_requants",
+            Counter::WirePayloadBytes => "wire_payload_bytes",
+            Counter::WireSidecarBytes => "wire_sidecar_bytes",
+            Counter::WireBuffers => "wire_buffers",
+            Counter::CombineBytes => "combine_bytes",
+            Counter::DroppedSlots => "dropped_slots",
+            Counter::ServedTokens => "served_tokens",
+            Counter::DegradedTokens => "degraded_tokens",
+        }
+    }
+}
+
+/// Snapshot of all counter totals (index = `Counter as usize`), used for
+/// before/after diffing around a measured section.
+pub type CounterTotals = [u64; N_COUNTERS];
+
+/// Pseudo-rank for driver-side spans (route, entry quant, step
+/// orchestration) — rendered as the `driver` process in the Chrome trace.
+pub const DRIVER_RANK: u32 = u32::MAX;
+
+/// Span coordinates in the step → rank → lane → stage → chunk hierarchy.
+/// `stage` is the Chrome-trace category; rank maps to the trace `pid`
+/// ([`DRIVER_RANK`] → the driver pseudo-process) and lane to `tid`.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanMeta {
+    /// Pipeline stage (trace category): `route`, `quant`, `pack`, `a2a`,
+    /// `assemble`, `ffn`, `combine`, `combine-bwd`, `expert-bwd`,
+    /// `dispatch-bwd`, `fwd`, `bwd`, `opt`, `tick`, …
+    pub stage: &'static str,
+    /// Simulated rank ([`DRIVER_RANK`] for driver-side work).
+    pub rank: u32,
+    /// Execution lane within the rank (0 when unlaned).
+    pub lane: u32,
+    /// Outer iteration: train step, serve tick, or top-k slot.
+    pub step: u32,
+    /// Pipeline chunk within the slot; -1 when not chunked.
+    pub chunk: i64,
+}
+
+impl SpanMeta {
+    /// Driver-side meta for `stage` (rank = [`DRIVER_RANK`], lane 0,
+    /// step 0, no chunk). Narrow with the builder methods.
+    pub fn stage(stage: &'static str) -> SpanMeta {
+        SpanMeta { stage, rank: DRIVER_RANK, lane: 0, step: 0, chunk: -1 }
+    }
+
+    /// Set the simulated rank.
+    pub fn rank(mut self, r: usize) -> SpanMeta {
+        self.rank = r as u32;
+        self
+    }
+
+    /// Set the lane.
+    pub fn lane(mut self, l: usize) -> SpanMeta {
+        self.lane = l as u32;
+        self
+    }
+
+    /// Set the outer iteration (train step / serve tick / top-k slot).
+    pub fn step(mut self, s: usize) -> SpanMeta {
+        self.step = s as u32;
+        self
+    }
+
+    /// Set the pipeline chunk.
+    pub fn chunk(mut self, c: usize) -> SpanMeta {
+        self.chunk = c as i64;
+        self
+    }
+}
+
+/// One recorded span: a closed `[t0_s, t1_s]` interval with its
+/// coordinates. Times are seconds since the recorder's epoch
+/// ([`Recorder::new`]).
+#[derive(Clone, Debug)]
+pub struct SpanRec {
+    /// Display name (Chrome-trace `name`).
+    pub name: String,
+    /// Coordinates (stage/rank/lane/step/chunk).
+    pub meta: SpanMeta,
+    /// Start offset, seconds since the recorder epoch.
+    pub t0_s: f64,
+    /// End offset, seconds since the recorder epoch.
+    pub t1_s: f64,
+}
+
+impl SpanRec {
+    /// Busy seconds of this span.
+    pub fn dur_s(&self) -> f64 {
+        self.t1_s - self.t0_s
+    }
+}
+
+/// The in-memory trace sink: spans + counters + scalar samples, shared
+/// by every instrumented layer while installed.
+pub struct Recorder {
+    epoch: Instant,
+    detail: u8,
+    counters: [AtomicU64; N_COUNTERS],
+    spans: Mutex<Vec<SpanRec>>,
+    samples: Mutex<Vec<(&'static str, f64)>>,
+}
+
+impl Recorder {
+    /// A fresh recorder. `detail` gates span granularity: 1 records
+    /// stage-level spans (the `--trace` default); ≥ 2 additionally
+    /// records fine-grained kernel-part spans ([`detail`]).
+    pub fn new(detail: u8) -> Arc<Recorder> {
+        Arc::new(Recorder {
+            epoch: Instant::now(),
+            detail,
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            spans: Mutex::new(Vec::new()),
+            samples: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Seconds since this recorder was created.
+    pub fn elapsed_s(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// The configured detail level.
+    pub fn detail_level(&self) -> u8 {
+        self.detail
+    }
+
+    /// Current totals of every counter (a consistent-enough snapshot:
+    /// callers snapshot outside the measured section).
+    pub fn totals(&self) -> CounterTotals {
+        std::array::from_fn(|i| self.counters[i].load(Ordering::Relaxed))
+    }
+
+    /// Clone of every recorded span, in completion order.
+    pub fn spans(&self) -> Vec<SpanRec> {
+        lock(&self.spans).clone()
+    }
+
+    /// Number of spans recorded so far.
+    pub fn n_spans(&self) -> usize {
+        lock(&self.spans).len()
+    }
+
+    /// Clone of every recorded scalar sample `(series, value)`.
+    pub fn samples(&self) -> Vec<(&'static str, f64)> {
+        lock(&self.samples).clone()
+    }
+
+    fn push_span(&self, s: SpanRec) {
+        lock(&self.spans).push(s);
+    }
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// --- process-global install point --------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static DETAIL: AtomicU8 = AtomicU8::new(0);
+static CURRENT: Mutex<Option<Arc<Recorder>>> = Mutex::new(None);
+static SESSION: Mutex<()> = Mutex::new(());
+
+thread_local! {
+    /// Whether the current thread belongs to the active session's thread
+    /// tree (set by [`install`] on the installing thread and replayed on
+    /// spawned workers via [`SessionToken::adopt`]).
+    static IN_SESSION: Cell<bool> = const { Cell::new(false) };
+}
+
+/// A thread's session membership, captured at a spawn site with
+/// [`session_token`] and replayed on the spawned worker with
+/// [`SessionToken::adopt`]. The `exec` pool sites do this for every
+/// scoped worker, so a whole EP run records; threads outside the tree
+/// (an unrelated concurrent workload) see every hook as a no-op.
+#[derive(Clone, Copy, Debug)]
+pub struct SessionToken(bool);
+
+/// Capture the calling thread's session membership for a worker it is
+/// about to spawn.
+pub fn session_token() -> SessionToken {
+    SessionToken(IN_SESSION.with(Cell::get))
+}
+
+impl SessionToken {
+    /// Adopt the captured membership on the current (freshly spawned)
+    /// thread. Scoped workers die with their scope, so no reset is
+    /// needed.
+    pub fn adopt(self) {
+        IN_SESSION.with(|c| c.set(self.0));
+    }
+}
+
+/// Keeps a recorder installed; uninstalls on drop. Holds the process-wide
+/// recording-session lock for its whole lifetime, so overlapping sessions
+/// (parallel tests) serialize instead of cross-counting. Must be dropped
+/// on the thread that called [`install`] (it clears that thread's
+/// session membership).
+pub struct InstallGuard {
+    _session: MutexGuard<'static, ()>,
+}
+
+impl Drop for InstallGuard {
+    fn drop(&mut self) {
+        ENABLED.store(false, Ordering::SeqCst);
+        DETAIL.store(0, Ordering::SeqCst);
+        IN_SESSION.with(|c| c.set(false));
+        *lock(&CURRENT) = None;
+    }
+}
+
+/// Install `rec` as the process-global recorder until the guard drops.
+/// Blocks if another session is active (see [`InstallGuard`]).
+pub fn install(rec: Arc<Recorder>) -> InstallGuard {
+    let session = SESSION.lock().unwrap_or_else(|e| e.into_inner());
+    DETAIL.store(rec.detail, Ordering::SeqCst);
+    *lock(&CURRENT) = Some(rec);
+    IN_SESSION.with(|c| c.set(true));
+    ENABLED.store(true, Ordering::SeqCst);
+    InstallGuard { _session: session }
+}
+
+/// Whether a recorder is installed *and* the calling thread is part of
+/// its session — the fast path every instrumentation site checks first.
+/// With no session active anywhere (the production default when `--trace`
+/// is off) this is a single relaxed atomic load; the thread-local
+/// membership bit is consulted only while some session is live.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed) && IN_SESSION.with(Cell::get)
+}
+
+/// Installed detail level (0 when off): fine-grained sites record only
+/// at `detail() >= 2`, keeping the default span volume bounded.
+#[inline]
+pub fn detail() -> u8 {
+    if !enabled() {
+        return 0;
+    }
+    DETAIL.load(Ordering::Relaxed)
+}
+
+fn current() -> Option<Arc<Recorder>> {
+    if !enabled() {
+        return None;
+    }
+    lock(&CURRENT).clone()
+}
+
+/// Add `n` to counter `c` on the installed recorder (no-op when off).
+#[inline]
+pub fn count(c: Counter, n: u64) {
+    if !enabled() {
+        return;
+    }
+    if let Some(r) = current() {
+        r.counters[c as usize].fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// Record scalar `v` into the named sample series (no-op when off).
+/// Serving uses this for per-request latencies — the exact-histogram
+/// feed behind the trace file's quantile block.
+#[inline]
+pub fn sample(series: &'static str, v: f64) {
+    if !enabled() {
+        return;
+    }
+    if let Some(r) = current() {
+        lock(&r.samples).push((series, v));
+    }
+}
+
+/// Open a span; it closes (and is recorded) when the returned guard
+/// drops. When no recorder is installed this is the no-op fast path.
+#[inline]
+pub fn span(name: impl Into<String>, meta: SpanMeta) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { inner: None };
+    }
+    let Some(rec) = current() else {
+        return SpanGuard { inner: None };
+    };
+    let t0_s = rec.elapsed_s();
+    SpanGuard { inner: Some(SpanInner { rec, name: name.into(), meta, t0_s }) }
+}
+
+struct SpanInner {
+    rec: Arc<Recorder>,
+    name: String,
+    meta: SpanMeta,
+    t0_s: f64,
+}
+
+/// RAII handle for an open span (see [`span`]).
+pub struct SpanGuard {
+    inner: Option<SpanInner>,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(SpanInner { rec, name, meta, t0_s }) = self.inner.take() {
+            let t1_s = rec.elapsed_s();
+            rec.push_span(SpanRec { name, meta, t0_s, t1_s });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_paths_are_noops() {
+        // Not installed ⇒ nothing observable happens (and nothing panics).
+        assert!(!enabled());
+        assert_eq!(detail(), 0);
+        count(Counter::CastsFwd, 5);
+        sample("x", 1.0);
+        let g = span("dead", SpanMeta::stage("route"));
+        drop(g);
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn install_records_and_uninstall_restores() {
+        let rec = Recorder::new(1);
+        {
+            let _g = install(rec.clone());
+            assert!(enabled());
+            assert_eq!(detail(), 1);
+            count(Counter::CastsFwd, 2);
+            count(Counter::CastsFwd, 3);
+            count(Counter::WireBuffers, 7);
+            sample("lat_s", 0.25);
+            {
+                let _s = span("pack r0 c0", SpanMeta::stage("pack").rank(0).lane(1).chunk(0));
+            }
+        }
+        assert!(!enabled(), "guard drop must disable recording");
+        let t = rec.totals();
+        assert_eq!(t[Counter::CastsFwd as usize], 5);
+        assert_eq!(t[Counter::WireBuffers as usize], 7);
+        assert_eq!(t[Counter::CastsBwd as usize], 0);
+        let spans = rec.spans();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].name, "pack r0 c0");
+        assert_eq!(spans[0].meta.stage, "pack");
+        assert_eq!(spans[0].meta.rank, 0);
+        assert_eq!(spans[0].meta.lane, 1);
+        assert_eq!(spans[0].meta.chunk, 0);
+        assert!(spans[0].t1_s >= spans[0].t0_s);
+        assert_eq!(rec.samples(), vec![("lat_s", 0.25)]);
+    }
+
+    #[test]
+    fn sessions_serialize_and_do_not_cross_count() {
+        let a = Recorder::new(1);
+        {
+            let _g = install(a.clone());
+            count(Counter::DroppedSlots, 1);
+        }
+        let b = Recorder::new(1);
+        {
+            let _g = install(b.clone());
+            count(Counter::DroppedSlots, 10);
+        }
+        assert_eq!(a.totals()[Counter::DroppedSlots as usize], 1);
+        assert_eq!(b.totals()[Counter::DroppedSlots as usize], 10);
+    }
+
+    #[test]
+    fn counters_accumulate_across_threads() {
+        let rec = Recorder::new(1);
+        let _g = install(rec.clone());
+        let tok = session_token();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(move || {
+                    tok.adopt();
+                    for _ in 0..100 {
+                        count(Counter::ServedTokens, 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(rec.totals()[Counter::ServedTokens as usize], 400);
+    }
+
+    #[test]
+    fn threads_outside_the_session_tree_do_not_record() {
+        let rec = Recorder::new(1);
+        let _g = install(rec.clone());
+        count(Counter::ServedTokens, 1);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                // no adopt(): this thread models an unrelated concurrent
+                // workload — its hooks must be no-ops
+                assert!(!enabled());
+                count(Counter::ServedTokens, 100);
+                sample("stray", 1.0);
+                drop(span("stray", SpanMeta::stage("route")));
+            });
+        });
+        assert_eq!(rec.totals()[Counter::ServedTokens as usize], 1);
+        assert_eq!(rec.n_spans(), 0);
+        assert!(rec.samples().is_empty());
+    }
+
+    #[test]
+    fn counter_names_are_unique() {
+        let mut names: Vec<&str> = Counter::ALL.iter().map(|c| c.name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), N_COUNTERS);
+        for (i, c) in Counter::ALL.iter().enumerate() {
+            assert_eq!(*c as usize, i, "ALL must be in index order");
+        }
+    }
+}

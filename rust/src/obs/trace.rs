@@ -1,0 +1,352 @@
+//! Chrome trace-event export and the `trace validate` / `trace summarize`
+//! back end.
+//!
+//! A trace file is one JSON object in the Chrome trace-event **object
+//! format** — a `traceEvents` array of complete (`"ph":"X"`) events plus
+//! metadata — so `chrome://tracing` and [Perfetto](https://ui.perfetto.dev)
+//! load it directly. Extra top-level keys carry the run's structured
+//! metrics under the unified `runs/` schema
+//! ([`crate::util::json::RUN_SCHEMA_VERSION`]):
+//!
+//! * `pid` = simulated rank ([`DRIVER_RANK`] renders as the `driver`
+//!   pseudo-process), `tid` = lane, `cat` = stage, `ts`/`dur` in µs;
+//! * `args` carries the span's step/slot and pipeline chunk;
+//! * `counters` is the recorder's monotonic-counter block;
+//! * `histograms` summarizes each scalar sample series with exact
+//!   quantiles (same pick convention as the serving reporter);
+//! * `cross_check` (when the driver ran one) records the live
+//!   counters-vs-`analysis::ExecPrediction` comparison — [`validate`]
+//!   fails a trace whose cross-check failed.
+
+use crate::obs::recorder::{Counter, CounterTotals, Recorder, DRIVER_RANK};
+use crate::util::json::{Json, RUN_SCHEMA_VERSION};
+
+/// Render a counter-totals snapshot as the trace `counters` object.
+pub fn counters_json(t: &CounterTotals) -> Json {
+    let mut j = Json::obj();
+    for c in Counter::ALL {
+        j = j.set(c.name(), t[c as usize]);
+    }
+    j
+}
+
+/// Exact quantile over a sorted sample slice (the serving convention:
+/// index `round(q · (n-1))`).
+fn pick(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = (q * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn histograms_json(rec: &Recorder) -> Json {
+    let mut by_series: Vec<(&'static str, Vec<f64>)> = Vec::new();
+    for (name, v) in rec.samples() {
+        match by_series.iter_mut().find(|(n, _)| *n == name) {
+            Some((_, vs)) => vs.push(v),
+            None => by_series.push((name, vec![v])),
+        }
+    }
+    let mut j = Json::obj();
+    for (name, mut vs) in by_series {
+        vs.sort_by(f64::total_cmp);
+        let n = vs.len();
+        let mean = vs.iter().sum::<f64>() / n as f64;
+        j = j.set(
+            name,
+            Json::obj()
+                .set("count", n)
+                .set("mean", mean)
+                .set("min", vs[0])
+                .set("p50", pick(&vs, 0.50))
+                .set("p99", pick(&vs, 0.99))
+                .set("max", vs[n - 1]),
+        );
+    }
+    j
+}
+
+/// Build the full trace document for one recorded run. `command` is the
+/// CLI subcommand that produced it; `config` is its shape/knob object
+/// (consumed by `calibrate`). Append run-specific blocks (e.g.
+/// `cross_check`) with [`Json::set`] before writing.
+pub fn trace_doc(command: &str, config: Json, rec: &Recorder) -> Json {
+    let spans = rec.spans();
+    let mut events = Vec::with_capacity(spans.len() + 8);
+    // metadata: name each (pid, tid) pair once, pids once
+    let mut pids: Vec<u32> = Vec::new();
+    let mut threads: Vec<(u32, u32)> = Vec::new();
+    for s in &spans {
+        if !pids.contains(&s.meta.rank) {
+            pids.push(s.meta.rank);
+        }
+        if !threads.contains(&(s.meta.rank, s.meta.lane)) {
+            threads.push((s.meta.rank, s.meta.lane));
+        }
+    }
+    pids.sort_unstable();
+    threads.sort_unstable();
+    for pid in &pids {
+        let pname =
+            if *pid == DRIVER_RANK { "driver".to_string() } else { format!("rank {pid}") };
+        events.push(
+            Json::obj()
+                .set("name", "process_name")
+                .set("ph", "M")
+                .set("pid", u64::from(*pid))
+                .set("tid", 0u64)
+                .set("args", Json::obj().set("name", pname)),
+        );
+    }
+    for (pid, tid) in &threads {
+        events.push(
+            Json::obj()
+                .set("name", "thread_name")
+                .set("ph", "M")
+                .set("pid", u64::from(*pid))
+                .set("tid", u64::from(*tid))
+                .set("args", Json::obj().set("name", format!("lane {tid}"))),
+        );
+    }
+    for s in &spans {
+        let mut args = Json::obj().set("step", u64::from(s.meta.step));
+        if s.meta.chunk >= 0 {
+            args = args.set("chunk", s.meta.chunk);
+        }
+        events.push(
+            Json::obj()
+                .set("name", s.name.as_str())
+                .set("cat", s.meta.stage)
+                .set("ph", "X")
+                .set("ts", s.t0_s * 1e6)
+                .set("dur", s.dur_s().max(0.0) * 1e6)
+                .set("pid", u64::from(s.meta.rank))
+                .set("tid", u64::from(s.meta.lane))
+                .set("args", args),
+        );
+    }
+    Json::run_doc("trace")
+        .set("command", command)
+        .set("config", config)
+        .set("elapsed_s", rec.elapsed_s())
+        .set("counters", counters_json(&rec.totals()))
+        .set("histograms", histograms_json(rec))
+        .set("traceEvents", Json::Arr(events))
+}
+
+/// Structured result of validating (and summarizing) a trace or runs
+/// document.
+#[derive(Clone, Debug)]
+pub struct TraceSummary {
+    /// Document kind (`trace`, `epshard`, `serve`, …).
+    pub kind: String,
+    /// Subcommand recorded in the trace (empty for plain runs docs).
+    pub command: String,
+    /// Complete (`ph:"X"`) events.
+    pub n_events: usize,
+    /// Distinct simulated ranks (driver pseudo-process excluded).
+    pub n_ranks: usize,
+    /// Trace extent: max(ts+dur) − min(ts), seconds (0 when eventless).
+    pub wall_s: f64,
+    /// Per-stage busy seconds (summed span durations), descending.
+    pub busy_by_stage: Vec<(String, f64)>,
+    /// Counter totals, in catalog order.
+    pub counters: Vec<(String, u64)>,
+    /// Live cross-check verdict, when the trace carries one.
+    pub cross_check_ok: Option<bool>,
+}
+
+fn need<'a>(doc: &'a Json, key: &str, what: &str) -> Result<&'a Json, String> {
+    doc.get(key).ok_or_else(|| format!("missing `{key}` ({what})"))
+}
+
+/// Validate a parsed document against the unified schema. Rejects unknown
+/// `schema_version`s, malformed trace events, negative durations,
+/// non-integer counters, and traces whose recorded live cross-check
+/// failed. Plain `runs/` documents (any non-`trace` kind) validate on
+/// the schema header alone.
+pub fn validate(doc: &Json) -> Result<TraceSummary, String> {
+    let ver = need(doc, "schema_version", "unified runs/trace schema")?
+        .as_u64()
+        .ok_or("`schema_version` must be a non-negative integer")?;
+    if ver != RUN_SCHEMA_VERSION {
+        return Err(format!(
+            "unknown schema_version {ver} (this binary speaks {RUN_SCHEMA_VERSION})"
+        ));
+    }
+    let kind = need(doc, "kind", "document kind tag")?
+        .as_str()
+        .ok_or("`kind` must be a string")?
+        .to_string();
+    let mut summary = TraceSummary {
+        kind: kind.clone(),
+        command: String::new(),
+        n_events: 0,
+        n_ranks: 0,
+        wall_s: 0.0,
+        busy_by_stage: Vec::new(),
+        counters: Vec::new(),
+        cross_check_ok: None,
+    };
+    if kind != "trace" {
+        return Ok(summary);
+    }
+    summary.command =
+        need(doc, "command", "producing subcommand")?.as_str().unwrap_or("").to_string();
+
+    let counters = need(doc, "counters", "recorder counter block")?
+        .as_obj()
+        .ok_or("`counters` must be an object")?;
+    for (k, v) in counters {
+        let n = v.as_u64().ok_or_else(|| format!("counter `{k}` must be a u64"))?;
+        summary.counters.push((k.clone(), n));
+    }
+
+    let events = need(doc, "traceEvents", "Chrome trace-event array")?
+        .as_arr()
+        .ok_or("`traceEvents` must be an array")?;
+    let mut ranks: Vec<u64> = Vec::new();
+    let (mut t_min, mut t_max) = (f64::INFINITY, f64::NEG_INFINITY);
+    for (i, ev) in events.iter().enumerate() {
+        let at = |k: &str| ev.get(k).ok_or_else(|| format!("event {i}: missing `{k}`"));
+        let ph = at("ph")?.as_str().ok_or_else(|| format!("event {i}: `ph` not a string"))?;
+        match ph {
+            "M" => {} // metadata events carry only name/args
+            "X" => {
+                at("name")?.as_str().ok_or_else(|| format!("event {i}: unnamed"))?;
+                let cat = at("cat")?
+                    .as_str()
+                    .ok_or_else(|| format!("event {i}: `cat` not a string"))?;
+                let ts = at("ts")?
+                    .as_f64()
+                    .filter(|t| t.is_finite() && *t >= 0.0)
+                    .ok_or_else(|| format!("event {i}: bad `ts`"))?;
+                let dur = at("dur")?
+                    .as_f64()
+                    .filter(|d| d.is_finite() && *d >= 0.0)
+                    .ok_or_else(|| format!("event {i}: negative or non-finite `dur`"))?;
+                let pid =
+                    at("pid")?.as_u64().ok_or_else(|| format!("event {i}: bad `pid`"))?;
+                at("tid")?.as_u64().ok_or_else(|| format!("event {i}: bad `tid`"))?;
+                summary.n_events += 1;
+                if pid != u64::from(DRIVER_RANK) && !ranks.contains(&pid) {
+                    ranks.push(pid);
+                }
+                t_min = t_min.min(ts);
+                t_max = t_max.max(ts + dur);
+                let busy_s = dur / 1e6;
+                match summary.busy_by_stage.iter_mut().find(|(c, _)| c == cat) {
+                    Some((_, b)) => *b += busy_s,
+                    None => summary.busy_by_stage.push((cat.to_string(), busy_s)),
+                }
+            }
+            other => return Err(format!("event {i}: unsupported phase `{other}`")),
+        }
+    }
+    summary.n_ranks = ranks.len();
+    if summary.n_events > 0 {
+        summary.wall_s = (t_max - t_min) / 1e6;
+    }
+    summary.busy_by_stage.sort_by(|a, b| b.1.total_cmp(&a.1));
+
+    if let Some(cc) = doc.get("cross_check") {
+        let ok = cc
+            .get("ok")
+            .and_then(Json::as_bool)
+            .ok_or("`cross_check` must carry a bool `ok`")?;
+        summary.cross_check_ok = Some(ok);
+        if !ok {
+            return Err("trace records a FAILED live counter cross-check".to_string());
+        }
+    }
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::recorder::{self, SpanMeta};
+
+    fn recorded() -> std::sync::Arc<Recorder> {
+        let rec = Recorder::new(1);
+        {
+            let _g = recorder::install(rec.clone());
+            {
+                let _a = recorder::span("route", SpanMeta::stage("route"));
+                let _b = recorder::span("pack r0 c0", SpanMeta::stage("pack").rank(0).chunk(0));
+            }
+            recorder::count(Counter::CastsFwd, 1);
+            recorder::count(Counter::WirePayloadBytes, 4096);
+            recorder::sample("latency_s", 0.5);
+            recorder::sample("latency_s", 1.5);
+        }
+        rec
+    }
+
+    #[test]
+    fn trace_doc_round_trips_and_validates() {
+        let rec = recorded();
+        let doc = trace_doc("epshard", Json::obj().set("ranks", 2usize), &rec);
+        let text = doc.render();
+        let back = Json::parse(&text).expect("trace parses");
+        let sum = validate(&back).expect("trace validates");
+        assert_eq!(sum.kind, "trace");
+        assert_eq!(sum.command, "epshard");
+        assert_eq!(sum.n_events, 2);
+        assert_eq!(sum.n_ranks, 1, "driver pseudo-process not counted");
+        assert!(sum.busy_by_stage.iter().any(|(c, _)| c == "route"));
+        assert!(sum
+            .counters
+            .iter()
+            .any(|(k, v)| k == "wire_payload_bytes" && *v == 4096));
+        let hist = back.get("histograms").and_then(|h| h.get("latency_s")).unwrap();
+        assert_eq!(hist.get("count").and_then(Json::as_u64), Some(2));
+        assert_eq!(hist.get("mean").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn validate_rejects_unknown_schema_version() {
+        let doc = Json::obj().set("schema_version", 999u64).set("kind", "trace");
+        let err = validate(&doc).unwrap_err();
+        assert!(err.contains("unknown schema_version"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_missing_header_and_bad_events() {
+        assert!(validate(&Json::obj()).is_err());
+        let doc = Json::run_doc("trace")
+            .set("command", "x")
+            .set("counters", Json::obj())
+            .set(
+                "traceEvents",
+                Json::Arr(vec![Json::obj().set("ph", "X").set("name", "a")]),
+            );
+        assert!(validate(&doc).is_err(), "X event without cat/ts/dur must fail");
+        let doc = Json::run_doc("trace")
+            .set("command", "x")
+            .set("counters", Json::obj().set("casts_fwd", -1i64))
+            .set("traceEvents", Json::Arr(vec![]));
+        assert!(validate(&doc).is_err(), "negative counter must fail");
+    }
+
+    #[test]
+    fn validate_accepts_plain_runs_docs_by_header() {
+        let doc = Json::run_doc("epshard").set("ranks", 2usize);
+        let sum = validate(&doc).expect("runs doc validates on header");
+        assert_eq!(sum.kind, "epshard");
+        assert_eq!(sum.n_events, 0);
+    }
+
+    #[test]
+    fn validate_fails_a_failed_cross_check() {
+        let rec = recorded();
+        let doc = trace_doc("epshard", Json::obj(), &rec)
+            .set("cross_check", Json::obj().set("ok", false));
+        let err = validate(&doc).unwrap_err();
+        assert!(err.contains("FAILED"), "{err}");
+        let doc2 = trace_doc("epshard", Json::obj(), &recorded())
+            .set("cross_check", Json::obj().set("ok", true));
+        assert_eq!(validate(&doc2).unwrap().cross_check_ok, Some(true));
+    }
+}

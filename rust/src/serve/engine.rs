@@ -30,6 +30,7 @@ use crate::fp8::{Fp8Format, ScaleMode};
 use crate::moe::layer::{combine, dispatch, expert_ffn, DispatchSource, PreparedWeights, Recipe};
 use crate::moe::permute::permute_pad_plan;
 use crate::moe::router::route;
+use crate::obs::{self, Counter};
 use crate::util::mat::Mat;
 use crate::util::rng::Rng;
 
@@ -161,7 +162,10 @@ impl ServeEngine {
         let cap = self.capacity_for(t);
         let shard = Partition::even(e, ranks);
 
+        let sr = obs::enabled()
+            .then(|| obs::span(format!("route t{t}"), obs::SpanMeta::stage("route")));
         let routing = route(x, &self.weights.raw.router, top_k);
+        drop(sr);
         let plans: Vec<Vec<i64>> = (0..top_k)
             .map(|kk| {
                 let expert_of: Vec<usize> = routing.experts.iter().map(|ex| ex[kk]).collect();
@@ -228,8 +232,12 @@ impl ServeEngine {
         let e = self.weights.raw.n_experts();
         let ranks = self.cfg.ranks;
         let shard = Partition::even(e, ranks);
-        let x_q = (self.weights.recipe == Recipe::Fp8Flow)
-            .then(|| quantize_rowwise(x, Fp8Format::E4M3, ScaleMode::Po2));
+        let x_q = (self.weights.recipe == Recipe::Fp8Flow).then(|| {
+            let _s = obs::enabled()
+                .then(|| obs::span("entry quant".to_string(), obs::SpanMeta::stage("quant")));
+            obs::count(Counter::CastsFwd, 1); // Fp8Flow's single forward cast
+            quantize_rowwise(x, Fp8Format::E4M3, ScaleMode::Po2)
+        });
         let mut y = Mat::zeros(t, x.cols);
         let mut rank_expert_s = vec![0.0f64; ranks];
         for (kk, plan) in plans.iter().enumerate() {
@@ -239,11 +247,32 @@ impl ServeEngine {
                     Some(xq) => DispatchSource::Fp8(xq),
                     None => DispatchSource::Dense(x),
                 };
+                let sd = obs::enabled().then(|| {
+                    obs::span(
+                        format!("dispatch r{r} k{kk}"),
+                        obs::SpanMeta::stage("dispatch").rank(r as u32).step(kk),
+                    )
+                });
                 let batch = dispatch(src, plan, er.clone(), cap, threads);
+                drop(sd);
                 let te = Instant::now();
+                let sf = obs::enabled().then(|| {
+                    obs::span(
+                        format!("ffn r{r} k{kk}"),
+                        obs::SpanMeta::stage("ffn").rank(r as u32).step(kk),
+                    )
+                });
                 let yk = expert_ffn(&batch, &self.weights, threads);
+                drop(sf);
                 rank_expert_s[r] += te.elapsed().as_secs_f64();
+                let sc = obs::enabled().then(|| {
+                    obs::span(
+                        format!("combine r{r} k{kk}"),
+                        obs::SpanMeta::stage("combine").rank(r as u32).step(kk),
+                    )
+                });
                 let part = combine(&yk, plan, er, cap, t, threads);
+                drop(sc);
                 for (acc, v) in slot.data.iter_mut().zip(&part.data) {
                     *acc += v;
                 }
@@ -339,11 +368,22 @@ pub fn serve_trace(engine: &ServeEngine, requests: &[Request], slo: &SloPolicy) 
     let mut busy_s = 0.0f64;
     let (mut cap_min, mut cap_max) = (usize::MAX, 0usize);
 
-    for tick in &ticks {
+    for (ti, tick) in ticks.iter().enumerate() {
+        let st = obs::enabled()
+            .then(|| obs::span(format!("tick {ti}"), obs::SpanMeta::stage("tick").step(ti)));
         let ids: Vec<i32> =
             tick.requests.iter().flat_map(|&i| requests[i].tokens.iter().copied()).collect();
         let x = engine.embed.embed(&ids);
         let res = engine.forward_batch(&x);
+        drop(st);
+        if obs::enabled() {
+            let served = res.fully_served.iter().filter(|&&s| s).count();
+            obs::count(Counter::ServedTokens, served as u64);
+            obs::count(Counter::DegradedTokens, (res.fully_served.len() - served) as u64);
+            obs::count(Counter::DroppedSlots, res.dropped_slots as u64);
+            obs::sample("tick_service_s", res.service_s);
+            obs::sample("tick_tokens", x.rows as f64);
+        }
 
         let start = engine_free.max(tick.flush_s);
         let done = start + res.service_s;
@@ -351,6 +391,9 @@ pub fn serve_trace(engine: &ServeEngine, requests: &[Request], slo: &SloPolicy) 
         busy_s += res.service_s;
         for &i in &tick.requests {
             latencies.push(done - requests[i].arrival_s);
+            if obs::enabled() {
+                obs::sample("request_latency_s", done - requests[i].arrival_s);
+            }
         }
 
         // scatter tick rows back to the global token stream

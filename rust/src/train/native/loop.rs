@@ -260,8 +260,12 @@ impl NativeTrainer {
         let cfg = self.cfg;
         let (inputs, targets) = next_token_pairs(tokens, cfg.batch, cfg.seq);
 
+        let sk = self.step; // 0-based index of the step being taken
         // ---- forward ----
         let tf = Instant::now();
+        let sp = crate::obs::enabled().then(|| {
+            crate::obs::span(format!("fwd s{sk}"), crate::obs::SpanMeta::stage("fwd").step(sk))
+        });
         let x = embed_rows(&self.embed, &inputs);
         let stash = forward_stash(&x, &self.pw, cfg.top_k, cfg.capacity);
         let mut z = stash.y.clone();
@@ -270,10 +274,14 @@ impl NativeTrainer {
         let (ce, dlogits) = crate::train::native::model::softmax_xent(&logits, &targets);
         let aux = stash.aux_loss;
         let loss = ce + cfg.aux_coef * aux;
+        drop(sp);
         let fwd_s = tf.elapsed().as_secs_f64();
 
         // ---- backward ----
         let tb = Instant::now();
+        let sp = crate::obs::enabled().then(|| {
+            crate::obs::span(format!("bwd s{sk}"), crate::obs::SpanMeta::stage("bwd").step(sk))
+        });
         let dhead = z.transpose().matmul(&dlogits);
         let dz = dlogits.matmul(&self.head.transpose());
         let grads = moe_bwd(&stash, &self.pw, &dz, cfg.aux_coef);
@@ -285,11 +293,15 @@ impl NativeTrainer {
         let mut dx = grads.dx.clone();
         mat_add_assign(&mut dx, &dz);
         let dembed = embed_grad(cfg.vocab, &inputs, &dx);
+        drop(sp);
         let bwd_s = tb.elapsed().as_secs_f64();
 
         // ---- optimizer: masters update, then ONE quantization per FP8
         // layout straight from the masters ----
         let to = Instant::now();
+        let sp = crate::obs::enabled().then(|| {
+            crate::obs::span(format!("opt s{sk}"), crate::obs::SpanMeta::stage("opt").step(sk))
+        });
         let mut params: Vec<&mut Mat> = vec![&mut self.embed, &mut self.head];
         params.push(&mut self.pw.raw.router);
         params.extend(self.pw.raw.w1.iter_mut());
@@ -301,6 +313,7 @@ impl NativeTrainer {
         grad_refs.extend(grads.dw2.iter());
         let lr = self.opt.step(&mut params, &grad_refs);
         let prep = self.pw.requantize_from_masters();
+        drop(sp);
         let opt_s = to.elapsed().as_secs_f64();
 
         self.step += 1;
@@ -366,7 +379,7 @@ impl NativeTrainer {
         let n = self.metrics.len().max(1);
         let sum = |f: fn(&TrainMetrics) -> f64| self.metrics.iter().map(f).sum::<f64>();
         let last = self.metrics.last();
-        Json::obj()
+        Json::run_doc("train")
             .set("outcome", outcome.to_json())
             .set("ranks", self.cfg.ranks)
             .set("top_k", self.cfg.top_k)

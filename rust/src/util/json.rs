@@ -1,10 +1,23 @@
-//! Minimal JSON emitter (substitute for `serde_json`, not vendored here).
+//! Minimal JSON emitter + parser (substitute for `serde_json`, not
+//! vendored here).
 //!
-//! Only what the metrics/experiment writers need: objects, arrays, strings,
-//! numbers, bools. Emission only — the crate never needs to *parse* JSON
-//! (configs are typed Rust; artifacts are HLO text).
+//! Only what the metrics/experiment writers and the trace tooling need:
+//! objects, arrays, strings, numbers, bools. Emission serves the
+//! `runs/*.json` writers; the parser exists for the observability loop —
+//! `trace validate` and `calibrate` read back the documents this module
+//! emitted (round-trip pinned by tests), nothing else.
+//!
+//! Every `runs/` document starts from [`Json::run_doc`], which stamps the
+//! unified [`RUN_SCHEMA_VERSION`] and a `kind` tag — the one schema header
+//! all four CLI writers (`epshard`, `bwd`, `train`, `serve`) and the trace
+//! exporter share; `trace validate` rejects unknown versions.
 
 use std::fmt::Write as _;
+
+/// Version of the unified `runs/*.json` + trace-file schema. Bump when a
+/// document's top-level layout changes incompatibly; `trace validate`
+/// rejects files whose `schema_version` differs from the binary's.
+pub const RUN_SCHEMA_VERSION: u64 = 1;
 
 /// A JSON value tree.
 #[derive(Clone, Debug, PartialEq)]
@@ -29,6 +42,13 @@ impl Json {
         Json::Obj(Vec::new())
     }
 
+    /// The common header of every `runs/` document: an object pre-set
+    /// with `schema_version` ([`RUN_SCHEMA_VERSION`]) and the document
+    /// `kind` (`"epshard"`, `"bwd"`, `"train"`, `"serve"`, `"trace"`, …).
+    pub fn run_doc(kind: &str) -> Json {
+        Json::obj().set("schema_version", RUN_SCHEMA_VERSION).set("kind", kind)
+    }
+
     /// Insert into an object (panics on non-object — programmer error).
     pub fn set(mut self, key: &str, val: impl Into<Json>) -> Json {
         match &mut self {
@@ -43,6 +63,77 @@ impl Json {
         let mut s = String::new();
         self.write(&mut s);
         s
+    }
+
+    // --- read side (trace validate / calibrate) ------------------------
+
+    /// Parse a JSON document. Accepts exactly what [`Json::render`] emits
+    /// plus standard whitespace/escapes; rejects trailing garbage.
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            return Err(format!("trailing data at byte {}", p.i));
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup (`None` on non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Numeric value, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Non-negative integer value, if this is a whole number.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if n.fract() == 0.0 && *n >= 0.0 && *n < 1.9e19 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
+    /// String value, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Bool value, if this is a bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Element slice, if this is an array.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+
+    /// Key/value slice, if this is an object.
+    pub fn as_obj(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Obj(kv) => Some(kv),
+            _ => None,
+        }
     }
 
     fn write(&self, out: &mut String) {
@@ -149,6 +240,192 @@ impl<T: Into<Json>> From<Vec<T>> for Json {
     }
 }
 
+/// Recursive-descent parser over the raw bytes (ASCII structure; string
+/// contents pass through as UTF-8).
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", c as char, self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(format!("unexpected '{}' at byte {}", c as char, self.i)),
+            None => Err("unexpected end of input".to_string()),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).expect("ascii number span");
+        s.parse::<f64>().map(Json::Num).map_err(|_| format!("bad number '{s}' at byte {start}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(c) = self.peek() else {
+                return Err("unterminated string".to_string());
+            };
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(e) = self.peek() else {
+                        return Err("unterminated escape".to_string());
+                    };
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => out.push(self.unicode_escape()?),
+                        _ => return Err(format!("bad escape at byte {}", self.i - 1)),
+                    }
+                }
+                c if c < 0x80 => out.push(c as char),
+                _ => {
+                    // multi-byte UTF-8: copy the full sequence through
+                    let start = self.i - 1;
+                    while self.peek().is_some_and(|c| c & 0xC0 == 0x80) {
+                        self.i += 1;
+                    }
+                    let s = std::str::from_utf8(&self.b[start..self.i])
+                        .map_err(|_| format!("invalid UTF-8 at byte {start}"))?;
+                    out.push_str(s);
+                }
+            }
+        }
+    }
+
+    fn unicode_escape(&mut self) -> Result<char, String> {
+        let hex4 = |p: &mut Parser| -> Result<u32, String> {
+            if p.i + 4 > p.b.len() {
+                return Err("truncated \\u escape".to_string());
+            }
+            let s = std::str::from_utf8(&p.b[p.i..p.i + 4])
+                .map_err(|_| "bad \\u escape".to_string())?;
+            let v = u32::from_str_radix(s, 16).map_err(|_| "bad \\u escape".to_string())?;
+            p.i += 4;
+            Ok(v)
+        };
+        let hi = hex4(self)?;
+        if (0xD800..0xDC00).contains(&hi) {
+            // surrogate pair: the low half must follow as \uXXXX
+            if self.b.get(self.i) == Some(&b'\\') && self.b.get(self.i + 1) == Some(&b'u') {
+                self.i += 2;
+                let lo = hex4(self)?;
+                if !(0xDC00..0xE000).contains(&lo) {
+                    return Err("unpaired high surrogate".to_string());
+                }
+                let c = 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                return char::from_u32(c).ok_or_else(|| "bad surrogate pair".to_string());
+            }
+            return Err("unpaired high surrogate".to_string());
+        }
+        char::from_u32(hi).ok_or_else(|| "bad \\u escape".to_string())
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut xs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(xs));
+        }
+        loop {
+            self.skip_ws();
+            xs.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(xs));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut kv = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(kv));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let v = self.value()?;
+            kv.push((k, v));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(kv));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.i)),
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -182,5 +459,65 @@ mod tests {
     fn non_finite_becomes_null() {
         assert_eq!(Json::Num(f64::NAN).render(), "null");
         assert_eq!(Json::Num(f64::INFINITY).render(), "null");
+    }
+
+    #[test]
+    fn run_doc_carries_the_schema_header() {
+        let j = Json::run_doc("epshard").set("ranks", 4usize);
+        assert_eq!(j.get("schema_version").and_then(Json::as_u64), Some(RUN_SCHEMA_VERSION));
+        assert_eq!(j.get("kind").and_then(Json::as_str), Some("epshard"));
+        assert_eq!(j.get("ranks").and_then(Json::as_u64), Some(4));
+    }
+
+    #[test]
+    fn parse_round_trips_render() {
+        let j = Json::obj()
+            .set("name", "trace \"x\"\n")
+            .set("pi", 3.25f64)
+            .set("neg", -17i64)
+            .set("big", 1.5e300f64)
+            .set("none", Json::Null)
+            .set("flags", vec![true, false])
+            .set("nested", Json::obj().set("k", vec![1usize, 2, 3]));
+        let back = Json::parse(&j.render()).expect("round-trip parse");
+        assert_eq!(back, j);
+        // and the re-render is byte-identical (stable key order)
+        assert_eq!(back.render(), j.render());
+    }
+
+    #[test]
+    fn parse_accepts_whitespace_and_escapes() {
+        let j = Json::parse(" { \"a\" : [ 1 , \"\\u0041\\t\" ] ,\n \"b\" : null } ").unwrap();
+        assert_eq!(j.get("a").and_then(Json::as_arr).map(|x| x.len()), Some(2));
+        assert_eq!(j.get("a").unwrap().as_arr().unwrap()[1].as_str(), Some("A\t"));
+        assert_eq!(j.get("b"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn parse_surrogate_pair() {
+        let j = Json::parse(r#""😀""#).unwrap();
+        assert_eq!(j.as_str(), Some("\u{1F600}"));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Json::parse("{\"a\":}").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{} x").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+        assert!(Json::parse("nul").is_err());
+        assert!(Json::parse("").is_err());
+    }
+
+    #[test]
+    fn accessors_are_type_strict() {
+        let j = Json::parse(r#"{"n":3,"f":3.5,"s":"x","b":true}"#).unwrap();
+        assert_eq!(j.get("n").and_then(Json::as_u64), Some(3));
+        assert_eq!(j.get("f").and_then(Json::as_u64), None, "fractional is not u64");
+        assert_eq!(j.get("f").and_then(Json::as_f64), Some(3.5));
+        assert_eq!(j.get("s").and_then(Json::as_str), Some("x"));
+        assert_eq!(j.get("b").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("missing"), None);
+        assert_eq!(Json::Null.get("n"), None);
     }
 }

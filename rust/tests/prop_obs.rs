@@ -1,0 +1,289 @@
+//! Observability non-perturbation & counter-exactness properties.
+//!
+//! The recorder's contract (see `src/obs/recorder.rs`) has two halves,
+//! each pinned here:
+//!
+//! 1. **Non-perturbation**: recording on vs off is bitwise invisible to
+//!    every executed artifact — forward outputs, backward gradients,
+//!    train-step losses, served rows — across worker budgets {1, 2, 8}
+//!    and rank counts {1, 2, 4}. Instrumentation sits *around* kernels,
+//!    never inside their arithmetic, and this suite is what keeps that
+//!    true as sites accrete.
+//! 2. **Counter exactness**: recorded totals equal the analytic
+//!    accounting — `ExecPrediction` for casts/requants, the EP run's own
+//!    exact byte fields for the wire — and the byte/cast totals are
+//!    invariant under pipeline chunking and schedule (only the
+//!    buffer-count proxy is allowed to grow with chunks).
+//!
+//! Recording is scoped to the installing thread's tree, so these
+//! exact-totals assertions stay deterministic even when the harness runs
+//! other tests of this binary concurrently.
+
+use fp8_flow_moe::analysis::ExecPrediction;
+use fp8_flow_moe::cluster::ep_exec::{ep_backward, ep_forward, EpConfig};
+use fp8_flow_moe::dataflow::{build, Variant};
+use fp8_flow_moe::moe::backward::{forward_stash, moe_backward, MoeGrads};
+use fp8_flow_moe::moe::layer::{MoeWeights, PreparedWeights, Recipe};
+use fp8_flow_moe::obs::{self, Counter};
+use fp8_flow_moe::serve::{
+    generate_requests, serve_trace, ArrivalMode, DropPolicy, GenConfig, ServeConfig, ServeEngine,
+    SloPolicy, TokenEmbed,
+};
+use fp8_flow_moe::train::{Corpus, NativeTrainer, TrainConfig};
+use fp8_flow_moe::util::mat::Mat;
+use fp8_flow_moe::util::prop::assert_mat_bits_eq;
+use fp8_flow_moe::util::rng::Rng;
+
+const RECIPES: [Recipe; 3] = [Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow];
+const THREADS: [usize; 3] = [1, 2, 8];
+const RANKS: [usize; 3] = [1, 2, 4];
+
+fn variant_of(recipe: Recipe) -> Variant {
+    match recipe {
+        Recipe::Bf16 => Variant::Bf16,
+        Recipe::Blockwise => Variant::TeBlockwise,
+        Recipe::Fp8Flow => Variant::Fp8Flow,
+    }
+}
+
+fn assert_grads_bits_eq(a: &MoeGrads, b: &MoeGrads, what: &str) {
+    assert_mat_bits_eq(&a.dx, &b.dx, &format!("{what}: dx"));
+    for e in 0..a.dw1.len() {
+        assert_mat_bits_eq(&a.dw1[e], &b.dw1[e], &format!("{what}: dw1[{e}]"));
+        assert_mat_bits_eq(&a.dw3[e], &b.dw3[e], &format!("{what}: dw3[{e}]"));
+        assert_mat_bits_eq(&a.dw2[e], &b.dw2[e], &format!("{what}: dw2[{e}]"));
+    }
+    assert_eq!(a.stats, b.stats, "{what}: cast audit");
+}
+
+#[test]
+fn recorder_is_bitwise_invisible_to_forward_and_backward() {
+    let (t, d, h, e, cap, top_k) = (40, 48, 32, 4, 12, 2);
+    let mut rng = Rng::seed_from(0x0B5);
+    let x = Mat::randn(t, d, 0.5, &mut rng);
+    let w = MoeWeights::random(d, h, e, &mut rng);
+    let dy = Mat::randn(t, d, 1.0, &mut rng);
+    for recipe in RECIPES {
+        let pw = PreparedWeights::new(w.clone(), recipe);
+        let stash = forward_stash(&x, &pw, top_k, cap);
+        for ranks in RANKS {
+            for threads in THREADS {
+                let cfg = EpConfig::serial(ranks, top_k, cap, threads).with_pipeline(2, true);
+                // baseline with every hook on the no-op fast path
+                assert!(!obs::enabled());
+                let off_f = ep_forward(&x, &pw, &cfg);
+                let off_b = ep_backward(&stash, &pw, &dy, &cfg);
+                // identical run under a live recorder at max detail
+                let rec = obs::Recorder::new(2);
+                let (on_f, on_b) = {
+                    let _g = obs::install(rec.clone());
+                    (ep_forward(&x, &pw, &cfg), ep_backward(&stash, &pw, &dy, &cfg))
+                };
+                let what = format!("{recipe:?} R={ranks} t={threads}");
+                assert_mat_bits_eq(&on_f.y, &off_f.y, &format!("{what}: y"));
+                assert_eq!(on_f.aux_loss.to_bits(), off_f.aux_loss.to_bits(), "{what}: aux");
+                assert_grads_bits_eq(&on_b.grads, &off_b.grads, &what);
+                assert!(rec.n_spans() > 0, "{what}: recording session saw no spans");
+            }
+        }
+    }
+}
+
+#[test]
+fn recorder_is_bitwise_invisible_to_train_steps() {
+    let mut cfg = TrainConfig::named("tiny").expect("tiny config");
+    let steps = 3;
+    for ranks in [1usize, 2] {
+        cfg.ranks = ranks;
+        for recipe in RECIPES {
+            let run = |record: bool| {
+                let mut trainer = NativeTrainer::new(cfg, recipe, 11);
+                let mut corpus = Corpus::new(cfg.vocab, 11, 10);
+                let rec = record.then(|| obs::Recorder::new(1));
+                let _g = rec.clone().map(obs::install);
+                let out = trainer.run(&mut corpus, steps, steps + 1).expect("train run");
+                (out, trainer.metrics, rec)
+            };
+            let (off, off_m, _) = run(false);
+            let (on, on_m, rec) = run(true);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(
+                bits(&on.losses),
+                bits(&off.losses),
+                "{recipe:?} R={ranks}: loss trajectory must not feel the recorder"
+            );
+            for (a, b) in on_m.iter().zip(&off_m) {
+                assert_eq!(a.casts_fwd, b.casts_fwd, "{recipe:?} R={ranks}: casts_fwd");
+                assert_eq!(a.casts_bwd, b.casts_bwd, "{recipe:?} R={ranks}: casts_bwd");
+                assert_eq!(a.requants_bwd, b.requants_bwd, "{recipe:?} R={ranks}: requants");
+            }
+            // and the recorded totals equal the per-step audit sums plus
+            // the trainer construction's initial weight prep
+            let rec = rec.expect("recorder");
+            let totals = rec.totals();
+            let sum = |f: fn(&fp8_flow_moe::train::TrainMetrics) -> usize| {
+                on_m.iter().map(f).sum::<usize>() as u64
+            };
+            let prep = if recipe == Recipe::Bf16 { 0 } else { 6 * cfg.n_experts as u64 };
+            assert_eq!(totals[Counter::CastsFwd as usize], sum(|m| m.casts_fwd));
+            assert_eq!(totals[Counter::CastsBwd as usize], sum(|m| m.casts_bwd));
+            assert_eq!(totals[Counter::RequantsBwd as usize], sum(|m| m.requants_bwd));
+            assert_eq!(
+                totals[Counter::OptWeightQuants as usize],
+                sum(|m| m.opt_weight_quants) + prep,
+                "{recipe:?} R={ranks}: optimizer-tail weight quants"
+            );
+            assert_eq!(totals[Counter::OptRequants as usize], 0);
+        }
+    }
+}
+
+#[test]
+fn recorder_is_bitwise_invisible_to_serving() {
+    let gen = GenConfig {
+        seed: 5,
+        mode: ArrivalMode::parse("bursty").expect("arrival mode"),
+        rate: 400.0,
+        burst: 3.0,
+        burst_period_s: 0.02,
+        zipf_s: 1.1,
+        min_len: 2,
+        max_len: 24,
+        vocab: 32,
+        noise_pct: 10,
+    };
+    let requests = generate_requests(&gen, 24);
+    let slo = SloPolicy { max_wait_s: 0.002, max_tokens: 48 };
+    let (d, h, e, top_k) = (32, 24, 4, 2);
+    let mut rng = Rng::seed_from(0x5E);
+    let w = MoeWeights::random(d, h, e, &mut rng);
+    for ranks in [1usize, 2] {
+        for threads in THREADS {
+            let engine = ServeEngine::new(
+                PreparedWeights::new(w.clone(), Recipe::Fp8Flow),
+                TokenEmbed::new(gen.vocab, d, 5),
+                ServeConfig {
+                    ranks,
+                    top_k,
+                    capacity_factor: 0.75, // force real capacity drops
+                    drop_policy: DropPolicy::parse("capacity").expect("drop policy"),
+                    threads,
+                    chunks: 1,
+                    overlap: false,
+                },
+            );
+            assert!(!obs::enabled());
+            let off = serve_trace(&engine, &requests, &slo);
+            let rec = obs::Recorder::new(1);
+            let on = {
+                let _g = obs::install(rec.clone());
+                serve_trace(&engine, &requests, &slo)
+            };
+            let what = format!("R={ranks} t={threads}");
+            assert_mat_bits_eq(&on.y, &off.y, &format!("{what}: served rows"));
+            assert_eq!(on.fully_served, off.fully_served, "{what}: served flags");
+            assert_eq!(on.dropped_slots, off.dropped_slots, "{what}: drop accounting");
+            // the drop/served counters are exact, not sampled
+            let totals = rec.totals();
+            assert_eq!(totals[Counter::ServedTokens as usize], on.served_tokens as u64, "{what}");
+            assert_eq!(
+                totals[Counter::DegradedTokens as usize],
+                on.degraded_tokens as u64,
+                "{what}"
+            );
+            assert_eq!(totals[Counter::DroppedSlots as usize], on.dropped_slots as u64, "{what}");
+            assert_eq!(
+                on.served_tokens + on.degraded_tokens,
+                on.total_tokens,
+                "{what}: every token is either fully served or degraded"
+            );
+        }
+    }
+}
+
+#[test]
+fn counter_totals_match_prediction_and_ignore_chunking() {
+    let (t, d, h, e, cap, top_k) = (48, 64, 48, 4, 16, 2);
+    let mut rng = Rng::seed_from(0xC4A);
+    let x = Mat::randn(t, d, 0.5, &mut rng);
+    let w = MoeWeights::random(d, h, e, &mut rng);
+    let dy = Mat::randn(t, d, 1.0, &mut rng);
+    // the casts/requants the lint graphs predict for one fwd + one bwd
+    for recipe in RECIPES {
+        let pred = ExecPrediction::of(&build(variant_of(recipe)), e, top_k);
+        let pw = PreparedWeights::new(w.clone(), recipe);
+        let stash = forward_stash(&x, &pw, top_k, cap);
+        let mut invariant: Option<[u64; 6]> = None;
+        for (chunks, overlap) in [(1, false), (2, false), (2, true), (4, true)] {
+            let cfg = EpConfig::serial(2, top_k, cap, 0).with_pipeline(chunks, overlap);
+            let rec = obs::Recorder::new(1);
+            let (fwd, bwd) = {
+                let _g = obs::install(rec.clone());
+                (ep_forward(&x, &pw, &cfg), ep_backward(&stash, &pw, &dy, &cfg))
+            };
+            let totals = rec.totals();
+            let what = format!("{recipe:?} C={chunks} ov={overlap}");
+            assert_eq!(totals[Counter::CastsFwd as usize], pred.casts_fwd as u64, "{what}");
+            assert_eq!(totals[Counter::CastsBwd as usize], pred.casts_bwd as u64, "{what}");
+            assert_eq!(totals[Counter::RequantsBwd as usize], pred.requants_bwd as u64, "{what}");
+            // wire bytes: recorded at the pack sites, checked against the
+            // runs' own independent byte accounting
+            assert_eq!(
+                totals[Counter::WirePayloadBytes as usize],
+                (fwd.dispatch_payload_bytes + bwd.dy_payload_bytes) as u64,
+                "{what}: payload"
+            );
+            assert_eq!(
+                totals[Counter::WireSidecarBytes as usize],
+                (fwd.dispatch_sidecar_bytes + bwd.dy_sidecar_bytes) as u64,
+                "{what}: sidecar"
+            );
+            assert_eq!(
+                totals[Counter::WireBuffers as usize],
+                (fwd.dispatch_buffers + bwd.dy_buffers) as u64,
+                "{what}: buffers"
+            );
+            assert_eq!(
+                totals[Counter::CombineBytes as usize],
+                (fwd.combine_bytes + bwd.dx_bytes) as u64,
+                "{what}: combine"
+            );
+            // the byte/cast totals must be schedule-invariant (buffers —
+            // the sync-count proxy — legitimately grow with chunking)
+            let key = [
+                totals[Counter::CastsFwd as usize],
+                totals[Counter::CastsBwd as usize],
+                totals[Counter::RequantsBwd as usize],
+                totals[Counter::WirePayloadBytes as usize],
+                totals[Counter::WireSidecarBytes as usize],
+                totals[Counter::CombineBytes as usize],
+            ];
+            match &invariant {
+                None => invariant = Some(key),
+                Some(k) => assert_eq!(*k, key, "{what}: chunking changed a byte/cast total"),
+            }
+        }
+    }
+}
+
+#[test]
+fn uninstalled_hooks_record_nothing_anywhere() {
+    let (t, d, h, e, cap, top_k) = (24, 32, 24, 4, 8, 2);
+    let mut rng = Rng::seed_from(0xD15);
+    let x = Mat::randn(t, d, 0.5, &mut rng);
+    let w = MoeWeights::random(d, h, e, &mut rng);
+    let dy = Mat::randn(t, d, 1.0, &mut rng);
+    // run the full instrumented surface with no recorder installed…
+    assert!(!obs::enabled());
+    for recipe in RECIPES {
+        let pw = PreparedWeights::new(w.clone(), recipe);
+        let stash = forward_stash(&x, &pw, top_k, cap);
+        let _ = ep_forward(&x, &pw, &EpConfig::serial(2, top_k, cap, 0));
+        let _ = moe_backward(&stash, &pw, &dy);
+    }
+    // …then install a fresh recorder and confirm nothing leaked into it
+    let rec = obs::Recorder::new(1);
+    let _g = obs::install(rec.clone());
+    assert_eq!(rec.totals(), [0u64; 12], "counts leaked across install");
+    assert_eq!(rec.n_spans(), 0);
+}

@@ -35,6 +35,17 @@ echo "running serve (2 ranks, capacity-factor sweep, bursty arrivals)..."
 serve_output="$(cargo run --release -p fp8_flow_moe -- \
     serve --ranks 2 --recipe all --arrivals bursty --sweep 2>&1)"
 
+echo "running traced epshard + serve (cross-check gate), trace validate, calibrate..."
+trace_output="$(
+    cargo run --release -p fp8_flow_moe -- \
+        epshard --ranks 4 --chunks 2 --overlap on --trace rust/runs/trace_epshard.json 2>&1
+    cargo run --release -p fp8_flow_moe -- \
+        serve --ranks 2 --trace rust/runs/trace_serve.json 2>&1
+    cargo run --release -p fp8_flow_moe -- \
+        trace rust/runs/trace_epshard.json rust/runs/trace_serve.json 2>&1
+    cargo run --release -p fp8_flow_moe -- calibrate rust/runs/trace_epshard.json 2>&1
+)"
+
 {
     echo ""
     echo "### §Perf run: ${label} ($(date -u +%Y-%m-%dT%H:%M:%SZ))"
@@ -99,6 +110,16 @@ serve_output="$(cargo run --release -p fp8_flow_moe -- \
     if [ -f rust/runs/serve_r2.json ]; then
         echo ""
         echo "Serving sweep JSON: \`rust/runs/serve_r2.json\`"
+    fi
+    echo ""
+    echo "#### Trace (traced epshard + serve, counter cross-check, calibration fit)"
+    echo ""
+    echo '```'
+    echo "${trace_output}" | grep -E '^(== (epshard|serve|trace|calibrate)|OK|ROW|wrote|counter cross-check|    (command|busy|counters|residual|route|quant|pack|a2a|assemble|ffn|combine))'
+    echo '```'
+    if [ -f rust/runs/calibrate.json ]; then
+        echo ""
+        echo "Fitted cost table + residuals: \`rust/runs/calibrate.json\`"
     fi
 } >> "${out}"
 

@@ -50,4 +50,17 @@ cargo run --release -q -p fp8_flow_moe -- \
     serve --ranks 2 --requests 24 --arrivals bursty --d-model 64 --ffn 64
 test -f rust/runs/serve_r2.json
 
+echo "== trace smoke: --trace emission, counter cross-check gate, validation, calibration =="
+# The drivers exit nonzero if any recorded counter diverges from the
+# analytic ExecPrediction/wire accounting, so the cross-check gates here.
+cargo run --release -q -p fp8_flow_moe -- \
+    epshard --ranks 4 --chunks 2 --overlap on --tokens 256 --trace rust/runs/trace_epshard.json
+cargo run --release -q -p fp8_flow_moe -- \
+    serve --ranks 2 --requests 24 --arrivals poisson --d-model 64 --ffn 64 \
+    --trace rust/runs/trace_serve.json
+cargo run --release -q -p fp8_flow_moe -- \
+    trace rust/runs/trace_epshard.json rust/runs/trace_serve.json
+cargo run --release -q -p fp8_flow_moe -- calibrate rust/runs/trace_epshard.json
+test -f rust/runs/calibrate.json
+
 echo "verify OK"
