@@ -46,6 +46,7 @@
 use std::ops::Range;
 use std::time::Instant;
 
+use crate::cluster::fault::{wire_tick, FaultPlan};
 use crate::cluster::rank::{all_to_all, RankGroup, WireBuf};
 use crate::exec::{self, Handoff, Partition, StepGraph, StepId, WorkerGroup};
 use crate::fp8::tensor::{n_tiles, Fp8Tensor, TileLayout};
@@ -431,6 +432,8 @@ struct FwdCtx<'a> {
     d: usize,
     /// Top-k slot index (span `step` coordinate).
     kk: usize,
+    /// Fault schedule the wire deliveries run under (unarmed = no-op).
+    faults: &'a FaultPlan,
 }
 
 /// One slot's pipeline output: per-unit combine partials plus timings.
@@ -494,6 +497,12 @@ fn fwd_slot_serial(cx: &FwdCtx, group: &RankGroup) -> FwdSlotOut {
                                 .chunk(c),
                         )
                     });
+                    // receiver-side integrity: checksum-verify each
+                    // src→dst message, recovering injected corruption
+                    // before assembly (no-op on an unarmed plan)
+                    for (src, b) in inbox[ctx.rank].iter().enumerate() {
+                        cx.faults.deliver(wire_tick(cx.kk, c, false), src, ctx.rank, b);
+                    }
                     let er = layout.units[u].experts.clone();
                     match fmt {
                         Some(f) => assemble_fp8(
@@ -649,6 +658,11 @@ fn fwd_slot_overlap(cx: &FwdCtx, lanes: &Lanes) -> FwdSlotOut {
                     let id = g.add_with_meta(lanes.comm[rk], &packs, label, meta, move || {
                         let inbox: Vec<WireBuf> =
                             (0..r).map(|src| wire[src * n_units + u].take()).collect();
+                        // receiver-side integrity, same tick coordinate
+                        // as the serialized schedule
+                        for (src, b) in inbox.iter().enumerate() {
+                            cx.faults.deliver(wire_tick(cx.kk, c, false), src, rk, b);
+                        }
                         let b = match cx.x_q {
                             Some(xq) => assemble_fp8(
                                 &inbox,
@@ -747,6 +761,20 @@ fn fwd_slot_overlap(cx: &FwdCtx, lanes: &Lanes) -> FwdSlotOut {
 /// Bit-identical to `moe_forward(x, w, cfg.top_k, cfg.capacity)` for any
 /// rank count, chunk count and overlap flag.
 pub fn ep_forward(x: &Mat, w: &PreparedWeights, cfg: &EpConfig) -> EpForward {
+    ep_forward_with_faults(x, w, cfg, &FaultPlan::none())
+}
+
+/// [`ep_forward`] under a seeded [`FaultPlan`]: every all-to-all message
+/// is checksum-verified on receive and injected faults are recovered
+/// through bounded retransmission (`cluster/fault.rs`), so the output is
+/// **still bit-identical** to the fault-free single-rank forward — only
+/// the recovery counters and the virtual clock observe the faults.
+pub fn ep_forward_with_faults(
+    x: &Mat,
+    w: &PreparedWeights,
+    cfg: &EpConfig,
+    faults: &FaultPlan,
+) -> EpForward {
     let t = x.rows;
     let d = x.cols;
     let e = w.raw.n_experts();
@@ -832,6 +860,7 @@ pub fn ep_forward(x: &Mat, w: &PreparedWeights, cfg: &EpConfig) -> EpForward {
             t,
             d,
             kk,
+            faults,
         };
         let out = match (&group, &lanes) {
             (Some(g), _) => fwd_slot_serial(&cx, g),
@@ -983,6 +1012,8 @@ struct BwdCtx<'a> {
     d: usize,
     /// Top-k slot index (span `step` coordinate).
     kk: usize,
+    /// Fault schedule the wire deliveries run under (unarmed = no-op).
+    faults: &'a FaultPlan,
 }
 
 /// One slot's backward pipeline output: per-unit dX partials, the
@@ -1046,6 +1077,10 @@ fn bwd_slot_serial(cx: &BwdCtx, group: &RankGroup) -> BwdSlotOut {
                                 .chunk(c),
                         )
                     });
+                    // receiver-side integrity on the combine-bwd wire
+                    for (src, b) in inbox[ctx.rank].iter().enumerate() {
+                        cx.faults.deliver(wire_tick(cx.kk, c, true), src, ctx.rank, b);
+                    }
                     let er = layout.units[u].experts.clone();
                     match cx.dy_q {
                         Some(q) => assemble_fp8(
@@ -1194,6 +1229,11 @@ fn bwd_slot_overlap(cx: &BwdCtx, lanes: &Lanes) -> BwdSlotOut {
                     let id = g.add_with_meta(lanes.comm[rk], &packs, label, meta, move || {
                         let inbox: Vec<WireBuf> =
                             (0..r).map(|src| wire[src * n_units + u].take()).collect();
+                        // receiver-side integrity, same tick coordinate
+                        // as the serialized schedule
+                        for (src, b) in inbox.iter().enumerate() {
+                            cx.faults.deliver(wire_tick(cx.kk, c, true), src, rk, b);
+                        }
                         let b = match cx.dy_q {
                             Some(q) => assemble_fp8(
                                 &inbox,
@@ -1310,6 +1350,20 @@ pub fn ep_backward(
     dy: &Mat,
     cfg: &EpConfig,
 ) -> EpBackward {
+    ep_backward_with_faults(stash, w, dy, cfg, &FaultPlan::none())
+}
+
+/// [`ep_backward`] under a seeded [`FaultPlan`] — the backward mirror of
+/// [`ep_forward_with_faults`]: corrupted combine-bwd messages are
+/// detected by the per-buffer checksums and recovered bitwise, so the
+/// gradients equal the fault-free run for any plan.
+pub fn ep_backward_with_faults(
+    stash: &FwdStash,
+    w: &PreparedWeights,
+    dy: &Mat,
+    cfg: &EpConfig,
+    faults: &FaultPlan,
+) -> EpBackward {
     let t = dy.rows;
     let d = dy.cols;
     let e = w.raw.n_experts();
@@ -1405,6 +1459,7 @@ pub fn ep_backward(
             t,
             d,
             kk,
+            faults,
         };
         let out = match (&group, &lanes) {
             (Some(g), _) => bwd_slot_serial(&cx, g),
@@ -1481,7 +1536,21 @@ pub fn ep_backward_with_router(
     cfg: &EpConfig,
     aux_coef: f32,
 ) -> EpBackward {
-    let mut out = ep_backward(stash, w, dy, cfg);
+    ep_backward_with_router_faults(stash, w, dy, cfg, aux_coef, &FaultPlan::none())
+}
+
+/// [`ep_backward_with_router`] under a seeded [`FaultPlan`] (the router
+/// path is dense-replicated and never touches the wire, so only the
+/// sharded expert backward sees the faults).
+pub fn ep_backward_with_router_faults(
+    stash: &FwdStash,
+    w: &PreparedWeights,
+    dy: &Mat,
+    cfg: &EpConfig,
+    aux_coef: f32,
+    faults: &FaultPlan,
+) -> EpBackward {
+    let mut out = ep_backward_with_faults(stash, w, dy, cfg, faults);
     let rb = router_backward_from_stash(stash, w, dy, aux_coef);
     mat_add_assign(&mut out.grads.dx, &rb.dx);
     out.grads.d_router = Some(rb.d_router);
@@ -1506,6 +1575,21 @@ pub fn ep_train_step(tr: &mut NativeTrainer, tokens: &[i32]) -> TrainMetrics {
     let cfg = EpConfig::serial(tr.cfg.ranks, tr.cfg.top_k, tr.cfg.capacity, tr.cfg.threads);
     tr.step_with_backward(tokens, move |stash, w, dy, aux_coef| {
         ep_backward_with_router(stash, w, dy, &cfg, aux_coef).grads
+    })
+}
+
+/// [`ep_train_step`] under a seeded [`FaultPlan`]: the combine-bwd wire
+/// runs through the checksummed delivery path, so an injected flip or
+/// drop is recovered and the step stays bitwise equal to the fault-free
+/// step — the property the chaos driver's train matrix asserts.
+pub fn ep_train_step_with_faults(
+    tr: &mut NativeTrainer,
+    tokens: &[i32],
+    faults: &FaultPlan,
+) -> TrainMetrics {
+    let cfg = EpConfig::serial(tr.cfg.ranks, tr.cfg.top_k, tr.cfg.capacity, tr.cfg.threads);
+    tr.step_with_backward(tokens, move |stash, w, dy, aux_coef| {
+        ep_backward_with_router_faults(stash, w, dy, &cfg, aux_coef, faults).grads
     })
 }
 

@@ -1,0 +1,623 @@
+//! Deterministic fault injection and recovery for the EP runtime.
+//!
+//! Long FP8 runs at the paper's 671B scale live with rank loss,
+//! stragglers and wire corruption as the norm, not the exception. This
+//! module makes every such failure **replayable from a seed**: a
+//! [`FaultPlan`] schedules faults at (tick, src, dst) coordinates on the
+//! wire, and the delivery path recovers through checksummed
+//! retransmission with deterministic backoff on a virtual clock —
+//! so a chaos run is as reproducible as any other experiment in this
+//! repo.
+//!
+//! **Wire integrity.** Every all-to-all message is sealed with one CRC32
+//! per buffer — the FP8 codes and the UE8M0 scale sidecar get *separate*
+//! seals ([`WireSums`]). The split matters: a flipped payload byte
+//! perturbs one FP8 element, but a flipped sidecar byte rescales a whole
+//! 1×128 tile by a silent power of two (`scale == 2^sexp`) — the worst
+//! double-quantization-adjacent corruption, invisible to any range
+//! check. CRC32 detects 100% of single-bit errors in either buffer
+//! (`tests/prop_fault.rs` proves it exhaustively), so a detected
+//! mismatch triggers bounded retransmission and the recovered delivery
+//! is **bitwise identical** to the uncorrupted one — fault injection
+//! never perturbs numerics, only the recovery counters and the virtual
+//! clock. The repo-wide bit-identity contract therefore extends to any
+//! seeded fault plan.
+//!
+//! **Recovery ladder.** Detected corruption, or a dropped message
+//! (virtual-clock timeout), is retried with exponential backoff
+//! ([`BACKOFF_BASE_NS`] ` << attempt`). After [`MAX_A2A_RETRIES`]
+//! retransmissions the receiver escalates to **rank failover**: the
+//! source rank is marked failed (consumed by the degraded serving path
+//! in `serve/engine.rs`) and the message is re-sourced from the
+//! surviving replica — in this in-memory simulation, the pristine
+//! buffer. Counters: [`Counter::WireChecksumFail`],
+//! [`Counter::A2aRetries`], [`Counter::Failovers`], mirrored in
+//! [`FaultStats`] for recorder-free assertions.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::obs::{self, Counter};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::rank::WireBuf;
+
+/// Retransmissions allowed before a delivery escalates to rank failover.
+pub const MAX_A2A_RETRIES: u32 = 3;
+
+/// Backoff after the n-th failed reception: `BACKOFF_BASE_NS << n`
+/// virtual nanoseconds (deterministic exponential backoff).
+pub const BACKOFF_BASE_NS: u64 = 1 << 20;
+
+/// Virtual-clock timeout charged when a dropped message is detected.
+pub const TIMEOUT_NS: u64 = 1 << 22;
+
+/// Virtual-clock cost of a rank failover (replica re-source).
+pub const FAILOVER_NS: u64 = 1 << 24;
+
+/// Wildcard destination: the fault hits the message to every receiver.
+pub const ANY_DST: usize = usize::MAX;
+
+// CRC32 (IEEE 802.3, reflected polynomial 0xEDB88320), table-driven.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+fn crc_update(mut c: u32, bytes: &[u8]) -> u32 {
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c
+}
+
+/// CRC32 (IEEE) of `bytes`. Detects every single-bit and single-byte
+/// error, which is exactly the wire-corruption class injected here.
+pub fn checksum(bytes: &[u8]) -> u32 {
+    !crc_update(!0u32, bytes)
+}
+
+/// CRC32 over an f32 slice's little-endian byte image (the dense wire).
+pub fn checksum_f32(vals: &[f32]) -> u32 {
+    let mut c = !0u32;
+    for v in vals {
+        c = crc_update(c, &v.to_le_bytes());
+    }
+    !c
+}
+
+/// The two per-buffer seals of one wire message. Codes and UE8M0
+/// sidecar are sealed **separately**: the sidecar is ~1/128 of the
+/// payload, so folding it into one sum would let a payload-sized burst
+/// mask a sidecar flip — and a sidecar flip is the silent `2^±k` scale
+/// error the paper's recipe exists to avoid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WireSums {
+    /// CRC32 of the payload buffer (FP8 codes, or the dense f32 image).
+    pub payload: u32,
+    /// CRC32 of the UE8M0 sidecar buffer (0 for dense: no sidecar).
+    pub sidecar: u32,
+}
+
+impl WireSums {
+    /// Seal both buffers of `buf` (the sender side of the wire contract).
+    pub fn seal(buf: &WireBuf) -> WireSums {
+        match buf {
+            WireBuf::Dense(v) => WireSums { payload: checksum_f32(v), sidecar: 0 },
+            WireBuf::Fp8 { codes, sidecar } => {
+                WireSums { payload: checksum(codes), sidecar: checksum(sidecar) }
+            }
+        }
+    }
+
+    /// Receiver-side check: true iff both buffers re-seal to `self`.
+    pub fn verify(&self, buf: &WireBuf) -> bool {
+        *self == WireSums::seal(buf)
+    }
+}
+
+/// What a scheduled fault does to its matching delivery.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Flip bit `bit & 7` of payload byte `offset % len` (FP8 codes, or
+    /// the f32 byte image on a dense wire).
+    FlipPayloadBit {
+        /// Byte offset, reduced mod the buffer length at injection time.
+        offset: usize,
+        /// Bit index 0..8 within the byte.
+        bit: u8,
+    },
+    /// Flip bit `bit & 7` of UE8M0 sidecar byte `offset % len` — a
+    /// silent `2^±k` tile-scale error if it went undetected.
+    FlipSidecarBit {
+        /// Byte offset, reduced mod the sidecar length at injection time.
+        offset: usize,
+        /// Bit index 0..8 within the byte.
+        bit: u8,
+    },
+    /// The message never arrives; the receiver times out and requests
+    /// retransmission.
+    DropMessage,
+    /// Straggler: the delivery lands late by `delay_ns` on the virtual
+    /// clock (no retry, no corruption).
+    Straggler {
+        /// Added virtual latency in nanoseconds.
+        delay_ns: u64,
+    },
+    /// The source rank crashes at this tick (degraded-serving /
+    /// checkpoint-resume driver; on the EP wire it escalates straight to
+    /// failover).
+    CrashRank,
+}
+
+/// One scheduled fault: `kind` hits deliveries at `tick` from `src` to
+/// `dst` (or every destination when `dst == ANY_DST`), corrupting the
+/// first `attempts` consecutive receptions of each matching delivery.
+#[derive(Clone, Copy, Debug)]
+pub struct Fault {
+    /// Virtual tick coordinate (see [`wire_tick`] for the EP wire; the
+    /// serve tick index for serving; the train step for checkpointing).
+    pub tick: u64,
+    /// Source rank of the afflicted message.
+    pub src: usize,
+    /// Destination rank, or [`ANY_DST`].
+    pub dst: usize,
+    /// What happens to the message.
+    pub kind: FaultKind,
+    /// Consecutive corrupted receptions before the fault clears
+    /// (`> MAX_A2A_RETRIES` forces failover).
+    pub attempts: u32,
+}
+
+/// Recovery totals, mirrored from the `obs` counters so tests and the
+/// chaos driver can assert them without installing a recorder.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Buffers whose CRC32 failed on receive.
+    pub checksum_fails: u64,
+    /// Bounded retransmissions issued.
+    pub retries: u64,
+    /// Rank failovers after retry exhaustion (incl. injected crashes).
+    pub failovers: u64,
+    /// Virtual nanoseconds spent in backoff/timeout/failover.
+    pub clock_ns: u64,
+}
+
+impl FaultStats {
+    /// JSON object for the `runs/chaos_*.json` schema.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("wire_checksum_fail", self.checksum_fails)
+            .set("a2a_retries", self.retries)
+            .set("failovers", self.failovers)
+            .set("recovery_clock_ns", self.clock_ns)
+    }
+}
+
+/// A seeded, replayable fault schedule plus the shared recovery state
+/// (virtual clock, failed-rank set, counters). Threading: `deliver` may
+/// run concurrently from overlap-pipeline lanes; all shared state is
+/// atomic and every update commutes, so counter totals and the final
+/// clock are schedule-independent — deterministic under any thread
+/// budget, which is what lets property tests assert exact totals.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    faults: Vec<Fault>,
+    seed: u64,
+    /// Bitmask of failed ranks (rank r fails ⇒ bit r set; ranks < 64).
+    failed: AtomicU64,
+    clock_ns: AtomicU64,
+    checksum_fails: AtomicU64,
+    retries: AtomicU64,
+    failovers: AtomicU64,
+}
+
+impl FaultPlan {
+    /// The empty plan: `deliver` is a no-op (the fault-free fast path —
+    /// no checksums are computed, so the default runtime is untouched).
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// A plan with an explicit fault list (property tests, the chaos
+    /// driver's targeted scenarios).
+    pub fn new(faults: Vec<Fault>) -> FaultPlan {
+        FaultPlan { faults, ..FaultPlan::default() }
+    }
+
+    /// A seeded random injection matrix: `n_faults` faults over
+    /// `n_ranks` sources and `n_ticks` ticks, kinds weighted toward the
+    /// corruption classes the checksum exists for. Same seed ⇒ same
+    /// plan ⇒ same recovery counters: chaos runs are replayable.
+    pub fn seeded(seed: u64, n_ranks: usize, n_ticks: u64, n_faults: usize) -> FaultPlan {
+        let mut rng = Rng::seed_from(seed ^ 0xFA17);
+        let faults = (0..n_faults)
+            .map(|_| {
+                let kind = match rng.below(8) {
+                    0 | 1 => FaultKind::FlipPayloadBit {
+                        offset: rng.next_u64() as usize,
+                        bit: rng.below(8) as u8,
+                    },
+                    2 | 3 => FaultKind::FlipSidecarBit {
+                        offset: rng.next_u64() as usize,
+                        bit: rng.below(8) as u8,
+                    },
+                    4 => FaultKind::DropMessage,
+                    5 | 6 => FaultKind::Straggler {
+                        delay_ns: BACKOFF_BASE_NS + rng.below(4 * BACKOFF_BASE_NS as usize) as u64,
+                    },
+                    _ => FaultKind::CrashRank,
+                };
+                Fault {
+                    tick: rng.below(n_ticks.max(1) as usize) as u64,
+                    src: rng.below(n_ranks),
+                    dst: if rng.below(2) == 0 { ANY_DST } else { rng.below(n_ranks) },
+                    kind,
+                    attempts: 1 + rng.below(MAX_A2A_RETRIES as usize + 2) as u32,
+                }
+            })
+            .collect();
+        FaultPlan { faults, seed, ..FaultPlan::default() }
+    }
+
+    /// The seed this plan replays from (0 for explicit plans).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// True when any fault is scheduled (the delivery path verifies
+    /// checksums only on armed plans; unarmed delivery is a no-op).
+    pub fn armed(&self) -> bool {
+        !self.faults.is_empty()
+    }
+
+    /// The scheduled faults.
+    pub fn faults(&self) -> &[Fault] {
+        &self.faults
+    }
+
+    /// True when `rank` has failed (crash fault or retry-exhaustion
+    /// failover).
+    pub fn is_failed(&self, rank: usize) -> bool {
+        rank < 64 && self.failed.load(Ordering::Relaxed) & (1u64 << rank) != 0
+    }
+
+    /// Recovery totals so far.
+    pub fn stats(&self) -> FaultStats {
+        FaultStats {
+            checksum_fails: self.checksum_fails.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            failovers: self.failovers.load(Ordering::Relaxed),
+            clock_ns: self.clock_ns.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Mark newly crashed sources at serve tick `tick` (consuming every
+    /// `CrashRank` fault scheduled there) and return them. Idempotent
+    /// per rank: an already-failed rank is not returned again.
+    pub fn crashed_at(&self, tick: u64) -> Vec<usize> {
+        let mut out = Vec::new();
+        for f in &self.faults {
+            if f.tick == tick && f.kind == FaultKind::CrashRank && !self.is_failed(f.src) {
+                self.fail_over(f.src);
+                out.push(f.src);
+            }
+        }
+        out
+    }
+
+    /// Receiver-side delivery of one wire message at `tick` from `src`
+    /// to `dst`. On an armed plan the message is sealed ([`WireSums`])
+    /// and every matching fault is injected: corrupted receptions are
+    /// detected by the per-buffer CRC32 and retried with deterministic
+    /// backoff; exhausted retries escalate to failover. The delivered
+    /// bytes are always the pristine `buf` — recovery is bitwise by
+    /// construction, so callers keep using their original buffer.
+    pub fn deliver(&self, tick: u64, src: usize, dst: usize, buf: &WireBuf) {
+        if self.faults.is_empty() {
+            return;
+        }
+        let mut seal: Option<WireSums> = None;
+        for f in &self.faults {
+            if f.tick != tick || f.src != src || (f.dst != ANY_DST && f.dst != dst) {
+                continue;
+            }
+            match f.kind {
+                FaultKind::Straggler { delay_ns } => {
+                    self.clock_ns.fetch_add(delay_ns, Ordering::Relaxed);
+                }
+                FaultKind::CrashRank => self.fail_over(src),
+                _ => {
+                    let s = *seal.get_or_insert_with(|| WireSums::seal(buf));
+                    self.recover(f, buf, s);
+                }
+            }
+        }
+    }
+
+    /// Serve-level delivery: inject every non-crash fault scheduled at
+    /// `tick` into the tick's wire image, whatever its (src, dst). The
+    /// serving tick is one logical collective, so tick-granular matching
+    /// is the natural coordinate there.
+    pub fn deliver_tick(&self, tick: u64, buf: &WireBuf) {
+        if self.faults.is_empty() {
+            return;
+        }
+        let mut seal: Option<WireSums> = None;
+        for f in &self.faults {
+            if f.tick != tick {
+                continue;
+            }
+            match f.kind {
+                FaultKind::Straggler { delay_ns } => {
+                    self.clock_ns.fetch_add(delay_ns, Ordering::Relaxed);
+                }
+                FaultKind::CrashRank => {} // handled by `crashed_at`
+                _ => {
+                    let s = *seal.get_or_insert_with(|| WireSums::seal(buf));
+                    self.recover(f, buf, s);
+                }
+            }
+        }
+    }
+
+    /// The bounded retry loop for one delivery afflicted by `f`.
+    /// Reception `n` is corrupted iff `n < f.attempts`; a failed
+    /// reception after [`MAX_A2A_RETRIES`] retransmissions escalates to
+    /// failover. Counter totals are a pure function of the fault, so
+    /// they are identical across serial/overlap schedules.
+    fn recover(&self, f: &Fault, buf: &WireBuf, seal: WireSums) {
+        for attempt in 0u32.. {
+            let ok = if attempt >= f.attempts {
+                true // the fault has cleared: pristine retransmission
+            } else {
+                match f.kind {
+                    FaultKind::DropMessage => {
+                        // nothing arrived: detected by timeout, nothing
+                        // to checksum
+                        self.clock_ns.fetch_add(TIMEOUT_NS, Ordering::Relaxed);
+                        false
+                    }
+                    _ => match corrupted(buf, &f.kind) {
+                        Some(bad) => {
+                            let detected = !seal.verify(&bad);
+                            if detected {
+                                self.checksum_fails.fetch_add(1, Ordering::Relaxed);
+                                obs::count(Counter::WireChecksumFail, 1);
+                            }
+                            // An undetected corruption would be accepted
+                            // here — CRC32 makes that unreachable for
+                            // bit flips (prop_fault pins it), which is
+                            // exactly why the check is load-bearing.
+                            !detected
+                        }
+                        // fault targets a buffer this message doesn't
+                        // carry (e.g. sidecar flip on a dense wire)
+                        None => true,
+                    },
+                }
+            };
+            if ok {
+                return;
+            }
+            if attempt >= MAX_A2A_RETRIES {
+                self.fail_over(f.src);
+                return;
+            }
+            self.retries.fetch_add(1, Ordering::Relaxed);
+            obs::count(Counter::A2aRetries, 1);
+            self.clock_ns.fetch_add(BACKOFF_BASE_NS << attempt, Ordering::Relaxed);
+        }
+    }
+
+    fn fail_over(&self, rank: usize) {
+        if rank < 64 {
+            self.failed.fetch_or(1u64 << rank, Ordering::Relaxed);
+        }
+        self.failovers.fetch_add(1, Ordering::Relaxed);
+        obs::count(Counter::Failovers, 1);
+        self.clock_ns.fetch_add(FAILOVER_NS, Ordering::Relaxed);
+    }
+}
+
+/// The EP wire's tick coordinate: one value per (top-k slot, chunk
+/// round, direction), identical across the serialized and overlapped
+/// schedules — so a fault plan replays to the same counters whatever
+/// `--overlap`/`--chunks` say.
+pub fn wire_tick(kk: usize, chunk: usize, backward: bool) -> u64 {
+    ((backward as u64) << 48) | ((kk as u64) << 24) | chunk as u64
+}
+
+/// The corrupted image of `buf` under a flip fault, or `None` when the
+/// fault targets a buffer the message doesn't carry (empty buffer, or a
+/// sidecar flip on a dense wire).
+fn corrupted(buf: &WireBuf, kind: &FaultKind) -> Option<WireBuf> {
+    match (buf, kind) {
+        (WireBuf::Fp8 { codes, sidecar }, FaultKind::FlipPayloadBit { offset, bit })
+            if !codes.is_empty() =>
+        {
+            let mut c = codes.clone();
+            let o = offset % c.len();
+            c[o] ^= 1u8 << (bit & 7);
+            Some(WireBuf::Fp8 { codes: c, sidecar: sidecar.clone() })
+        }
+        (WireBuf::Fp8 { codes, sidecar }, FaultKind::FlipSidecarBit { offset, bit })
+            if !sidecar.is_empty() =>
+        {
+            let mut s = sidecar.clone();
+            let o = offset % s.len();
+            s[o] ^= 1u8 << (bit & 7);
+            Some(WireBuf::Fp8 { codes: codes.clone(), sidecar: s })
+        }
+        (WireBuf::Dense(v), FaultKind::FlipPayloadBit { offset, bit }) if !v.is_empty() => {
+            let mut d = v.clone();
+            let byte = offset % (d.len() * 4);
+            let bits = d[byte / 4].to_bits() ^ (1u32 << ((byte % 4) * 8 + (bit & 7) as usize));
+            d[byte / 4] = f32::from_bits(bits);
+            Some(WireBuf::Dense(d))
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vector() {
+        // the canonical IEEE test vector
+        assert_eq!(checksum(b"123456789"), 0xCBF4_3926);
+        assert_eq!(checksum(b""), 0);
+    }
+
+    #[test]
+    fn seals_are_per_buffer() {
+        let buf = WireBuf::Fp8 { codes: vec![1, 2, 3], sidecar: vec![127, 128] };
+        let s = WireSums::seal(&buf);
+        assert!(s.verify(&buf));
+        let flipped = WireBuf::Fp8 { codes: vec![1, 2, 3], sidecar: vec![127, 129] };
+        let f = WireSums::seal(&flipped);
+        assert_eq!(f.payload, s.payload, "payload seal must not cover the sidecar");
+        assert_ne!(f.sidecar, s.sidecar, "sidecar flip must change the sidecar seal");
+        assert!(!s.verify(&flipped));
+    }
+
+    #[test]
+    fn dense_seal_covers_f32_bits() {
+        let buf = WireBuf::Dense(vec![1.0, -0.5, 3.25]);
+        let s = WireSums::seal(&buf);
+        assert_eq!(s.sidecar, 0);
+        let mut v = vec![1.0f32, -0.5, 3.25];
+        v[1] = f32::from_bits(v[1].to_bits() ^ 1);
+        assert!(!s.verify(&WireBuf::Dense(v)));
+    }
+
+    #[test]
+    fn transient_flip_recovers_with_counted_retries() {
+        let plan = FaultPlan::new(vec![Fault {
+            tick: 7,
+            src: 1,
+            dst: 0,
+            kind: FaultKind::FlipSidecarBit { offset: 5, bit: 3 },
+            attempts: 2,
+        }]);
+        let buf = WireBuf::Fp8 { codes: vec![9; 64], sidecar: vec![130; 4] };
+        plan.deliver(7, 1, 0, &buf); // match
+        plan.deliver(7, 0, 0, &buf); // wrong src: clean
+        plan.deliver(8, 1, 0, &buf); // wrong tick: clean
+        let st = plan.stats();
+        assert_eq!(st.checksum_fails, 2);
+        assert_eq!(st.retries, 2);
+        assert_eq!(st.failovers, 0);
+        assert_eq!(st.clock_ns, BACKOFF_BASE_NS + (BACKOFF_BASE_NS << 1));
+        assert!(!plan.is_failed(1));
+    }
+
+    #[test]
+    fn persistent_fault_escalates_to_failover() {
+        let plan = FaultPlan::new(vec![Fault {
+            tick: 0,
+            src: 2,
+            dst: ANY_DST,
+            kind: FaultKind::FlipPayloadBit { offset: 0, bit: 0 },
+            attempts: MAX_A2A_RETRIES + 5,
+        }]);
+        let buf = WireBuf::Fp8 { codes: vec![1; 8], sidecar: vec![127] };
+        plan.deliver(0, 2, 3, &buf);
+        let st = plan.stats();
+        // receptions 0..=MAX all fail, then escalation
+        assert_eq!(st.checksum_fails, MAX_A2A_RETRIES as u64 + 1);
+        assert_eq!(st.retries, MAX_A2A_RETRIES as u64);
+        assert_eq!(st.failovers, 1);
+        assert!(plan.is_failed(2));
+    }
+
+    #[test]
+    fn dropped_message_retries_without_checksum_fail() {
+        let plan = FaultPlan::new(vec![Fault {
+            tick: 3,
+            src: 0,
+            dst: 1,
+            kind: FaultKind::DropMessage,
+            attempts: 1,
+        }]);
+        plan.deliver(3, 0, 1, &WireBuf::Dense(vec![2.0; 4]));
+        let st = plan.stats();
+        assert_eq!(st.checksum_fails, 0);
+        assert_eq!(st.retries, 1);
+        assert_eq!(st.clock_ns, TIMEOUT_NS + BACKOFF_BASE_NS);
+    }
+
+    #[test]
+    fn straggler_only_moves_the_clock() {
+        let plan = FaultPlan::new(vec![Fault {
+            tick: 1,
+            src: 0,
+            dst: ANY_DST,
+            kind: FaultKind::Straggler { delay_ns: 12_345 },
+            attempts: 1,
+        }]);
+        plan.deliver(1, 0, 0, &WireBuf::Dense(vec![1.0]));
+        assert_eq!(plan.stats(), FaultStats { clock_ns: 12_345, ..FaultStats::default() });
+    }
+
+    #[test]
+    fn crashes_are_idempotent_per_rank() {
+        let plan = FaultPlan::new(vec![
+            Fault { tick: 2, src: 1, dst: ANY_DST, kind: FaultKind::CrashRank, attempts: 1 },
+            Fault { tick: 2, src: 1, dst: ANY_DST, kind: FaultKind::CrashRank, attempts: 1 },
+        ]);
+        assert_eq!(plan.crashed_at(0), vec![]);
+        assert_eq!(plan.crashed_at(2), vec![1]);
+        assert_eq!(plan.crashed_at(2), vec![]); // already failed
+        assert!(plan.is_failed(1));
+        assert_eq!(plan.stats().failovers, 1);
+    }
+
+    #[test]
+    fn seeded_plans_replay() {
+        let a = FaultPlan::seeded(99, 4, 10, 6);
+        let b = FaultPlan::seeded(99, 4, 10, 6);
+        assert_eq!(a.faults().len(), 6);
+        for (fa, fb) in a.faults().iter().zip(b.faults()) {
+            assert_eq!((fa.tick, fa.src, fa.dst, fa.attempts), (fb.tick, fb.src, fb.dst, fb.attempts));
+            assert_eq!(fa.kind, fb.kind);
+        }
+        assert_ne!(
+            FaultPlan::seeded(100, 4, 10, 6).faults().iter().map(|f| f.tick).collect::<Vec<_>>(),
+            a.faults().iter().map(|f| f.tick).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    fn unarmed_plan_is_inert() {
+        let plan = FaultPlan::none();
+        assert!(!plan.armed());
+        plan.deliver(0, 0, 0, &WireBuf::Dense(vec![1.0]));
+        assert_eq!(plan.stats(), FaultStats::default());
+    }
+
+    #[test]
+    fn wire_tick_separates_coordinates() {
+        let mut seen = std::collections::BTreeSet::new();
+        for kk in 0..4 {
+            for c in 0..4 {
+                for b in [false, true] {
+                    assert!(seen.insert(wire_tick(kk, c, b)));
+                }
+            }
+        }
+    }
+}

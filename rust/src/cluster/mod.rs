@@ -21,6 +21,7 @@
 
 pub mod comm;
 pub mod ep_exec;
+pub mod fault;
 pub mod memory;
 pub mod model_cfg;
 pub mod rank;

@@ -12,6 +12,7 @@
 //! fp8-flow-moe dataflow                                       # Fig. 2 audit
 //! fp8-flow-moe lint [--recipe all|...] [--experts E] [--top-k K]  # static analyzer
 //! fp8-flow-moe serve [--requests N] [--ranks R] [--sweep]     # serving loop
+//! fp8-flow-moe chaos [--ranks R] [--seed S]                   # fault injection
 //! fp8-flow-moe dqe [--size N]                                 # Eq. 1 demo
 //! fp8-flow-moe artifacts                                      # list manifest
 //! ```
@@ -27,8 +28,9 @@ use fp8_flow_moe::analysis::{
     ExecutedAudit,
 };
 use fp8_flow_moe::cluster::ep_exec::{
-    ep_backward, ep_forward, EpBackward, EpConfig, EpForward, EpShape,
+    ep_backward, ep_forward, ep_forward_with_faults, EpBackward, EpConfig, EpForward, EpShape,
 };
+use fp8_flow_moe::cluster::fault::{wire_tick, Fault, FaultKind, FaultPlan, ANY_DST};
 use fp8_flow_moe::cluster::sim::{
     ep_measured_vs_modeled, ep_overlap_report, per_rank_imbalance, serve_measured_vs_modeled,
     CostTable,
@@ -43,10 +45,11 @@ use fp8_flow_moe::moe::layer::{moe_forward, MoeWeights, PreparedWeights, Recipe}
 use fp8_flow_moe::obs::{self, Counter};
 use fp8_flow_moe::runtime::Runtime;
 use fp8_flow_moe::serve::{
-    generate_requests, serve_trace, ArrivalMode, DropPolicy, GenConfig, ServeConfig, ServeEngine,
-    SloPolicy, TokenEmbed,
+    generate_requests, serve_trace, ArrivalMode, DropPolicy, FailoverPolicy, GenConfig,
+    ServeConfig, ServeEngine, SloPolicy, TokenEmbed,
 };
-use fp8_flow_moe::train::{AotTrainer, Corpus, NativeTrainer, TrainConfig, TrainDriver, TrainOutcome};
+use fp8_flow_moe::train::native::{restore_trainer, save_checkpoint};
+use fp8_flow_moe::train::{AotTrainer, Corpus, NativeTrainer, TrainConfig, TrainOutcome};
 use fp8_flow_moe::util::cli::Args;
 use fp8_flow_moe::util::json::{Json, RUN_SCHEMA_VERSION};
 use fp8_flow_moe::util::mat::Mat;
@@ -83,12 +86,19 @@ USAGE:
                        [--arrivals <poisson|bursty>] [--rate REQ_PER_S] [--burst X]
                        [--zipf S] [--min-len N] [--max-len N] [--vocab V] [--noise PCT]
                        [--max-wait-ms W] [--max-tokens T]
-                       [--capacity-factor F] [--drop <capacity|none>] [--sweep]
+                       [--capacity-factor F | --cf F] [--drop <capacity|none>] [--sweep]
                        [--experts E] [--top-k K] [--d-model D] [--ffn H] [--seed S]
                        [--overlap <on|off>] [--chunks C]
                        (heavy-traffic serving loop: seeded arrivals, SLO
                         micro-batching, EP-sharded forward; --sweep runs a
                         capacity-factor sweep; writes runs/serve_r<R>.json)
+  fp8-flow-moe chaos   [--ranks R] [--seed S] [--steps N]
+                       (seeded fault-injection matrix over the EP wire,
+                        the serving loop, and the native trainer: CRC32
+                        wire recovery must be bitwise clean, the degraded
+                        drop ledger must balance, and crash+resume from a
+                        checkpoint must replay the uninterrupted loss
+                        trajectory bit-for-bit; writes runs/chaos_r<R>.json)
   fp8-flow-moe dqe [--size N]
   fp8-flow-moe trace <file.json> [<file.json> ...]
                        (validate + summarize trace / runs documents:
@@ -120,13 +130,32 @@ fn main() {
     }
 }
 
+/// `--key` as `usize` through the error contract: a malformed value is
+/// one `error:` line on stderr and exit 2, never a panic (the `*_or`
+/// getters panic and stay test/tool conveniences).
+fn arg_usize(args: &Args, key: &str, default: usize) -> Result<usize> {
+    args.try_usize(key, default).map_err(anyhow::Error::msg)
+}
+
+/// `--key` as `u64` through the error contract (see [`arg_usize`]).
+fn arg_u64(args: &Args, key: &str, default: u64) -> Result<u64> {
+    args.try_u64(key, default).map_err(anyhow::Error::msg)
+}
+
+/// `--key` as a finite `f64` through the error contract (see
+/// [`arg_usize`]).
+fn arg_f64(args: &Args, key: &str, default: f64) -> Result<f64> {
+    args.try_f64(key, default).map_err(anyhow::Error::msg)
+}
+
 fn run() -> Result<()> {
     let args = Args::from_env();
-    exec::set_threads(args.usize_or("threads", 0));
+    // --help wins over everything, including malformed global flags
     if args.help_requested() {
         print!("{USAGE}");
         return Ok(());
     }
+    exec::set_threads(arg_usize(&args, "threads", 0)?);
     match args.positional.first().map(String::as_str) {
         Some("train") => cmd_train(&args),
         Some("table1") => {
@@ -154,6 +183,7 @@ fn run() -> Result<()> {
         Some("lint") => cmd_lint(&args),
         Some("dqe") => cmd_dqe(&args),
         Some("serve") => cmd_serve(&args),
+        Some("chaos") => cmd_chaos(&args),
         Some("trace") => cmd_trace(&args),
         Some("calibrate") => cmd_calibrate(&args),
         Some("artifacts") => {
@@ -189,14 +219,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     let Some(mut cfg) = TrainConfig::named(&cfg_name) else {
         bail!("unknown --cfg {cfg_name:?} (want tiny|small)");
     };
-    cfg.ranks = args.usize_or("ranks", 1);
-    cfg.opt.lr = args.f64_or("lr", cfg.opt.lr as f64) as f32;
+    cfg.ranks = arg_usize(args, "ranks", 1)?;
+    cfg.opt.lr = arg_f64(args, "lr", cfg.opt.lr as f64)? as f32;
     ensure!((1..=cfg.n_experts).contains(&cfg.ranks), "--ranks must be in 1..=E");
-    let steps = args.usize_or("steps", 200);
+    let steps = arg_usize(args, "steps", 200)?;
     ensure!(steps >= 1, "--steps must be at least 1");
-    let seed = args.u64_or("seed", 42);
-    let noise = args.usize_or("noise", 10);
-    let log_every = args.usize_or("log-every", 20);
+    let seed = arg_u64(args, "seed", 42)?;
+    let noise = arg_usize(args, "noise", 10)?;
+    let log_every = arg_usize(args, "log-every", 20)?;
     let recipes = match args.get_or("recipe", "all").as_str() {
         "all" => vec![Recipe::Bf16, Recipe::Blockwise, Recipe::Fp8Flow],
         other => match Recipe::parse(other) {
@@ -282,10 +312,10 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_train_aot(args: &Args) -> Result<()> {
     let cfg = args.get_or("cfg", "tiny");
     let recipe = args.get_or("recipe", "fp8flow");
-    let steps = args.usize_or("steps", 50);
-    let seed = args.u64_or("seed", 42);
-    let noise = args.usize_or("noise", 10);
-    let log_every = args.usize_or("log-every", 10);
+    let steps = arg_usize(args, "steps", 50)?;
+    let seed = arg_u64(args, "seed", 42)?;
+    let noise = arg_usize(args, "noise", 10)?;
+    let log_every = arg_usize(args, "log-every", 10)?;
 
     let rt = Runtime::open(Runtime::default_dir()).context(
         "AOT artifacts unavailable — run `make artifacts`, or drop --aot to use the \
@@ -331,15 +361,15 @@ struct ShardArgs {
 
 impl ShardArgs {
     fn parse(args: &Args, default_ranks: usize) -> Result<ShardArgs> {
-        let ranks = args.usize_or("ranks", default_ranks);
-        let tokens = args.usize_or("tokens", 512);
-        let experts = args.usize_or("experts", 8);
-        let top_k = args.usize_or("top-k", 2);
-        let d_model = args.usize_or("d-model", 256);
-        let ffn = args.usize_or("ffn", 256);
-        let capacity = args.usize_or("capacity", (tokens * top_k).div_ceil(experts));
-        let seed = args.u64_or("seed", 42);
-        let chunks = args.usize_or("chunks", 1);
+        let ranks = arg_usize(args, "ranks", default_ranks)?;
+        let tokens = arg_usize(args, "tokens", 512)?;
+        let experts = arg_usize(args, "experts", 8)?;
+        let top_k = arg_usize(args, "top-k", 2)?;
+        let d_model = arg_usize(args, "d-model", 256)?;
+        let ffn = arg_usize(args, "ffn", 256)?;
+        let capacity = arg_usize(args, "capacity", (tokens * top_k).div_ceil(experts))?;
+        let seed = arg_u64(args, "seed", 42)?;
+        let chunks = arg_usize(args, "chunks", 1)?;
         let overlap = match args.get_or("overlap", "off").as_str() {
             "on" | "true" => true,
             "off" | "false" => false,
@@ -430,7 +460,7 @@ impl TraceSession {
     fn start(args: &Args) -> Result<Option<TraceSession>> {
         let Some(path) = args.get("trace") else { return Ok(None) };
         ensure!(!path.is_empty(), "--trace needs a file path");
-        let detail = args.usize_or("trace-detail", 1);
+        let detail = arg_usize(args, "trace-detail", 1)?;
         ensure!(detail <= 2, "--trace-detail must be 0, 1, or 2");
         let rec = obs::Recorder::new(detail as u8);
         let guard = obs::install(rec.clone());
@@ -832,10 +862,10 @@ fn cmd_bwd(args: &Args) -> Result<()> {
 /// `runs/lint.json`, and exit nonzero if any error-severity diagnostic
 /// fired (see `rust/EXPERIMENTS.md` §Lint).
 fn cmd_lint(args: &Args) -> Result<()> {
-    let experts = args.usize_or("experts", 8);
-    let top_k = args.usize_or("top-k", 2);
-    let ranks = args.usize_or("ranks", 1);
-    let chunks = args.usize_or("chunks", 1);
+    let experts = arg_usize(args, "experts", 8)?;
+    let top_k = arg_usize(args, "top-k", 2)?;
+    let ranks = arg_usize(args, "ranks", 1)?;
+    let chunks = arg_usize(args, "chunks", 1)?;
     ensure!(experts >= 1, "--experts must be at least 1");
     ensure!((1..=experts).contains(&top_k), "--top-k must be in 1..=--experts");
     ensure!((1..=experts).contains(&ranks), "--ranks must be in 1..=--experts");
@@ -1009,14 +1039,14 @@ fn executed_audit(
 /// `rust/EXPERIMENTS.md` §Serving). `--sweep` runs the capacity-factor
 /// sweep that maps the quality/throughput trade.
 fn cmd_serve(args: &Args) -> Result<()> {
-    let ranks = args.usize_or("ranks", 2);
-    let n_requests = args.usize_or("requests", 64);
-    let experts = args.usize_or("experts", 8);
-    let top_k = args.usize_or("top-k", 2);
-    let d_model = args.usize_or("d-model", 128);
-    let ffn = args.usize_or("ffn", 128);
-    let seed = args.u64_or("seed", 42);
-    let chunks = args.usize_or("chunks", 1);
+    let ranks = arg_usize(args, "ranks", 2)?;
+    let n_requests = arg_usize(args, "requests", 64)?;
+    let experts = arg_usize(args, "experts", 8)?;
+    let top_k = arg_usize(args, "top-k", 2)?;
+    let d_model = arg_usize(args, "d-model", 128)?;
+    let ffn = arg_usize(args, "ffn", 128)?;
+    let seed = arg_u64(args, "seed", 42)?;
+    let chunks = arg_usize(args, "chunks", 1)?;
     let overlap = match args.get_or("overlap", "off").as_str() {
         "on" | "true" => true,
         "off" | "false" => false,
@@ -1035,14 +1065,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let gen = GenConfig {
         seed,
         mode,
-        rate: args.f64_or("rate", 200.0),
-        burst: args.f64_or("burst", 4.0),
-        burst_period_s: args.f64_or("burst-period-ms", 50.0) / 1e3,
-        zipf_s: args.f64_or("zipf", 1.1),
-        min_len: args.usize_or("min-len", 4),
-        max_len: args.usize_or("max-len", 64),
-        vocab: args.usize_or("vocab", 64),
-        noise_pct: args.usize_or("noise", 10),
+        rate: arg_f64(args, "rate", 200.0)?,
+        burst: arg_f64(args, "burst", 4.0)?,
+        burst_period_s: arg_f64(args, "burst-period-ms", 50.0)? / 1e3,
+        zipf_s: arg_f64(args, "zipf", 1.1)?,
+        min_len: arg_usize(args, "min-len", 4)?,
+        max_len: arg_usize(args, "max-len", 64)?,
+        vocab: arg_usize(args, "vocab", 64)?,
+        noise_pct: arg_usize(args, "noise", 10)?,
     };
     // re-check the generator's invariants here so a bad flag takes the
     // error contract (stderr + exit 2) instead of the library assert
@@ -1056,8 +1086,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     ensure!(gen.vocab >= 1, "--vocab must be at least 1");
 
     let slo = SloPolicy {
-        max_wait_s: args.f64_or("max-wait-ms", 5.0) / 1e3,
-        max_tokens: args.usize_or("max-tokens", 128),
+        max_wait_s: arg_f64(args, "max-wait-ms", 5.0)? / 1e3,
+        max_tokens: arg_usize(args, "max-tokens", 128)?,
     };
     ensure!(slo.max_wait_s >= 0.0, "--max-wait-ms must be non-negative");
     ensure!(slo.max_tokens >= 1, "--max-tokens must be at least 1");
@@ -1066,8 +1096,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let Some(drop_policy) = DropPolicy::parse(&drop_s) else {
         bail!("unknown --drop {drop_s:?} (want capacity|none)");
     };
-    let cf = args.f64_or("capacity-factor", 1.0);
-    ensure!(cf > 0.0, "--capacity-factor must be positive");
+    // --cf is the short alias for --capacity-factor; both spellings go
+    // through the same parse + positivity gate
+    ensure!(
+        !(args.get("cf").is_some() && args.get("capacity-factor").is_some()),
+        "--cf is an alias for --capacity-factor; pass only one of them"
+    );
+    let cf_key = if args.get("cf").is_some() { "cf" } else { "capacity-factor" };
+    let cf = arg_f64(args, cf_key, 1.0)?;
+    ensure!(cf > 0.0, "--{cf_key} must be positive");
     let cfs: Vec<f64> =
         if args.flag("sweep") { vec![0.5, 0.75, 1.0, 1.25, 1.5] } else { vec![cf] };
     let recipes = match args.get_or("recipe", "fp8flow").as_str() {
@@ -1258,8 +1295,238 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The chaos driver: replay a seeded fault-injection matrix over the
+/// three executed surfaces and assert the recovery contracts end to end
+/// (see `rust/EXPERIMENTS.md` §Robustness):
+///
+/// * **epshard** — payload/sidecar bit flips, a dropped message and a
+///   straggler on the EP dispatch wire; the recovered output must be
+///   bitwise identical to the fault-free run, with the recovery visible
+///   only in the counters and the virtual clock.
+/// * **serve** — a rank crash mid-trace under both failover policies;
+///   the extended drop ledger (Σ rank rows + dropped slots +
+///   failed-rank drops = tokens·top_k) must balance exactly.
+/// * **train** — crash at the midpoint step, resume from the versioned
+///   checkpoint; the resumed loss trajectory must replay the
+///   uninterrupted run bit-for-bit.
+///
+/// Writes `runs/chaos_r<R>.json` (a unified-schema runs document, so it
+/// validates under `fp8-flow-moe trace`).
+fn cmd_chaos(args: &Args) -> Result<()> {
+    let ranks = arg_usize(args, "ranks", 2)?;
+    let seed = arg_u64(args, "seed", 42)?;
+    let steps = arg_usize(args, "steps", 6)?;
+    ensure!(
+        (1..=8usize).contains(&ranks),
+        "--ranks must be in 1..=8 (the chaos shape has 8 experts)"
+    );
+    ensure!(
+        steps >= 2 && steps % 2 == 0,
+        "--steps must be even and at least 2 (the crash lands at the midpoint)"
+    );
+
+    println!(
+        "chaos: seeded fault injection over epshard/serve/train — R={ranks}, seed={seed}, \
+         {} workers",
+        exec::threads()
+    );
+    let mut doc = Json::run_doc("chaos").set("ranks", ranks).set("seed", seed);
+
+    // ---- epshard: wire corruption on the EP dispatch, recovered bitwise
+    let (tokens, experts, top_k, d_model, ffn) = (128usize, 8usize, 2usize, 64usize, 64usize);
+    let capacity = (tokens * top_k).div_ceil(experts);
+    let mut rng = Rng::seed_from(seed);
+    let x = Mat::randn(tokens, d_model, 0.5, &mut rng);
+    let w = MoeWeights::random(d_model, ffn, experts, &mut rng);
+    let pw = PreparedWeights::new(w.clone(), Recipe::Fp8Flow);
+    let cfg = EpConfig::serial(ranks, top_k, capacity, 0);
+    let clean = ep_forward(&x, &pw, &cfg);
+    let plan = FaultPlan::new(vec![
+        // transient FP8-code flip: CRC32 detects it, one retransmission
+        Fault {
+            tick: wire_tick(0, 0, false),
+            src: 0,
+            dst: ANY_DST,
+            kind: FaultKind::FlipPayloadBit { offset: seed as usize, bit: (seed % 8) as u8 },
+            attempts: 1,
+        },
+        // UE8M0 sidecar flip — the silent 2^±k tile-scale error class —
+        // held across two receptions (two retries, still no failover)
+        Fault {
+            tick: wire_tick(top_k - 1, 0, false),
+            src: ranks - 1,
+            dst: ANY_DST,
+            kind: FaultKind::FlipSidecarBit { offset: seed as usize + 1, bit: (seed % 7) as u8 },
+            attempts: 2,
+        },
+        // dropped message: virtual-clock timeout, then retransmission
+        Fault {
+            tick: wire_tick(0, 0, false),
+            src: ranks - 1,
+            dst: 0,
+            kind: FaultKind::DropMessage,
+            attempts: 1,
+        },
+        // straggler: late delivery, clock cost only
+        Fault {
+            tick: wire_tick(0, 0, false),
+            src: 0,
+            dst: 0,
+            kind: FaultKind::Straggler { delay_ns: 3 << 20 },
+            attempts: 1,
+        },
+    ]);
+    let faulty = ep_forward_with_faults(&x, &pw, &cfg, &plan);
+    ensure!(
+        bits_eq(&faulty.y.data, &clean.y.data),
+        "chaos epshard: recovered output diverged bitwise from the fault-free run"
+    );
+    let st = plan.stats();
+    ensure!(st.checksum_fails >= 1, "chaos epshard: no wire corruption was detected");
+    ensure!(st.retries >= 1, "chaos epshard: recovery issued no retransmissions");
+    ensure!(st.failovers == 0, "chaos epshard: transient faults must not escalate to failover");
+    println!(
+        "  epshard  R={ranks}: bit-identical after recovery — checksum fails {}, retries {}, \
+         recovery clock {} ns",
+        st.checksum_fails, st.retries, st.clock_ns
+    );
+    doc = doc.set(
+        "epshard",
+        st.to_json().set("faults", plan.faults().len()).set("bit_identical", true),
+    );
+
+    // ---- serve: rank crash mid-trace under both failover policies
+    let mode = ArrivalMode::parse("poisson").context("poisson arrivals")?;
+    let gen = GenConfig {
+        seed,
+        mode,
+        rate: 200.0,
+        burst: 4.0,
+        burst_period_s: 0.05,
+        zipf_s: 1.1,
+        min_len: 4,
+        max_len: 32,
+        vocab: 64,
+        noise_pct: 10,
+    };
+    let requests = generate_requests(&gen, 32);
+    let total_tokens: usize = requests.iter().map(|r| r.len()).sum();
+    let total_slots = total_tokens * top_k;
+    let slo = SloPolicy { max_wait_s: 5.0 / 1e3, max_tokens: 64 };
+    let drop_policy = DropPolicy::parse("capacity").context("capacity drop policy")?;
+    let mut sj = Json::obj();
+    for (pname, policy) in [("reroute", FailoverPolicy::Reroute), ("drop", FailoverPolicy::Drop)] {
+        let plan = FaultPlan::new(vec![
+            Fault {
+                tick: 1,
+                src: ranks - 1,
+                dst: ANY_DST,
+                kind: FaultKind::CrashRank,
+                attempts: 1,
+            },
+            Fault {
+                tick: 2,
+                src: 0,
+                dst: ANY_DST,
+                kind: FaultKind::FlipSidecarBit { offset: 17, bit: 2 },
+                attempts: 1,
+            },
+        ]);
+        let engine = ServeEngine::new(
+            PreparedWeights::new(w.clone(), Recipe::Fp8Flow),
+            TokenEmbed::new(gen.vocab, d_model, seed),
+            ServeConfig {
+                ranks,
+                top_k,
+                capacity_factor: 1.0,
+                drop_policy,
+                threads: 0,
+                chunks: 1,
+                overlap: false,
+            },
+        )
+        .with_faults(plan, policy);
+        let s = serve_trace(&engine, &requests, &slo);
+        let st = engine.fault_stats();
+        let slots = s.rank_rows.iter().sum::<usize>() + s.dropped_slots + s.failed_rank_drops;
+        ensure!(
+            slots == total_slots,
+            "chaos serve/{pname}: drop ledger does not balance ({slots} != {total_slots} slots)"
+        );
+        ensure!(st.failovers >= 1, "chaos serve/{pname}: the scheduled rank crash never fired");
+        ensure!(s.degraded_ticks >= 1, "chaos serve/{pname}: no tick ran in degraded mode");
+        println!(
+            "  serve    {pname:>7}: ledger balances over {total_slots} slots — degraded ticks \
+             {}, failed-rank drops {}, checksum fails {}, failovers {}",
+            s.degraded_ticks, s.failed_rank_drops, st.checksum_fails, st.failovers
+        );
+        sj = sj.set(
+            pname,
+            st.to_json()
+                .set("ledger_slots", total_slots)
+                .set("served_tokens", s.served_tokens)
+                .set("dropped_slots", s.dropped_slots)
+                .set("failed_rank_drops", s.failed_rank_drops)
+                .set("degraded_ticks", s.degraded_ticks),
+        );
+    }
+    doc = doc.set("serve", sj);
+
+    // ---- train: crash at the midpoint, resume from checkpoint, replay
+    let crash_at = steps / 2;
+    let Some(mut tcfg) = TrainConfig::named("tiny") else { bail!("tiny config missing") };
+    tcfg.ranks = ranks.min(tcfg.n_experts);
+    let recipe = Recipe::Fp8Flow;
+
+    let mut gold = NativeTrainer::new(tcfg, recipe, seed);
+    let mut gold_corpus = Corpus::new(tcfg.vocab, seed, 10);
+    let gold_out = gold.run(&mut gold_corpus, steps, 0)?;
+
+    let mut pre = NativeTrainer::new(tcfg, recipe, seed);
+    let mut pre_corpus = Corpus::new(tcfg.vocab, seed, 10);
+    let pre_out = pre.run(&mut pre_corpus, crash_at, 0)?;
+    let ckpt = {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("runs");
+        std::fs::create_dir_all(&dir)?;
+        dir.join(format!("chaos_ckpt_r{ranks}.json"))
+    };
+    save_checkpoint(&pre, &pre_corpus, &ckpt)?;
+    drop(pre); // the injected crash: in-memory training state is gone
+
+    // deliberately different init seed: restore must overwrite everything
+    let mut resumed = NativeTrainer::new(tcfg, recipe, seed ^ 0x5EED_BEEF);
+    let mut res_corpus = Corpus::new(tcfg.vocab, seed ^ 0x5EED_BEEF, 10);
+    let at = restore_trainer(&mut resumed, &mut res_corpus, &ckpt)?;
+    ensure!(at == crash_at, "chaos train: checkpoint resumed at step {at}, expected {crash_at}");
+    let post_out = resumed.run(&mut res_corpus, steps - crash_at, 0)?;
+
+    let replay: Vec<f32> = pre_out.losses.iter().chain(&post_out.losses).copied().collect();
+    ensure!(
+        bits_eq(&replay, &gold_out.losses),
+        "chaos train: resumed loss trajectory diverged bitwise from the uninterrupted run"
+    );
+    println!(
+        "  train    R={}: crash at step {crash_at}/{steps}, resumed from {ckpt:?} — loss \
+         trajectory bit-identical",
+        tcfg.ranks
+    );
+    doc = doc.set(
+        "train",
+        Json::obj()
+            .set("steps", steps)
+            .set("crash_at_step", crash_at)
+            .set("ranks", tcfg.ranks)
+            .set("checkpoint", ckpt.to_string_lossy().as_ref())
+            .set("bit_identical", true),
+    );
+
+    let path = write_run_json(&format!("chaos_r{ranks}"), &doc)?;
+    println!("wrote {path:?}");
+    Ok(())
+}
+
 fn cmd_dqe(args: &Args) -> Result<()> {
-    let n = args.usize_or("size", 512);
+    let n = arg_usize(args, "size", 512)?;
     let mut rng = Rng::seed_from(7);
     let x = Mat::rand_log_uniform(n, n, -6.0, 6.0, &mut rng);
     println!("double-quantization error (Eq. 1) on a [{n},{n}] log-uniform tensor:\n");

@@ -33,7 +33,7 @@ use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Instant;
 
 /// Number of distinct [`Counter`]s.
-pub const N_COUNTERS: usize = 12;
+pub const N_COUNTERS: usize = 15;
 
 /// Monotonic event counters, incremented at the executed op sites
 /// (quantize launches, wire packing, serving drop accounting). The five
@@ -66,6 +66,14 @@ pub enum Counter {
     ServedTokens = 10,
     /// Serving: tokens served with at least one dropped slot.
     DegradedTokens = 11,
+    /// Wire integrity: all-to-all buffers whose CRC32 failed on receive
+    /// (codes and sidecar checked separately; each failed check counts 1).
+    WireChecksumFail = 12,
+    /// Wire integrity: bounded retransmissions after a detected
+    /// corruption, timeout, or dropped message.
+    A2aRetries = 13,
+    /// Wire integrity: rank failovers after retry exhaustion.
+    Failovers = 14,
 }
 
 impl Counter {
@@ -83,6 +91,9 @@ impl Counter {
         Counter::DroppedSlots,
         Counter::ServedTokens,
         Counter::DegradedTokens,
+        Counter::WireChecksumFail,
+        Counter::A2aRetries,
+        Counter::Failovers,
     ];
 
     /// Stable snake_case name (JSON key in the trace `counters` block).
@@ -100,6 +111,9 @@ impl Counter {
             Counter::DroppedSlots => "dropped_slots",
             Counter::ServedTokens => "served_tokens",
             Counter::DegradedTokens => "degraded_tokens",
+            Counter::WireChecksumFail => "wire_checksum_fail",
+            Counter::A2aRetries => "a2a_retries",
+            Counter::Failovers => "failovers",
         }
     }
 }

@@ -20,13 +20,28 @@
 //! single-rank combine bit-for-bit (`moe::layer` pins that).
 //! `tests/prop_serve.rs` pins the end-to-end property; the `serve` CLI
 //! gates on it every run.
+//!
+//! **Degraded mode** (fault-injected runs): an engine built with
+//! [`ServeEngine::with_faults`] survives rank loss. A crashed rank's
+//! in-flight dispatch is lost for that tick (its slots land in the
+//! `failed_rank_drops` ledger term), and from the next tick the
+//! [`FailoverPolicy`] decides: `Reroute` re-partitions the full expert
+//! range over the surviving ranks (every expert stays served, numerics
+//! unchanged — each (token, slot) pair still has exactly one nonzero
+//! combine contribution, so the partial-sum regrouping is exact), while
+//! `Drop` keeps the static ownership and drops the dead ranks' expert
+//! slots every tick. Either way the tick ledger stays exact:
+//! `Σ_rank real_rows + dropped_slots + failed_rank_drops = tokens·top_k`.
 
+use std::ops::Range;
 use std::time::Instant;
 
 use crate::cluster::ep_exec::{ep_forward, EpConfig};
+use crate::cluster::fault::{FaultPlan, FaultStats};
+use crate::cluster::rank::WireBuf;
 use crate::exec::{self, Partition};
 use crate::fp8::tile::quantize_rowwise;
-use crate::fp8::{Fp8Format, ScaleMode};
+use crate::fp8::{ue8m0, Fp8Format, ScaleMode};
 use crate::moe::layer::{combine, dispatch, expert_ffn, DispatchSource, PreparedWeights, Recipe};
 use crate::moe::permute::permute_pad_plan;
 use crate::moe::router::route;
@@ -91,6 +106,21 @@ impl ServeConfig {
     }
 }
 
+/// What the engine does with a failed rank's expert range from the tick
+/// after the failure onward (the failure tick itself always loses its
+/// in-flight dispatch to `failed_rank_drops`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailoverPolicy {
+    /// Re-partition the **full** expert range over the surviving ranks:
+    /// every expert stays served and tick outputs stay bit-identical to
+    /// the healthy engine (the regrouped combine partials are exact —
+    /// each (token, slot) pair has one nonzero contribution).
+    Reroute,
+    /// Keep the static ownership; the dead ranks' expert slots are
+    /// dropped every tick through the `failed_rank_drops` ledger term.
+    Drop,
+}
+
 /// Result of one flush-tick forward.
 pub struct TickResult {
     /// Batch output `[tokens, d]` (rows of dropped slots miss that
@@ -100,6 +130,13 @@ pub struct TickResult {
     pub fully_served: Vec<bool>,
     /// Dropped (token, slot) pairs in this tick.
     pub dropped_slots: usize,
+    /// (token, slot) pairs lost to failed ranks this tick (crash-tick
+    /// in-flight loss, plus — under [`FailoverPolicy::Drop`] — the dead
+    /// ranks' standing expert slots). Disjoint from `dropped_slots`, so
+    /// `Σ rank_rows + dropped_slots + failed_rank_drops = tokens·top_k`.
+    pub failed_rank_drops: usize,
+    /// True iff the tick ran with at least one failed rank.
+    pub degraded: bool,
     /// Real (non-pad) dispatched rows per rank, summed over slots.
     pub rank_rows: Vec<usize>,
     /// Per-rank expert-FFN seconds, summed over slots.
@@ -118,6 +155,8 @@ pub struct ServeEngine {
     pub embed: TokenEmbed,
     /// Engine knobs.
     pub cfg: ServeConfig,
+    faults: FaultPlan,
+    failover: FailoverPolicy,
 }
 
 impl ServeEngine {
@@ -128,7 +167,23 @@ impl ServeEngine {
         assert!(cfg.ranks >= 1 && e >= cfg.ranks, "need 1 <= ranks <= E");
         assert!(cfg.top_k >= 1 && cfg.top_k <= e, "need 1 <= top_k <= E");
         assert!(cfg.chunks >= 1, "need at least one pipeline chunk");
-        ServeEngine { weights, embed, cfg }
+        ServeEngine { weights, embed, cfg, faults: FaultPlan::none(), failover: FailoverPolicy::Reroute }
+    }
+
+    /// Arm the engine with a fault schedule and a failover policy. An
+    /// armed engine always runs the serialized stage loop (the chaos
+    /// coordinate system is the serve tick, which the overlap pipeline's
+    /// chunk lanes would blur), so the pipelined flags are ignored while
+    /// faults are scheduled.
+    pub fn with_faults(mut self, faults: FaultPlan, failover: FailoverPolicy) -> ServeEngine {
+        self.faults = faults;
+        self.failover = failover;
+        self
+    }
+
+    /// Recovery totals of the armed fault plan (all zero when unarmed).
+    pub fn fault_stats(&self) -> FaultStats {
+        self.faults.stats()
     }
 
     fn threads(&self) -> usize {
@@ -154,6 +209,18 @@ impl ServeEngine {
     /// zero rows (an empty flush tick): the result is empty, no panic —
     /// the zero-row edge the empty-batch property tests pin.
     pub fn forward_batch(&self, x: &Mat) -> TickResult {
+        self.forward_batch_at(0, x)
+    }
+
+    /// [`ServeEngine::forward_batch`] at an explicit serve tick index —
+    /// the coordinate an armed [`FaultPlan`] matches against. Crashes
+    /// scheduled at `tick` are consumed first (their in-flight dispatch
+    /// lands in `failed_rank_drops`), wire faults are injected into the
+    /// tick's checksummed wire image and recovered (counters only — the
+    /// served bytes are the recovered, pristine ones), and the standing
+    /// failed-rank set drives expert ownership per the
+    /// [`FailoverPolicy`].
+    pub fn forward_batch_at(&self, tick: usize, x: &Mat) -> TickResult {
         let t0 = Instant::now();
         let t = x.rows;
         let e = self.weights.raw.n_experts();
@@ -162,40 +229,72 @@ impl ServeEngine {
         let cap = self.capacity_for(t);
         let shard = Partition::even(e, ranks);
 
+        // fault bookkeeping first: ranks crashing at this tick lose
+        // their in-flight dispatch below, and the standing failed set
+        // decides this tick's expert ownership
+        let newly = self.faults.crashed_at(tick as u64);
+        let failed: Vec<bool> = (0..ranks).map(|r| self.faults.is_failed(r)).collect();
+        let degraded = failed.iter().any(|&f| f);
+        if self.faults.armed() && t > 0 {
+            self.faults.deliver_tick(tick as u64, &self.tick_wire_image(x));
+        }
+
         let sr = obs::enabled()
             .then(|| obs::span(format!("route t{t}"), obs::SpanMeta::stage("route")));
         let routing = route(x, &self.weights.raw.router, top_k);
         drop(sr);
-        let plans: Vec<Vec<i64>> = (0..top_k)
+        let mut plans: Vec<Vec<i64>> = (0..top_k)
             .map(|kk| {
                 let expert_of: Vec<usize> = routing.experts.iter().map(|ex| ex[kk]).collect();
                 permute_pad_plan(&expert_of, e, cap)
             })
             .collect();
 
-        // exact drop accounting straight off the plans
+        // void the plan entries of expert segments that lost their
+        // server this tick, remembering which (token, slot) pairs they
+        // were — those are failed-rank drops, not capacity drops
+        let masked_ex = self.masked_expert_ids(&shard, &failed, &newly);
+        let mut masked: Vec<Vec<bool>> = vec![vec![false; t]; top_k];
+        for (kk, plan) in plans.iter_mut().enumerate() {
+            for &ex in &masked_ex {
+                for p in &mut plan[ex * cap..(ex + 1) * cap] {
+                    if *p >= 0 {
+                        masked[kk][*p as usize] = true;
+                        *p = -1;
+                    }
+                }
+            }
+        }
+        let owners = self.owner_segments(e, &failed);
+
+        // exact drop accounting straight off the (masked) plans
         let mut fully_served = vec![true; t];
         let mut dropped_slots = 0usize;
+        let mut failed_rank_drops = 0usize;
         let mut rank_rows = vec![0usize; ranks];
-        for plan in &plans {
+        for (kk, plan) in plans.iter().enumerate() {
             let mut present = vec![false; t];
-            for (r, er) in shard.ranges().enumerate() {
+            for (r, er) in &owners {
                 for &p in &plan[er.start * cap..er.end * cap] {
                     if p >= 0 {
                         present[p as usize] = true;
-                        rank_rows[r] += 1;
+                        rank_rows[*r] += 1;
                     }
                 }
             }
             for (tt, &ok) in present.iter().enumerate() {
                 if !ok {
                     fully_served[tt] = false;
-                    dropped_slots += 1;
+                    if masked[kk][tt] {
+                        failed_rank_drops += 1;
+                    } else {
+                        dropped_slots += 1;
+                    }
                 }
             }
         }
 
-        let (y, rank_expert_s) = if self.cfg.pipelined() && t >= 1 {
+        let (y, rank_expert_s) = if self.cfg.pipelined() && t >= 1 && !self.faults.armed() {
             // the PR 7 double-buffered pipeline; bit-identical to the
             // serialized stage loop below (prop_ep_shard pins it)
             let cfg = EpConfig::serial(ranks, top_k, cap, self.cfg.threads)
@@ -203,13 +302,15 @@ impl ServeEngine {
             let out = ep_forward(x, &self.weights, &cfg);
             (out.y, out.rank_expert_s)
         } else {
-            self.staged_forward(x, &routing.gates, &plans, cap, threads)
+            self.staged_forward(x, &routing.gates, &plans, cap, threads, &owners)
         };
 
         TickResult {
             y,
             fully_served,
             dropped_slots,
+            failed_rank_drops,
+            degraded,
             rank_rows,
             rank_expert_s,
             service_s: t0.elapsed().as_secs_f64(),
@@ -217,9 +318,72 @@ impl ServeEngine {
         }
     }
 
+    /// The tick's wire image for fault injection: the same byte classes
+    /// the EP dispatch puts on the all-to-all — FP8 codes plus the UE8M0
+    /// scale sidecar for Fp8Flow, the dense f32 image otherwise. Built
+    /// on a copy, so detection and retry never touch the served tensors.
+    fn tick_wire_image(&self, x: &Mat) -> WireBuf {
+        if self.weights.recipe == Recipe::Fp8Flow {
+            let xq = quantize_rowwise(x, Fp8Format::E4M3, ScaleMode::Po2);
+            let sidecar = xq.sexp.iter().map(|&se| ue8m0::from_exponent(se)).collect();
+            WireBuf::Fp8 { codes: xq.data, sidecar }
+        } else {
+            WireBuf::Dense(x.data.clone())
+        }
+    }
+
+    /// Expert ids whose plan entries are voided this tick: under
+    /// [`FailoverPolicy::Drop`] every failed rank's static segment, and
+    /// under [`FailoverPolicy::Reroute`] only the ranks that crashed at
+    /// this very tick — survivors pick their experts up from the next
+    /// tick on.
+    fn masked_expert_ids(&self, shard: &Partition, failed: &[bool], newly: &[usize]) -> Vec<usize> {
+        let mut out = Vec::new();
+        for (r, er) in shard.ranges().enumerate() {
+            let hit = match self.failover {
+                FailoverPolicy::Drop => failed[r],
+                FailoverPolicy::Reroute => newly.contains(&r),
+            };
+            if hit {
+                out.extend(er);
+            }
+        }
+        out
+    }
+
+    /// This tick's expert ownership as `(rank, expert range)` pairs:
+    /// the static even partition minus failed segments normally (and
+    /// always under [`FailoverPolicy::Drop`]); under
+    /// [`FailoverPolicy::Reroute`] with failures, the **full** expert
+    /// range re-split evenly over the surviving ranks.
+    fn owner_segments(&self, e: usize, failed: &[bool]) -> Vec<(usize, Range<usize>)> {
+        let ranks = self.cfg.ranks;
+        let live: Vec<usize> = (0..ranks).filter(|&r| !failed[r]).collect();
+        if live.len() == ranks || self.failover == FailoverPolicy::Drop {
+            return Partition::even(e, ranks)
+                .ranges()
+                .enumerate()
+                .filter(|&(r, _)| !failed[r])
+                .collect();
+        }
+        if live.is_empty() {
+            return Vec::new();
+        }
+        Partition::even(e, live.len())
+            .ranges()
+            .enumerate()
+            .map(|(i, er)| (live[i], er))
+            .collect()
+    }
+
     /// The serialized per-rank stage loop: for each top-k slot, dispatch /
-    /// expert-FFN / combine each rank's expert range and sum the per-rank
-    /// combine partials (bitwise equal to the full-range combine).
+    /// expert-FFN / combine each owner's expert range and sum the
+    /// per-owner combine partials. Bitwise equal to the full-range
+    /// combine for **any** ownership split, because each (token, slot)
+    /// pair is dispatched to exactly one expert — every partial sum has
+    /// at most one nonzero contribution per output element, so the
+    /// regrouping is exact (that is what keeps rerouted degraded ticks
+    /// bit-identical to healthy ones).
     fn staged_forward(
         &self,
         x: &Mat,
@@ -227,11 +391,10 @@ impl ServeEngine {
         plans: &[Vec<i64>],
         cap: usize,
         threads: usize,
+        owners: &[(usize, Range<usize>)],
     ) -> (Mat, Vec<f64>) {
         let t = x.rows;
-        let e = self.weights.raw.n_experts();
         let ranks = self.cfg.ranks;
-        let shard = Partition::even(e, ranks);
         let x_q = (self.weights.recipe == Recipe::Fp8Flow).then(|| {
             let _s = obs::enabled()
                 .then(|| obs::span("entry quant".to_string(), obs::SpanMeta::stage("quant")));
@@ -242,7 +405,8 @@ impl ServeEngine {
         let mut rank_expert_s = vec![0.0f64; ranks];
         for (kk, plan) in plans.iter().enumerate() {
             let mut slot = Mat::zeros(t, x.cols);
-            for (r, er) in shard.ranges().enumerate() {
+            for (r, er) in owners {
+                let (r, er) = (*r, er.clone());
                 let src = match &x_q {
                     Some(xq) => DispatchSource::Fp8(xq),
                     None => DispatchSource::Dense(x),
@@ -302,6 +466,11 @@ pub struct ServeSummary {
     pub degraded_tokens: usize,
     /// Dropped (token, slot) pairs, summed over ticks.
     pub dropped_slots: usize,
+    /// (token, slot) pairs lost to failed ranks, summed over ticks (the
+    /// degraded-mode ledger term; 0 on a healthy run).
+    pub failed_rank_drops: usize,
+    /// Ticks that ran with at least one failed rank (degraded mode).
+    pub degraded_ticks: usize,
     /// Real dispatched rows per rank, summed over ticks and slots.
     pub rank_rows: Vec<usize>,
     /// Per-rank expert seconds, summed over ticks and slots.
@@ -363,6 +532,8 @@ pub fn serve_trace(engine: &ServeEngine, requests: &[Request], slo: &SloPolicy) 
     let mut rank_rows = vec![0usize; engine.cfg.ranks];
     let mut rank_expert_s = vec![0.0f64; engine.cfg.ranks];
     let mut dropped_slots = 0usize;
+    let mut failed_rank_drops = 0usize;
+    let mut degraded_ticks = 0usize;
     let mut latencies = Vec::with_capacity(requests.len());
     let mut engine_free = 0.0f64;
     let mut busy_s = 0.0f64;
@@ -374,7 +545,7 @@ pub fn serve_trace(engine: &ServeEngine, requests: &[Request], slo: &SloPolicy) 
         let ids: Vec<i32> =
             tick.requests.iter().flat_map(|&i| requests[i].tokens.iter().copied()).collect();
         let x = engine.embed.embed(&ids);
-        let res = engine.forward_batch(&x);
+        let res = engine.forward_batch_at(ti, &x);
         drop(st);
         if obs::enabled() {
             let served = res.fully_served.iter().filter(|&&s| s).count();
@@ -409,6 +580,8 @@ pub fn serve_trace(engine: &ServeEngine, requests: &[Request], slo: &SloPolicy) 
         }
 
         dropped_slots += res.dropped_slots;
+        failed_rank_drops += res.failed_rank_drops;
+        degraded_ticks += usize::from(res.degraded);
         for (acc, v) in rank_rows.iter_mut().zip(&res.rank_rows) {
             *acc += v;
         }
@@ -435,6 +608,8 @@ pub fn serve_trace(engine: &ServeEngine, requests: &[Request], slo: &SloPolicy) 
         served_tokens,
         degraded_tokens: total_tokens - served_tokens,
         dropped_slots,
+        failed_rank_drops,
+        degraded_ticks,
         rank_rows,
         rank_expert_s,
         tokens_per_s: if engine_free > 0.0 { total_tokens as f64 / engine_free } else { 0.0 },
@@ -516,6 +691,106 @@ mod tests {
         for (a, b) in s.y.data.iter().zip(&one.y.data) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn crashed_rank_ledger_balances_under_both_policies() {
+        use crate::cluster::fault::{Fault, FaultKind, ANY_DST};
+        for policy in [FailoverPolicy::Reroute, FailoverPolicy::Drop] {
+            let plan = FaultPlan::new(vec![Fault {
+                tick: 1,
+                src: 1,
+                dst: ANY_DST,
+                kind: FaultKind::CrashRank,
+                attempts: 1,
+            }]);
+            let eng = engine(Recipe::Fp8Flow, 2, 1.0, DropPolicy::Capacity)
+                .with_faults(plan, policy);
+            let reqs = generate_requests(&GenConfig::default(), 40);
+            let ids: Vec<i32> = reqs.iter().flat_map(|r| r.tokens.iter().copied()).collect();
+            let x = eng.embed.embed(&ids);
+            for tick in 0..3usize {
+                let res = eng.forward_batch_at(tick, &x);
+                let real: usize = res.rank_rows.iter().sum();
+                assert_eq!(
+                    real + res.dropped_slots + res.failed_rank_drops,
+                    x.rows * eng.cfg.top_k,
+                    "{policy:?} tick {tick}: the extended ledger must balance"
+                );
+                if tick == 0 {
+                    assert!(!res.degraded);
+                    assert_eq!(res.failed_rank_drops, 0);
+                } else {
+                    assert!(res.degraded);
+                    assert_eq!(res.rank_rows[1], 0, "a dead rank serves nothing");
+                    if policy == FailoverPolicy::Drop || tick == 1 {
+                        // crash-tick in-flight loss, or standing Drop loss
+                        assert!(res.failed_rank_drops > 0);
+                    } else {
+                        assert_eq!(res.failed_rank_drops, 0, "survivors serve everything");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reroute_steady_state_is_bit_identical_to_healthy() {
+        use crate::cluster::fault::{Fault, FaultKind, ANY_DST};
+        let reqs = generate_requests(&GenConfig::default(), 24);
+        let ids: Vec<i32> = reqs.iter().flat_map(|r| r.tokens.iter().copied()).collect();
+        let healthy = engine(Recipe::Fp8Flow, 2, 0.25, DropPolicy::None);
+        let x = healthy.embed.embed(&ids);
+        let y0 = healthy.forward_batch_at(5, &x);
+        let plan = FaultPlan::new(vec![Fault {
+            tick: 1,
+            src: 1,
+            dst: ANY_DST,
+            kind: FaultKind::CrashRank,
+            attempts: 1,
+        }]);
+        let eng = engine(Recipe::Fp8Flow, 2, 0.25, DropPolicy::None)
+            .with_faults(plan, FailoverPolicy::Reroute);
+        let _ = eng.forward_batch_at(1, &x); // consume the crash (in-flight loss)
+        let y1 = eng.forward_batch_at(5, &x); // steady-state degraded tick
+        assert!(y1.degraded);
+        assert_eq!(y1.rank_rows[1], 0);
+        assert_eq!(y1.failed_rank_drops, 0);
+        assert!(y1.fully_served.iter().all(|&s| s));
+        for (a, b) in y0.y.data.iter().zip(&y1.y.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "reroute must not perturb numerics");
+        }
+    }
+
+    #[test]
+    fn wire_faults_recover_without_touching_outputs() {
+        use crate::cluster::fault::{Fault, FaultKind, ANY_DST};
+        let reqs = generate_requests(&GenConfig::default(), 16);
+        let ids: Vec<i32> = reqs.iter().flat_map(|r| r.tokens.iter().copied()).collect();
+        let clean = engine(Recipe::Fp8Flow, 2, 1.0, DropPolicy::Capacity);
+        let x = clean.embed.embed(&ids);
+        let y0 = clean.forward_batch_at(3, &x);
+        let plan = FaultPlan::new(vec![
+            Fault {
+                tick: 3,
+                src: 0,
+                dst: ANY_DST,
+                kind: FaultKind::FlipSidecarBit { offset: 2, bit: 0 },
+                attempts: 1,
+            },
+            Fault { tick: 3, src: 1, dst: 0, kind: FaultKind::DropMessage, attempts: 1 },
+        ]);
+        let eng = engine(Recipe::Fp8Flow, 2, 1.0, DropPolicy::Capacity)
+            .with_faults(plan, FailoverPolicy::Reroute);
+        let y1 = eng.forward_batch_at(3, &x);
+        for (a, b) in y0.y.data.iter().zip(&y1.y.data) {
+            assert_eq!(a.to_bits(), b.to_bits(), "recovered wire must be pristine");
+        }
+        let st = eng.fault_stats();
+        assert_eq!(st.checksum_fails, 1, "one detected sidecar flip");
+        assert_eq!(st.retries, 2, "one flip retry + one drop retry");
+        assert_eq!(st.failovers, 0);
+        assert!(st.clock_ns > 0);
     }
 
     #[test]

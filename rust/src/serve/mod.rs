@@ -24,5 +24,7 @@ pub mod engine;
 pub mod gen;
 
 pub use batch::{effective_capacity, schedule, DropPolicy, SloPolicy, Tick};
-pub use engine::{serve_trace, ServeConfig, ServeEngine, ServeSummary, TickResult, TokenEmbed};
+pub use engine::{
+    serve_trace, FailoverPolicy, ServeConfig, ServeEngine, ServeSummary, TickResult, TokenEmbed,
+};
 pub use gen::{generate_requests, ArrivalMode, GenConfig, Request};

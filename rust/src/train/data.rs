@@ -27,6 +27,24 @@ impl Corpus {
         Corpus { vocab, table, rng, s1: 0, s2: 1, noise_pct }
     }
 
+    /// Snapshot the stream position — RNG state plus the order-2 Markov
+    /// context — for checkpointing. The planted table is *not* part of
+    /// the snapshot: it is a pure function of `(vocab, seed)`, so
+    /// [`Corpus::restore`] on a fresh same-seed corpus resumes the token
+    /// stream bitwise (`tests/prop_fault.rs` pins resume identity).
+    pub fn stream_state(&self) -> ([u64; 4], u32, u32) {
+        (self.rng.state(), self.s1, self.s2)
+    }
+
+    /// Restore a [`Corpus::stream_state`] snapshot onto this corpus
+    /// (which must have been built with the same `(vocab, seed,
+    /// noise_pct)` for the planted table to match).
+    pub fn restore(&mut self, state: ([u64; 4], u32, u32)) {
+        self.rng = Rng::from_state(state.0);
+        self.s1 = state.1;
+        self.s2 = state.2;
+    }
+
     /// Next batch of `[batch, seq]` tokens (row-major i32).
     pub fn next_batch(&mut self, batch: usize, seq: usize) -> Vec<i32> {
         let mut out = Vec::with_capacity(batch * seq);

@@ -233,6 +233,21 @@ impl NativeTrainer {
         self.step
     }
 
+    // Checkpoint plumbing (`train::native::checkpoint`): the optimizer
+    // and step counter stay private; these views exist so the checkpoint
+    // module can snapshot/restore them without widening the public API.
+    pub(crate) fn opt_state(&self) -> (usize, &[Vec<f32>], &[Vec<f32>]) {
+        self.opt.state()
+    }
+
+    pub(crate) fn restore_opt(&mut self, t: usize, m: Vec<Vec<f32>>, v: Vec<Vec<f32>>) {
+        self.opt.restore(t, m, v);
+    }
+
+    pub(crate) fn set_step(&mut self, step: usize) {
+        self.step = step;
+    }
+
     /// One optimization step on a `[batch, seq]` token grid. Dispatches
     /// to the EP-sharded step when `cfg.ranks > 1` (bit-identical).
     pub fn step_batch(&mut self, tokens: &[i32]) -> TrainMetrics {

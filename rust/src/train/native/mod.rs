@@ -16,15 +16,21 @@
 //!   per-step [`TrainMetrics`] cast audit (fwd + bwd + optimizer), and
 //!   the Fig. 6 three-recipe convergence run.
 //!
+//! * [`checkpoint`] — versioned save/restore of the full loop state
+//!   (f32 masters + optimizer + RNG streams) with CRC-guarded payloads;
+//!   resume-after-crash is bitwise identical to the uninterrupted run.
+//!
 //! The EP-sharded form of the step lives in
 //! [`crate::cluster::ep_exec::ep_train_step`] and is bit-identical to the
 //! single-rank loop for any rank count (`tests/prop_train.rs`).
 
+pub mod checkpoint;
 pub mod model;
 pub mod opt;
 #[path = "loop.rs"]
 pub mod train_loop;
 
+pub use checkpoint::{load_checkpoint, restore_trainer, save_checkpoint, CKPT_VERSION};
 pub use model::NativeLm;
 pub use opt::{OptAlgo, OptConfig, Optimizer};
 pub use train_loop::{NativeTrainer, TrainConfig, TrainMetrics};

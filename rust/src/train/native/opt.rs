@@ -77,6 +77,22 @@ impl Optimizer {
         self.t
     }
 
+    /// Checkpoint view of the full state: `(t, m, v)` (first/second
+    /// moment buffers in parameter order; `v` is empty for SGD).
+    pub fn state(&self) -> (usize, &[Vec<f32>], &[Vec<f32>]) {
+        (self.t, &self.m, &self.v)
+    }
+
+    /// Restore a [`Optimizer::state`] snapshot. The buffers are keyed by
+    /// position, so the caller must resume with the same parameter list
+    /// order it checkpointed with; the next [`Optimizer::step`] then
+    /// continues bitwise (shape drift is caught by the step asserts).
+    pub fn restore(&mut self, t: usize, m: Vec<Vec<f32>>, v: Vec<Vec<f32>>) {
+        self.t = t;
+        self.m = m;
+        self.v = v;
+    }
+
     /// Learning rate at (1-based) step `step`: linear warmup to `lr`,
     /// constant afterwards.
     pub fn lr_at(&self, step: usize) -> f32 {

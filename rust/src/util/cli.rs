@@ -70,25 +70,49 @@ impl Args {
         self.get(key).unwrap_or(default).to_string()
     }
 
-    /// `--key` parsed as `usize`, or `default`.
+    /// `--key` parsed as `usize`, or `default`; `Err` on a malformed
+    /// value (the CLI maps it to the stderr + exit-2 contract).
+    pub fn try_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        self.get(key).map_or(Ok(default), |v| {
+            v.parse().map_err(|_| format!("--{key} expects an integer, got {v:?}"))
+        })
+    }
+
+    /// `--key` parsed as `u64`, or `default`; `Err` on a malformed value.
+    pub fn try_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        self.get(key).map_or(Ok(default), |v| {
+            v.parse().map_err(|_| format!("--{key} expects an integer, got {v:?}"))
+        })
+    }
+
+    /// `--key` parsed as a finite `f64`, or `default`; `Err` on a
+    /// malformed or non-finite value (`NaN` capacity factors would
+    /// otherwise sail through every comparison).
+    pub fn try_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        self.get(key).map_or(Ok(default), |v| {
+            v.parse::<f64>()
+                .ok()
+                .filter(|x| x.is_finite())
+                .ok_or_else(|| format!("--{key} expects a finite number, got {v:?}"))
+        })
+    }
+
+    /// `--key` parsed as `usize`, or `default`. Panics on a malformed
+    /// value — test/tool convenience; CLI paths use [`Args::try_usize`].
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
-        self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
-            .unwrap_or(default)
+        self.try_usize(key, default).unwrap_or_else(|e| panic!("{e}"))
     }
 
-    /// `--key` parsed as `u64`, or `default`.
+    /// `--key` parsed as `u64`, or `default`. Panics on a malformed
+    /// value — test/tool convenience; CLI paths use [`Args::try_u64`].
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
-        self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
-            .unwrap_or(default)
+        self.try_u64(key, default).unwrap_or_else(|e| panic!("{e}"))
     }
 
-    /// `--key` parsed as `f64`, or `default`.
+    /// `--key` parsed as `f64`, or `default`. Panics on a malformed
+    /// value — test/tool convenience; CLI paths use [`Args::try_f64`].
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
-        self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
-            .unwrap_or(default)
+        self.try_f64(key, default).unwrap_or_else(|e| panic!("{e}"))
     }
 }
 
@@ -129,6 +153,25 @@ mod tests {
     fn bad_int_panics() {
         let a = Args::parse(sv(&["--steps", "abc"]));
         a.usize_or("steps", 0);
+    }
+
+    #[test]
+    fn try_getters_surface_malformed_values_as_errors() {
+        let a = Args::parse(sv(&["--steps", "abc", "--seed", "1e3", "--cf", "nan"]));
+        assert!(a.try_usize("steps", 0).unwrap_err().contains("--steps"));
+        assert!(a.try_u64("seed", 0).unwrap_err().contains("--seed"));
+        assert!(a.try_f64("cf", 1.0).unwrap_err().contains("--cf"), "NaN must be rejected");
+        let ok = Args::parse(sv(&["--steps", "12", "--cf", "0.5"]));
+        assert_eq!(ok.try_usize("steps", 0), Ok(12));
+        assert_eq!(ok.try_f64("cf", 1.0), Ok(0.5));
+        assert_eq!(ok.try_u64("absent", 9), Ok(9), "absent flag falls back to the default");
+    }
+
+    #[test]
+    fn negative_integers_are_malformed_not_wrapped() {
+        let a = Args::parse(sv(&["--tokens=-5", "--ranks=-1"]));
+        assert!(a.try_usize("ranks", 1).is_err(), "-1 must not wrap to usize::MAX");
+        assert!(a.try_u64("tokens", 1).is_err());
     }
 
     #[test]

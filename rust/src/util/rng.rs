@@ -24,6 +24,17 @@ impl Rng {
         Rng { s: [next(), next(), next(), next()] }
     }
 
+    /// Snapshot the raw 256-bit state (checkpointing). Restoring with
+    /// [`Rng::from_state`] resumes the stream bitwise.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild an `Rng` mid-stream from a [`Rng::state`] snapshot.
+    pub fn from_state(s: [u64; 4]) -> Rng {
+        Rng { s }
+    }
+
     #[inline]
     /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {

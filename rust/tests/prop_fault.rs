@@ -1,0 +1,341 @@
+//! Property suite for the fault-injected EP runtime (ISSUE 10): CRC32
+//! wire integrity (exhaustive single-bit detection over *both* wire
+//! buffers), the silent-sidecar-flip hazard the split seal exists for,
+//! EP forward/backward bit-identity under fault plans across the
+//! rank × thread × overlap matrix with schedule-independent recovery
+//! counters, the degraded-serving extended drop ledger, and bitwise
+//! checkpoint resume across ranks and thread budgets.
+
+use fp8_flow_moe::cluster::ep_exec::{
+    ep_backward, ep_backward_with_faults, ep_forward, ep_forward_with_faults, EpConfig,
+};
+use fp8_flow_moe::cluster::fault::{wire_tick, Fault, FaultKind, FaultPlan, WireSums, ANY_DST};
+use fp8_flow_moe::cluster::rank::WireBuf;
+use fp8_flow_moe::fp8::tile::quantize_rowwise;
+use fp8_flow_moe::fp8::{ue8m0, Fp8Format, ScaleMode};
+use fp8_flow_moe::moe::backward::forward_stash;
+use fp8_flow_moe::moe::layer::{MoeWeights, PreparedWeights, Recipe};
+use fp8_flow_moe::serve::{
+    generate_requests, serve_trace, ArrivalMode, DropPolicy, FailoverPolicy, GenConfig,
+    ServeConfig, ServeEngine, SloPolicy, TokenEmbed,
+};
+use fp8_flow_moe::train::native::{restore_trainer, save_checkpoint, NativeTrainer, TrainConfig};
+use fp8_flow_moe::train::Corpus;
+use fp8_flow_moe::util::mat::Mat;
+use fp8_flow_moe::util::rng::Rng;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Wire integrity: CRC32 detects 100% of single-bit flips, per buffer
+// ---------------------------------------------------------------------------
+
+#[test]
+fn wire_checksum_detects_every_single_bit_flip_in_both_buffers() {
+    // a real FP8 wire image: quantized codes + UE8M0 sidecar, with a
+    // ragged tile tail (160 = 128 + 32) so the sidecar has >1 byte/row
+    let mut rng = Rng::seed_from(3);
+    let x = Mat::randn(4, 160, 0.7, &mut rng);
+    let q = quantize_rowwise(&x, Fp8Format::E4M3, ScaleMode::Po2);
+    let sidecar: Vec<u8> = q.sexp.iter().map(|&e| ue8m0::from_exponent(e)).collect();
+    assert!(!sidecar.is_empty() && !q.data.is_empty());
+    let buf = WireBuf::Fp8 { codes: q.data.clone(), sidecar: sidecar.clone() };
+    let seal = WireSums::seal(&buf);
+    assert!(seal.verify(&buf), "the pristine image must verify");
+
+    // exhaustive: every (byte offset, bit) in the code buffer
+    for off in 0..q.data.len() {
+        for bit in 0..8u8 {
+            let mut codes = q.data.clone();
+            codes[off] ^= 1 << bit;
+            let bad = WireBuf::Fp8 { codes, sidecar: sidecar.clone() };
+            assert!(!seal.verify(&bad), "undetected code flip at byte {off} bit {bit}");
+        }
+    }
+    // exhaustive: every (byte offset, bit) in the UE8M0 sidecar
+    for off in 0..sidecar.len() {
+        for bit in 0..8u8 {
+            let mut sc = sidecar.clone();
+            sc[off] ^= 1 << bit;
+            let bad = WireBuf::Fp8 { codes: q.data.clone(), sidecar: sc };
+            assert!(!seal.verify(&bad), "undetected sidecar flip at byte {off} bit {bit}");
+        }
+    }
+}
+
+#[test]
+fn dense_wire_checksum_detects_every_single_bit_flip() {
+    let vals: Vec<f32> = (0..16).map(|k| (k as f32) * 0.37 - 2.0).collect();
+    let seal = WireSums::seal(&WireBuf::Dense(vals.clone()));
+    assert_eq!(seal.sidecar, 0, "dense wires carry no sidecar");
+    for k in 0..vals.len() {
+        for bit in 0..32 {
+            let mut v = vals.clone();
+            v[k] = f32::from_bits(v[k].to_bits() ^ (1u32 << bit));
+            assert!(
+                !seal.verify(&WireBuf::Dense(v)),
+                "undetected dense flip at element {k} bit {bit}"
+            );
+        }
+    }
+}
+
+#[test]
+fn an_undetected_sidecar_flip_would_rescale_decoded_values() {
+    // why the sidecar seal is load-bearing: every single-bit corruption
+    // of every UE8M0 code decodes to a *different* scale — a silent
+    // 2^±2^k rescale of a whole tile had the CRC not caught it
+    for b in 0u16..=255 {
+        let b = b as u8;
+        let base = ue8m0::decode(b);
+        for bit in 0..8u8 {
+            let flipped = b ^ (1 << bit);
+            let other = ue8m0::decode(flipped);
+            assert_ne!(
+                base.to_bits(),
+                other.to_bits(),
+                "decode({b}) == decode({flipped}): flip of bit {bit} would be value-silent"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// EP forward/backward: recovered runs are bitwise clean, counters are
+// schedule-independent across threads × overlap
+// ---------------------------------------------------------------------------
+
+/// Chunk-0 fault plan for one wire direction: every schedule (serial or
+/// overlapped, any chunk count ≥ 1) executes chunk 0 of every slot, so
+/// recovery totals are identical across the whole schedule matrix.
+fn chunk0_plan(ranks: usize, top_k: usize, backward: bool) -> FaultPlan {
+    FaultPlan::new(vec![
+        Fault {
+            tick: wire_tick(0, 0, backward),
+            src: 0,
+            dst: ANY_DST,
+            kind: FaultKind::FlipPayloadBit { offset: 11, bit: 3 },
+            attempts: 1,
+        },
+        Fault {
+            tick: wire_tick(top_k - 1, 0, backward),
+            src: ranks - 1,
+            dst: ANY_DST,
+            kind: FaultKind::FlipSidecarBit { offset: 2, bit: 6 },
+            attempts: 2,
+        },
+        Fault {
+            tick: wire_tick(0, 0, backward),
+            src: ranks - 1,
+            dst: 0,
+            kind: FaultKind::DropMessage,
+            attempts: 1,
+        },
+    ])
+}
+
+#[test]
+fn ep_forward_and_backward_are_bitwise_clean_under_injected_faults() {
+    let (t, d, h, e, k) = (96usize, 64usize, 64usize, 8usize, 2usize);
+    let cap = (t * k).div_ceil(e);
+    let mut rng = Rng::seed_from(17);
+    let x = Mat::randn(t, d, 0.5, &mut rng);
+    let w = MoeWeights::random(d, h, e, &mut rng);
+    let dy = Mat::randn(t, d, 1.0, &mut rng);
+    for recipe in [Recipe::Fp8Flow, Recipe::Bf16] {
+        let pw = PreparedWeights::new(w.clone(), recipe);
+        let stash = forward_stash(&x, &pw, k, cap);
+        for ranks in [1usize, 2, 4] {
+            for overlap in [false, true] {
+                // recovery totals must not depend on the worker budget
+                // (all FaultPlan state is atomic and commutative); the
+                // chunked schedule may split a message into a different
+                // buffer set, so totals are compared per schedule
+                let mut ref_stats = None;
+                for threads in [1usize, 2, 8] {
+                    let cfg = EpConfig::serial(ranks, k, cap, threads)
+                        .with_pipeline(if overlap { 2 } else { 1 }, overlap);
+                    let tag = format!("{recipe:?} R={ranks} T={threads} overlap={overlap}");
+
+                    let clean_f = ep_forward(&x, &pw, &cfg);
+                    let plan_f = chunk0_plan(ranks, k, false);
+                    let fwd = ep_forward_with_faults(&x, &pw, &cfg, &plan_f);
+                    assert_eq!(bits(&fwd.y.data), bits(&clean_f.y.data), "{tag}: fwd y");
+
+                    let clean_b = ep_backward(&stash, &pw, &dy, &cfg);
+                    let plan_b = chunk0_plan(ranks, k, true);
+                    let bwd = ep_backward_with_faults(&stash, &pw, &dy, &cfg, &plan_b);
+                    assert_eq!(bits(&bwd.grads.dx.data), bits(&clean_b.grads.dx.data), "{tag}: dx");
+                    for ex in 0..e {
+                        assert_eq!(
+                            bits(&bwd.grads.dw1[ex].data),
+                            bits(&clean_b.grads.dw1[ex].data),
+                            "{tag}: dw1[{ex}]"
+                        );
+                    }
+
+                    let st = (plan_f.stats(), plan_b.stats());
+                    assert_eq!(st.0.failovers, 0, "{tag}: transient faults must not escalate");
+                    if recipe == Recipe::Fp8Flow && ranks > 1 && !overlap {
+                        assert!(st.0.checksum_fails >= 1, "{tag}: fwd flip went unexercised");
+                        assert!(st.0.retries >= 1, "{tag}: fwd recovery issued no retries");
+                    }
+                    match &ref_stats {
+                        None => ref_stats = Some(st),
+                        Some(r) => assert_eq!(*r, st, "{tag}: thread-dependent recovery"),
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn seeded_fault_matrices_replay_to_identical_recovery_counters() {
+    let (t, d, h, e, k) = (64usize, 32usize, 32usize, 8usize, 2usize);
+    let cap = (t * k).div_ceil(e);
+    let mut rng = Rng::seed_from(23);
+    let x = Mat::randn(t, d, 0.5, &mut rng);
+    let w = MoeWeights::random(d, h, e, &mut rng);
+    let pw = PreparedWeights::new(w, Recipe::Fp8Flow);
+    let cfg = EpConfig::serial(4, k, cap, 2);
+    let clean = ep_forward(&x, &pw, &cfg);
+    let mut first = None;
+    for run in 0..2 {
+        let plan = FaultPlan::seeded(77, 4, 4, 16);
+        let out = ep_forward_with_faults(&x, &pw, &cfg, &plan);
+        assert_eq!(bits(&out.y.data), bits(&clean.y.data), "run {run}: y must stay clean");
+        match &first {
+            None => first = Some(plan.stats()),
+            Some(st) => assert_eq!(*st, plan.stats(), "seeded chaos must replay exactly"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Degraded serving: the extended drop ledger balances, thread-invariantly
+// ---------------------------------------------------------------------------
+
+#[test]
+fn degraded_serving_ledger_balances_across_ranks_threads_and_policies() {
+    let gen = GenConfig {
+        seed: 9,
+        mode: ArrivalMode::parse("bursty").unwrap(),
+        rate: 300.0,
+        burst: 3.0,
+        burst_period_s: 0.03,
+        zipf_s: 1.1,
+        min_len: 4,
+        max_len: 24,
+        vocab: 64,
+        noise_pct: 10,
+    };
+    let requests = generate_requests(&gen, 24);
+    let total: usize = requests.iter().map(|r| r.len()).sum();
+    let slo = SloPolicy { max_wait_s: 0.004, max_tokens: 48 };
+    let (d, h, e, k) = (32usize, 32usize, 8usize, 2usize);
+    let mut rng = Rng::seed_from(5);
+    let w = MoeWeights::random(d, h, e, &mut rng);
+    for ranks in [1usize, 2, 4] {
+        for policy in [FailoverPolicy::Reroute, FailoverPolicy::Drop] {
+            // batch composition and the ledger are thread-invariant
+            let mut reference: Option<(Vec<usize>, usize, usize, usize)> = None;
+            for threads in [1usize, 2, 8] {
+                let plan = FaultPlan::new(vec![Fault {
+                    tick: 1,
+                    src: ranks - 1,
+                    dst: ANY_DST,
+                    kind: FaultKind::CrashRank,
+                    attempts: 1,
+                }]);
+                let engine = ServeEngine::new(
+                    PreparedWeights::new(w.clone(), Recipe::Fp8Flow),
+                    TokenEmbed::new(gen.vocab, d, 9),
+                    ServeConfig {
+                        ranks,
+                        top_k: k,
+                        capacity_factor: 1.0,
+                        drop_policy: DropPolicy::parse("capacity").unwrap(),
+                        threads,
+                        chunks: 1,
+                        overlap: false,
+                    },
+                )
+                .with_faults(plan, policy);
+                let s = serve_trace(&engine, &requests, &slo);
+                let tag = format!("R={ranks} T={threads} {policy:?}");
+                let slots = s.rank_rows.iter().sum::<usize>()
+                    + s.dropped_slots
+                    + s.failed_rank_drops;
+                assert_eq!(slots, total * k, "{tag}: extended ledger does not balance");
+                assert!(s.degraded_ticks >= 1, "{tag}: the crash never degraded a tick");
+                assert!(engine.fault_stats().failovers >= 1, "{tag}: crash not recorded");
+                let key =
+                    (s.rank_rows.clone(), s.dropped_slots, s.failed_rank_drops, s.served_tokens);
+                match &reference {
+                    None => reference = Some(key),
+                    Some(r) => assert_eq!(*r, key, "{tag}: thread-dependent ledger"),
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint resume: bitwise across the rank × thread matrix
+// ---------------------------------------------------------------------------
+
+fn ckpt_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("fp8_flow_prop_fault_{}_{tag}.json", std::process::id()))
+}
+
+#[test]
+fn checkpoint_resume_is_bitwise_across_ranks_and_thread_budgets() {
+    let seed = 31u64;
+    for ranks in [1usize, 2, 4] {
+        for threads in [1usize, 2, 8] {
+            let mut cfg = TrainConfig::tiny();
+            cfg.ranks = ranks;
+            cfg.threads = threads;
+            let tag = format!("R={ranks} T={threads}");
+
+            let mut gold = NativeTrainer::new(cfg, Recipe::Fp8Flow, seed);
+            let mut gold_c = Corpus::new(cfg.vocab, seed, 10);
+            let gold_out = gold.run(&mut gold_c, 4, 0).unwrap();
+
+            let mut pre = NativeTrainer::new(cfg, Recipe::Fp8Flow, seed);
+            let mut pre_c = Corpus::new(cfg.vocab, seed, 10);
+            let pre_out = pre.run(&mut pre_c, 2, 0).unwrap();
+            let path = ckpt_path(&format!("r{ranks}_t{threads}"));
+            save_checkpoint(&pre, &pre_c, &path).unwrap();
+            drop(pre); // the simulated crash
+
+            // different init seed: restore must overwrite every stream
+            let mut post = NativeTrainer::new(cfg, Recipe::Fp8Flow, seed ^ 0xDEAD);
+            let mut post_c = Corpus::new(cfg.vocab, seed ^ 0xDEAD, 10);
+            let at = restore_trainer(&mut post, &mut post_c, &path).unwrap();
+            assert_eq!(at, 2, "{tag}: resumed at the wrong step");
+            let post_out = post.run(&mut post_c, 2, 0).unwrap();
+            let _ = std::fs::remove_file(&path);
+
+            let replay: Vec<u32> =
+                pre_out.losses.iter().chain(&post_out.losses).map(|l| l.to_bits()).collect();
+            let gold_bits: Vec<u32> = gold_out.losses.iter().map(|l| l.to_bits()).collect();
+            assert_eq!(replay, gold_bits, "{tag}: loss trajectory diverged across the crash");
+            assert_eq!(bits(&gold.embed.data), bits(&post.embed.data), "{tag}: embed");
+            assert_eq!(bits(&gold.head.data), bits(&post.head.data), "{tag}: head");
+            for ex in 0..cfg.n_experts {
+                assert_eq!(
+                    gold.pw.w1_t[ex].data, post.pw.w1_t[ex].data,
+                    "{tag}: w1_t[{ex}] codes"
+                );
+                assert_eq!(
+                    gold.pw.w1_t[ex].sexp, post.pw.w1_t[ex].sexp,
+                    "{tag}: w1_t[{ex}] scale exponents"
+                );
+            }
+        }
+    }
+}

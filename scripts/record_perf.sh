@@ -35,6 +35,12 @@ echo "running serve (2 ranks, capacity-factor sweep, bursty arrivals)..."
 serve_output="$(cargo run --release -p fp8_flow_moe -- \
     serve --ranks 2 --recipe all --arrivals bursty --sweep 2>&1)"
 
+echo "running chaos (fault injection: wire recovery, degraded serving, crash+resume)..."
+chaos_output="$(
+    cargo run --release -p fp8_flow_moe -- chaos --ranks 2 2>&1
+    cargo run --release -p fp8_flow_moe -- trace rust/runs/chaos_r2.json 2>&1
+)"
+
 echo "running traced epshard + serve (cross-check gate), trace validate, calibrate..."
 trace_output="$(
     cargo run --release -p fp8_flow_moe -- \
@@ -120,6 +126,16 @@ trace_output="$(
     if [ -f rust/runs/calibrate.json ]; then
         echo ""
         echo "Fitted cost table + residuals: \`rust/runs/calibrate.json\`"
+    fi
+    echo ""
+    echo "#### Chaos (chaos --ranks 2: wire recovery, degraded serving, crash+resume)"
+    echo ""
+    echo '```'
+    echo "${chaos_output}" | grep -E '^(chaos:|  (epshard|serve|train)|OK|wrote)'
+    echo '```'
+    if [ -f rust/runs/chaos_r2.json ]; then
+        echo ""
+        echo "Recovery counters + resume bit-identity: \`rust/runs/chaos_r2.json\`"
     fi
 } >> "${out}"
 

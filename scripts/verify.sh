@@ -63,4 +63,34 @@ cargo run --release -q -p fp8_flow_moe -- \
 cargo run --release -q -p fp8_flow_moe -- calibrate rust/runs/trace_epshard.json
 test -f rust/runs/calibrate.json
 
+echo "== CLI error contract: malformed flags exit 2, no panic =="
+# Each malformed invocation must print `error: ...` to stderr and exit 2
+# (the arg-validation contract); a panic would exit 101 and fail the gate.
+for bad in "epshard --ranks 0" "epshard --chunks 0" "epshard --tokens -3" "serve --cf nan"; do
+    set +e
+    # shellcheck disable=SC2086  # intentional word-splitting of the arg list
+    cargo run --release -q -p fp8_flow_moe -- ${bad} >/dev/null 2>&1
+    rc=$?
+    set -e
+    if [ "${rc}" -ne 2 ]; then
+        echo "FAIL: '${bad}' exited ${rc}, expected 2" >&2
+        exit 1
+    fi
+done
+
+echo "== chaos smoke: crash+resume train, corrupted-wire serve tick, recovery counters =="
+# Runs the seeded fault-injection matrix: CRC-checksummed wire recovery
+# (bitwise-clean EP forward under flips/drops), degraded serving under a
+# rank crash (drop ledger balances), and crash+resume training (bitwise
+# replay). The command itself exits nonzero if any recovery gate fails;
+# we additionally assert the recovery counters landed in the run doc and
+# that the doc passes `trace` schema validation.
+cargo run --release -q -p fp8_flow_moe -- chaos --ranks 2
+test -f rust/runs/chaos_r2.json
+grep -q '"wire_checksum_fail"' rust/runs/chaos_r2.json
+grep -q '"a2a_retries"' rust/runs/chaos_r2.json
+grep -q '"failovers"' rust/runs/chaos_r2.json
+grep -q '"bit_identical":true' rust/runs/chaos_r2.json
+cargo run --release -q -p fp8_flow_moe -- trace rust/runs/chaos_r2.json
+
 echo "verify OK"
